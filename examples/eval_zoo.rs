@@ -1,0 +1,113 @@
+//! Evaluation zoo: per-level holdout breakdown + Figure-2 montage + a
+//! rendered trajectory on the hardest solved maze.
+//!
+//! Works with a trained checkpoint or (default) a freshly-initialized
+//! policy so it runs standalone:
+//!
+//! ```sh
+//! cargo run --release --example eval_zoo -- --ckpt runs/accel_s0/student.ckpt --trials 10
+//! ```
+
+use anyhow::Result;
+
+use jaxued::config::TrainConfig;
+use jaxued::env::holdout::named_levels;
+use jaxued::env::maze::{MazeEnv, NUM_ACTIONS};
+use jaxued::env::render::{render_montage, render_trajectory};
+use jaxued::env::shortest_path::solve_distance;
+use jaxued::env::UnderspecifiedEnv;
+use jaxued::eval::Evaluator;
+use jaxued::rollout::sampler::sample_action;
+use jaxued::rollout::Policy;
+use jaxued::runtime::{ParamSet, Runtime};
+use jaxued::util::cli::Args;
+use jaxued::util::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cfg = TrainConfig::from_args(&args)?;
+    let trials = args.get_usize("trials", 5);
+    let out_dir = std::path::PathBuf::from(args.get_str("out-dir", "runs/eval_zoo"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let rt = Runtime::new(std::path::Path::new(&cfg.artifacts_dir))?;
+    let params = match args.get("ckpt") {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            ParamSet::load(std::path::Path::new(path), "student")?
+        }
+        None => {
+            println!("no --ckpt given: evaluating a fresh random-init policy");
+            rt.init_params("student", cfg.seed as i32)?
+        }
+    };
+    let apply = rt.load(&cfg.student_apply_artifact())?;
+    let policy = Policy { apply, params: &params.params, num_actions: NUM_ACTIONS };
+
+    // 1. Per-level table over the full suite.
+    let evaluator = Evaluator::default_suite(cfg.variant.b, trials, 20, cfg.max_episode_steps);
+    let mut rng = Pcg64::new(cfg.seed, 0x7a6f); // "zo"
+    let report = evaluator.run(&policy, &mut rng)?;
+    println!("\n{:<22} {:>8} {:>12} {:>10}", "level", "solve", "mean_steps", "opt_dist");
+    for (l, (_, level)) in report.levels.iter().zip(&evaluator.levels) {
+        let opt = solve_distance(level).map(|d| d.to_string()).unwrap_or("-".into());
+        println!(
+            "{:<22} {:>8.3} {:>12.1} {:>10}",
+            l.name, l.solve_rate, l.mean_steps, opt
+        );
+    }
+    println!(
+        "\nmean = {:.3}   IQM = {:.3}",
+        report.mean_solve_rate, report.iqm_solve_rate
+    );
+
+    // 2. Figure-2 montage of the holdout suite.
+    let levels: Vec<_> = evaluator.levels.iter().map(|(_, l)| *l).collect();
+    let montage = render_montage(&levels, 6);
+    montage.write_ppm(&out_dir.join("figure2_holdout.ppm"))?;
+    println!("wrote {}", out_dir.join("figure2_holdout.ppm").display());
+
+    // 3. Trajectory frames on the Labyrinth (or first named maze).
+    let target = named_levels()
+        .into_iter()
+        .find(|n| n.name == "Labyrinth")
+        .unwrap();
+    let env = MazeEnv::new(cfg.max_episode_steps);
+    let mut state = env.reset_to_level(&target.level, &mut rng);
+    let mut frames = vec![state.clone()];
+    // step with the policy until done (single env through the B-batched
+    // artifact: replicate the obs across the batch, read row 0)
+    let mut engine_obs = vec![0.0f32; env.obs_len()];
+    let b = cfg.variant.b;
+    let comps = env.obs_components();
+    let mut staged: Vec<jaxued::util::tensor::TensorF32> = comps
+        .iter()
+        .map(|&c| jaxued::util::tensor::TensorF32::zeros(&[b, c]))
+        .collect();
+    for _ in 0..env.max_steps {
+        env.observe(&state, &mut engine_obs);
+        let mut off = 0;
+        for (k, &c) in comps.iter().enumerate() {
+            for bi in 0..b {
+                staged[k].data_mut()[bi * c..(bi + 1) * c]
+                    .copy_from_slice(&engine_obs[off..off + c]);
+            }
+            off += c;
+        }
+        let (logits, _) = policy.forward(&staged)?;
+        let (action, _) = sample_action(&logits[..NUM_ACTIONS], &mut rng);
+        let r = env.step(&mut state, action, &mut rng);
+        frames.push(state.clone());
+        if r.done {
+            println!(
+                "Labyrinth episode: {} steps, {}",
+                frames.len() - 1,
+                if r.reward > 0.0 { "SOLVED" } else { "timeout" }
+            );
+            break;
+        }
+    }
+    let paths = render_trajectory(&target.level, &frames, &out_dir.join("traj"), "labyrinth")?;
+    println!("wrote {} trajectory frames to {}", paths.len(), out_dir.join("traj").display());
+    Ok(())
+}

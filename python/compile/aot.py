@@ -1,0 +1,239 @@
+"""AOT compile path: lower every L2 function to XLA HLO *text* artifacts.
+
+Run once via `make artifacts` (no-op when inputs are unchanged); the Rust
+coordinator is self-contained afterwards. Python is never on the request
+path.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the pinned xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits `artifacts/manifest.json` describing every artifact's positional ABI
+(parameter ordering, input/output shapes, baked hyperparameters, env
+geometry constants) — rust/src/runtime/manifest.rs is the consumer.
+
+Usage: python -m compile.aot --out ../artifacts [--variants std,small]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .ppo import (
+    METRIC_NAMES,
+    PpoHp,
+    SCORE_OUTPUT_NAMES,
+    adam_init,
+    make_score_fn,
+    make_train_step,
+)
+
+HP = PpoHp()  # Table 3 constants, baked into every artifact.
+
+# Rollout-shape variants. `std` matches the paper (T=256, B=32); `small`
+# keeps tests and CI fast. PAIRED adversary editor-horizons 25 and 60 match
+# the paper's PAIRED-25 / PAIRED-60 runs.
+VARIANTS: Dict[str, Dict[str, int]] = {
+    "std": {"T": 256, "B": 32, "T_adv": 60},
+    "std25": {"T": 256, "B": 32, "T_adv": 25, "adv_only": 1},
+    "small": {"T": 32, "B": 8, "T_adv": 13},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_entry(x) -> Dict:
+    return {"shape": list(x.shape), "dtype": x.dtype.name}
+
+
+def _specs(shapes: Sequence[Tuple[int, ...]], dtype=jnp.float32):
+    return [jax.ShapeDtypeStruct(s, dtype) for s in shapes]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts: List[Dict] = []
+
+    def emit(self, name: str, fn, example_args: List, meta: Dict) -> None:
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [_shape_entry(a) for a in example_args],
+            "outputs": [_shape_entry(a) for a in out_avals],
+            **meta,
+        }
+        self.artifacts.append(entry)
+        print(f"  wrote {fname}  ({len(text)} chars, "
+              f"{len(entry['inputs'])} in / {len(entry['outputs'])} out)")
+
+
+def _network_defs():
+    return {
+        "student": {
+            "specs": model.student_param_specs(),
+            "apply": model.student_apply,
+            "obs_shapes": model.student_obs_shapes,
+            "n_obs": 2,
+        },
+        "adversary": {
+            "specs": model.adversary_param_specs(),
+            "apply": model.adversary_apply,
+            "obs_shapes": model.adversary_obs_shapes,
+            "n_obs": 3,
+        },
+    }
+
+
+def emit_network_artifacts(em: Emitter, role: str, net: Dict, t: int, b: int,
+                           tag: str) -> None:
+    specs = net["specs"]
+    order = model.PARAM_ORDER
+    apply_fn = net["apply"]
+    n_obs = net["n_obs"]
+
+    # --- init: seed -> (params…, m…, v…, count) -----------------------------
+    def init_fn(seed):
+        params = model.init_params(jax.random.PRNGKey(seed), specs)
+        m, v, count = adam_init(params)
+        out = [params[k] for k in order] + [m[k] for k in order] \
+            + [v[k] for k in order] + [count]
+        return tuple(out)
+
+    init_name = f"{role}_init"
+    if not any(a["name"] == init_name for a in em.artifacts):
+        em.emit(init_name, init_fn,
+                [jax.ShapeDtypeStruct((), jnp.int32)],
+                {"kind": "init", "network": role})
+
+    # --- policy apply: (params…, obs…) -> (logits, value) -------------------
+    def apply_flat(*args):
+        params = dict(zip(order, args[: len(order)]))
+        obs = tuple(args[len(order):])
+        return apply_fn(params, obs)
+
+    apply_name = f"{role}_apply_b{b}"
+    if not any(a["name"] == apply_name for a in em.artifacts):
+        param_args = _specs([specs[k] for k in order])
+        obs_args = _specs(net["obs_shapes"](b))
+        em.emit(apply_name, apply_flat, param_args + obs_args,
+                {"kind": "apply", "network": role, "B": b})
+
+    # --- train step ----------------------------------------------------------
+    ts = make_train_step(apply_fn, order, n_obs, HP)
+    param_args = _specs([specs[k] for k in order])
+    obs_seq = _specs([(t,) + s for s in net["obs_shapes"](b)])
+    # squeeze per-step obs shapes: obs_shapes gives (B, ...) -> (T, B, ...)
+    obs_seq = _specs([(t, b) + tuple(s[1:]) for s in net["obs_shapes"](b)])
+    tb = [(t, b)]
+    args = (
+        param_args                      # params
+        + param_args                    # m
+        + param_args                    # v
+        + _specs([()])                  # count
+        + _specs([()])                  # lr
+        + obs_seq
+        + _specs(tb, jnp.int32)         # actions
+        + _specs(tb) * 4                # old_logp, old_values, rewards, dones
+        + _specs([(b,)])                # last_value
+    )
+    em.emit(f"{role}_train_step_{tag}", ts, args,
+            {"kind": "train_step", "network": role, "T": t, "B": b,
+             "metrics": METRIC_NAMES})
+
+
+def emit_score(em: Emitter, t: int, b: int, tag: str) -> None:
+    score = make_score_fn(HP)
+    tb = [(t, b)]
+    args = _specs(tb) * 3 + _specs([(b,)]) * 2
+    em.emit(f"score_{tag}", score, args,
+            {"kind": "score", "T": t, "B": b, "outputs_names": SCORE_OUTPUT_NAMES})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default="std,std25,small")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    em = Emitter(args.out)
+    nets = _network_defs()
+
+    for vname in args.variants.split(","):
+        v = VARIANTS[vname]
+        t, b, t_adv = v["T"], v["B"], v["T_adv"]
+        print(f"variant {vname}: T={t} B={b} T_adv={t_adv}")
+        if not v.get("adv_only"):
+            emit_network_artifacts(em, "student", nets["student"], t, b,
+                                   f"t{t}_b{b}")
+            emit_score(em, t, b, f"t{t}_b{b}")
+        emit_network_artifacts(em, "adversary", nets["adversary"], t_adv, b,
+                               f"t{t_adv}_b{b}")
+
+    manifest = {
+        "version": 1,
+        "constants": {
+            "grid_w": model.GRID_W,
+            "grid_h": model.GRID_H,
+            "view": model.VIEW,
+            "obs_channels": model.OBS_CHANNELS,
+            "num_actions": model.NUM_ACTIONS,
+            "num_directions": model.NUM_DIRECTIONS,
+            "adv_channels": model.ADV_CHANNELS,
+            "adv_num_actions": model.ADV_NUM_ACTIONS,
+            "adv_noise_dim": model.ADV_NOISE_DIM,
+        },
+        "hyperparameters": {
+            "gamma": HP.gamma,
+            "gae_lambda": HP.gae_lambda,
+            "clip_eps": HP.clip_eps,
+            "epochs": HP.epochs,
+            "vf_coef": HP.vf_coef,
+            "ent_coef": HP.ent_coef,
+            "max_grad_norm": HP.max_grad_norm,
+            "adam_eps": HP.adam_eps,
+        },
+        "metric_names": METRIC_NAMES,
+        "score_output_names": SCORE_OUTPUT_NAMES,
+        "networks": {
+            role: {
+                "param_order": model.PARAM_ORDER,
+                "params": [
+                    {"name": k, "shape": list(net["specs"][k])}
+                    for k in model.PARAM_ORDER
+                ],
+                "n_obs": net["n_obs"],
+            }
+            for role, net in nets.items()
+        },
+        "artifacts": em.artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(em.artifacts)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

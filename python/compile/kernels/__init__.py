@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret-mode) + pure-jnp oracles."""
+from .fused_dense import fused_dense, matmul, matmul_tn  # noqa: F401
+from .gae import gae, discounted_return_to_go  # noqa: F401

@@ -1,0 +1,251 @@
+"""L1 Pallas kernels: tiled matmul and fused dense (matmul + bias + activation).
+
+This is the compute hot-spot of the whole stack: every dense layer and every
+convolution (via im2col) in both the student actor-critic and the PAIRED
+adversary routes through `fused_dense`, for the forward pass *and* (through a
+custom VJP whose operands are themselves Pallas matmuls) the backward pass.
+
+TPU-oriented structure (see DESIGN.md §Hardware-Adaptation):
+
+  * Blocks are (bm, K) x (K, bn) with K whole: every matmul in this model
+    has K <= 15505, so a K-grid + scratch accumulator is unnecessary. M is
+    split into a handful of large sublane-aligned tiles (see `_pick_bm` for
+    the measured rationale); on a real TPU the same BlockSpecs would be
+    re-tiled to (128, 128) MXU blocks — the mapping is analytic, the
+    schedule expression (grid + index_map) is identical.
+  * Accumulation is in float32 (`preferred_element_type`), the MXU-native
+    accumulation type.
+  * Inputs are padded to block multiples by the wrapper (`_pad2`); Pallas
+    BlockSpec then expresses the HBMxVMEM schedule that a CUDA version
+    would express with threadblocks.
+
+All `pallas_call`s use `interpret=True`: the image's PJRT plugin is CPU-only
+and real TPU lowering emits Mosaic custom-calls it cannot execute. The
+interpreter executes the same program structure, so numerics (checked against
+`ref.py` by pytest) are the correctness signal; MXU utilization is estimated
+analytically in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activation codes (baked into the kernel closure, not traced).
+ACT_ID = "id"
+ACT_RELU = "relu"
+ACT_TANH = "tanh"
+
+_ACTS = (ACT_ID, ACT_RELU, ACT_TANH)
+
+
+def _apply_act(z, act: str):
+    if act == ACT_RELU:
+        return jnp.maximum(z, 0.0)
+    if act == ACT_TANH:
+        return jnp.tanh(z)
+    return z
+
+
+def _act_grad_from_out(y, act: str):
+    """d act(z) / dz expressed in terms of the *output* y = act(z)."""
+    if act == ACT_RELU:
+        return (y > 0.0).astype(y.dtype)
+    if act == ACT_TANH:
+        return 1.0 - y * y
+    return jnp.ones_like(y)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# Block sizing. On a real TPU the natural tile is the (128, 128) MXU block
+# and the grid pipeline hides per-step latency; under the CPU interpreter
+# every grid step is a sequential dynamic-slice + dot with ~0.3 ms overhead,
+# so per-step overhead dominates at 128-row tiles (measured 4.8 s/call for
+# the std train step at 128-tiles, EXPERIMENTS.md §Perf). We therefore tile
+# M into the *fewest* blocks that respect an analytic VMEM budget
+# (bm*K + K*bn + bm*bn floats <= ~16 MiB) — the same constraint a TPU
+# schedule optimizes, just solved for a different per-step cost model. The
+# BlockSpec/grid structure (the HBM->VMEM schedule) is unchanged either way.
+_TARGET_M_STEPS = 2
+_VMEM_BUDGET_FLOATS = 4 << 20  # 16 MiB of f32
+
+
+def _pick_bn(n: int) -> int:
+    """N-block: whole output width (all layers here have n <= 169; the MXU
+    would pad the lane dim to 128 internally — explicit padding buys nothing
+    and costs 4-8x interpreter work)."""
+    return _round_up(max(n, 1), 8)
+
+
+def _pick_bm(m: int, k: int = 256, bn: int = 32) -> int:
+    """M-block: ceil(m / TARGET) rounded to the 8-row sublane, shrunk to fit
+    the VMEM budget for the given (K, bn) footprint."""
+    target = _round_up((m + _TARGET_M_STEPS - 1) // _TARGET_M_STEPS, 8)
+    cap = max(8, (_VMEM_BUDGET_FLOATS - k * bn) // (k + bn) // 8 * 8)
+    return min(target, cap, _round_up(max(m, 1), 8))
+
+
+def _pad2(x, bm: int, bn: int):
+    m, n = x.shape
+    pm, pn = _round_up(m, bm) - m, _round_up(n, bn) - n
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Plain tiled matmul kernel
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (bm, K) x (K, bn) -> (bm, bn) tile; K whole, f32 accumulate (MXU).
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Tiled Pallas matmul: (M, K) @ (K, N) -> (M, N), f32."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bn = _pick_bn(n)
+    bm = _pick_bm(m, k, bn)
+    xp = _pad2(x.astype(jnp.float32), bm, 1)
+    wp = _pad2(w.astype(jnp.float32), 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Transposed-LHS matmul kernel: x^T @ g without materializing x^T
+# ---------------------------------------------------------------------------
+
+
+def _matmul_tn_kernel(x_ref, g_ref, o_ref):
+    # One (M, bk)^T x (M, bn) -> (bk, bn) tile: contract over axis 0 of both
+    # operands (dot_general), so the (M, K) activation matrix is read in its
+    # native layout — the backward pass never materializes a transpose.
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], g_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_tn(x: jax.Array, g: jax.Array) -> jax.Array:
+    """x^T @ g for x (M, K), g (M, N) -> (K, N), reading x untransposed.
+
+    This is the `dw` contraction of the dense backward pass. For the PAIRED
+    adversary trunk x is (1920, 15505): an explicit `x.T` would copy ~119 MB
+    per epoch (measured §Perf iteration 2); contracting over axis 0 in the
+    kernel avoids it. Grid tiles the *output rows* (K); M stays whole per
+    block, matching the forward kernel's whole-K policy.
+    """
+    m, k = x.shape
+    m2, n = g.shape
+    assert m == m2, f"contraction mismatch {m} vs {m2}"
+    bn = _pick_bn(n)
+    bk = _pick_bm(k, m, bn)  # output rows tile like M; contraction dim is m
+    xp = _pad2(x.astype(jnp.float32), 1, bk)
+    gp = _pad2(g.astype(jnp.float32), 1, bn)
+    kp, np_ = xp.shape[1], gp.shape[1]
+    out = pl.pallas_call(
+        _matmul_tn_kernel,
+        grid=(kp // bk, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda i, j: (0, i)),
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((kp, np_), jnp.float32),
+        interpret=True,
+    )(xp, gp)
+    return out[:k, :n]
+
+
+# ---------------------------------------------------------------------------
+# Fused dense: act(x @ w + b)
+# ---------------------------------------------------------------------------
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    z = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = z + b_ref[...]  # (1, bn) broadcast over rows
+    o_ref[...] = _apply_act(z, act)
+
+
+def _fused_dense_fwd_impl(x, w, b, act: str):
+    m, k = x.shape
+    _, n = w.shape
+    bn = _pick_bn(n)
+    bm = _pick_bm(m, k, bn)
+    xp = _pad2(x.astype(jnp.float32), bm, 1)
+    wp = _pad2(w.astype(jnp.float32), 1, bn)
+    bp = _pad2(b.astype(jnp.float32).reshape(1, -1), 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_fused_dense_kernel, act=act),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_dense(x, w, b, act: str = ACT_ID):
+    """y = act(x @ w + b), forward and backward both as Pallas kernels.
+
+    x: (M, K) float32, w: (K, N) float32, b: (N,) float32.
+    `act` in {"id", "relu", "tanh"} (static).
+    """
+    assert act in _ACTS, act
+    return _fused_dense_fwd_impl(x, w, b, act)
+
+
+def _fused_dense_fwd(x, w, b, act: str):
+    y = _fused_dense_fwd_impl(x, w, b, act)
+    # Save the *output* only: all supported activations have gradients
+    # expressible in terms of y, so the pre-activation is never materialized.
+    return y, (x, w, y)
+
+
+def _fused_dense_bwd(act: str, res, g):
+    x, w, y = res
+    gz = g * _act_grad_from_out(y, act)  # (M, N)
+    # Both gradient contractions are Pallas matmuls (the backward hot path).
+    # w.T is tiny (K x N weights); x would be huge transposed, so dw uses
+    # the transposed-LHS kernel instead.
+    dx = matmul(gz, w.T)  # (M, K)
+    dw = matmul_tn(x, gz)  # (K, N)
+    db = jnp.sum(gz, axis=0)  # cheap VPU reduction; XLA fuses it
+    return dx, dw, db
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: Generalized Advantage Estimation as a reverse scan.
+
+GAE is the sequential hot-spot of every PPO update *and* of the PLR scoring
+path (PVL scores are clipped GAE means), so there is exactly one
+implementation, used by both the `train_step` and `score` artifacts — the
+Rust coordinator never re-implements this math.
+
+Recurrence (PureJaxRL convention: done_t = 1 iff the transition at step t
+ended the episode, so the bootstrap across t -> t+1 is cut by done_t):
+
+    delta_t = r_t + gamma * V_{t+1} * (1 - done_t) - V_t
+    A_t     = delta_t + gamma * lam * (1 - done_t) * A_{t+1}
+    V_T     = last_value  (bootstrap), A_T = 0
+
+TPU structure: the grid is the time axis (T steps, executed sequentially —
+the Pallas grid on TPU is a sequential loop, which is exactly what a scan
+needs); each grid step processes a (1, B) row resident in VMEM, with the
+(1, B) carry A_{t+1} held in a VMEM scratch accumulator across grid steps.
+B is lane-padded to a multiple of 128 by the wrapper. `interpret=True` for
+the CPU plugin; the interpreter preserves sequential grid order so the carry
+pattern is exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gae_kernel(v_ref, nv_ref, r_ref, d_ref, adv_ref, carry_ref, *, gamma, lam):
+    # Grid step i visits t = T-1-i (reverse time order via the index_map).
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    nonterm = 1.0 - d_ref[...]
+    delta = r_ref[...] + gamma * nv_ref[...] * nonterm - v_ref[...]
+    adv = delta + gamma * lam * nonterm * carry_ref[...]
+    adv_ref[...] = adv
+    carry_ref[...] = adv
+
+
+def gae(values, rewards, dones, last_value, gamma: float, lam: float):
+    """Compute GAE advantages.
+
+    values:     (T, B) f32 — V(s_t)
+    rewards:    (T, B) f32
+    dones:      (T, B) f32 — 1.0 iff transition t terminated the episode
+    last_value: (B,)   f32 — V(s_T) bootstrap
+    Returns advantages (T, B) f32. Value targets are advantages + values.
+    """
+    t, b = values.shape
+    values = values.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    dones = dones.astype(jnp.float32)
+    next_values = jnp.concatenate(
+        [values[1:], last_value.astype(jnp.float32).reshape(1, b)], axis=0
+    )
+
+    # Lane-pad B to a multiple of 128 for VPU-friendly (1, B) rows.
+    bp = ((b + 127) // 128) * 128
+    pad = bp - b
+    if pad:
+        pz = ((0, 0), (0, pad))
+        values = jnp.pad(values, pz)
+        next_values = jnp.pad(next_values, pz)
+        rewards = jnp.pad(rewards, pz)
+        dones = jnp.pad(dones, pz)
+
+    spec = pl.BlockSpec((1, bp), lambda i: (t - 1 - i, 0))
+    adv = pl.pallas_call(
+        functools.partial(_gae_kernel, gamma=gamma, lam=lam),
+        grid=(t,),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((t, bp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bp), jnp.float32)],
+        interpret=True,
+    )(values, next_values, rewards, dones)
+    return adv[:, :b]
+
+
+def discounted_return_to_go(rewards, dones, gamma: float):
+    """R_t = r_t + gamma * (1 - done_t) * R_{t+1}, reverse scan.
+
+    Used by the score artifact for MaxMC return tracking. Pure-jnp lax.scan:
+    it shares the artifact with the Pallas GAE kernel and XLA fuses it with
+    the surrounding elementwise ops; a second sequential Pallas kernel here
+    would buy nothing (same recurrence structure, no matmul content).
+    """
+
+    def step(carry, xs):
+        r, d = xs
+        ret = r + gamma * (1.0 - d) * carry
+        return ret, ret
+
+    _, rets = jax.lax.scan(
+        step, jnp.zeros_like(rewards[0]), (rewards, dones), reverse=True
+    )
+    return rets

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain jax.numpy only (no pallas, no custom control flow). pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts allclose between kernel and oracle for values *and* gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return jnp.matmul(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def fused_dense_ref(x, w, b, act: str = "id"):
+    z = matmul_ref(x, w) + b.astype(jnp.float32)
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "tanh":
+        return jnp.tanh(z)
+    return z
+
+
+def gae_ref(values, rewards, dones, last_value, gamma: float, lam: float):
+    """Reference GAE via lax.scan (reverse)."""
+    values = values.astype(jnp.float32)
+    rewards = rewards.astype(jnp.float32)
+    dones = dones.astype(jnp.float32)
+    next_values = jnp.concatenate(
+        [values[1:], last_value.astype(jnp.float32)[None, :]], axis=0
+    )
+
+    def step(carry, xs):
+        v, nv, r, d = xs
+        nonterm = 1.0 - d
+        delta = r + gamma * nv * nonterm - v
+        adv = delta + gamma * lam * nonterm * carry
+        return adv, adv
+
+    _, advs = jax.lax.scan(
+        step,
+        jnp.zeros_like(values[0]),
+        (values, next_values, rewards, dones),
+        reverse=True,
+    )
+    return advs
+
+
+def discounted_return_to_go_ref(rewards, dones, gamma: float):
+    rewards = rewards.astype(jnp.float32)
+    dones = dones.astype(jnp.float32)
+    out = []
+    carry = jnp.zeros_like(rewards[0])
+    for t in range(rewards.shape[0] - 1, -1, -1):
+        carry = rewards[t] + gamma * (1.0 - dones[t]) * carry
+        out.append(carry)
+    return jnp.stack(out[::-1], axis=0)

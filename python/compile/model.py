@@ -1,0 +1,171 @@
+"""L2: actor-critic networks for the JaxUED maze student and PAIRED adversary.
+
+Both networks follow the paper (Table 3): a single 3x3 convolution (16
+filters for the student, 128 for the adversary), a 32-unit hidden dense
+layer, and separate policy/value heads. Every matmul — including the
+convolution, expressed as im2col — routes through the L1 Pallas
+`fused_dense` kernel, so the whole forward *and* backward hot path runs on
+the custom kernels.
+
+Observation formats (kept in sync with the Rust env via artifacts/manifest.json):
+
+  Student:   obs_img  (B, 5, 5, 3) f32 — egocentric 5x5 crop, agent at the
+             bottom-center facing up; channels = {wall, goal, out-of-bounds}.
+             obs_dir  (B, 4) f32 — one-hot absolute facing direction.
+             Actions: 3 (turn-left, turn-right, forward).
+
+  Adversary: grid (B, 13, 13, 3) f32 — channels {wall, agent, goal};
+             tstep (B, 1) f32 — editor step / total;
+             noise (B, 16) f32 — per-level random conditioning z.
+             Actions: 169 = flat cell index (place agent -> goal -> walls).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_dense
+
+Params = Dict[str, jax.Array]
+
+# Maze geometry (must match rust/src/env/maze.rs).
+GRID_W = 13
+GRID_H = 13
+VIEW = 5
+OBS_CHANNELS = 3
+NUM_ACTIONS = 3
+NUM_DIRECTIONS = 4
+
+ADV_CHANNELS = 3
+ADV_NUM_ACTIONS = GRID_W * GRID_H  # 169
+ADV_NOISE_DIM = 16
+
+# Fixed parameter ordering — the artifact ABI. rust/src/runtime/params.rs
+# reads this ordering from the manifest; never reorder without bumping it.
+PARAM_ORDER: List[str] = [
+    "conv_w", "conv_b",
+    "trunk_w", "trunk_b",
+    "pi_w", "pi_b",
+    "v_w", "v_b",
+]
+
+
+def _im2col(x: jax.Array, k: int = 3) -> jax.Array:
+    """Extract kxk VALID patches: (B, H, W, C) -> (B*P*Q, k*k*C).
+
+    Row layout is (i, j, c)-major, matching the conv weight layout
+    (k*k*C, F). Unrolled slicing: XLA fuses the 9 slices into one gather.
+    """
+    b, h, w, c = x.shape
+    p, q = h - k + 1, w - k + 1
+    patches = jnp.stack(
+        [x[:, i : i + p, j : j + q, :] for i in range(k) for j in range(k)],
+        axis=3,
+    )  # (B, P, Q, k*k, C)
+    return patches.reshape(b * p * q, k * k * c)
+
+
+def _conv3x3(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """3x3 VALID conv + bias + relu via im2col + the Pallas fused kernel."""
+    bsz, h, wd, _ = x.shape
+    p, q = h - 2, wd - 2
+    cols = _im2col(x, 3)
+    out = fused_dense(cols, w, b, "relu")  # (B*P*Q, F)
+    return out.reshape(bsz, p * q * w.shape[1])
+
+
+def student_param_specs(filters: int = 16, hidden: int = 32) -> Dict[str, Tuple[int, ...]]:
+    conv_in = 3 * 3 * OBS_CHANNELS
+    flat = (VIEW - 2) * (VIEW - 2) * filters  # 3*3*16 = 144
+    trunk_in = flat + NUM_DIRECTIONS
+    return {
+        "conv_w": (conv_in, filters),
+        "conv_b": (filters,),
+        "trunk_w": (trunk_in, hidden),
+        "trunk_b": (hidden,),
+        "pi_w": (hidden, NUM_ACTIONS),
+        "pi_b": (NUM_ACTIONS,),
+        "v_w": (hidden, 1),
+        "v_b": (1,),
+    }
+
+
+def adversary_param_specs(filters: int = 128, hidden: int = 32) -> Dict[str, Tuple[int, ...]]:
+    conv_in = 3 * 3 * ADV_CHANNELS
+    flat = (GRID_H - 2) * (GRID_W - 2) * filters  # 11*11*128 = 15488
+    trunk_in = flat + 1 + ADV_NOISE_DIM
+    return {
+        "conv_w": (conv_in, filters),
+        "conv_b": (filters,),
+        "trunk_w": (trunk_in, hidden),
+        "trunk_b": (hidden,),
+        "pi_w": (hidden, ADV_NUM_ACTIONS),
+        "pi_b": (ADV_NUM_ACTIONS,),
+        "v_w": (hidden, 1),
+        "v_b": (1,),
+    }
+
+
+def init_params(key: jax.Array, specs: Dict[str, Tuple[int, ...]]) -> Params:
+    """Scaled-normal init: He (sqrt(2/fan_in)) for relu layers, 0.01-scale
+    for the policy head, 1/sqrt(fan_in) for the value head, zero biases.
+
+    (The original uses orthogonal init; QR lowering is not supported by the
+    pinned xla_extension CPU plugin, so we substitute scaled normals —
+    documented in DESIGN.md. The variance scaling matches.)
+    """
+    params: Params = {}
+    keys = jax.random.split(key, len(PARAM_ORDER))
+    for k, name in zip(keys, PARAM_ORDER):
+        shape = specs[name]
+        if name.endswith("_b"):
+            params[name] = jnp.zeros(shape, jnp.float32)
+            continue
+        fan_in = shape[0]
+        if name == "pi_w":
+            scale = 0.01
+        elif name == "v_w":
+            scale = 1.0 / math.sqrt(fan_in)
+        else:
+            scale = math.sqrt(2.0 / fan_in)
+        params[name] = scale * jax.random.normal(k, shape, jnp.float32)
+    return params
+
+
+def student_apply(params: Params, obs: Tuple[jax.Array, ...]) -> Tuple[jax.Array, jax.Array]:
+    """Student forward: (obs_img (B,5,5,3), obs_dir (B,4)) -> (logits (B,3), value (B,))."""
+    obs_img, obs_dir = obs
+    feats = _conv3x3(obs_img, params["conv_w"], params["conv_b"])
+    h = fused_dense(
+        jnp.concatenate([feats, obs_dir], axis=1),
+        params["trunk_w"], params["trunk_b"], "relu",
+    )
+    logits = fused_dense(h, params["pi_w"], params["pi_b"], "id")
+    value = fused_dense(h, params["v_w"], params["v_b"], "id")[:, 0]
+    return logits, value
+
+
+def adversary_apply(params: Params, obs: Tuple[jax.Array, ...]) -> Tuple[jax.Array, jax.Array]:
+    """Adversary forward: (grid (B,13,13,3), tstep (B,1), noise (B,16))
+    -> (logits (B,169), value (B,))."""
+    grid, tstep, noise = obs
+    feats = _conv3x3(grid, params["conv_w"], params["conv_b"])
+    h = fused_dense(
+        jnp.concatenate([feats, tstep, noise], axis=1),
+        params["trunk_w"], params["trunk_b"], "relu",
+    )
+    logits = fused_dense(h, params["pi_w"], params["pi_b"], "id")
+    value = fused_dense(h, params["v_w"], params["v_b"], "id")[:, 0]
+    return logits, value
+
+
+def student_obs_shapes(b: int) -> List[Tuple[int, ...]]:
+    return [(b, VIEW, VIEW, OBS_CHANNELS), (b, NUM_DIRECTIONS)]
+
+
+def adversary_obs_shapes(b: int) -> List[Tuple[int, ...]]:
+    return [(b, GRID_H, GRID_W, ADV_CHANNELS), (b, 1), (b, ADV_NOISE_DIM)]

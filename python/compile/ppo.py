@@ -1,0 +1,265 @@
+"""L2: the complete PPO update and the PLR scoring function, as jittable
+functions lowered to single AOT artifacts.
+
+Design decision 1 in DESIGN.md: the *entire* update-cycle compute — GAE
+(Pallas kernel), advantage normalization, the 5-epoch clipped-PPO loop, and
+hand-rolled Adam with global-norm clipping — lives inside one
+`train_step` function. The Rust coordinator makes exactly one PJRT call per
+update-cycle and threads device-resident parameter/optimizer buffers through
+`execute_b`, so the L3<->runtime boundary is off the hot path.
+
+Hyperparameters (Table 3) are baked into the artifact at lowering time
+(they are physical constants of the paper's experiments); the learning rate
+is a runtime input because the paper anneals it linearly.
+
+No optax/flax on this path: Adam is ~15 lines and keeping the artifact
+dependency-free makes the lowered HLO auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gae as gae_kernel
+from .kernels.gae import discounted_return_to_go
+
+Params = Dict[str, jax.Array]
+ApplyFn = Callable[[Params, Tuple[jax.Array, ...]], Tuple[jax.Array, jax.Array]]
+
+# Names of the metrics vector returned by train_step, in order (ABI).
+METRIC_NAMES: List[str] = [
+    "total_loss", "pg_loss", "value_loss", "entropy",
+    "approx_kl", "clip_frac", "grad_norm", "adv_mean",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PpoHp:
+    """PPO hyperparameters, paper Table 3 defaults."""
+
+    gamma: float = 0.995
+    gae_lambda: float = 0.98
+    clip_eps: float = 0.2
+    epochs: int = 5
+    vf_coef: float = 0.5
+    ent_coef: float = 1e-3
+    max_grad_norm: float = 0.5
+    adam_b1: float = 0.9
+    adam_b2: float = 0.999
+    adam_eps: float = 1e-5
+    normalize_adv: bool = True
+    clip_value: bool = True
+
+
+# ---------------------------------------------------------------------------
+# Categorical distribution helpers
+# ---------------------------------------------------------------------------
+
+
+def log_softmax(logits: jax.Array) -> jax.Array:
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(m)
+    return shifted - jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+
+
+def action_log_prob(logits: jax.Array, actions: jax.Array) -> jax.Array:
+    logp = log_softmax(logits)
+    return jnp.take_along_axis(logp, actions[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+
+def entropy(logits: jax.Array) -> jax.Array:
+    logp = log_softmax(logits)
+    return -jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Adam with global-norm clipping
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params: Params) -> Tuple[Params, Params, jax.Array]:
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in params.items()}, jnp.zeros((), jnp.float32)
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(v * v) for v in tree.values()))
+
+
+def adam_update(
+    params: Params, grads: Params, m: Params, v: Params, count: jax.Array,
+    lr: jax.Array, hp: PpoHp,
+) -> Tuple[Params, Params, Params, jax.Array, jax.Array]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, hp.max_grad_norm / (gnorm + 1e-9))
+    grads = {k: g * scale for k, g in grads.items()}
+    count = count + 1.0
+    b1c = 1.0 - hp.adam_b1 ** count
+    b2c = 1.0 - hp.adam_b2 ** count
+    new_m, new_v, new_p = {}, {}, {}
+    for k in params:
+        new_m[k] = hp.adam_b1 * m[k] + (1.0 - hp.adam_b1) * grads[k]
+        new_v[k] = hp.adam_b2 * v[k] + (1.0 - hp.adam_b2) * grads[k] ** 2
+        mhat = new_m[k] / b1c
+        vhat = new_v[k] / b2c
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + hp.adam_eps)
+    return new_p, new_m, new_v, count, gnorm
+
+
+# ---------------------------------------------------------------------------
+# PPO loss
+# ---------------------------------------------------------------------------
+
+
+def ppo_loss(
+    params: Params, apply_fn: ApplyFn, obs: Tuple[jax.Array, ...],
+    actions: jax.Array, old_logp: jax.Array, old_values: jax.Array,
+    advantages: jax.Array, targets: jax.Array, hp: PpoHp,
+) -> Tuple[jax.Array, Tuple[jax.Array, ...]]:
+    """Clipped-surrogate PPO loss over a flat (N,) batch."""
+    logits, values = apply_fn(params, obs)
+    logp = action_log_prob(logits, actions)
+    ratio = jnp.exp(logp - old_logp)
+
+    pg1 = ratio * advantages
+    pg2 = jnp.clip(ratio, 1.0 - hp.clip_eps, 1.0 + hp.clip_eps) * advantages
+    pg_loss = -jnp.mean(jnp.minimum(pg1, pg2))
+
+    if hp.clip_value:
+        v_clipped = old_values + jnp.clip(
+            values - old_values, -hp.clip_eps, hp.clip_eps
+        )
+        v_loss = 0.5 * jnp.mean(
+            jnp.maximum((values - targets) ** 2, (v_clipped - targets) ** 2)
+        )
+    else:
+        v_loss = 0.5 * jnp.mean((values - targets) ** 2)
+
+    ent = jnp.mean(entropy(logits))
+    total = pg_loss + hp.vf_coef * v_loss - hp.ent_coef * ent
+
+    approx_kl = jnp.mean(old_logp - logp)
+    clip_frac = jnp.mean((jnp.abs(ratio - 1.0) > hp.clip_eps).astype(jnp.float32))
+    return total, (pg_loss, v_loss, ent, approx_kl, clip_frac)
+
+
+# ---------------------------------------------------------------------------
+# Full update-cycle: GAE + multi-epoch PPO + Adam, one artifact call
+# ---------------------------------------------------------------------------
+
+
+def make_train_step(
+    apply_fn: ApplyFn, param_order: Sequence[str], n_obs: int, hp: PpoHp,
+):
+    """Build the flat-signature train_step for AOT lowering.
+
+    Signature (all f32 unless noted):
+      inputs:  [params…(P), m…(P), v…(P), count(), lr(),
+                obs…(n_obs arrays, each (T,B,…)), actions (T,B) i32,
+                old_logp (T,B), old_values (T,B), rewards (T,B),
+                dones (T,B), last_value (B,)]
+      outputs: [params'…(P), m'…(P), v'…(P), count'(), metrics (8,)]
+
+    Flat lists (not pytrees) because the PJRT executable ABI is positional;
+    `param_order` pins the ordering recorded in the manifest.
+    """
+    p = len(param_order)
+
+    def train_step(*args):
+        params = dict(zip(param_order, args[:p]))
+        m = dict(zip(param_order, args[p : 2 * p]))
+        v = dict(zip(param_order, args[2 * p : 3 * p]))
+        count = args[3 * p]
+        lr = args[3 * p + 1]
+        rest = args[3 * p + 2 :]
+        obs_seq = rest[:n_obs]
+        actions, old_logp, old_values, rewards, dones, last_value = rest[n_obs:]
+
+        t, b = actions.shape
+        advantages = gae_kernel(
+            old_values, rewards, dones, last_value, hp.gamma, hp.gae_lambda
+        )
+        targets = advantages + old_values
+        adv_mean = jnp.mean(advantages)
+        if hp.normalize_adv:
+            adv = (advantages - adv_mean) / (jnp.std(advantages) + 1e-8)
+        else:
+            adv = advantages
+
+        # Flatten (T, B, ...) -> (T*B, ...). One minibatch per epoch
+        # (Table 3: minibatches = 1) so no permutation is needed.
+        flat_obs = tuple(o.reshape((t * b,) + o.shape[2:]) for o in obs_seq)
+        flat = dict(
+            actions=actions.reshape(-1),
+            old_logp=old_logp.reshape(-1),
+            old_values=old_values.reshape(-1),
+            adv=adv.reshape(-1),
+            targets=targets.reshape(-1),
+        )
+
+        grad_fn = jax.value_and_grad(ppo_loss, has_aux=True)
+
+        def epoch(_, carry):
+            params, m, v, count, _metrics = carry
+            (total, aux), grads = grad_fn(
+                params, apply_fn, flat_obs, flat["actions"], flat["old_logp"],
+                flat["old_values"], flat["adv"], flat["targets"], hp,
+            )
+            params, m, v, count, gnorm = adam_update(params, grads, m, v, count, lr, hp)
+            pg_loss, v_loss, ent, approx_kl, clip_frac = aux
+            metrics = jnp.stack(
+                [total, pg_loss, v_loss, ent, approx_kl, clip_frac, gnorm, adv_mean]
+            )
+            return params, m, v, count, metrics
+
+        init_metrics = jnp.zeros((len(METRIC_NAMES),), jnp.float32)
+        params, m, v, count, metrics = jax.lax.fori_loop(
+            0, hp.epochs, epoch, (params, m, v, count, init_metrics)
+        )
+
+        out: List[jax.Array] = []
+        out += [params[k] for k in param_order]
+        out += [m[k] for k in param_order]
+        out += [v[k] for k in param_order]
+        out += [count, metrics]
+        return tuple(out)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Level scoring (PLR / ACCEL): PVL and MaxMC from a rollout
+# ---------------------------------------------------------------------------
+
+SCORE_OUTPUT_NAMES: List[str] = ["pvl", "maxmc", "max_return", "mean_value"]
+
+
+def make_score_fn(hp: PpoHp):
+    """Build the score artifact: per-level regret estimates from a rollout.
+
+    inputs:  values (T,B), rewards (T,B), dones (T,B), last_value (B,),
+             prev_max_return (B,)   — the level_extra max-return carry
+    outputs: pvl (B,), maxmc (B,), max_return (B,), mean_value (B,)
+
+    PVL  (Positive Value Loss): mean_t max(GAE_t, 0)          (Jiang 2021a)
+    MaxMC (Maximum Monte Carlo): mean_t max(R* - V_t, 0), with R* the max
+           discounted return-to-go ever observed on the level (tracked
+           across rollouts via prev_max_return / level_extra).
+    """
+
+    def score(values, rewards, dones, last_value, prev_max_return):
+        adv = gae_kernel(values, rewards, dones, last_value, hp.gamma, hp.gae_lambda)
+        pvl = jnp.mean(jnp.maximum(adv, 0.0), axis=0)
+
+        rets = discounted_return_to_go(rewards, dones, hp.gamma)  # (T, B)
+        max_ret = jnp.maximum(jnp.max(rets, axis=0), prev_max_return)
+        maxmc = jnp.mean(jnp.maximum(max_ret[None, :] - values, 0.0), axis=0)
+        mean_value = jnp.mean(values, axis=0)
+        return pvl, maxmc, max_ret, mean_value
+
+    return score

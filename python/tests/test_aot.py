@@ -1,0 +1,104 @@
+"""AOT pipeline tests: HLO text emission and manifest integrity.
+
+These validate the python side of the artifact ABI; the Rust integration
+tests (`rust/tests/`) validate the consumer side against the same files.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.aot import to_hlo_text, VARIANTS
+from compile.ppo import METRIC_NAMES, SCORE_OUTPUT_NAMES
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_basic():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # text format only — serialized protos are rejected by xla_extension 0.5.1
+    assert "ENTRY" in text
+
+
+def test_variants_table():
+    assert VARIANTS["std"] == {"T": 256, "B": 32, "T_adv": 60}
+    assert VARIANTS["small"]["B"] == 8
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ARTIFACTS, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("run `make artifacts` first")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_constants_match_model(manifest):
+    c = manifest["constants"]
+    assert c["grid_w"] == model.GRID_W
+    assert c["view"] == model.VIEW
+    assert c["num_actions"] == model.NUM_ACTIONS
+    assert c["adv_num_actions"] == model.ADV_NUM_ACTIONS
+    assert manifest["metric_names"] == METRIC_NAMES
+    assert manifest["score_output_names"] == SCORE_OUTPUT_NAMES
+
+
+def test_manifest_files_exist(manifest):
+    for a in manifest["artifacts"]:
+        path = os.path.join(ARTIFACTS, a["file"])
+        assert os.path.exists(path), a["file"]
+        with open(path) as f:
+            head = f.read(64)
+        assert head.startswith("HloModule"), a["file"]
+
+
+def test_manifest_param_order_is_abi(manifest):
+    for net in manifest["networks"].values():
+        assert net["param_order"] == model.PARAM_ORDER
+
+
+def test_apply_artifact_shapes(manifest):
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    for name, a in by_name.items():
+        if a.get("kind") != "apply":
+            continue
+        b = a["B"]
+        # last output pair: logits (B, A), value (B,)
+        logits, value = a["outputs"]
+        assert logits["shape"][0] == b
+        assert value["shape"] == [b]
+
+
+def test_hyperparameters_are_table3(manifest):
+    hp = manifest["hyperparameters"]
+    assert hp["gamma"] == 0.995
+    assert hp["gae_lambda"] == 0.98
+    assert hp["clip_eps"] == 0.2
+    assert hp["epochs"] == 5
+    assert hp["vf_coef"] == 0.5
+    assert hp["ent_coef"] == pytest.approx(1e-3)
+    assert hp["max_grad_norm"] == 0.5
+
+
+def test_init_lowering_roundtrip():
+    """Lower a fresh init fn and verify executing the HLO path end-to-end in
+    the jax CPU client (proxy for the Rust PJRT client)."""
+    specs = model.student_param_specs()
+
+    def init_fn(seed):
+        params = model.init_params(jax.random.PRNGKey(seed), specs)
+        return tuple(params[k] for k in model.PARAM_ORDER)
+
+    out = jax.jit(init_fn)(jnp.int32(3))
+    assert len(out) == len(model.PARAM_ORDER)
+    text = to_hlo_text(jax.jit(init_fn).lower(jax.ShapeDtypeStruct((), jnp.int32)))
+    assert "HloModule" in text

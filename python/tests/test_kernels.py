@@ -1,0 +1,251 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+The core correctness signal of the compute stack. hypothesis sweeps shapes
+and value ranges; every comparison covers forward values AND gradients
+(the backward pass is also Pallas — custom VJP).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_dense, gae, matmul
+from compile.kernels.fused_dense import ACT_ID, ACT_RELU, ACT_TANH
+from compile.kernels.gae import discounted_return_to_go
+from compile.kernels.ref import (
+    discounted_return_to_go_ref,
+    fused_dense_ref,
+    gae_ref,
+    matmul_ref,
+)
+
+ACTS = [ACT_ID, ACT_RELU, ACT_TANH]
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    k=st.integers(1, 40),
+    n=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, m, k)
+    w = rand(seed + 1, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(matmul_ref(x, w)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_block_boundary_shapes():
+    # exactly at and just past the 128-block boundaries
+    for m in (127, 128, 129, 256):
+        for n in (127, 128, 129):
+            x = rand(m * n, m, 16)
+            w = rand(m + n, 16, n)
+            np.testing.assert_allclose(
+                np.asarray(matmul(x, w)), np.asarray(matmul_ref(x, w)),
+                rtol=1e-4, atol=1e-4,
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 60),
+    k=st.integers(1, 50),
+    n=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tn_matches_transpose(m, k, n, seed):
+    from compile.kernels import matmul_tn
+
+    x = rand(seed, m, k)
+    g = rand(seed + 1, m, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul_tn(x, g)), np.asarray(matmul_ref(x.T, g)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_tn_adversary_trunk_shape():
+    # the dw contraction this kernel exists for: (M, K)^T @ (M, N)
+    from compile.kernels import matmul_tn
+
+    x = rand(0, 130, 517)  # scaled-down stand-in for (1920, 15505)
+    g = rand(1, 130, 32)
+    np.testing.assert_allclose(
+        np.asarray(matmul_tn(x, g)), np.asarray(matmul_ref(x.T, g)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_matmul_mxu_sized():
+    # the adversary trunk shape: (B*P*Q, 27) @ (27, 128)
+    x = rand(0, 968, 27)
+    w = rand(1, 27, 128)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)), np.asarray(matmul_ref(x, w)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused dense
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_fused_dense_values(act):
+    x, w, b = rand(0, 33, 27), rand(1, 27, 16), rand(2, 16)
+    np.testing.assert_allclose(
+        np.asarray(fused_dense(x, w, b, act)),
+        np.asarray(fused_dense_ref(x, w, b, act)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_fused_dense_grads(act):
+    x, w, b = rand(3, 9, 12), rand(4, 12, 7), rand(5, 7)
+
+    def f(fn):
+        return lambda *a: (fn(*a, act) ** 2).sum()
+
+    g_kernel = jax.grad(f(fused_dense), argnums=(0, 1, 2))(x, w, b)
+    g_ref = jax.grad(f(fused_dense_ref), argnums=(0, 1, 2))(x, w, b)
+    for a, r in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 32),
+    n=st.integers(1, 40),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_dense_shape_sweep(m, k, n, act, seed):
+    x, w, b = rand(seed, m, k), rand(seed + 1, k, n), rand(seed + 2, n)
+    out = fused_dense(x, w, b, act)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(fused_dense_ref(x, w, b, act)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_fused_dense_relu_kills_gradient_at_negative():
+    # gradient must be exactly zero where relu clamps
+    x = jnp.array([[-5.0, -5.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    g = jax.grad(lambda x: fused_dense(x, w, b, ACT_RELU).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_fused_dense_jit_compatible():
+    f = jax.jit(lambda x, w, b: fused_dense(x, w, b, ACT_RELU))
+    x, w, b = rand(6, 8, 8), rand(7, 8, 8), rand(8, 8)
+    np.testing.assert_allclose(
+        np.asarray(f(x, w, b)),
+        np.asarray(fused_dense_ref(x, w, b, ACT_RELU)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GAE
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 40),
+    b=st.integers(1, 20),
+    gamma=st.floats(0.5, 1.0),
+    lam=st.floats(0.0, 1.0),
+    p_done=st.floats(0.0, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gae_matches_ref(t, b, gamma, lam, p_done, seed):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    values = jax.random.normal(k1, (t, b))
+    rewards = jax.random.normal(k2, (t, b))
+    dones = (jax.random.uniform(k3, (t, b)) < p_done).astype(jnp.float32)
+    last_value = jax.random.normal(k4, (b,))
+    np.testing.assert_allclose(
+        np.asarray(gae(values, rewards, dones, last_value, gamma, lam)),
+        np.asarray(gae_ref(values, rewards, dones, last_value, gamma, lam)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_gae_done_cuts_bootstrap():
+    # with done everywhere, A_t = r_t - V_t exactly
+    t, b = 5, 3
+    values = rand(0, t, b)
+    rewards = rand(1, t, b)
+    dones = jnp.ones((t, b), jnp.float32)
+    lv = rand(2, b)
+    adv = gae(values, rewards, dones, lv, 0.99, 0.95)
+    np.testing.assert_allclose(
+        np.asarray(adv), np.asarray(rewards - values), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_gae_paper_hyperparams_long_horizon():
+    # T=256 B=32, gamma/lambda from Table 3 — the std-variant shape
+    t, b = 256, 32
+    values = rand(0, t, b)
+    rewards = rand(1, t, b) * 0.1
+    dones = (rand(2, t, b) > 1.2).astype(jnp.float32)
+    lv = rand(3, b)
+    np.testing.assert_allclose(
+        np.asarray(gae(values, rewards, dones, lv, 0.995, 0.98)),
+        np.asarray(gae_ref(values, rewards, dones, lv, 0.995, 0.98)),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_gae_zero_lambda_is_td_error():
+    t, b = 8, 4
+    values = rand(0, t, b)
+    rewards = rand(1, t, b)
+    dones = jnp.zeros((t, b), jnp.float32)
+    lv = rand(2, b)
+    adv = gae(values, rewards, dones, lv, 0.9, 0.0)
+    next_values = jnp.concatenate([values[1:], lv[None]], axis=0)
+    expect = rewards + 0.9 * next_values - values
+    np.testing.assert_allclose(np.asarray(adv), np.asarray(expect), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 30),
+    b=st.integers(1, 8),
+    gamma=st.floats(0.5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_return_to_go_matches_ref(t, b, gamma, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    rewards = jax.random.normal(k1, (t, b))
+    dones = (jax.random.uniform(k2, (t, b)) < 0.2).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(discounted_return_to_go(rewards, dones, gamma)),
+        np.asarray(discounted_return_to_go_ref(rewards, dones, gamma)),
+        rtol=1e-4, atol=1e-4,
+    )

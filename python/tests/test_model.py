@@ -1,0 +1,126 @@
+"""L2 model tests: shapes, init statistics, and the im2col convolution
+against jax.lax's native convolution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def test_student_param_specs_match_paper():
+    specs = model.student_param_specs()
+    assert specs["conv_w"] == (27, 16)  # 3x3x3 -> 16 filters (Table 3)
+    assert specs["trunk_w"] == (144 + 4, 32)  # hidden dim 32
+    assert specs["pi_w"] == (32, 3)
+    assert specs["v_w"] == (32, 1)
+
+
+def test_adversary_param_specs_match_paper():
+    specs = model.adversary_param_specs()
+    assert specs["conv_w"] == (27, 128)  # 128 filters (Table 3)
+    assert specs["trunk_w"] == (11 * 11 * 128 + 1 + 16, 32)
+    assert specs["pi_w"] == (32, 169)
+
+
+def test_init_deterministic_and_scaled():
+    specs = model.student_param_specs()
+    a = model.init_params(jax.random.PRNGKey(0), specs)
+    b = model.init_params(jax.random.PRNGKey(0), specs)
+    c = model.init_params(jax.random.PRNGKey(1), specs)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert any(
+        not np.array_equal(np.asarray(a[k]), np.asarray(c[k])) for k in a
+    )
+    # biases zero, policy head small
+    assert np.all(np.asarray(a["conv_b"]) == 0.0)
+    assert np.abs(np.asarray(a["pi_w"])).max() < 0.1
+    # He scaling for the trunk: std ~ sqrt(2/fan_in)
+    std = np.asarray(a["trunk_w"]).std()
+    expect = np.sqrt(2.0 / 148)
+    assert 0.5 * expect < std < 1.5 * expect
+
+
+@pytest.mark.parametrize("b", [1, 5, 8])
+def test_student_apply_shapes(b):
+    specs = model.student_param_specs()
+    params = model.init_params(jax.random.PRNGKey(0), specs)
+    obs = (
+        jnp.zeros((b, 5, 5, 3), jnp.float32),
+        jnp.zeros((b, 4), jnp.float32),
+    )
+    logits, value = model.student_apply(params, obs)
+    assert logits.shape == (b, 3)
+    assert value.shape == (b,)
+
+
+def test_adversary_apply_shapes():
+    specs = model.adversary_param_specs()
+    params = model.init_params(jax.random.PRNGKey(0), specs)
+    obs = (
+        jnp.zeros((4, 13, 13, 3), jnp.float32),
+        jnp.zeros((4, 1), jnp.float32),
+        jnp.zeros((4, 16), jnp.float32),
+    )
+    logits, value = model.adversary_apply(params, obs)
+    assert logits.shape == (4, 169)
+    assert value.shape == (4,)
+
+
+def test_im2col_conv_matches_lax_conv():
+    """The im2col + Pallas path must equal jax.lax.conv_general_dilated."""
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (6, 5, 5, 3), jnp.float32)
+    w_flat = jax.random.normal(k2, (27, 16), jnp.float32) * 0.1
+    b = jax.random.normal(k3, (16,), jnp.float32)
+
+    from compile.model import _conv3x3
+
+    ours = _conv3x3(x, w_flat, b)  # (6, 3*3*16)
+
+    # reference: NHWC conv with HWIO weights
+    w_hwio = w_flat.reshape(3, 3, 3, 16)
+    ref = jax.lax.conv_general_dilated(
+        x, w_hwio, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b
+    ref = jnp.maximum(ref, 0.0).reshape(6, -1)
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_apply_sensitive_to_observation():
+    specs = model.student_param_specs()
+    params = model.init_params(jax.random.PRNGKey(0), specs)
+    obs0 = (
+        jnp.zeros((1, 5, 5, 3), jnp.float32),
+        jnp.zeros((1, 4), jnp.float32).at[0, 0].set(1.0),
+    )
+    obs1 = (
+        jnp.ones((1, 5, 5, 3), jnp.float32),
+        jnp.zeros((1, 4), jnp.float32).at[0, 0].set(1.0),
+    )
+    l0, v0 = model.student_apply(params, obs0)
+    l1, v1 = model.student_apply(params, obs1)
+    assert not np.allclose(np.asarray(l0), np.asarray(l1)) or not np.allclose(
+        np.asarray(v0), np.asarray(v1)
+    )
+
+
+def test_grads_flow_to_all_params():
+    specs = model.student_param_specs()
+    params = model.init_params(jax.random.PRNGKey(0), specs)
+    obs = (
+        jax.random.normal(jax.random.PRNGKey(1), (4, 5, 5, 3)),
+        jnp.ones((4, 4), jnp.float32) * 0.25,
+    )
+
+    def loss(p):
+        logits, value = model.student_apply(p, obs)
+        return (logits**2).sum() + (value**2).sum()
+
+    g = jax.grad(loss)(params)
+    for k, v in g.items():
+        assert np.abs(np.asarray(v)).sum() > 0, f"no gradient reaches {k}"

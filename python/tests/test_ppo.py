@@ -1,0 +1,248 @@
+"""L2 PPO machinery tests: loss, Adam, the fused train step, and scoring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.ppo import (
+    METRIC_NAMES,
+    PpoHp,
+    adam_init,
+    adam_update,
+    action_log_prob,
+    entropy,
+    global_norm,
+    log_softmax,
+    make_score_fn,
+    make_train_step,
+    ppo_loss,
+)
+
+HP = PpoHp()
+
+
+def test_log_softmax_normalizes():
+    logits = jnp.array([[1.0, 2.0, 3.0], [0.0, 0.0, 0.0]])
+    p = jnp.exp(log_softmax(logits))
+    np.testing.assert_allclose(np.asarray(p.sum(axis=1)), 1.0, rtol=1e-6)
+
+
+def test_action_log_prob_selects():
+    logits = jnp.array([[0.0, jnp.log(3.0)]])
+    lp = action_log_prob(logits, jnp.array([1]))
+    np.testing.assert_allclose(np.asarray(lp), np.log(0.75), rtol=1e-5)
+
+
+def test_entropy_uniform_max():
+    assert abs(float(entropy(jnp.zeros((1, 4)))[0]) - np.log(4)) < 1e-5
+    assert float(entropy(jnp.array([[100.0, 0.0, 0.0, 0.0]]))[0]) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Adam
+# ---------------------------------------------------------------------------
+
+
+def test_adam_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    m, v, count = adam_init(params)
+    lr = jnp.float32(0.1)
+    for _ in range(200):
+        grads = {"w": 2.0 * params["w"]}
+        params, m, v, count, _ = adam_update(params, grads, m, v, count, lr, HP)
+    assert np.abs(np.asarray(params["w"])).max() < 1e-2
+
+
+def test_adam_grad_clipping():
+    params = {"w": jnp.zeros(4)}
+    m, v, count = adam_init(params)
+    grads = {"w": jnp.full(4, 1e6)}
+    _, _, _, _, gnorm = adam_update(params, grads, m, v, count, jnp.float32(1e-3), HP)
+    assert float(gnorm) == pytest.approx(2e6, rel=1e-5)
+    # the applied update must correspond to the clipped gradient
+    # (norm max_grad_norm), i.e. finite and small
+    assert np.isfinite(float(gnorm))
+
+
+def test_global_norm():
+    tree = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+    assert float(global_norm(tree)) == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# PPO loss
+# ---------------------------------------------------------------------------
+
+
+def _toy_apply(params, obs):
+    (x,) = obs
+    logits = x @ params["w"]
+    value = (x @ params["vw"])[:, 0]
+    return logits, value
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    return {
+        "w": jax.random.normal(k1, (4, 3)) * 0.1,
+        "vw": jax.random.normal(k2, (4, 1)) * 0.1,
+    }
+
+
+def test_ppo_loss_zero_advantage_pg_term():
+    params = _toy_params(0)
+    n = 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 4))
+    logits, values = _toy_apply(params, (x,))
+    actions = jnp.zeros(n, jnp.int32)
+    old_logp = action_log_prob(logits, actions)
+    adv = jnp.zeros(n)
+    targets = values
+    total, (pg, vl, ent, kl, cf) = ppo_loss(
+        params, _toy_apply, (x,), actions, old_logp, values, adv, targets, HP
+    )
+    # ratio = 1 everywhere, advantage 0: pg term exactly 0; value loss 0; kl 0
+    assert float(pg) == pytest.approx(0.0, abs=1e-6)
+    assert float(vl) == pytest.approx(0.0, abs=1e-6)
+    assert float(kl) == pytest.approx(0.0, abs=1e-6)
+    assert float(cf) == 0.0
+
+
+def test_ppo_loss_gradient_improves_objective():
+    params = _toy_params(2)
+    n = 64
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, 4))
+    logits, values = _toy_apply(params, (x,))
+    actions = jnp.argmax(logits, axis=1)  # act greedily
+    old_logp = action_log_prob(logits, actions)
+    adv = jnp.ones(n)  # taken actions were good
+    targets = values + 1.0
+
+    def loss_fn(p):
+        return ppo_loss(p, _toy_apply, (x,), actions, old_logp, values, adv, targets, HP)[0]
+
+    l0 = float(loss_fn(params))
+    g = jax.grad(loss_fn)(params)
+    stepped = {k: params[k] - 0.05 * g[k] for k in params}
+    l1 = float(loss_fn(stepped))
+    assert l1 < l0
+
+
+# ---------------------------------------------------------------------------
+# Fused train step (tiny student network, real maze obs shapes)
+# ---------------------------------------------------------------------------
+
+
+def _train_step_args(t=4, b=3, seed=0):
+    specs = model.student_param_specs()
+    params = model.init_params(jax.random.PRNGKey(seed), specs)
+    order = model.PARAM_ORDER
+    m, v, count = adam_init(params)
+    k = jax.random.PRNGKey(seed + 1)
+    ks = jax.random.split(k, 8)
+    obs_img = jax.random.uniform(ks[0], (t, b, 5, 5, 3))
+    obs_dir = jnp.zeros((t, b, 4)).at[..., 0].set(1.0)
+    actions = jax.random.randint(ks[1], (t, b), 0, 3)
+    old_logp = -jnp.log(3.0) * jnp.ones((t, b))
+    old_values = jax.random.normal(ks[2], (t, b)) * 0.1
+    rewards = (jax.random.uniform(ks[3], (t, b)) < 0.1).astype(jnp.float32)
+    dones = (jax.random.uniform(ks[4], (t, b)) < 0.2).astype(jnp.float32)
+    last_value = jax.random.normal(ks[5], (b,)) * 0.1
+    args = (
+        [params[k] for k in order]
+        + [m[k] for k in order]
+        + [v[k] for k in order]
+        + [count, jnp.float32(1e-3)]
+        + [obs_img, obs_dir, actions, old_logp, old_values, rewards, dones, last_value]
+    )
+    return args, order
+
+
+def test_train_step_output_structure():
+    ts = make_train_step(model.student_apply, model.PARAM_ORDER, 2, HP)
+    args, order = _train_step_args()
+    out = ts(*args)
+    p = len(order)
+    assert len(out) == 3 * p + 2
+    # count advanced by `epochs`
+    assert float(out[3 * p]) == HP.epochs
+    metrics = out[-1]
+    assert metrics.shape == (len(METRIC_NAMES),)
+    assert np.all(np.isfinite(np.asarray(metrics)))
+
+
+def test_train_step_changes_params():
+    ts = make_train_step(model.student_apply, model.PARAM_ORDER, 2, HP)
+    args, order = _train_step_args(seed=5)
+    out = ts(*args)
+    changed = 0
+    for i in range(len(order)):
+        if not np.allclose(np.asarray(out[i]), np.asarray(args[i])):
+            changed += 1
+    assert changed >= 6, f"only {changed} params changed"
+
+
+def test_train_step_zero_lr_is_identity_on_params():
+    ts = make_train_step(model.student_apply, model.PARAM_ORDER, 2, HP)
+    args, order = _train_step_args(seed=6)
+    args[3 * len(order) + 1] = jnp.float32(0.0)  # lr = 0
+    out = ts(*args)
+    for i in range(len(order)):
+        np.testing.assert_allclose(
+            np.asarray(out[i]), np.asarray(args[i]), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_train_step_jit_lowerable():
+    """The exact thing aot.py does: jit + lower + HLO text emission."""
+    ts = make_train_step(model.student_apply, model.PARAM_ORDER, 2, HP)
+    args, _ = _train_step_args()
+    lowered = jax.jit(ts).lower(*args)
+    from compile.aot import to_hlo_text
+
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert len(text) > 10_000
+
+
+# ---------------------------------------------------------------------------
+# Score function
+# ---------------------------------------------------------------------------
+
+
+def test_score_outputs_and_maxmc_carry():
+    score = make_score_fn(HP)
+    t, b = 6, 4
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    values = jax.random.normal(ks[0], (t, b)) * 0.1
+    rewards = (jax.random.uniform(ks[1], (t, b)) < 0.3).astype(jnp.float32)
+    dones = (jax.random.uniform(ks[2], (t, b)) < 0.3).astype(jnp.float32)
+    lv = jax.random.normal(ks[3], (b,)) * 0.1
+    prev = jnp.zeros(b)
+    pvl, maxmc, max_ret, mean_v = score(values, rewards, dones, lv, prev)
+    assert pvl.shape == (b,) and maxmc.shape == (b,)
+    assert np.all(np.asarray(pvl) >= 0)
+    assert np.all(np.asarray(maxmc) >= 0)
+    # carry: raising prev_max_return can only raise max_ret and maxmc
+    prev_hi = jnp.full(b, 10.0)
+    _, maxmc2, max_ret2, _ = score(values, rewards, dones, lv, prev_hi)
+    assert np.all(np.asarray(max_ret2) >= np.asarray(max_ret) - 1e-6)
+    assert np.all(np.asarray(maxmc2) >= np.asarray(maxmc) - 1e-6)
+    np.testing.assert_allclose(np.asarray(max_ret2), 10.0, rtol=1e-6)
+
+
+def test_score_pvl_zero_when_perfect_values():
+    """If values exactly equal returns (and rewards are deterministic),
+    advantages are ~0 so PVL ~ 0."""
+    score = make_score_fn(PpoHp(gamma=1.0, gae_lambda=1.0))
+    t, b = 5, 2
+    rewards = jnp.zeros((t, b)).at[-1].set(1.0)
+    dones = jnp.zeros((t, b)).at[-1].set(1.0)
+    # V_t = 1 (undiscounted return-to-go) for all t
+    values = jnp.ones((t, b))
+    lv = jnp.zeros(b)
+    pvl, _, _, _ = score(values, rewards, dones, lv, jnp.zeros(b))
+    np.testing.assert_allclose(np.asarray(pvl), 0.0, atol=1e-6)

@@ -1,0 +1,117 @@
+//! Microbenchmarks: the L3 environment substrate hot paths.
+//!
+//! jaxued's training loop budget is dominated by PJRT calls; these benches
+//! verify the Rust env layer stays far off the critical path (§Perf target:
+//! < 1 µs per env step+observe).
+
+use std::time::Instant;
+
+use jaxued::env::gen::LevelGenerator;
+use jaxued::env::level::Level;
+use jaxued::env::maze::{MazeEnv, ACT_FORWARD, ACT_LEFT, ACT_RIGHT};
+use jaxued::env::mutate::Mutator;
+use jaxued::env::render::render_level;
+use jaxued::env::shortest_path::distance_field;
+use jaxued::env::UnderspecifiedEnv;
+use jaxued::util::rng::Pcg64;
+
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    // warmup
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let ops = f();
+        let dt = t0.elapsed().as_secs_f64();
+        best = best.min(dt / ops as f64);
+    }
+    let (scaled, unit) = if best < 1e-6 {
+        (best * 1e9, "ns")
+    } else if best < 1e-3 {
+        (best * 1e6, "µs")
+    } else {
+        (best * 1e3, "ms")
+    };
+    println!("{name:<32} {scaled:>9.1} {unit}/op   ({:>12.0} ops/s)", 1.0 / best);
+}
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(0);
+    let gen = LevelGenerator::new(60);
+    let env = MazeEnv::default();
+    let levels: Vec<Level> = gen.generate_batch(64, &mut rng);
+
+    println!("=== micro_env: L3 substrate hot paths ===");
+
+    bench("maze step+observe", || {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut obs = vec![0.0f32; env.obs_len()];
+        let mut state = env.reset_to_level(&levels[0], &mut rng);
+        let n = 1_000_000u64;
+        let actions = [ACT_LEFT, ACT_RIGHT, ACT_FORWARD];
+        for i in 0..n {
+            let r = env.step(&mut state, actions[(i % 3) as usize], &mut rng);
+            env.observe(&state, &mut obs);
+            if r.done {
+                state = env.reset_to_level(&levels[(i % 64) as usize], &mut rng);
+            }
+        }
+        n
+    });
+
+    bench("maze step only", || {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut state = env.reset_to_level(&levels[1], &mut rng);
+        let n = 4_000_000u64;
+        for i in 0..n {
+            let r = env.step(&mut state, (i % 3) as usize, &mut rng);
+            if r.done {
+                state = env.reset_to_level(&levels[(i % 64) as usize], &mut rng);
+            }
+        }
+        n
+    });
+
+    bench("level generation (60 walls)", || {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let n = 200_000u64;
+        for _ in 0..n {
+            std::hint::black_box(gen.generate(&mut rng));
+        }
+        n
+    });
+
+    bench("ACCEL mutation (20 edits)", || {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let m = Mutator::default();
+        let n = 200_000u64;
+        for i in 0..n {
+            std::hint::black_box(m.mutate(&levels[(i % 64) as usize], &mut rng));
+        }
+        n
+    });
+
+    bench("BFS distance field", || {
+        let n = 200_000u64;
+        for i in 0..n {
+            std::hint::black_box(distance_field(&levels[(i % 64) as usize]));
+        }
+        n
+    });
+
+    bench("level fingerprint", || {
+        let n = 2_000_000u64;
+        for i in 0..n {
+            std::hint::black_box(levels[(i % 64) as usize].fingerprint());
+        }
+        n
+    });
+
+    bench("render level (104x104 px)", || {
+        let n = 20_000u64;
+        for i in 0..n {
+            std::hint::black_box(render_level(&levels[(i % 64) as usize], None));
+        }
+        n
+    });
+}

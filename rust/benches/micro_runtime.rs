@@ -1,0 +1,130 @@
+//! Microbenchmarks: PJRT artifact call latencies (the true hot path).
+//!
+//! One update cycle = T `policy_apply` calls + 1 `train_step` (+1 `score`
+//! for the PLR family), so apply latency × T bounds rollout speed. §Perf
+//! tracks these numbers before/after optimization.
+
+use std::path::Path;
+use std::time::Instant;
+
+use jaxued::runtime::Runtime;
+use jaxued::util::cli::Args;
+use jaxued::util::tensor::{TensorF32, TensorI32};
+
+fn bench<F: FnMut() -> anyhow::Result<u64>>(name: &str, mut f: F) -> anyhow::Result<()> {
+    f()?;
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let ops = f()?;
+        best = best.min(t0.elapsed().as_secs_f64() / ops as f64);
+    }
+    let (scaled, unit) = if best < 1e-3 {
+        (best * 1e6, "µs")
+    } else {
+        (best * 1e3, "ms")
+    };
+    println!("{name:<42} {scaled:>10.1} {unit}/call");
+    Ok(())
+}
+
+fn zeros_f32(shape: &[usize]) -> xla::Literal {
+    TensorF32::zeros(shape).to_literal().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let rt = Runtime::new(Path::new(&args.get_str("artifacts", "artifacts")))?;
+    println!("=== micro_runtime: PJRT call latencies (CPU client) ===");
+
+    for (variant, t, b) in [("small", 32usize, 8usize), ("std", 256, 32)] {
+        let params = rt.init_params("student", 0)?;
+        // --- policy apply -----------------------------------------------------
+        let apply = rt.load(&format!("student_apply_b{b}"))?;
+        let obs_img = zeros_f32(&[b, 5, 5, 3]);
+        let obs_dir = zeros_f32(&[b, 4]);
+        let mut apply_args: Vec<xla::Literal> = params.params.clone();
+        apply_args.push(obs_img);
+        apply_args.push(obs_dir);
+        bench(&format!("[{variant}] student_apply (B={b})"), || {
+            let n = 200u64;
+            for _ in 0..n {
+                std::hint::black_box(apply.call(&apply_args)?);
+            }
+            Ok(n)
+        })?;
+
+        // --- train step -------------------------------------------------------
+        let ts = rt.load(&format!("student_train_step_t{t}_b{b}"))?;
+        let mut ts_args = params.train_args();
+        ts_args.push(xla::Literal::scalar(1e-4f32));
+        ts_args.push(zeros_f32(&[t, b, 5, 5, 3]));
+        ts_args.push(zeros_f32(&[t, b, 4]));
+        ts_args.push(TensorI32::zeros(&[t, b]).to_literal()?);
+        for _ in 0..4 {
+            ts_args.push(zeros_f32(&[t, b]));
+        }
+        ts_args.push(zeros_f32(&[b]));
+        bench(&format!("[{variant}] student_train_step (T={t},B={b})"), || {
+            let n = 10u64;
+            for _ in 0..n {
+                std::hint::black_box(ts.call(&ts_args)?);
+            }
+            Ok(n)
+        })?;
+
+        // --- score ------------------------------------------------------------
+        let score = rt.load(&format!("score_t{t}_b{b}"))?;
+        let score_args = vec![
+            zeros_f32(&[t, b]),
+            zeros_f32(&[t, b]),
+            zeros_f32(&[t, b]),
+            zeros_f32(&[b]),
+            zeros_f32(&[b]),
+        ];
+        bench(&format!("[{variant}] score (T={t},B={b})"), || {
+            let n = 50u64;
+            for _ in 0..n {
+                std::hint::black_box(score.call(&score_args)?);
+            }
+            Ok(n)
+        })?;
+    }
+
+    // --- adversary (PAIRED bottleneck) ----------------------------------------
+    let adv_params = rt.init_params("adversary", 0)?;
+    let adv_apply = rt.load("adversary_apply_b32")?;
+    let mut adv_args: Vec<xla::Literal> = adv_params.params.clone();
+    adv_args.push(zeros_f32(&[32, 13, 13, 3]));
+    adv_args.push(zeros_f32(&[32, 1]));
+    adv_args.push(zeros_f32(&[32, 16]));
+    bench("[std] adversary_apply (B=32)", || {
+        let n = 50u64;
+        for _ in 0..n {
+            std::hint::black_box(adv_apply.call(&adv_args)?);
+        }
+        Ok(n)
+    })?;
+
+    let (t_adv, b) = (60usize, 32usize);
+    let adv_ts = rt.load(&format!("adversary_train_step_t{t_adv}_b{b}"))?;
+    let mut args2 = adv_params.train_args();
+    args2.push(xla::Literal::scalar(1e-4f32));
+    args2.push(zeros_f32(&[t_adv, b, 13, 13, 3]));
+    args2.push(zeros_f32(&[t_adv, b, 1]));
+    args2.push(zeros_f32(&[t_adv, b, 16]));
+    args2.push(TensorI32::zeros(&[t_adv, b]).to_literal()?);
+    for _ in 0..4 {
+        args2.push(zeros_f32(&[t_adv, b]));
+    }
+    args2.push(zeros_f32(&[b]));
+    bench("[std] adversary_train_step (T=60,B=32)", || {
+        let n = 3u64;
+        for _ in 0..n {
+            std::hint::black_box(adv_ts.call(&args2)?);
+        }
+        Ok(n)
+    })?;
+
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Microbenchmarks: the LevelSampler at the paper's buffer size (K=4000).
+//!
+//! Replay sampling is O(K) per draw batch (weight construction dominates);
+//! with one batch per update cycle the budget is generous, but the §Perf
+//! pass tracks it because rank prioritization sorts the whole buffer.
+
+use std::time::Instant;
+
+use jaxued::env::gen::LevelGenerator;
+use jaxued::env::level::Level;
+use jaxued::level_sampler::{LevelSampler, SamplerConfig};
+use jaxued::util::rng::Pcg64;
+
+fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let ops = f();
+        best = best.min(t0.elapsed().as_secs_f64() / ops as f64);
+    }
+    let (scaled, unit) = if best < 1e-6 {
+        (best * 1e9, "ns")
+    } else if best < 1e-3 {
+        (best * 1e6, "µs")
+    } else {
+        (best * 1e3, "ms")
+    };
+    println!("{name:<40} {scaled:>9.2} {unit}/op ({:>12.0} ops/s)", 1.0 / best);
+}
+
+fn full_sampler(levels: &[Level]) -> LevelSampler<Level, f32> {
+    let mut s = LevelSampler::new(SamplerConfig { capacity: 4000, ..Default::default() });
+    let mut rng = Pcg64::seed_from_u64(9);
+    for (i, l) in levels.iter().enumerate() {
+        s.insert(*l, rng.next_f64(), l.fingerprint() ^ i as u64, 0.0);
+    }
+    s
+}
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(0);
+    let gen = LevelGenerator::new(60);
+    let levels = gen.generate_batch(4000, &mut rng);
+
+    println!("=== micro_sampler: LevelSampler (K=4000, rank prioritization) ===");
+
+    bench("insert into full buffer (evicting)", || {
+        let mut s = full_sampler(&levels);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let n = 50_000u64;
+        for i in 0..n {
+            let l = &levels[(i % 4000) as usize];
+            s.insert(*l, 0.5 + rng.next_f64(), rng.next_u64(), 0.0);
+        }
+        n
+    });
+
+    bench("sample replay batch of 32", || {
+        let mut s = full_sampler(&levels);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let n = 2_000u64;
+        for _ in 0..n {
+            std::hint::black_box(s.sample_replay_indices(32, &mut rng));
+        }
+        n
+    });
+
+    bench("update batch of 32 scores", || {
+        let mut s = full_sampler(&levels);
+        let idx: Vec<usize> = (0..32).collect();
+        let scores = vec![0.7f64; 32];
+        let extras = vec![0.0f32; 32];
+        let n = 200_000u64;
+        for _ in 0..n {
+            s.update_batch(&idx, &scores, &extras);
+        }
+        n
+    });
+
+    bench("replay distribution (full K)", || {
+        let s = full_sampler(&levels);
+        let n = 2_000u64;
+        for _ in 0..n {
+            std::hint::black_box(s.replay_distribution());
+        }
+        n
+    });
+}

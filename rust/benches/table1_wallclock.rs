@@ -1,0 +1,81 @@
+//! Table 1 — total wallclock per algorithm.
+//!
+//! Times a fixed number of update cycles per algorithm on this machine and
+//! extrapolates to the paper's full 245,760,000-env-step budget. The `dcd`
+//! row is quoted from the paper (Jiang et al. 2023 measurements) as the
+//! CPU-era baseline anchor; we reproduce the *shape* (JaxUED ≫ DCD, and the
+//! relative ordering among JaxUED algorithms), not A40 absolutes — see
+//! DESIGN.md §Hardware-Adaptation.
+//!
+//! Flags: --cycles N (default 12) --variant std|small --algos dr,plr,…
+
+use std::path::Path;
+
+use jaxued::algo::build_algo;
+use jaxued::config::{Algo, TrainConfig, Variant};
+use jaxued::metrics::Stopwatch;
+use jaxued::runtime::Runtime;
+use jaxued::util::cli::Args;
+use jaxued::util::rng::Pcg64;
+
+const PAPER_BUDGET: u64 = 245_760_000;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let cycles = args.get_usize("cycles", 4);
+    let variant = Variant::parse(&args.get_str("variant", "std"))?;
+    let algo_list = args.get_str("algos", "dr,plr,robust_plr,accel,paired");
+    let rt = Runtime::new(Path::new(&args.get_str("artifacts", "artifacts")))?;
+
+    println!("=== Table 1: wallclock time (hours) for {PAPER_BUDGET} env steps ===");
+    println!("(measured over {cycles} update cycles, variant {})\n", variant.name);
+
+    // Paper rows, for side-by-side comparison.
+    let paper_dcd = [("DR", 63.0), ("PLR", f64::NAN), ("PLR⊥", 119.0), ("ACCEL", 104.0), ("PAIRED", 213.0)];
+    let paper_jaxued = [("DR", 1.5), ("PLR", 1.5), ("PLR⊥", 1.0), ("ACCEL", 1.0), ("PAIRED", 1.7)];
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    for name in algo_list.split(',') {
+        let algo = Algo::parse(name)?;
+        let mut cfg = TrainConfig::defaults(algo);
+        cfg.variant = variant;
+        cfg.env_steps_budget = (cycles as u64) * cfg.env_steps_per_cycle();
+        cfg.eval_interval = 0;
+        let mut rng = Pcg64::new(1234, 0x5431); // fixed bench seed
+        let mut driver = build_algo(&rt, &cfg, &mut rng)?;
+        // one warmup cycle (compilation, caches)
+        driver.cycle(&mut rng)?;
+        let mut watch = Stopwatch::new();
+        for _ in 0..cycles {
+            driver.cycle(&mut rng)?;
+            watch.add_steps(cfg.env_steps_per_cycle());
+        }
+        let hours = watch.extrapolate_hours(PAPER_BUDGET);
+        rows.push((name.to_string(), watch.steps_per_sec(), hours));
+        println!(
+            "  {:<12} {:>10.0} env-steps/s  -> {:>8.2} h per 245.76M steps",
+            name, watch.steps_per_sec(), hours
+        );
+    }
+
+    println!("\n{:<28}{:>8}{:>8}{:>8}{:>8}{:>8}", "", "DR", "PLR", "PLR⊥", "ACCEL", "PAIRED");
+    print!("{:<28}", "dcd (paper, A40+CPU impl)");
+    for (_, h) in paper_dcd {
+        print!("{:>8}", if h.is_nan() { "-".into() } else { format!("{h:.0}") });
+    }
+    print!("\n{:<28}", "JaxUED (paper, A40)");
+    for (_, h) in paper_jaxued {
+        print!("{:>8.1}", h);
+    }
+    print!("\n{:<28}", "this repo (CPU PJRT)");
+    for name in ["dr", "plr", "robust_plr", "accel", "paired"] {
+        match rows.iter().find(|(n, _, _)| n == name) {
+            Some((_, _, h)) => print!("{:>8.1}", h),
+            None => print!("{:>8}", "-"),
+        }
+    }
+    println!();
+    println!("\nshape check: every row of this repo must be far below the dcd row;");
+    println!("PAIRED is the most expensive JaxUED method (adversary network).");
+    Ok(())
+}

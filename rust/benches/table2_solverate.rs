@@ -1,0 +1,79 @@
+//! Table 2 — mean solve rate ± std on the holdout suite, per algorithm,
+//! plus the 25-wall-limit row.
+//!
+//! Trains each algorithm for a scaled env-step budget across several seeds
+//! and evaluates on the holdout suite (named DCD mazes + seeded minimax-
+//! recipe procedural levels). The paper rows (dcd / minimax / JaxUED at
+//! 245.76M steps, 10 seeds) are printed alongside for shape comparison; at
+//! the default scaled budget the absolute rates are necessarily lower —
+//! the claim reproduced is the *ordering band* (DR competitive with the
+//! UED methods; nothing dominated by an order of magnitude).
+//!
+//! Flags: --env-steps N (default 250k) --seeds S (default 2)
+//!        --algos dr,plr,… --variant std|small --wall-limit-row
+
+use std::path::Path;
+
+use jaxued::algo::train;
+use jaxued::config::{Algo, TrainConfig, Variant};
+use jaxued::runtime::Runtime;
+use jaxued::util::stats::{mean, std_dev};
+
+fn run_row(
+    rt: &Runtime, algo: Algo, variant: Variant, env_steps: u64, seeds: u64,
+    max_walls: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let mut rates = Vec::new();
+    for seed in 0..seeds {
+        let mut cfg = TrainConfig::defaults(algo);
+        cfg.variant = variant;
+        cfg.env_steps_budget = env_steps;
+        cfg.seed = seed;
+        cfg.max_walls = max_walls;
+        cfg.eval_interval = 0;
+        cfg.eval_trials = 3;
+        cfg.out_dir = "runs/bench_table2".into();
+        let outcome = train(rt, &cfg, true)?;
+        rates.push(outcome.final_eval.mean_solve_rate);
+        eprintln!(
+            "  {} walls={} seed={}: mean_solve={:.3}",
+            algo.name(), max_walls, seed, outcome.final_eval.mean_solve_rate
+        );
+    }
+    Ok((mean(&rates), std_dev(&rates)))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = jaxued::util::cli::Args::parse();
+    let env_steps = args.get_u64("env-steps", 100_000);
+    let seeds = args.get_u64("seeds", 1);
+    let variant = Variant::parse(&args.get_str("variant", "std"))?;
+    let algo_list = args.get_str("algos", "dr,plr,robust_plr,accel,paired");
+    let wall_limit_row = args.get_bool("wall-limit-row", true);
+    let rt = Runtime::new(Path::new(&args.get_str("artifacts", "artifacts")))?;
+
+    println!("=== Table 2: mean solve rate on the holdout suite ===");
+    println!("(scaled budget: {env_steps} env steps, {seeds} seeds, variant {})\n", variant.name);
+
+    println!("paper rows (245.76M steps, 10 seeds):");
+    println!("  dcd (reported)      DR 0.62±0.05  PAIRED 0.52±0.13  PLR⊥ 0.71±0.04  ACCEL 0.75±0.03");
+    println!("  minimax (reported)  DR 0.55±0.05  PAIRED 0.63±0.04  PLR⊥ 0.70±0.03  ACCEL 0.73±0.05");
+    println!("  JaxUED (paper)      DR 0.69±0.05  PAIRED 0.61±0.16  PLR 0.72±0.08  PLR⊥ 0.66±0.09  ACCEL 0.72±0.05");
+    println!("  JaxUED 25-wall      DR 0.54±0.12  PAIRED 0.17±0.16  PLR 0.47±0.11  PLR⊥ 0.46±0.09\n");
+
+    println!("this repo (scaled):");
+    for name in algo_list.split(',') {
+        let algo = Algo::parse(name)?;
+        let (m, s) = run_row(&rt, algo, variant, env_steps, seeds, 60)?;
+        println!("  {:<12} {:.2} ± {:.2}", name, m, s);
+    }
+    if wall_limit_row {
+        println!("\nthis repo, 25-wall limit:");
+        for name in algo_list.split(',').filter(|n| *n != "accel") {
+            let algo = Algo::parse(name)?;
+            let (m, s) = run_row(&rt, algo, variant, env_steps, seeds, 25)?;
+            println!("  {:<12} {:.2} ± {:.2}", name, m, s);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Domain Randomization (paper §5.2).
+//!
+//! PureJaxRL-style training: B parallel envs roll the same policy on
+//! uniformly-sampled levels and every trajectory trains the policy. Unlike
+//! the PLR family, episode boundaries do *not* align with update cycles:
+//! the `AutoResetWrapper` samples a fresh level whenever an episode ends,
+//! and trailing episodes continue across update boundaries — the standard
+//! RL treatment the paper argues for (its §5.2 critique of bundling DR
+//! into PLR's fixed-level rollout scheme).
+
+use anyhow::Result;
+
+use super::{CycleMetrics, UedAlgorithm};
+use crate::config::TrainConfig;
+use crate::env::gen::LevelGenerator;
+use crate::env::level::Level;
+use crate::env::maze::{MazeEnv, MazeState, NUM_ACTIONS};
+use crate::env::wrappers::AutoResetWrapper;
+use crate::env::UnderspecifiedEnv;
+use crate::ppo::{LrSchedule, PpoTrainer};
+use crate::rollout::{Policy, RolloutEngine, Trajectory};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+
+type DrEnv = AutoResetWrapper<MazeEnv, Box<dyn Fn(&mut Pcg64) -> Level>>;
+
+/// The DR baseline.
+pub struct DrAlgo {
+    env: DrEnv,
+    states: Vec<MazeState>,
+    engine: RolloutEngine,
+    traj: Trajectory,
+    trainer: PpoTrainer,
+    apply: std::rc::Rc<crate::runtime::executor::Executable>,
+}
+
+impl DrAlgo {
+    pub fn new(rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64) -> Result<DrAlgo> {
+        let gen = LevelGenerator::new(cfg.max_walls);
+        let maze = MazeEnv::new(cfg.max_episode_steps);
+        let env: DrEnv = AutoResetWrapper::new(
+            maze,
+            Box::new(move |r: &mut Pcg64| gen.generate(r)) as Box<dyn Fn(&mut Pcg64) -> Level>,
+        );
+        let schedule = LrSchedule {
+            lr0: cfg.lr,
+            anneal: cfg.anneal_lr,
+            total_updates: cfg.num_cycles(),
+        };
+        let trainer = PpoTrainer::new(
+            rt, "student", &cfg.student_train_artifact(), cfg.seed as i32, schedule,
+        )?;
+        let apply = rt.load(&cfg.student_apply_artifact())?;
+        let (t, b) = trainer.rollout_shape();
+        let states = (0..b)
+            .map(|_| {
+                let l = gen.generate(rng);
+                env.reset_to_level(&l, rng)
+            })
+            .collect();
+        let engine = RolloutEngine::new(&env, b);
+        let traj = Trajectory::new(t, b, &env.obs_components());
+        Ok(DrAlgo { env, states, engine, traj, trainer, apply })
+    }
+}
+
+impl UedAlgorithm for DrAlgo {
+    fn name(&self) -> &'static str {
+        "dr"
+    }
+
+    fn cycle(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
+        {
+            let policy = Policy {
+                apply: self.apply.clone(),
+                params: &self.trainer.params.params,
+                num_actions: NUM_ACTIONS,
+            };
+            self.engine.collect(&self.env, &mut self.states, &policy, &mut self.traj, rng)?;
+        }
+        let ppo = self.trainer.update(&self.traj)?;
+        let stats = self.traj.episode_stats();
+        Ok(CycleMetrics::from_rollout("dr", Some(ppo), &stats, 0.0))
+    }
+
+    fn student_params(&self) -> &[xla::Literal] {
+        &self.trainer.params.params
+    }
+
+    fn student_trainer(&mut self) -> &mut PpoTrainer {
+        &mut self.trainer
+    }
+}

@@ -1,0 +1,162 @@
+//! The replay-based meta-policy (paper Figure 1): a fixed stochastic
+//! policy over a two-state MDP that decides which update-cycle to perform
+//! next.
+//!
+//! Transition matrix (rows = current stage, columns = next cycle):
+//!
+//! ```text
+//!              DR            Replay      Mutation
+//!   DR      [  1−p           p           0        ]
+//!   Replay  [ (1−p)(1−q)     p(1−q)      q        ]
+//! ```
+//!
+//! `p` is the replay probability, `q` the mutation probability (q = 1 for
+//! ACCEL — a mutation cycle always follows a replay cycle; q = 0
+//! otherwise). Replay is additionally gated on the level buffer being
+//! filled past its threshold; when the gate is closed the replay mass
+//! falls back to DR.
+
+use crate::util::rng::Pcg64;
+
+/// The kind of update-cycle to perform (paper §5.1 subroutines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cycle {
+    /// `on_new_levels`: generate random levels, roll out, score, insert.
+    Dr,
+    /// `on_replay_levels`: sample from the buffer, roll out, train, update.
+    Replay,
+    /// `on_mutate_levels`: mutate the last replayed batch, roll out, score.
+    Mutate,
+}
+
+/// Figure-1 meta-policy state machine.
+#[derive(Clone, Debug)]
+pub struct MetaPolicy {
+    pub p_replay: f64,
+    pub q_mutate: f64,
+    last: Cycle,
+}
+
+impl MetaPolicy {
+    pub fn new(p_replay: f64, q_mutate: f64) -> MetaPolicy {
+        assert!((0.0..=1.0).contains(&p_replay));
+        assert!((0.0..=1.0).contains(&q_mutate));
+        MetaPolicy { p_replay, q_mutate, last: Cycle::Dr }
+    }
+
+    /// Decide the next update-cycle. `can_replay` is the buffer-fill gate.
+    pub fn next(&mut self, can_replay: bool, rng: &mut Pcg64) -> Cycle {
+        let cycle = if self.last == Cycle::Replay && rng.gen_bool(self.q_mutate) {
+            Cycle::Mutate
+        } else if can_replay && rng.gen_bool(self.p_replay) {
+            Cycle::Replay
+        } else {
+            Cycle::Dr
+        };
+        self.last = cycle;
+        cycle
+    }
+
+    /// The theoretical transition row for a given stage (tests/diagnostics;
+    /// the `jaxued bench-env --meta-policy` subcommand prints this).
+    pub fn transition_row(&self, from: Cycle) -> [f64; 3] {
+        let (p, q) = (self.p_replay, self.q_mutate);
+        match from {
+            Cycle::Dr | Cycle::Mutate => [1.0 - p, p, 0.0],
+            Cycle::Replay => [(1.0 - p) * (1.0 - q), p * (1.0 - q), q],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::props;
+
+    /// Empirical next-cycle frequencies when the machine is pinned to stage
+    /// `from` (measures one row of the transition matrix).
+    fn empirical_row(p: f64, q: f64, from: Cycle, n: usize) -> [f64; 3] {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let mut counts = [0usize; 3];
+        let mut mp = MetaPolicy::new(p, q);
+        mp.last = from;
+        for _ in 0..n {
+            let c = mp.next(true, &mut rng);
+            counts[c as usize] += 1;
+            mp.last = from; // pin the source stage
+        }
+        [
+            counts[0] as f64 / n as f64,
+            counts[1] as f64 / n as f64,
+            counts[2] as f64 / n as f64,
+        ]
+    }
+
+    #[test]
+    fn dr_row_matches_matrix() {
+        let emp = empirical_row(0.5, 1.0, Cycle::Dr, 40_000);
+        let theory = MetaPolicy::new(0.5, 1.0).transition_row(Cycle::Dr);
+        for (e, t) in emp.iter().zip(&theory) {
+            assert!((e - t).abs() < 0.01, "{emp:?} vs {theory:?}");
+        }
+    }
+
+    #[test]
+    fn replay_row_matches_matrix() {
+        // q = 0.3 exercises all three columns from the replay stage
+        let emp = empirical_row(0.6, 0.3, Cycle::Replay, 40_000);
+        let theory = MetaPolicy::new(0.6, 0.3).transition_row(Cycle::Replay);
+        for (e, t) in emp.iter().zip(&theory) {
+            assert!((e - t).abs() < 0.01, "{emp:?} vs {theory:?}");
+        }
+    }
+
+    #[test]
+    fn accel_always_mutates_after_replay() {
+        let mut mp = MetaPolicy::new(0.8, 1.0);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut saw_replay = false;
+        for _ in 0..1000 {
+            let c = mp.next(true, &mut rng);
+            if saw_replay {
+                assert_eq!(c, Cycle::Mutate, "q=1 must mutate after replay");
+            }
+            saw_replay = c == Cycle::Replay;
+        }
+    }
+
+    #[test]
+    fn plr_never_mutates() {
+        let mut mp = MetaPolicy::new(0.5, 0.0);
+        let mut rng = Pcg64::seed_from_u64(2);
+        for _ in 0..2000 {
+            assert_ne!(mp.next(true, &mut rng), Cycle::Mutate);
+        }
+    }
+
+    #[test]
+    fn gate_forces_dr() {
+        let mut mp = MetaPolicy::new(1.0, 1.0);
+        let mut rng = Pcg64::seed_from_u64(3);
+        for _ in 0..100 {
+            assert_eq!(mp.next(false, &mut rng), Cycle::Dr);
+        }
+    }
+
+    #[test]
+    fn prop_rows_are_distributions() {
+        props(100, |g| {
+            let p = g.f64_in(0.0, 1.0);
+            let q = g.f64_in(0.0, 1.0);
+            let mp = MetaPolicy::new(p, q);
+            for from in [Cycle::Dr, Cycle::Replay, Cycle::Mutate] {
+                let row = mp.transition_row(from);
+                let sum: f64 = row.iter().sum();
+                prop_assert!((sum - 1.0).abs() < 1e-12, "row sums to {sum}");
+                prop_assert!(row.iter().all(|&x| x >= 0.0), "negative prob");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,208 @@
+//! UED algorithm drivers and the shared training loop.
+//!
+//! `UedAlgorithm` is the one-update-cycle interface every method (DR, the
+//! PLR family, PAIRED) implements; [`train`] iterates cycles against the
+//! paper's env-interaction budget accounting (§6), evaluating on the
+//! holdout suite at a fixed cadence and logging CSV + stdout metrics.
+
+pub mod dr;
+pub mod meta_policy;
+pub mod paired;
+pub mod plr;
+pub mod scoring;
+
+use anyhow::Result;
+
+use crate::config::{Algo, TrainConfig};
+use crate::eval::{EvalReport, Evaluator};
+use crate::metrics::{log_stdout, CsvSink, Stopwatch};
+use crate::ppo::{PpoTrainer, UpdateMetrics};
+use crate::rollout::storage::EpisodeStats;
+use crate::rollout::Policy;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+
+/// Per-cycle summary returned by every algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct CycleMetrics {
+    /// Which subroutine ran ("dr" | "new" | "replay" | "mutate" | "paired").
+    pub kind: &'static str,
+    /// PPO metrics when a gradient update happened this cycle.
+    pub total_loss: f64,
+    pub value_loss: f64,
+    pub entropy: f64,
+    pub updated: bool,
+    /// Rollout episode statistics (student / protagonist).
+    pub episodes: u32,
+    pub train_solve_rate: f64,
+    pub mean_reward: f64,
+    /// Level-buffer fill fraction (PLR family; 0 otherwise).
+    pub buffer_fill: f64,
+    /// PAIRED extras.
+    pub mean_regret: f64,
+    pub adversary_loss: f64,
+}
+
+impl CycleMetrics {
+    pub fn from_rollout(
+        kind: &'static str, ppo: Option<UpdateMetrics>, stats: &[EpisodeStats],
+        buffer_fill: f64,
+    ) -> CycleMetrics {
+        let episodes: u32 = stats.iter().map(|s| s.episodes).sum();
+        let solved: u32 = stats.iter().map(|s| s.solved).sum();
+        let reward: f64 = stats.iter().map(|s| s.reward_sum).sum();
+        let mut m = CycleMetrics {
+            kind,
+            episodes,
+            train_solve_rate: if episodes > 0 {
+                solved as f64 / episodes as f64
+            } else {
+                0.0
+            },
+            mean_reward: reward / stats.len().max(1) as f64,
+            buffer_fill,
+            ..Default::default()
+        };
+        if let Some(u) = ppo {
+            m.updated = true;
+            m.total_loss = u.total_loss() as f64;
+            m.value_loss = u.get("value_loss").unwrap_or(f32::NAN) as f64;
+            m.entropy = u.get("entropy").unwrap_or(f32::NAN) as f64;
+        }
+        m
+    }
+}
+
+/// One-update-cycle interface implemented by every UED method.
+pub trait UedAlgorithm {
+    fn name(&self) -> &'static str;
+
+    /// Perform one update cycle (the Figure-1 unit of training).
+    fn cycle(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics>;
+
+    /// Student (protagonist) parameters, for evaluation.
+    fn student_params(&self) -> &[xla::Literal];
+
+    /// Student trainer (checkpointing).
+    fn student_trainer(&mut self) -> &mut PpoTrainer;
+}
+
+/// Instantiate the configured algorithm.
+pub fn build_algo(
+    rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64,
+) -> Result<Box<dyn UedAlgorithm>> {
+    Ok(match cfg.algo {
+        Algo::Dr => Box::new(dr::DrAlgo::new(rt, cfg, rng)?),
+        Algo::Plr | Algo::RobustPlr | Algo::Accel => Box::new(plr::PlrAlgo::new(rt, cfg)?),
+        Algo::Paired => Box::new(paired::PairedAlgo::new(rt, cfg)?),
+    })
+}
+
+/// Outcome of a full training run.
+pub struct TrainOutcome {
+    pub final_eval: EvalReport,
+    pub cycles: usize,
+    pub env_steps: u64,
+    pub wallclock_secs: f64,
+    /// Extrapolated hours to the paper's 245.76M-step budget (Table 1).
+    pub table1_hours: f64,
+}
+
+/// The shared training loop: cycles → periodic eval → final report.
+pub fn train(
+    rt: &Runtime, cfg: &TrainConfig, quiet: bool,
+) -> Result<TrainOutcome> {
+    let mut rng = Pcg64::new(cfg.seed, 0x7261_696e); // "rain"
+    let mut algo = build_algo(rt, cfg, &mut rng)?;
+    let evaluator = Evaluator::default_suite(
+        cfg.variant.b, cfg.eval_trials, 20, cfg.max_episode_steps,
+    );
+    let stu_apply = rt.load(&cfg.student_apply_artifact())?;
+
+    let run_dir = std::path::Path::new(&cfg.out_dir)
+        .join(format!("{}_s{}", cfg.algo.name(), cfg.seed));
+    let mut csv = CsvSink::create(
+        &run_dir.join("metrics.csv"),
+        &[
+            "cycle", "env_steps", "loss", "value_loss", "entropy",
+            "train_solve_rate", "episodes", "buffer_fill", "mean_regret",
+            "eval_mean_solve", "eval_iqm_solve", "steps_per_sec",
+        ],
+    )?;
+
+    let mut watch = Stopwatch::new();
+    let total_cycles = cfg.num_cycles();
+    let per_cycle = cfg.env_steps_per_cycle();
+    let mut last_eval = (f64::NAN, f64::NAN);
+
+    for cycle in 0..total_cycles {
+        let m = algo.cycle(&mut rng)?;
+        watch.add_steps(per_cycle);
+
+        let do_eval = cfg.eval_interval > 0 && (cycle + 1) % cfg.eval_interval == 0;
+        if do_eval {
+            let policy = Policy {
+                apply: stu_apply.clone(),
+                params: algo.student_params(),
+                num_actions: crate::env::maze::NUM_ACTIONS,
+            };
+            let report = evaluator.run(&policy, &mut rng)?;
+            last_eval = (report.mean_solve_rate, report.iqm_solve_rate);
+            if !quiet {
+                log_stdout(
+                    cycle,
+                    watch.env_steps,
+                    &[
+                        ("eval_mean_solve", report.mean_solve_rate),
+                        ("eval_iqm_solve", report.iqm_solve_rate),
+                        ("sps", watch.steps_per_sec()),
+                    ],
+                );
+            }
+        }
+        csv.write_row(&[
+            cycle as f64,
+            watch.env_steps as f64,
+            m.total_loss,
+            m.value_loss,
+            m.entropy,
+            m.train_solve_rate,
+            m.episodes as f64,
+            m.buffer_fill,
+            m.mean_regret,
+            last_eval.0,
+            last_eval.1,
+            watch.steps_per_sec(),
+        ])?;
+        if !quiet && (cycle % 16 == 0) {
+            log_stdout(
+                cycle,
+                watch.env_steps,
+                &[
+                    ("loss", m.total_loss),
+                    ("train_solve", m.train_solve_rate),
+                    ("buffer", m.buffer_fill),
+                    ("sps", watch.steps_per_sec()),
+                ],
+            );
+        }
+    }
+
+    // Final checkpoint + evaluation.
+    algo.student_trainer()
+        .params
+        .save(&run_dir.join("student.ckpt"))?;
+    let policy = Policy {
+        apply: stu_apply,
+        params: algo.student_params(),
+        num_actions: crate::env::maze::NUM_ACTIONS,
+    };
+    let final_eval = evaluator.run(&policy, &mut rng)?;
+    Ok(TrainOutcome {
+        cycles: total_cycles,
+        env_steps: watch.env_steps,
+        wallclock_secs: watch.elapsed_secs(),
+        table1_hours: watch.extrapolate_hours(245_760_000),
+        final_eval,
+    })
+}

@@ -1,0 +1,204 @@
+//! PAIRED (paper §5.3, Dennis et al. 2020).
+//!
+//! Three agents: an *adversary* policy that builds levels in the editor
+//! environment, and two students — *protagonist* and *antagonist* — that
+//! play them. Per cycle:
+//!
+//!   1. roll the adversary in the editor env (fresh noise z per column) to
+//!      generate B levels;
+//!   2. roll both students on those levels (AutoReplay: several episodes
+//!      sharpen the estimates);
+//!   3. regret(level) = max antagonist terminal reward − mean protagonist
+//!      terminal reward (clamped at 0);
+//!   4. adversary trains on its editor trajectory with the sparse regret
+//!      reward at the final edit step; students train on their rollouts
+//!      with the ordinary env reward.
+//!
+//! Env-step accounting (paper §6): both students count, editor steps do not.
+
+use anyhow::Result;
+
+use super::{CycleMetrics, UedAlgorithm};
+use crate::config::TrainConfig;
+use crate::env::editor::{EditorEnv, EditorState, EditorTask};
+use crate::env::level::{Level, GRID_CELLS};
+use crate::env::maze::{MazeEnv, NUM_ACTIONS};
+use crate::env::wrappers::AutoReplayWrapper;
+use crate::env::UnderspecifiedEnv;
+use crate::ppo::{LrSchedule, PpoTrainer};
+use crate::rollout::{Policy, RolloutEngine, Trajectory};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+
+/// The PAIRED driver.
+pub struct PairedAlgo {
+    editor_env: EditorEnv,
+    student_env: AutoReplayWrapper<MazeEnv>,
+    adversary: PpoTrainer,
+    protagonist: PpoTrainer,
+    antagonist: PpoTrainer,
+    adv_apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    stu_apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    editor_engine: RolloutEngine,
+    student_engine: RolloutEngine,
+    editor_traj: Trajectory,
+    prot_traj: Trajectory,
+    ant_traj: Trajectory,
+    b: usize,
+    /// Mean regret of the last cycle (logged).
+    pub last_mean_regret: f64,
+}
+
+impl PairedAlgo {
+    pub fn new(rt: &Runtime, cfg: &TrainConfig) -> Result<PairedAlgo> {
+        let schedule = LrSchedule {
+            lr0: cfg.lr,
+            anneal: cfg.anneal_lr,
+            total_updates: cfg.num_cycles(),
+        };
+        let seed = cfg.seed as i32;
+        let adversary = PpoTrainer::new(
+            rt, "adversary", &cfg.adversary_train_artifact(), seed, schedule,
+        )?;
+        let protagonist = PpoTrainer::new(
+            rt, "student", &cfg.student_train_artifact(), seed.wrapping_add(1), schedule,
+        )?;
+        let antagonist = PpoTrainer::new(
+            rt, "student", &cfg.student_train_artifact(), seed.wrapping_add(2), schedule,
+        )?;
+        let adv_apply = rt.load(&cfg.adversary_apply_artifact())?;
+        let stu_apply = rt.load(&cfg.student_apply_artifact())?;
+        let editor_env = EditorEnv::new(cfg.editor_horizon());
+        let student_env = AutoReplayWrapper::new(MazeEnv::new(cfg.max_episode_steps));
+        let (t_adv, b) = adversary.rollout_shape();
+        let (t, b2) = protagonist.rollout_shape();
+        anyhow::ensure!(b == b2, "adversary/student batch mismatch: {b} vs {b2}");
+        anyhow::ensure!(
+            t_adv == cfg.editor_horizon(),
+            "adversary artifact horizon {t_adv} != configured editor steps {}",
+            cfg.editor_horizon()
+        );
+        let editor_engine = RolloutEngine::new(&editor_env, b);
+        let student_engine = RolloutEngine::new(&student_env, b);
+        let editor_traj = Trajectory::new(t_adv, b, &editor_env.obs_components());
+        let prot_traj = Trajectory::new(t, b, &student_env.obs_components());
+        let ant_traj = Trajectory::new(t, b, &student_env.obs_components());
+        Ok(PairedAlgo {
+            editor_env,
+            student_env,
+            adversary,
+            protagonist,
+            antagonist,
+            adv_apply,
+            stu_apply,
+            editor_engine,
+            student_engine,
+            editor_traj,
+            prot_traj,
+            ant_traj,
+            b,
+            last_mean_regret: 0.0,
+        })
+    }
+
+    /// Current adversary parameters (visualization / analysis).
+    pub fn adversary_params(&self) -> &[xla::Literal] {
+        &self.adversary.params.params
+    }
+
+    /// Roll the adversary in the editor env; returns the generated levels
+    /// (the editor trajectory stays in `self.editor_traj` for training).
+    fn generate_levels(&mut self, rng: &mut Pcg64) -> Result<Vec<Level>> {
+        let mut states: Vec<EditorState> = (0..self.b)
+            .map(|_| {
+                let task = EditorTask::sample(rng);
+                self.editor_env.reset_to_level(&task, rng)
+            })
+            .collect();
+        let policy = Policy {
+            apply: self.adv_apply.clone(),
+            params: &self.adversary.params.params,
+            num_actions: GRID_CELLS,
+        };
+        self.editor_engine.collect(
+            &self.editor_env, &mut states, &policy, &mut self.editor_traj, rng,
+        )?;
+        Ok(states.iter().map(|s| s.to_level()).collect())
+    }
+
+    fn student_rollout(
+        engine: &mut RolloutEngine, env: &AutoReplayWrapper<MazeEnv>,
+        trainer: &PpoTrainer, apply: &std::rc::Rc<crate::runtime::executor::Executable>,
+        traj: &mut Trajectory, levels: &[Level], rng: &mut Pcg64,
+    ) -> Result<()> {
+        let mut states: Vec<_> = levels
+            .iter()
+            .map(|l| env.reset_to_level(l, rng))
+            .collect();
+        let policy = Policy {
+            apply: apply.clone(),
+            params: &trainer.params.params,
+            num_actions: NUM_ACTIONS,
+        };
+        engine.collect(env, &mut states, &policy, traj, rng)
+    }
+}
+
+impl UedAlgorithm for PairedAlgo {
+    fn name(&self) -> &'static str {
+        "paired"
+    }
+
+    fn cycle(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
+        // 1. adversary generates levels
+        let levels = self.generate_levels(rng)?;
+
+        // 2. both students play them
+        Self::student_rollout(
+            &mut self.student_engine, &self.student_env, &self.protagonist,
+            &self.stu_apply, &mut self.prot_traj, &levels, rng,
+        )?;
+        Self::student_rollout(
+            &mut self.student_engine, &self.student_env, &self.antagonist,
+            &self.stu_apply, &mut self.ant_traj, &levels, rng,
+        )?;
+
+        // 3. regret per level: max antagonist − mean protagonist terminal
+        //    reward (0 when the antagonist never finished an episode).
+        let prot_stats = self.prot_traj.episode_stats();
+        let ant_stats = self.ant_traj.episode_stats();
+        let t_adv = self.editor_traj.t;
+        let mut regret_sum = 0.0;
+        {
+            let last_row = self.editor_traj.rewards.slice_mut(t_adv - 1);
+            for b in 0..self.b {
+                let regret = (ant_stats[b].max_end_reward as f64
+                    - prot_stats[b].mean_end_reward)
+                    .max(0.0);
+                last_row[b] = regret as f32;
+                regret_sum += regret;
+            }
+        }
+        self.last_mean_regret = regret_sum / self.b as f64;
+
+        // 4. updates: adversary on sparse regret, students on env reward.
+        let adv_metrics = self.adversary.update(&self.editor_traj)?;
+        let prot_metrics = self.protagonist.update(&self.prot_traj)?;
+        let _ant_metrics = self.antagonist.update(&self.ant_traj)?;
+
+        let mut m = CycleMetrics::from_rollout(
+            "paired", Some(prot_metrics), &prot_stats, 0.0,
+        );
+        m.mean_regret = self.last_mean_regret;
+        m.adversary_loss = adv_metrics.total_loss() as f64;
+        Ok(m)
+    }
+
+    fn student_params(&self) -> &[xla::Literal] {
+        &self.protagonist.params.params
+    }
+
+    fn student_trainer(&mut self) -> &mut PpoTrainer {
+        &mut self.protagonist
+    }
+}

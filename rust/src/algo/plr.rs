@@ -1,0 +1,195 @@
+//! The replay-based UED family (paper §5.1): PLR, robust PLR (PLR⊥), and
+//! ACCEL, as one driver with three subroutines — `on_new_levels`,
+//! `on_replay_levels`, `on_mutate_levels` — selected each cycle by the
+//! Figure-1 meta-policy.
+//!
+//! * PLR       (p = 0.5, q = 0): trains on new *and* replay cycles.
+//! * PLR⊥      (p = 0.5, q = 0): trains on replay cycles only.
+//! * ACCEL     (p = 0.8, q = 1): PLR⊥ + mutation cycles after every replay.
+//!
+//! Rollouts use `AutoReplayWrapper`: an episode that ends mid-rollout
+//! restarts *the same level*, so a level's regret estimate can average over
+//! multiple episodes (§5.2).
+
+use anyhow::Result;
+
+use super::meta_policy::{Cycle, MetaPolicy};
+use super::scoring::{LevelExtra, Scorer};
+use super::{CycleMetrics, UedAlgorithm};
+use crate::config::{Algo, TrainConfig};
+use crate::env::gen::LevelGenerator;
+use crate::env::level::Level;
+use crate::env::maze::{MazeEnv, NUM_ACTIONS};
+use crate::env::mutate::Mutator;
+use crate::env::wrappers::{AutoReplayWrapper, ReplayState};
+use crate::env::UnderspecifiedEnv;
+use crate::level_sampler::LevelSampler;
+use crate::ppo::{LrSchedule, PpoTrainer};
+use crate::rollout::{Policy, RolloutEngine, Trajectory};
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg64;
+
+type PlrEnv = AutoReplayWrapper<MazeEnv>;
+
+/// PLR / PLR⊥ / ACCEL driver.
+pub struct PlrAlgo {
+    /// Train on `on_new_levels` cycles too (plain PLR)?
+    train_on_new: bool,
+    /// Enable mutation cycles (ACCEL)?
+    name: &'static str,
+    gen: LevelGenerator,
+    mutator: Mutator,
+    meta: MetaPolicy,
+    pub sampler: LevelSampler<Level, LevelExtra>,
+    env: PlrEnv,
+    engine: RolloutEngine,
+    traj: Trajectory,
+    trainer: PpoTrainer,
+    scorer: Scorer,
+    apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    /// Slot indices of the most recent replay batch (mutation parents).
+    last_replayed: Vec<usize>,
+    b: usize,
+}
+
+impl PlrAlgo {
+    pub fn new(rt: &Runtime, cfg: &TrainConfig) -> Result<PlrAlgo> {
+        let (train_on_new, name) = match cfg.algo {
+            Algo::Plr => (true, "plr"),
+            Algo::RobustPlr => (false, "robust_plr"),
+            Algo::Accel => (false, "accel"),
+            other => anyhow::bail!("PlrAlgo cannot run {other:?}"),
+        };
+        let schedule = LrSchedule {
+            lr0: cfg.lr,
+            anneal: cfg.anneal_lr,
+            total_updates: cfg.num_cycles(),
+        };
+        let trainer = PpoTrainer::new(
+            rt, "student", &cfg.student_train_artifact(), cfg.seed as i32, schedule,
+        )?;
+        let apply = rt.load(&cfg.student_apply_artifact())?;
+        let scorer = Scorer::new(rt.load(&cfg.score_artifact())?, cfg.score_fn)?;
+        let env = AutoReplayWrapper::new(MazeEnv::new(cfg.max_episode_steps));
+        let (t, b) = trainer.rollout_shape();
+        let engine = RolloutEngine::new(&env, b);
+        let traj = Trajectory::new(t, b, &env.obs_components());
+        Ok(PlrAlgo {
+            train_on_new,
+            name,
+            gen: LevelGenerator::new(cfg.max_walls),
+            mutator: Mutator { num_edits: cfg.num_edits, ..Default::default() },
+            meta: MetaPolicy::new(cfg.replay_prob, cfg.mutation_prob),
+            sampler: LevelSampler::new(cfg.sampler_config()),
+            env,
+            engine,
+            traj,
+            trainer,
+            scorer,
+            apply,
+            last_replayed: Vec::new(),
+            b,
+        })
+    }
+
+    fn rollout(
+        &mut self, levels: &[Level], rng: &mut Pcg64,
+    ) -> Result<Vec<ReplayState<MazeEnv>>> {
+        let mut states: Vec<ReplayState<MazeEnv>> = levels
+            .iter()
+            .map(|l| self.env.reset_to_level(l, rng))
+            .collect();
+        let policy = Policy {
+            apply: self.apply.clone(),
+            params: &self.trainer.params.params,
+            num_actions: NUM_ACTIONS,
+        };
+        self.engine.collect(&self.env, &mut states, &policy, &mut self.traj, rng)?;
+        Ok(states)
+    }
+
+    /// `on_new_levels`: random levels → rollout → score → insert;
+    /// plain PLR also trains on the trajectories.
+    fn on_new_levels(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
+        let levels = self.gen.generate_batch(self.b, rng);
+        self.rollout(&levels, rng)?;
+        let batch = self.scorer.score(&self.traj, &vec![0.0; self.b])?;
+        let fingerprints: Vec<u64> = levels.iter().map(|l| l.fingerprint()).collect();
+        self.sampler.insert_batch(&levels, &batch.scores, &fingerprints, &batch.extras);
+        let ppo = if self.train_on_new {
+            Some(self.trainer.update(&self.traj)?)
+        } else {
+            None
+        };
+        let stats = self.traj.episode_stats();
+        Ok(CycleMetrics::from_rollout("new", ppo, &stats, self.sampler.proportion_filled()))
+    }
+
+    /// `on_replay_levels`: sample buffer levels → rollout → train → rescore.
+    fn on_replay_levels(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
+        let indices = self.sampler.sample_replay_indices(self.b, rng);
+        // (buffer holds >= B levels whenever replay is gated on; tail-pad
+        // by repeating if a tiny buffer config says otherwise)
+        let mut idx = indices.clone();
+        while idx.len() < self.b {
+            idx.push(idx[idx.len() % indices.len().max(1)]);
+        }
+        let levels: Vec<Level> = idx.iter().map(|&i| self.sampler.get(i).level).collect();
+        let prev_max: Vec<f32> = idx
+            .iter()
+            .map(|&i| self.sampler.get(i).extra.max_return)
+            .collect();
+        self.rollout(&levels, rng)?;
+        let batch = self.scorer.score(&self.traj, &prev_max)?;
+        self.sampler.update_batch(&idx, &batch.scores, &batch.extras);
+        let ppo = self.trainer.update(&self.traj)?;
+        self.last_replayed = idx;
+        let stats = self.traj.episode_stats();
+        Ok(CycleMetrics::from_rollout(
+            "replay", Some(ppo), &stats, self.sampler.proportion_filled(),
+        ))
+    }
+
+    /// `on_mutate_levels`: mutate the last replay batch → rollout → score →
+    /// insert children (no policy update — ACCEL evaluates children only).
+    fn on_mutate_levels(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
+        debug_assert!(!self.last_replayed.is_empty());
+        let parents: Vec<Level> = self
+            .last_replayed
+            .iter()
+            .map(|&i| self.sampler.get(i).level)
+            .collect();
+        let children = self.mutator.mutate_batch(&parents, rng);
+        self.rollout(&children, rng)?;
+        let batch = self.scorer.score(&self.traj, &vec![0.0; self.b])?;
+        let fingerprints: Vec<u64> = children.iter().map(|l| l.fingerprint()).collect();
+        self.sampler.insert_batch(&children, &batch.scores, &fingerprints, &batch.extras);
+        let stats = self.traj.episode_stats();
+        Ok(CycleMetrics::from_rollout(
+            "mutate", None, &stats, self.sampler.proportion_filled(),
+        ))
+    }
+}
+
+impl UedAlgorithm for PlrAlgo {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn cycle(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
+        let can_replay = self.sampler.can_replay() && self.sampler.len() >= 1;
+        match self.meta.next(can_replay, rng) {
+            Cycle::Dr => self.on_new_levels(rng),
+            Cycle::Replay => self.on_replay_levels(rng),
+            Cycle::Mutate => self.on_mutate_levels(rng),
+        }
+    }
+
+    fn student_params(&self) -> &[xla::Literal] {
+        &self.trainer.params.params
+    }
+
+    fn student_trainer(&mut self) -> &mut PpoTrainer {
+        &mut self.trainer
+    }
+}

@@ -1,0 +1,80 @@
+//! Level scoring for the PLR family: bridges rollout trajectories to the
+//! `score_*` artifact (PVL / MaxMC regret estimates — a single GAE
+//! implementation, the L1 Pallas kernel, serves both scoring and training).
+//!
+//! The MaxMC estimator needs the highest return ever observed on each
+//! level; that carry lives in the buffer's `level_extra` (paper §3.3) and
+//! is threaded through the artifact as `prev_max_return`.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ScoreFn;
+use crate::rollout::Trajectory;
+use crate::runtime::executor::Executable;
+use crate::util::tensor::TensorF32;
+
+/// Per-level auxiliary data stored in the level buffer (`level_extra`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LevelExtra {
+    /// Highest discounted return-to-go observed on this level (MaxMC carry).
+    pub max_return: f32,
+    /// Mean value estimate from the most recent scoring rollout.
+    pub mean_value: f32,
+}
+
+/// Output of one scoring call.
+#[derive(Clone, Debug)]
+pub struct ScoreBatch {
+    /// Selected regret estimate per level (the buffer score).
+    pub scores: Vec<f64>,
+    /// Updated `level_extra` per level.
+    pub extras: Vec<LevelExtra>,
+}
+
+/// Wraps the `score_t{T}_b{B}` artifact.
+pub struct Scorer {
+    exe: Rc<Executable>,
+    pub score_fn: ScoreFn,
+    b: usize,
+}
+
+impl Scorer {
+    pub fn new(exe: Rc<Executable>, score_fn: ScoreFn) -> Result<Scorer> {
+        let b = exe.def.b.ok_or_else(|| anyhow::anyhow!("score artifact missing B"))?;
+        if exe.def.outputs.len() != 4 {
+            bail!("score artifact must have 4 outputs (pvl, maxmc, max_return, mean_value)");
+        }
+        Ok(Scorer { exe, score_fn, b })
+    }
+
+    /// Score a trajectory batch. `prev_max_returns[b]` is the MaxMC carry
+    /// for the level in column b (0 for fresh levels).
+    pub fn score(&self, traj: &Trajectory, prev_max_returns: &[f32]) -> Result<ScoreBatch> {
+        if prev_max_returns.len() != self.b {
+            bail!("prev_max_returns has {} entries, B={}", prev_max_returns.len(), self.b);
+        }
+        let mut args = traj.score_args()?;
+        args.push(
+            TensorF32::from_vec(&[self.b], prev_max_returns.to_vec())?.to_literal()?,
+        );
+        let out = self.exe.call(&args)?;
+        let pvl = out[0].to_vec::<f32>()?;
+        let maxmc = out[1].to_vec::<f32>()?;
+        let max_ret = out[2].to_vec::<f32>()?;
+        let mean_value = out[3].to_vec::<f32>()?;
+        let chosen = match self.score_fn {
+            ScoreFn::Pvl => &pvl,
+            ScoreFn::MaxMc => &maxmc,
+        };
+        Ok(ScoreBatch {
+            scores: chosen.iter().map(|&x| x as f64).collect(),
+            extras: max_ret
+                .iter()
+                .zip(&mean_value)
+                .map(|(&mr, &mv)| LevelExtra { max_return: mr, mean_value: mv })
+                .collect(),
+        })
+    }
+}

@@ -1,0 +1,330 @@
+//! Training configuration: the paper's Table 3 hyperparameters plus
+//! algorithm selection, resolvable from CLI flags.
+//!
+//! PPO-loss constants (γ, λ, clip, epochs, …) are *baked into the
+//! artifacts* at AOT time and are therefore not here; this config owns
+//! everything the Rust coordinator decides at runtime: learning-rate
+//! schedule, level-sampler settings, meta-policy probabilities, rollout
+//! variant, budgets and evaluation cadence.
+
+use anyhow::{bail, Result};
+
+use crate::level_sampler::prioritization::Prioritization;
+use crate::level_sampler::SamplerConfig;
+use crate::util::cli::Args;
+
+/// Which UED algorithm to run (paper §5).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// Domain randomization (§5.2).
+    Dr,
+    /// Prioritized Level Replay — trains on new levels too (§5.1).
+    Plr,
+    /// Robust PLR (PLR⊥) — gradient updates only on replay cycles.
+    RobustPlr,
+    /// ACCEL — robust PLR + mutation cycles.
+    Accel,
+    /// PAIRED — learned adversary (§5.3).
+    Paired,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dr" => Algo::Dr,
+            "plr" => Algo::Plr,
+            "robust_plr" | "plr_robust" | "plr^" | "plr-perp" | "rplr" => Algo::RobustPlr,
+            "accel" => Algo::Accel,
+            "paired" => Algo::Paired,
+            other => bail!("unknown algo {other:?} (dr|plr|robust_plr|accel|paired)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::Dr => "dr",
+            Algo::Plr => "plr",
+            Algo::RobustPlr => "robust_plr",
+            Algo::Accel => "accel",
+            Algo::Paired => "paired",
+        }
+    }
+}
+
+/// Regret-estimate scoring function (Table 3: MaxMC default).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScoreFn {
+    MaxMc,
+    Pvl,
+}
+
+impl ScoreFn {
+    pub fn parse(s: &str) -> Result<ScoreFn> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "maxmc" | "max_mc" => ScoreFn::MaxMc,
+            "pvl" => ScoreFn::Pvl,
+            other => bail!("unknown score fn {other:?} (maxmc|pvl)"),
+        })
+    }
+}
+
+/// Rollout-shape variant, fixed at artifact build time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Variant {
+    pub name: &'static str,
+    /// PPO rollout length T (Table 3: 256).
+    pub t: usize,
+    /// Parallel environments B (Table 3: 32).
+    pub b: usize,
+}
+
+pub const VARIANT_STD: Variant = Variant { name: "std", t: 256, b: 32 };
+pub const VARIANT_SMALL: Variant = Variant { name: "small", t: 32, b: 8 };
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "std" => VARIANT_STD,
+            "small" => VARIANT_SMALL,
+            other => bail!("unknown variant {other:?} (std|small)"),
+        })
+    }
+}
+
+/// The full runtime configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub algo: Algo,
+    pub seed: u64,
+    pub variant: Variant,
+    /// Total environment-interaction budget (paper: 245,760,000).
+    pub env_steps_budget: u64,
+    /// Adam learning rate (Table 3: 1e-4) and linear annealing flag.
+    pub lr: f64,
+    pub anneal_lr: bool,
+    /// Base DR distribution wall budget (paper Figure 3: 25 or 60).
+    pub max_walls: usize,
+    /// Maze episode horizon.
+    pub max_episode_steps: usize,
+
+    // -- PLR family (Table 3) ------------------------------------------------
+    /// Replay probability p (0.5 for PLR, 0.8 for ACCEL).
+    pub replay_prob: f64,
+    pub buffer_size: usize,
+    pub score_fn: ScoreFn,
+    pub prioritization: Prioritization,
+    pub temperature: f64,
+    pub staleness_coef: f64,
+    pub min_fill_ratio: f64,
+
+    // -- ACCEL ---------------------------------------------------------------
+    /// Mutation probability q (1.0 when ACCEL: always mutate after replay).
+    pub mutation_prob: f64,
+    pub num_edits: usize,
+
+    // -- PAIRED --------------------------------------------------------------
+    /// Editor steps for the adversary (paper: 25 or 60).
+    pub editor_steps: usize,
+
+    // -- evaluation / logging -------------------------------------------------
+    /// Evaluate every N update cycles (0 = only at the end).
+    pub eval_interval: usize,
+    /// Episodes per holdout level at evaluation.
+    pub eval_trials: usize,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl TrainConfig {
+    /// Paper defaults (Table 3) for the given algorithm.
+    pub fn defaults(algo: Algo) -> TrainConfig {
+        TrainConfig {
+            algo,
+            seed: 0,
+            variant: VARIANT_STD,
+            env_steps_budget: 245_760_000,
+            lr: 1e-4,
+            anneal_lr: true,
+            max_walls: 60,
+            max_episode_steps: 250,
+            replay_prob: if algo == Algo::Accel { 0.8 } else { 0.5 },
+            buffer_size: 4000,
+            score_fn: ScoreFn::MaxMc,
+            prioritization: Prioritization::Rank,
+            temperature: 0.3,
+            staleness_coef: 0.3,
+            min_fill_ratio: 0.5,
+            mutation_prob: if algo == Algo::Accel { 1.0 } else { 0.0 },
+            num_edits: 20,
+            editor_steps: 60,
+            eval_interval: 64,
+            eval_trials: 3,
+            out_dir: "runs".into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Resolve from CLI flags (unspecified flags keep Table 3 defaults).
+    pub fn from_args(args: &Args) -> Result<TrainConfig> {
+        let algo = Algo::parse(&args.get_str("algo", "dr"))?;
+        let mut c = TrainConfig::defaults(algo);
+        c.seed = args.get_u64("seed", c.seed);
+        c.variant = Variant::parse(&args.get_str("variant", c.variant.name))?;
+        c.env_steps_budget = args.get_u64("env-steps", c.env_steps_budget);
+        c.lr = args.get_f64("lr", c.lr);
+        c.anneal_lr = args.get_bool("anneal-lr", c.anneal_lr);
+        c.max_walls = args.get_usize("max-walls", c.max_walls);
+        c.max_episode_steps = args.get_usize("max-episode-steps", c.max_episode_steps);
+        c.replay_prob = args.get_f64("replay-prob", c.replay_prob);
+        c.buffer_size = args.get_usize("buffer-size", c.buffer_size);
+        c.score_fn = ScoreFn::parse(&args.get_str(
+            "score-fn",
+            match c.score_fn {
+                ScoreFn::MaxMc => "maxmc",
+                ScoreFn::Pvl => "pvl",
+            },
+        ))?;
+        c.temperature = args.get_f64("temperature", c.temperature);
+        c.staleness_coef = args.get_f64("staleness-coef", c.staleness_coef);
+        c.min_fill_ratio = args.get_f64("min-fill", c.min_fill_ratio);
+        c.mutation_prob = args.get_f64("mutation-prob", c.mutation_prob);
+        c.num_edits = args.get_usize("num-edits", c.num_edits);
+        c.editor_steps = args.get_usize("editor-steps", c.editor_steps);
+        c.eval_interval = args.get_usize("eval-interval", c.eval_interval);
+        c.eval_trials = args.get_usize("eval-trials", c.eval_trials);
+        c.out_dir = args.get_str("out-dir", &c.out_dir);
+        c.artifacts_dir = args.get_str("artifacts", &c.artifacts_dir);
+        Ok(c)
+    }
+
+    /// Env steps consumed by one update cycle under the paper's accounting
+    /// (§6: PAIRED counts both students; editor steps are excluded).
+    pub fn env_steps_per_cycle(&self) -> u64 {
+        let base = (self.variant.t * self.variant.b) as u64;
+        match self.algo {
+            Algo::Paired => 2 * base,
+            _ => base,
+        }
+    }
+
+    /// Total update cycles implied by the env-step budget.
+    pub fn num_cycles(&self) -> usize {
+        (self.env_steps_budget / self.env_steps_per_cycle()).max(1) as usize
+    }
+
+    /// Sampler config view.
+    pub fn sampler_config(&self) -> SamplerConfig {
+        SamplerConfig {
+            capacity: self.buffer_size,
+            prioritization: self.prioritization,
+            temperature: self.temperature,
+            staleness_coef: self.staleness_coef,
+            min_fill_ratio: self.min_fill_ratio,
+            duplicate_check: true,
+        }
+    }
+
+    /// Editor horizon for the PAIRED adversary artifacts. Only `std`
+    /// shipped horizons 25/60; `small` bakes 13.
+    pub fn editor_horizon(&self) -> usize {
+        if self.variant.name == "small" {
+            13
+        } else {
+            self.editor_steps
+        }
+    }
+
+    // -- artifact name resolution --------------------------------------------
+
+    pub fn student_train_artifact(&self) -> String {
+        format!("student_train_step_t{}_b{}", self.variant.t, self.variant.b)
+    }
+
+    pub fn student_apply_artifact(&self) -> String {
+        format!("student_apply_b{}", self.variant.b)
+    }
+
+    pub fn score_artifact(&self) -> String {
+        format!("score_t{}_b{}", self.variant.t, self.variant.b)
+    }
+
+    pub fn adversary_train_artifact(&self) -> String {
+        format!("adversary_train_step_t{}_b{}", self.editor_horizon(), self.variant.b)
+    }
+
+    pub fn adversary_apply_artifact(&self) -> String {
+        format!("adversary_apply_b{}", self.variant.b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> TrainConfig {
+        TrainConfig::from_args(&Args::parse_from(s.split_whitespace().map(String::from)))
+            .unwrap()
+    }
+
+    #[test]
+    fn table3_defaults() {
+        let c = TrainConfig::defaults(Algo::Plr);
+        assert_eq!(c.env_steps_budget, 245_760_000);
+        assert_eq!(c.variant.t, 256);
+        assert_eq!(c.variant.b, 32);
+        assert_eq!(c.lr, 1e-4);
+        assert!(c.anneal_lr);
+        assert_eq!(c.replay_prob, 0.5);
+        assert_eq!(c.buffer_size, 4000);
+        assert_eq!(c.score_fn, ScoreFn::MaxMc);
+        assert_eq!(c.prioritization, Prioritization::Rank);
+        assert_eq!(c.temperature, 0.3);
+        assert_eq!(c.staleness_coef, 0.3);
+    }
+
+    #[test]
+    fn accel_defaults_differ() {
+        let c = TrainConfig::defaults(Algo::Accel);
+        assert_eq!(c.replay_prob, 0.8);
+        assert_eq!(c.mutation_prob, 1.0);
+        assert_eq!(c.num_edits, 20);
+    }
+
+    #[test]
+    fn env_step_accounting() {
+        let mut c = TrainConfig::defaults(Algo::Dr);
+        assert_eq!(c.env_steps_per_cycle(), 256 * 32);
+        c.algo = Algo::Paired;
+        assert_eq!(c.env_steps_per_cycle(), 2 * 256 * 32);
+        // paper: 245.76M steps == 30k updates of 256×32
+        let c = TrainConfig::defaults(Algo::Dr);
+        assert_eq!(c.num_cycles(), 30_000);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let c = parse("--algo accel --seed 7 --variant small --env-steps 100000 --max-walls 25");
+        assert_eq!(c.algo, Algo::Accel);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.variant.b, 8);
+        assert_eq!(c.max_walls, 25);
+    }
+
+    #[test]
+    fn artifact_names() {
+        let c = TrainConfig::defaults(Algo::Paired);
+        assert_eq!(c.student_train_artifact(), "student_train_step_t256_b32");
+        assert_eq!(c.student_apply_artifact(), "student_apply_b32");
+        assert_eq!(c.score_artifact(), "score_t256_b32");
+        assert_eq!(c.adversary_train_artifact(), "adversary_train_step_t60_b32");
+        let mut c25 = c.clone();
+        c25.editor_steps = 25;
+        assert_eq!(c25.adversary_train_artifact(), "adversary_train_step_t25_b32");
+    }
+
+    #[test]
+    fn algo_parse_aliases() {
+        assert_eq!(Algo::parse("PLR^").unwrap(), Algo::RobustPlr);
+        assert!(Algo::parse("zzz").is_err());
+    }
+}

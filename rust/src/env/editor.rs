@@ -1,0 +1,257 @@
+//! The maze-*editor* environment (paper §4): the UPOMDP in which the PAIRED
+//! adversary acts. The adversary policy sequentially constructs a maze
+//! level via atomic modifications; its episode return is set externally to
+//! the estimated regret (paper §5.3), so `step` always yields zero reward.
+//!
+//! Protocol (Dennis et al., 2020): each action is a flat cell index in the
+//! 13×13 grid. Step 0 places the agent (with a random facing drawn at
+//! placement), step 1 places the goal (deterministically displaced if it
+//! collides with the agent), and every later step toggles a wall (no-op on
+//! the agent/goal cells). The episode ends after `max_steps` edits.
+//!
+//! The editor's *level* is the conditioning noise vector z — PAIRED samples
+//! a fresh z per generated level so the adversary can produce diverse
+//! batches (without z, an argmax policy would emit 32 identical levels).
+
+use super::level::{Dir, Level, WallSet, GRID_CELLS, GRID_H, GRID_W};
+use super::{StepResult, UnderspecifiedEnv};
+use crate::util::rng::Pcg64;
+
+pub const NOISE_DIM: usize = 16;
+pub const GRID_LEN: usize = GRID_CELLS * 3; // {wall, agent, goal} one-hot
+pub const EDITOR_OBS_LEN: usize = GRID_LEN + 1 + NOISE_DIM;
+
+/// The editor env's underspecified parameter: the conditioning noise.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EditorTask {
+    pub noise: [f32; NOISE_DIM],
+}
+
+impl EditorTask {
+    pub fn sample(rng: &mut Pcg64) -> Self {
+        let mut noise = [0.0; NOISE_DIM];
+        for n in noise.iter_mut() {
+            *n = rng.next_normal() as f32;
+        }
+        EditorTask { noise }
+    }
+}
+
+/// Editor state: the partially-built level.
+#[derive(Clone, Debug)]
+pub struct EditorState {
+    pub walls: WallSet,
+    pub agent: Option<((u8, u8), Dir)>,
+    pub goal: Option<(u8, u8)>,
+    pub t: u32,
+    pub noise: [f32; NOISE_DIM],
+}
+
+impl EditorState {
+    /// Extract the constructed level. Valid once t >= 2.
+    pub fn to_level(&self) -> Level {
+        let ((apos, adir), gpos) = match (self.agent, self.goal) {
+            (Some(a), Some(g)) => (a, g),
+            _ => panic!("to_level before agent+goal placed (t={})", self.t),
+        };
+        let mut walls = self.walls;
+        // Placement protocol guarantees agent/goal cells are wall-free, but
+        // keep the invariant explicit.
+        walls.set(apos.0 as usize, apos.1 as usize, false);
+        walls.set(gpos.0 as usize, gpos.1 as usize, false);
+        Level { walls, agent_pos: apos, agent_dir: adir, goal_pos: gpos }
+    }
+}
+
+/// The maze-editor UPOMDP.
+#[derive(Clone, Copy, Debug)]
+pub struct EditorEnv {
+    /// Total edit budget (the paper's PAIRED-25 / PAIRED-60 editor steps).
+    pub max_steps: usize,
+}
+
+impl EditorEnv {
+    pub fn new(max_steps: usize) -> Self {
+        assert!(max_steps >= 2, "need at least agent+goal placement steps");
+        EditorEnv { max_steps }
+    }
+}
+
+fn cell_xy(action: usize) -> (u8, u8) {
+    debug_assert!(action < GRID_CELLS);
+    ((action % GRID_W) as u8, (action / GRID_W) as u8)
+}
+
+impl UnderspecifiedEnv for EditorEnv {
+    type State = EditorState;
+    type Level = EditorTask;
+
+    fn num_actions(&self) -> usize {
+        GRID_CELLS
+    }
+
+    fn reset_to_level(&self, task: &EditorTask, _rng: &mut Pcg64) -> EditorState {
+        EditorState {
+            walls: WallSet::empty(),
+            agent: None,
+            goal: None,
+            t: 0,
+            noise: task.noise,
+        }
+    }
+
+    fn step(&self, s: &mut EditorState, action: usize, rng: &mut Pcg64) -> StepResult {
+        let pos = cell_xy(action);
+        match s.t {
+            0 => {
+                let dir = Dir::from_index(rng.gen_range(4));
+                s.agent = Some((pos, dir));
+            }
+            1 => {
+                let apos = s.agent.expect("agent placed at t=0").0;
+                let mut g = pos;
+                if g == apos {
+                    // Deterministic displacement: next cell in scan order.
+                    let flat = (g.1 as usize * GRID_W + g.0 as usize + 1) % GRID_CELLS;
+                    g = cell_xy(flat);
+                }
+                s.goal = Some(g);
+            }
+            _ => {
+                let apos = s.agent.expect("agent placed").0;
+                let gpos = s.goal.expect("goal placed");
+                if pos != apos && pos != gpos {
+                    s.walls.toggle(pos.0 as usize, pos.1 as usize);
+                }
+            }
+        }
+        s.t += 1;
+        StepResult { reward: 0.0, done: s.t as usize >= self.max_steps }
+    }
+
+    fn observe(&self, s: &EditorState, obs: &mut [f32]) {
+        debug_assert_eq!(obs.len(), EDITOR_OBS_LEN);
+        obs.fill(0.0);
+        for y in 0..GRID_H {
+            for x in 0..GRID_W {
+                let base = (y * GRID_W + x) * 3;
+                if s.walls.get(x, y) {
+                    obs[base] = 1.0;
+                }
+            }
+        }
+        if let Some(((ax, ay), _)) = s.agent {
+            obs[(ay as usize * GRID_W + ax as usize) * 3 + 1] = 1.0;
+        }
+        if let Some((gx, gy)) = s.goal {
+            obs[(gy as usize * GRID_W + gx as usize) * 3 + 2] = 1.0;
+        }
+        obs[GRID_LEN] = s.t as f32 / self.max_steps as f32;
+        obs[GRID_LEN + 1..].copy_from_slice(&s.noise);
+    }
+
+    fn obs_len(&self) -> usize {
+        EDITOR_OBS_LEN
+    }
+
+    fn obs_components(&self) -> Vec<usize> {
+        vec![GRID_LEN, 1, NOISE_DIM]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::props;
+
+    fn rng() -> Pcg64 {
+        Pcg64::seed_from_u64(0)
+    }
+
+    #[test]
+    fn placement_protocol() {
+        let e = EditorEnv::new(10);
+        let mut r = rng();
+        let task = EditorTask::sample(&mut r);
+        let mut s = e.reset_to_level(&task, &mut r);
+        e.step(&mut s, 5, &mut r); // agent at (5,0)
+        assert_eq!(s.agent.unwrap().0, (5, 0));
+        e.step(&mut s, 20, &mut r); // goal at (7,1)
+        assert_eq!(s.goal.unwrap(), (7, 1));
+        e.step(&mut s, 40, &mut r); // wall toggle
+        assert!(s.walls.get(40 % GRID_W, 40 / GRID_W));
+        e.step(&mut s, 40, &mut r); // toggle back
+        assert!(!s.walls.get(40 % GRID_W, 40 / GRID_W));
+    }
+
+    #[test]
+    fn goal_collision_displaces() {
+        let e = EditorEnv::new(5);
+        let mut r = rng();
+        let mut s = e.reset_to_level(&EditorTask::sample(&mut r), &mut r);
+        e.step(&mut s, 0, &mut r);
+        e.step(&mut s, 0, &mut r); // same cell as agent
+        assert_ne!(s.goal.unwrap(), s.agent.unwrap().0);
+        assert_eq!(s.goal.unwrap(), (1, 0));
+    }
+
+    #[test]
+    fn wall_on_agent_goal_is_noop() {
+        let e = EditorEnv::new(6);
+        let mut r = rng();
+        let mut s = e.reset_to_level(&EditorTask::sample(&mut r), &mut r);
+        e.step(&mut s, 10, &mut r);
+        e.step(&mut s, 20, &mut r);
+        e.step(&mut s, 10, &mut r); // agent cell: no wall
+        e.step(&mut s, 20, &mut r); // goal cell: no wall
+        assert_eq!(s.walls.count(), 0);
+    }
+
+    #[test]
+    fn terminates_at_budget() {
+        let e = EditorEnv::new(4);
+        let mut r = rng();
+        let mut s = e.reset_to_level(&EditorTask::sample(&mut r), &mut r);
+        assert!(!e.step(&mut s, 0, &mut r).done);
+        assert!(!e.step(&mut s, 1, &mut r).done);
+        assert!(!e.step(&mut s, 2, &mut r).done);
+        assert!(e.step(&mut s, 3, &mut r).done);
+    }
+
+    #[test]
+    fn observation_layout() {
+        let e = EditorEnv::new(8);
+        let mut r = rng();
+        let task = EditorTask::sample(&mut r);
+        let mut s = e.reset_to_level(&task, &mut r);
+        e.step(&mut s, 0, &mut r); // agent (0,0)
+        e.step(&mut s, 168, &mut r); // goal (12,12)
+        e.step(&mut s, 6, &mut r); // wall (6,0)
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        assert_eq!(obs[0 * 3 + 1], 1.0, "agent channel");
+        assert_eq!(obs[168 * 3 + 2], 1.0, "goal channel");
+        assert_eq!(obs[6 * 3], 1.0, "wall channel");
+        assert!((obs[GRID_LEN] - 3.0 / 8.0).abs() < 1e-6, "timestep");
+        assert_eq!(&obs[GRID_LEN + 1..], &task.noise[..]);
+    }
+
+    #[test]
+    fn prop_full_episode_yields_valid_level() {
+        props(100, |g| {
+            let budget = g.usize_in(2, 60);
+            let e = EditorEnv::new(budget);
+            let task = EditorTask::sample(g.rng());
+            let mut s = e.reset_to_level(&task, g.rng());
+            let mut done = false;
+            while !done {
+                let a = g.usize_in(0, GRID_CELLS - 1);
+                done = e.step(&mut s, a, g.rng()).done;
+            }
+            let level = s.to_level();
+            prop_assert!(level.is_valid(), "editor produced invalid level: {:?}", level);
+            Ok(())
+        });
+    }
+}

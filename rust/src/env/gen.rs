@@ -1,0 +1,139 @@
+//! Level generation callbacks (paper §4): the base Domain-Randomization
+//! distribution used by DR and by the PLR family's `on_new_levels` cycle.
+//!
+//! Recipe (matching JaxUED/minimax `make_level_generator`): sample a wall
+//! count uniformly in [0, max_walls], place that many walls at distinct
+//! random cells, then place the goal and the agent (random direction) on
+//! distinct free cells. The paper's Figure 3 sweeps `max_walls ∈ {25, 60}`.
+
+use super::level::{Dir, Level, WallSet, GRID_CELLS, GRID_W};
+use super::shortest_path::is_solvable;
+use crate::util::rng::Pcg64;
+
+/// Base-distribution parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LevelGenerator {
+    pub max_walls: usize,
+}
+
+impl LevelGenerator {
+    pub fn new(max_walls: usize) -> Self {
+        assert!(max_walls <= GRID_CELLS - 2, "must leave room for agent+goal");
+        LevelGenerator { max_walls }
+    }
+
+    /// One draw from the DR distribution. Always structurally valid;
+    /// solvability is *not* guaranteed (faithful to the paper — unsolvable
+    /// draws are part of the DR distribution and it is UED's job to cope).
+    pub fn generate(&self, rng: &mut Pcg64) -> Level {
+        let n_walls = rng.gen_range(self.max_walls + 1);
+        // Distinct cells for walls + goal + agent via partial Fisher-Yates
+        // over the 169 cells.
+        let cells = rng.sample_indices(GRID_CELLS, n_walls + 2);
+        let mut walls = WallSet::empty();
+        for &c in &cells[..n_walls] {
+            walls.set(c % GRID_W, c / GRID_W, true);
+        }
+        let g = cells[n_walls];
+        let a = cells[n_walls + 1];
+        Level {
+            walls,
+            agent_pos: ((a % GRID_W) as u8, (a / GRID_W) as u8),
+            agent_dir: Dir::from_index(rng.gen_range(4)),
+            goal_pos: ((g % GRID_W) as u8, (g / GRID_W) as u8),
+        }
+    }
+
+    /// Rejection-sample a solvable level (used for evaluation suites, which
+    /// are solvable-filtered in minimax). Panics if `max_tries` exhausted —
+    /// with max_walls ≤ 60 on a 169-cell grid the acceptance rate is high.
+    pub fn generate_solvable(&self, rng: &mut Pcg64, max_tries: usize) -> Level {
+        for _ in 0..max_tries {
+            let l = self.generate(rng);
+            if is_solvable(&l) {
+                return l;
+            }
+        }
+        panic!("no solvable level in {max_tries} tries (max_walls={})", self.max_walls);
+    }
+
+    /// A batch of independent draws.
+    pub fn generate_batch(&self, n: usize, rng: &mut Pcg64) -> Vec<Level> {
+        (0..n).map(|_| self.generate(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::props;
+
+    #[test]
+    fn generated_levels_valid() {
+        let g = LevelGenerator::new(60);
+        let mut rng = Pcg64::seed_from_u64(0);
+        for _ in 0..200 {
+            let l = g.generate(&mut rng);
+            assert!(l.is_valid());
+            assert!(l.num_walls() <= 60);
+        }
+    }
+
+    #[test]
+    fn respects_wall_budget_25() {
+        let g = LevelGenerator::new(25);
+        let mut rng = Pcg64::seed_from_u64(1);
+        for _ in 0..200 {
+            assert!(g.generate(&mut rng).num_walls() <= 25);
+        }
+    }
+
+    #[test]
+    fn wall_count_roughly_uniform() {
+        let g = LevelGenerator::new(10);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut counts = [0usize; 11];
+        let n = 22_000;
+        for _ in 0..n {
+            counts[g.generate(&mut rng).num_walls()] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 11.0;
+            assert!((c as f64 - expect).abs() < expect * 0.15, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn solvable_generator_is_solvable() {
+        let g = LevelGenerator::new(60);
+        let mut rng = Pcg64::seed_from_u64(3);
+        for _ in 0..50 {
+            let l = g.generate_solvable(&mut rng, 100);
+            assert!(is_solvable(&l));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = LevelGenerator::new(40);
+        let a = g.generate_batch(5, &mut Pcg64::seed_from_u64(9));
+        let b = g.generate_batch(5, &mut Pcg64::seed_from_u64(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_agent_goal_never_on_walls() {
+        props(300, |gen| {
+            let max_walls = gen.usize_in(0, 100);
+            let g = LevelGenerator::new(max_walls);
+            let l = g.generate(gen.rng());
+            prop_assert!(l.is_valid(), "invalid level {:?}", l);
+            prop_assert!(
+                l.num_walls() <= max_walls,
+                "wall budget exceeded: {} > {max_walls}", l.num_walls()
+            );
+            Ok(())
+        });
+    }
+}

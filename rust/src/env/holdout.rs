@@ -1,0 +1,326 @@
+//! Holdout evaluation suites (paper §6.1 / Figure 2).
+//!
+//! The paper evaluates on (a) the procedurally-generated minimax holdout
+//! levels and (b) implicitly, the classic named mazes from the DCD
+//! literature. We cannot ship minimax's exact generated files, so we
+//! reproduce its *recipe* deterministically (uniform wall budget,
+//! solvable-filtered, fixed seed — see DESIGN.md substitutions) and provide
+//! programmatic constructions of the classic named layouts (Labyrinth,
+//! SixteenRooms, FourRooms, perfect DFS mazes, corridors, …). All
+//! constructions are verified solvable by unit tests.
+
+use super::gen::LevelGenerator;
+use super::level::{Dir, Level, WallSet, GRID_H, GRID_W};
+use crate::util::rng::Pcg64;
+
+/// A named evaluation level.
+#[derive(Clone, Debug)]
+pub struct NamedLevel {
+    pub name: &'static str,
+    pub level: Level,
+}
+
+/// The deterministic procedural holdout suite: `n` solvable levels drawn
+/// from the DR distribution with the given wall budget — the minimax
+/// `generate_eval_levels` recipe with a fixed seed.
+pub fn procedural_suite(n: usize, max_walls: usize, seed: u64) -> Vec<Level> {
+    let gen = LevelGenerator::new(max_walls);
+    let mut rng = Pcg64::new(seed, 0x4544); // "ED"
+    (0..n).map(|_| gen.generate_solvable(&mut rng, 1000)).collect()
+}
+
+/// All named holdout levels.
+pub fn named_levels() -> Vec<NamedLevel> {
+    vec![
+        NamedLevel { name: "Empty", level: empty() },
+        NamedLevel { name: "FourRooms", level: four_rooms() },
+        NamedLevel { name: "SixteenRooms", level: sixteen_rooms(0) },
+        NamedLevel { name: "SixteenRooms2", level: sixteen_rooms(1) },
+        NamedLevel { name: "Labyrinth", level: labyrinth(false) },
+        NamedLevel { name: "LabyrinthFlipped", level: labyrinth(true) },
+        NamedLevel { name: "Maze", level: dfs_maze(7) },
+        NamedLevel { name: "Maze2", level: dfs_maze(21) },
+        NamedLevel { name: "Maze3", level: dfs_maze(1729) },
+        NamedLevel { name: "Crossing", level: crossing() },
+        NamedLevel { name: "SmallCorridor", level: corridor(4) },
+        NamedLevel { name: "LargeCorridor", level: corridor(11) },
+    ]
+}
+
+fn empty() -> Level {
+    let mut l = Level::empty();
+    l.agent_pos = (0, 12);
+    l.agent_dir = Dir::Up;
+    l.goal_pos = (12, 0);
+    l
+}
+
+/// Four 6×6 rooms with one door per internal wall.
+fn four_rooms() -> Level {
+    let mut w = WallSet::empty();
+    for i in 0..GRID_W {
+        w.set(6, i, true);
+        w.set(i, 6, true);
+    }
+    // doors
+    w.set(6, 3, false);
+    w.set(6, 9, false);
+    w.set(3, 6, false);
+    w.set(9, 6, false);
+    Level {
+        walls: w,
+        agent_pos: (1, 11),
+        agent_dir: Dir::Up,
+        goal_pos: (11, 1),
+    }
+}
+
+/// 4×4 grid of small rooms, dividers at {3, 7, 11}? — use {3, 6, 9} with
+/// per-segment doors; `variant` shifts the door positions.
+fn sixteen_rooms(variant: usize) -> Level {
+    let mut w = WallSet::empty();
+    let lines = [3usize, 6, 9];
+    for &c in &lines {
+        for i in 0..GRID_W {
+            w.set(c, i, true);
+            w.set(i, c, true);
+        }
+    }
+    // carve one door per wall segment; segments between lines
+    let spans = [(0usize, 2usize), (4, 5), (7, 8), (10, 12)];
+    for (si, &(lo, hi)) in spans.iter().enumerate() {
+        for (li, &c) in lines.iter().enumerate() {
+            let door = lo + (si + li + variant) % (hi - lo + 1);
+            w.set(c, door, false); // vertical wall door
+            let door2 = lo + (si + 2 * li + variant) % (hi - lo + 1);
+            w.set(door2, c, false); // horizontal wall door
+        }
+    }
+    Level {
+        walls: w,
+        agent_pos: (0, 0),
+        agent_dir: Dir::Down,
+        goal_pos: (12, 12),
+    }
+}
+
+/// Spiral labyrinth: concentric rings with alternating gaps, goal at the
+/// center. `flipped` mirrors it horizontally.
+fn labyrinth(flipped: bool) -> Level {
+    let mut w = WallSet::empty();
+    // rings at offset 1, 3, 5 (square annuli)
+    for (ring, &off) in [1usize, 3, 5].iter().enumerate() {
+        let hi = GRID_W - 1 - off;
+        for i in off..=hi {
+            w.set(i, off, true);
+            w.set(i, hi, true);
+            w.set(off, i, true);
+            w.set(hi, i, true);
+        }
+        // gap: alternate bottom-center / top-center per ring
+        if ring % 2 == 0 {
+            w.set(6, hi, false);
+        } else {
+            w.set(6, off, false);
+        }
+    }
+    let mut l = Level {
+        walls: w,
+        agent_pos: (0, 12),
+        agent_dir: Dir::Up,
+        goal_pos: (6, 6),
+    };
+    if flipped {
+        let mut fw = WallSet::empty();
+        for y in 0..GRID_H {
+            for x in 0..GRID_W {
+                if l.walls.get(x, y) {
+                    fw.set(GRID_W - 1 - x, y, true);
+                }
+            }
+        }
+        l.walls = fw;
+        l.agent_pos = (12, 12);
+    }
+    l
+}
+
+/// Perfect maze via recursive backtracker on the 7×7 odd-cell lattice
+/// (cells at even coordinates, walls between). Deterministic per seed.
+fn dfs_maze(seed: u64) -> Level {
+    let mut rng = Pcg64::new(seed, 0x6d61_7a65); // "maze"
+    // start from all-walls; carve cells and passages
+    let mut w = WallSet::empty();
+    for y in 0..GRID_H {
+        for x in 0..GRID_W {
+            w.set(x, y, true);
+        }
+    }
+    let lattice = 7; // cells at (2i, 2j)
+    let mut visited = [[false; 7]; 7];
+    let mut stack = vec![(0usize, 0usize)];
+    visited[0][0] = true;
+    w.set(0, 0, false);
+    while let Some(&(cx, cy)) = stack.last() {
+        // unvisited lattice neighbors
+        let mut nbrs: Vec<(usize, usize)> = Vec::with_capacity(4);
+        if cx > 0 && !visited[cy][cx - 1] {
+            nbrs.push((cx - 1, cy));
+        }
+        if cx + 1 < lattice && !visited[cy][cx + 1] {
+            nbrs.push((cx + 1, cy));
+        }
+        if cy > 0 && !visited[cy - 1][cx] {
+            nbrs.push((cx, cy - 1));
+        }
+        if cy + 1 < lattice && !visited[cy + 1][cx] {
+            nbrs.push((cx, cy + 1));
+        }
+        if nbrs.is_empty() {
+            stack.pop();
+            continue;
+        }
+        let (nx, ny) = *nbrs.get(rng.gen_range(nbrs.len())).unwrap();
+        visited[ny][nx] = true;
+        w.set(2 * nx, 2 * ny, false);
+        // carve the wall between
+        w.set(cx + nx, cy + ny, false);
+        stack.push((nx, ny));
+    }
+    Level {
+        walls: w,
+        agent_pos: (0, 0),
+        agent_dir: Dir::Right,
+        goal_pos: (12, 12),
+    }
+}
+
+/// Horizontal walls with staggered gaps (MiniGrid "SimpleCrossing" style).
+fn crossing() -> Level {
+    let mut w = WallSet::empty();
+    for (i, &y) in [2usize, 5, 8, 11].iter().enumerate() {
+        for x in 0..GRID_W {
+            w.set(x, y, true);
+        }
+        let gap = if i % 2 == 0 { 1 } else { GRID_W - 2 };
+        w.set(gap, y, false);
+    }
+    Level {
+        walls: w,
+        agent_pos: (6, 0),
+        agent_dir: Dir::Down,
+        goal_pos: (6, 12),
+    }
+}
+
+/// Corridor: the agent starts in a dead-end corridor of the given length
+/// and must exit it to find the goal behind the other branch.
+fn corridor(len: usize) -> Level {
+    assert!((2..=11).contains(&len));
+    let mut w = WallSet::empty();
+    // two parallel corridors at y=5..7 separated from the rest
+    for x in 0..GRID_W {
+        w.set(x, 4, true);
+        w.set(x, 8, true);
+    }
+    for x in 1..GRID_W {
+        w.set(x, 6, true); // divider between the two corridors
+    }
+    // seal corridor ends except the shared mouth at x=0
+    w.set(12, 5, true);
+    w.set(12, 7, true);
+    // goal sits inside the lower corridor at depth `len`
+    Level {
+        walls: w,
+        agent_pos: (1, 5),
+        agent_dir: Dir::Left,
+        goal_pos: (len as u8, 7),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::shortest_path::{is_solvable, solve_distance};
+
+    #[test]
+    fn all_named_levels_valid_and_solvable() {
+        for nl in named_levels() {
+            assert!(nl.level.is_valid(), "{} invalid", nl.name);
+            assert!(is_solvable(&nl.level), "{} unsolvable", nl.name);
+        }
+    }
+
+    #[test]
+    fn named_levels_distinct() {
+        let levels = named_levels();
+        for i in 0..levels.len() {
+            for j in (i + 1)..levels.len() {
+                assert_ne!(
+                    levels[i].level.fingerprint(),
+                    levels[j].level.fingerprint(),
+                    "{} == {}", levels[i].name, levels[j].name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn labyrinth_is_long() {
+        // spiral must force a long path to the center
+        let d = solve_distance(&labyrinth(false)).unwrap();
+        assert!(d >= 30, "labyrinth too easy: {d}");
+    }
+
+    #[test]
+    fn labyrinth_flip_is_mirror() {
+        let a = labyrinth(false);
+        let b = labyrinth(true);
+        for y in 0..GRID_H {
+            for x in 0..GRID_W {
+                assert_eq!(a.walls.get(x, y), b.walls.get(GRID_W - 1 - x, y));
+            }
+        }
+    }
+
+    #[test]
+    fn dfs_maze_is_perfect_ish() {
+        // Perfect maze on the lattice: all 49 lattice cells reachable.
+        let m = dfs_maze(7);
+        let df = crate::env::shortest_path::distance_field(&m);
+        for cy in 0..7 {
+            for cx in 0..7 {
+                assert_ne!(
+                    df.get(2 * cx, 2 * cy),
+                    crate::env::shortest_path::UNREACHABLE,
+                    "lattice cell ({cx},{cy}) unreachable"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dfs_maze_seeds_differ() {
+        assert_ne!(dfs_maze(7).fingerprint(), dfs_maze(21).fingerprint());
+    }
+
+    #[test]
+    fn corridor_lengths_affect_difficulty() {
+        let short = solve_distance(&corridor(4)).unwrap();
+        let long = solve_distance(&corridor(11)).unwrap();
+        assert!(long > short);
+    }
+
+    #[test]
+    fn procedural_suite_deterministic_and_solvable() {
+        let a = procedural_suite(20, 60, 42);
+        let b = procedural_suite(20, 60, 42);
+        assert_eq!(a, b);
+        for l in &a {
+            assert!(is_solvable(l));
+            assert!(l.num_walls() <= 60);
+        }
+        let c = procedural_suite(20, 60, 43);
+        assert_ne!(a, c);
+    }
+}

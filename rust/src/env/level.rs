@@ -1,0 +1,375 @@
+//! Maze levels: the underspecified parameters θ of the UPOMDP.
+//!
+//! A level is a 13×13 wall configuration plus agent start (position +
+//! direction) and goal position — exactly the parameterization in the paper
+//! (§4). Levels are value types: hashable (for LevelSampler de-duplication),
+//! serializable (checkpoints), and parse/print round-trippable through the
+//! ASCII-art format used to define the named holdout mazes.
+
+use anyhow::{bail, Result};
+
+/// Grid width/height. Matches `model.GRID_W/H` on the python side; the
+/// manifest cross-checks it at runtime-load time.
+pub const GRID_W: usize = 13;
+pub const GRID_H: usize = 13;
+pub const GRID_CELLS: usize = GRID_W * GRID_H;
+
+/// Facing direction. Ordering matters: turning right increments mod 4, and
+/// the one-hot observation uses this index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Dir {
+    Up = 0,
+    Right = 1,
+    Down = 2,
+    Left = 3,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::Up, Dir::Right, Dir::Down, Dir::Left];
+
+    pub fn from_index(i: usize) -> Dir {
+        Self::ALL[i % 4]
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Unit step (dx, dy); y grows downward.
+    pub fn delta(self) -> (isize, isize) {
+        match self {
+            Dir::Up => (0, -1),
+            Dir::Right => (1, 0),
+            Dir::Down => (0, 1),
+            Dir::Left => (-1, 0),
+        }
+    }
+
+    pub fn turn_right(self) -> Dir {
+        Dir::from_index(self.index() + 1)
+    }
+
+    pub fn turn_left(self) -> Dir {
+        Dir::from_index(self.index() + 3)
+    }
+}
+
+/// 169-bit wall set, packed into three u64 words.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub struct WallSet {
+    bits: [u64; 3],
+}
+
+impl WallSet {
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn check(x: usize, y: usize) -> usize {
+        debug_assert!(x < GRID_W && y < GRID_H);
+        y * GRID_W + x
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> bool {
+        let i = Self::check(x, y);
+        (self.bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: bool) {
+        let i = Self::check(x, y);
+        if v {
+            self.bits[i / 64] |= 1 << (i % 64);
+        } else {
+            self.bits[i / 64] &= !(1 << (i % 64));
+        }
+    }
+
+    pub fn toggle(&mut self, x: usize, y: usize) {
+        let i = Self::check(x, y);
+        self.bits[i / 64] ^= 1 << (i % 64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.bits.iter().map(|b| b.count_ones() as usize).sum()
+    }
+
+    pub fn words(&self) -> [u64; 3] {
+        self.bits
+    }
+}
+
+/// A maze level θ: walls + agent start + goal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Level {
+    pub walls: WallSet,
+    pub agent_pos: (u8, u8),
+    pub agent_dir: Dir,
+    pub goal_pos: (u8, u8),
+}
+
+impl Level {
+    /// An empty level with agent at top-left facing right, goal bottom-right.
+    pub fn empty() -> Level {
+        Level {
+            walls: WallSet::empty(),
+            agent_pos: (0, 0),
+            agent_dir: Dir::Right,
+            goal_pos: ((GRID_W - 1) as u8, (GRID_H - 1) as u8),
+        }
+    }
+
+    pub fn wall_at(&self, x: usize, y: usize) -> bool {
+        self.walls.get(x, y)
+    }
+
+    pub fn num_walls(&self) -> usize {
+        self.walls.count()
+    }
+
+    /// Structural validity: agent/goal distinct, in bounds, not inside walls.
+    pub fn is_valid(&self) -> bool {
+        let (ax, ay) = (self.agent_pos.0 as usize, self.agent_pos.1 as usize);
+        let (gx, gy) = (self.goal_pos.0 as usize, self.goal_pos.1 as usize);
+        ax < GRID_W
+            && ay < GRID_H
+            && gx < GRID_W
+            && gy < GRID_H
+            && self.agent_pos != self.goal_pos
+            && !self.walls.get(ax, ay)
+            && !self.walls.get(gx, gy)
+    }
+
+    /// FNV-1a hash over the canonical byte encoding — the LevelSampler
+    /// de-duplication key.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        };
+        for w in self.walls.words() {
+            for b in w.to_le_bytes() {
+                eat(b);
+            }
+        }
+        eat(self.agent_pos.0);
+        eat(self.agent_pos.1);
+        eat(self.agent_dir.index() as u8);
+        eat(self.goal_pos.0);
+        eat(self.goal_pos.1);
+        h
+    }
+
+    /// Binary encoding (fixed 29 bytes) for checkpoints.
+    pub fn to_bytes(&self) -> [u8; 29] {
+        let mut out = [0u8; 29];
+        let words = self.walls.words();
+        out[0..8].copy_from_slice(&words[0].to_le_bytes());
+        out[8..16].copy_from_slice(&words[1].to_le_bytes());
+        out[16..24].copy_from_slice(&words[2].to_le_bytes());
+        out[24] = self.agent_pos.0;
+        out[25] = self.agent_pos.1;
+        out[26] = self.agent_dir.index() as u8;
+        out[27] = self.goal_pos.0;
+        out[28] = self.goal_pos.1;
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Level> {
+        if b.len() != 29 {
+            bail!("level encoding must be 29 bytes, got {}", b.len());
+        }
+        let mut walls = WallSet::empty();
+        let w0 = u64::from_le_bytes(b[0..8].try_into().unwrap());
+        let w1 = u64::from_le_bytes(b[8..16].try_into().unwrap());
+        let w2 = u64::from_le_bytes(b[16..24].try_into().unwrap());
+        walls.bits = [w0, w1, w2];
+        let lvl = Level {
+            walls,
+            agent_pos: (b[24], b[25]),
+            agent_dir: Dir::from_index(b[26] as usize),
+            goal_pos: (b[27], b[28]),
+        };
+        Ok(lvl)
+    }
+
+    /// Parse from ASCII art: `#` wall, `.`/` ` empty, `G` goal, and the
+    /// agent as `^`/`>`/`v`/`<` (facing up/right/down/left). Rows separated
+    /// by newlines; must be exactly 13×13.
+    pub fn from_ascii(art: &str) -> Result<Level> {
+        let rows: Vec<&str> = art
+            .lines()
+            .map(|l| l.trim())
+            .filter(|l| !l.is_empty())
+            .collect();
+        if rows.len() != GRID_H {
+            bail!("expected {GRID_H} rows, got {}", rows.len());
+        }
+        let mut level = Level::empty();
+        let mut agent = None;
+        let mut goal = None;
+        for (y, row) in rows.iter().enumerate() {
+            let cells: Vec<char> = row.chars().collect();
+            if cells.len() != GRID_W {
+                bail!("row {y} has {} cells, expected {GRID_W}", cells.len());
+            }
+            for (x, c) in cells.iter().enumerate() {
+                match c {
+                    '#' => level.walls.set(x, y, true),
+                    '.' | ' ' => {}
+                    'G' => {
+                        if goal.replace((x as u8, y as u8)).is_some() {
+                            bail!("multiple goals");
+                        }
+                    }
+                    '^' | '>' | 'v' | '<' => {
+                        let dir = match c {
+                            '^' => Dir::Up,
+                            '>' => Dir::Right,
+                            'v' => Dir::Down,
+                            _ => Dir::Left,
+                        };
+                        if agent.replace(((x as u8, y as u8), dir)).is_some() {
+                            bail!("multiple agents");
+                        }
+                    }
+                    c => bail!("unknown cell {c:?} at ({x},{y})"),
+                }
+            }
+        }
+        let ((ax, ay), dir) = agent.ok_or_else(|| anyhow::anyhow!("no agent"))?;
+        let (gx, gy) = goal.ok_or_else(|| anyhow::anyhow!("no goal"))?;
+        level.agent_pos = (ax, ay);
+        level.agent_dir = dir;
+        level.goal_pos = (gx, gy);
+        if !level.is_valid() {
+            bail!("parsed level is structurally invalid");
+        }
+        Ok(level)
+    }
+
+    /// Render to the same ASCII format `from_ascii` reads.
+    pub fn to_ascii(&self) -> String {
+        let mut out = String::with_capacity((GRID_W + 1) * GRID_H);
+        for y in 0..GRID_H {
+            for x in 0..GRID_W {
+                let c = if (x as u8, y as u8) == self.agent_pos {
+                    match self.agent_dir {
+                        Dir::Up => '^',
+                        Dir::Right => '>',
+                        Dir::Down => 'v',
+                        Dir::Left => '<',
+                    }
+                } else if (x as u8, y as u8) == self.goal_pos {
+                    'G'
+                } else if self.walls.get(x, y) {
+                    '#'
+                } else {
+                    '.'
+                };
+                out.push(c);
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wallset_get_set_toggle() {
+        let mut w = WallSet::empty();
+        assert!(!w.get(5, 7));
+        w.set(5, 7, true);
+        assert!(w.get(5, 7));
+        assert_eq!(w.count(), 1);
+        w.toggle(5, 7);
+        assert!(!w.get(5, 7));
+        assert_eq!(w.count(), 0);
+    }
+
+    #[test]
+    fn wallset_corner_bits() {
+        let mut w = WallSet::empty();
+        w.set(0, 0, true);
+        w.set(GRID_W - 1, GRID_H - 1, true);
+        assert!(w.get(0, 0));
+        assert!(w.get(GRID_W - 1, GRID_H - 1));
+        assert_eq!(w.count(), 2);
+    }
+
+    #[test]
+    fn dir_turns() {
+        assert_eq!(Dir::Up.turn_right(), Dir::Right);
+        assert_eq!(Dir::Up.turn_left(), Dir::Left);
+        assert_eq!(Dir::Left.turn_right(), Dir::Up);
+        for d in Dir::ALL {
+            assert_eq!(d.turn_left().turn_right(), d);
+            assert_eq!(
+                d.turn_right().turn_right().turn_right().turn_right(),
+                d
+            );
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut l = Level::empty();
+        l.walls.set(3, 4, true);
+        l.walls.set(12, 12, true);
+        l.agent_pos = (2, 9);
+        l.agent_dir = Dir::Down;
+        l.goal_pos = (6, 1);
+        let l2 = Level::from_bytes(&l.to_bytes()).unwrap();
+        assert_eq!(l, l2);
+    }
+
+    #[test]
+    fn ascii_roundtrip() {
+        let mut l = Level::empty();
+        l.walls.set(1, 1, true);
+        l.walls.set(11, 3, true);
+        l.agent_pos = (0, 12);
+        l.agent_dir = Dir::Up;
+        l.goal_pos = (12, 0);
+        let art = l.to_ascii();
+        assert_eq!(Level::from_ascii(&art).unwrap(), l);
+    }
+
+    #[test]
+    fn ascii_rejects_bad() {
+        assert!(Level::from_ascii("###").is_err());
+        // missing agent
+        let empty13 = format!("{}\n", ".".repeat(13)).repeat(13);
+        assert!(Level::from_ascii(&empty13).is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes() {
+        let a = Level::empty();
+        let mut b = a;
+        b.walls.set(6, 6, true);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = a;
+        c.agent_dir = Dir::Down;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn validity() {
+        let mut l = Level::empty();
+        assert!(l.is_valid());
+        l.walls.set(0, 0, true); // wall under agent
+        assert!(!l.is_valid());
+        l.walls.set(0, 0, false);
+        l.goal_pos = l.agent_pos;
+        assert!(!l.is_valid());
+    }
+}

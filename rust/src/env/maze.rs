@@ -1,0 +1,373 @@
+//! The maze environment (paper §4): a fully-deterministic, simplified
+//! MiniGrid. A partially-observable agent must navigate to a goal; levels
+//! are wall configurations plus agent start and goal positions.
+//!
+//! Semantics match MiniGrid/JaxUED:
+//!   * actions: 0 = turn left, 1 = turn right, 2 = move forward
+//!   * forward into a wall or out of bounds is a no-op
+//!   * reaching the goal terminates with reward `1 − 0.9·t/T_max`
+//!   * episodes truncate (done, zero reward) at `T_max` steps
+//!   * observation: egocentric `VIEW×VIEW` crop in front of the agent
+//!     (agent at bottom-center, facing "up" in the crop), channels
+//!     {wall, goal, out-of-bounds}, plus a 4-dim one-hot of the absolute
+//!     facing direction.
+
+use super::level::{Dir, Level, GRID_H, GRID_W};
+use super::{StepResult, UnderspecifiedEnv};
+use crate::util::rng::Pcg64;
+
+/// Egocentric view side length (must equal `model.VIEW` — cross-checked
+/// against the manifest at startup).
+pub const VIEW: usize = 5;
+pub const OBS_CHANNELS: usize = 3;
+pub const IMG_LEN: usize = VIEW * VIEW * OBS_CHANNELS;
+pub const DIR_LEN: usize = 4;
+pub const OBS_LEN: usize = IMG_LEN + DIR_LEN;
+pub const NUM_ACTIONS: usize = 3;
+
+pub const ACT_LEFT: usize = 0;
+pub const ACT_RIGHT: usize = 1;
+pub const ACT_FORWARD: usize = 2;
+
+/// Default episode horizon (DCD/JaxUED use 250 for 13×13 mazes).
+pub const DEFAULT_MAX_STEPS: usize = 250;
+
+/// Full environment state. The level is embedded by value (29 bytes) so
+/// states are self-contained and trivially cloneable.
+#[derive(Clone, Debug)]
+pub struct MazeState {
+    pub level: Level,
+    pub pos: (u8, u8),
+    pub dir: Dir,
+    pub t: u32,
+}
+
+impl MazeState {
+    pub fn at_goal(&self) -> bool {
+        self.pos == self.level.goal_pos
+    }
+}
+
+/// The maze UPOMDP.
+#[derive(Clone, Debug)]
+pub struct MazeEnv {
+    pub max_steps: usize,
+}
+
+impl Default for MazeEnv {
+    fn default() -> Self {
+        MazeEnv { max_steps: DEFAULT_MAX_STEPS }
+    }
+}
+
+impl MazeEnv {
+    pub fn new(max_steps: usize) -> Self {
+        MazeEnv { max_steps }
+    }
+
+    /// Reward for reaching the goal at step `t` (after increment).
+    #[inline]
+    fn goal_reward(&self, t: u32) -> f32 {
+        1.0 - 0.9 * (t as f32 / self.max_steps as f32)
+    }
+}
+
+impl UnderspecifiedEnv for MazeEnv {
+    type State = MazeState;
+    type Level = Level;
+
+    fn num_actions(&self) -> usize {
+        NUM_ACTIONS
+    }
+
+    fn reset_to_level(&self, level: &Level, _rng: &mut Pcg64) -> MazeState {
+        debug_assert!(level.is_valid(), "reset to invalid level");
+        MazeState {
+            level: *level,
+            pos: level.agent_pos,
+            dir: level.agent_dir,
+            t: 0,
+        }
+    }
+
+    fn step(&self, s: &mut MazeState, action: usize, _rng: &mut Pcg64) -> StepResult {
+        s.t += 1;
+        match action {
+            ACT_LEFT => s.dir = s.dir.turn_left(),
+            ACT_RIGHT => s.dir = s.dir.turn_right(),
+            ACT_FORWARD => {
+                let (dx, dy) = s.dir.delta();
+                let nx = s.pos.0 as isize + dx;
+                let ny = s.pos.1 as isize + dy;
+                if nx >= 0
+                    && ny >= 0
+                    && (nx as usize) < GRID_W
+                    && (ny as usize) < GRID_H
+                    && !s.level.wall_at(nx as usize, ny as usize)
+                {
+                    s.pos = (nx as u8, ny as u8);
+                }
+            }
+            a => panic!("invalid maze action {a}"),
+        }
+        if s.at_goal() {
+            return StepResult { reward: self.goal_reward(s.t), done: true };
+        }
+        if s.t as usize >= self.max_steps {
+            return StepResult { reward: 0.0, done: true };
+        }
+        StepResult { reward: 0.0, done: false }
+    }
+
+    fn observe(&self, s: &MazeState, obs: &mut [f32]) {
+        debug_assert_eq!(obs.len(), OBS_LEN);
+        obs.fill(0.0);
+        let (ax, ay) = (s.pos.0 as isize, s.pos.1 as isize);
+        let half = (VIEW / 2) as isize;
+        for vy in 0..VIEW {
+            // forward distance: bottom row (vy = VIEW-1) is the agent's row
+            let f = (VIEW - 1 - vy) as isize;
+            for vx in 0..VIEW {
+                let l = vx as isize - half; // lateral, right-positive
+                let (dx, dy) = match s.dir {
+                    Dir::Up => (l, -f),
+                    Dir::Right => (f, l),
+                    Dir::Down => (-l, f),
+                    Dir::Left => (-f, -l),
+                };
+                let (wx, wy) = (ax + dx, ay + dy);
+                let base = (vy * VIEW + vx) * OBS_CHANNELS;
+                if wx < 0 || wy < 0 || wx >= GRID_W as isize || wy >= GRID_H as isize {
+                    obs[base] = 1.0; // out-of-bounds reads as wall…
+                    obs[base + 2] = 1.0; // …and is marked oob
+                } else {
+                    let (wx, wy) = (wx as usize, wy as usize);
+                    if s.level.wall_at(wx, wy) {
+                        obs[base] = 1.0;
+                    }
+                    if (wx as u8, wy as u8) == s.level.goal_pos {
+                        obs[base + 1] = 1.0;
+                    }
+                }
+            }
+        }
+        obs[IMG_LEN + s.dir.index()] = 1.0;
+    }
+
+    fn obs_len(&self) -> usize {
+        OBS_LEN
+    }
+
+    fn obs_components(&self) -> Vec<usize> {
+        vec![IMG_LEN, DIR_LEN]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> MazeEnv {
+        MazeEnv::default()
+    }
+
+    fn rng() -> Pcg64 {
+        Pcg64::seed_from_u64(0)
+    }
+
+    #[test]
+    fn reset_places_agent() {
+        let mut l = Level::empty();
+        l.agent_pos = (3, 4);
+        l.agent_dir = Dir::Down;
+        let s = env().reset_to_level(&l, &mut rng());
+        assert_eq!(s.pos, (3, 4));
+        assert_eq!(s.dir, Dir::Down);
+        assert_eq!(s.t, 0);
+    }
+
+    #[test]
+    fn turning() {
+        let l = Level::empty();
+        let e = env();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        let d0 = s.dir;
+        e.step(&mut s, ACT_LEFT, &mut rng());
+        assert_eq!(s.dir, d0.turn_left());
+        e.step(&mut s, ACT_RIGHT, &mut rng());
+        assert_eq!(s.dir, d0);
+        assert_eq!(s.pos, l.agent_pos);
+    }
+
+    #[test]
+    fn forward_moves_and_blocks() {
+        let mut l = Level::empty();
+        l.agent_pos = (5, 5);
+        l.agent_dir = Dir::Right;
+        l.walls.set(7, 5, true);
+        let e = env();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert_eq!(s.pos, (6, 5));
+        // wall at (7,5): blocked
+        e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert_eq!(s.pos, (6, 5));
+    }
+
+    #[test]
+    fn boundary_blocks() {
+        let mut l = Level::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Up;
+        l.goal_pos = (12, 12);
+        let e = env();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert_eq!(s.pos, (0, 0));
+    }
+
+    #[test]
+    fn reaching_goal_rewards_and_terminates() {
+        let mut l = Level::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Right;
+        l.goal_pos = (1, 0);
+        let e = env();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        let r = e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert!(r.done);
+        let expect = 1.0 - 0.9 * (1.0 / DEFAULT_MAX_STEPS as f32);
+        assert!((r.reward - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slower_solutions_get_less_reward() {
+        let mut l = Level::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Right;
+        l.goal_pos = (2, 0);
+        let e = env();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        e.step(&mut s, ACT_FORWARD, &mut rng());
+        let r = e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert!(r.done);
+        let fast = 1.0 - 0.9 * (2.0 / DEFAULT_MAX_STEPS as f32);
+        assert!((r.reward - fast).abs() < 1e-6);
+
+        // waste two turns first
+        let mut s = e.reset_to_level(&l, &mut rng());
+        e.step(&mut s, ACT_LEFT, &mut rng());
+        e.step(&mut s, ACT_RIGHT, &mut rng());
+        e.step(&mut s, ACT_FORWARD, &mut rng());
+        let r2 = e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert!(r2.done);
+        assert!(r2.reward < r.reward);
+    }
+
+    #[test]
+    fn truncation_at_max_steps() {
+        let e = MazeEnv::new(5);
+        let l = Level::empty();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        for i in 0..5 {
+            let r = e.step(&mut s, ACT_LEFT, &mut rng());
+            if i < 4 {
+                assert!(!r.done);
+            } else {
+                assert!(r.done);
+                assert_eq!(r.reward, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn observation_shape_and_dir_onehot() {
+        let e = env();
+        let l = Level::empty();
+        let s = e.reset_to_level(&l, &mut rng());
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        let dir: Vec<f32> = obs[IMG_LEN..].to_vec();
+        assert_eq!(dir.iter().sum::<f32>(), 1.0);
+        assert_eq!(dir[s.dir.index()], 1.0);
+    }
+
+    #[test]
+    fn observation_sees_wall_ahead() {
+        let mut l = Level::empty();
+        l.agent_pos = (5, 5);
+        l.agent_dir = Dir::Up;
+        l.walls.set(5, 4, true); // directly ahead
+        let e = env();
+        let s = e.reset_to_level(&l, &mut rng());
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        // agent at bottom-center (vy=VIEW-1, vx=2); ahead = (vy=VIEW-2, vx=2)
+        let base = ((VIEW - 2) * VIEW + VIEW / 2) * OBS_CHANNELS;
+        assert_eq!(obs[base], 1.0, "wall channel ahead");
+        assert_eq!(obs[base + 2], 0.0, "not oob");
+    }
+
+    #[test]
+    fn observation_rotates_with_agent() {
+        // Wall to the agent's *east*; facing East it appears straight ahead,
+        // facing North it appears to the right.
+        let mut l = Level::empty();
+        l.agent_pos = (5, 5);
+        l.walls.set(6, 5, true);
+        let e = env();
+
+        let mut le = l;
+        le.agent_dir = Dir::Right;
+        let s = e.reset_to_level(&le, &mut rng());
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        let ahead = ((VIEW - 2) * VIEW + VIEW / 2) * OBS_CHANNELS;
+        assert_eq!(obs[ahead], 1.0);
+
+        let mut ln = l;
+        ln.agent_dir = Dir::Up;
+        let s = e.reset_to_level(&ln, &mut rng());
+        e.observe(&s, &mut obs);
+        let right = ((VIEW - 1) * VIEW + VIEW / 2 + 1) * OBS_CHANNELS;
+        assert_eq!(obs[right], 1.0);
+    }
+
+    #[test]
+    fn observation_oob_channel() {
+        let mut l = Level::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Up;
+        l.goal_pos = (5, 5);
+        let e = env();
+        let s = e.reset_to_level(&l, &mut rng());
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        // Everything ahead is out of bounds: top row of the view.
+        for vx in 0..VIEW {
+            let base = vx * OBS_CHANNELS;
+            assert_eq!(obs[base], 1.0, "oob reads as wall");
+            assert_eq!(obs[base + 2], 1.0, "oob channel set");
+        }
+    }
+
+    #[test]
+    fn observation_sees_goal() {
+        let mut l = Level::empty();
+        l.agent_pos = (5, 5);
+        l.agent_dir = Dir::Up;
+        l.goal_pos = (5, 3); // two ahead
+        let e = env();
+        let s = e.reset_to_level(&l, &mut rng());
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        let base = ((VIEW - 3) * VIEW + VIEW / 2) * OBS_CHANNELS;
+        assert_eq!(obs[base + 1], 1.0, "goal channel");
+    }
+
+    #[test]
+    fn obs_components_sum_to_len() {
+        let e = env();
+        assert_eq!(e.obs_components().iter().sum::<usize>(), e.obs_len());
+    }
+}

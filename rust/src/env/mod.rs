@@ -1,0 +1,66 @@
+//! The `UnderspecifiedEnv` interface (paper §3.1) and the maze environments.
+//!
+//! UED operates over Underspecified POMDPs: a *collection* of POMDPs indexed
+//! by free parameters ("levels"). Conventional env interfaces bake an
+//! implicit level distribution into `reset()`; `UnderspecifiedEnv` instead
+//! exposes `reset_to_level`, pushing level-distribution management to the
+//! caller (a UED algorithm, an evaluation routine, a wrapper). Levels are
+//! decoupled from states: a level induces a (possibly stochastic) initial
+//! state distribution.
+
+pub mod editor;
+pub mod gen;
+pub mod holdout;
+pub mod level;
+pub mod maze;
+pub mod mutate;
+pub mod render;
+pub mod shortest_path;
+pub mod wrappers;
+
+pub use level::Level;
+
+use crate::util::rng::Pcg64;
+
+/// Result of one environment transition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StepResult {
+    pub reward: f32,
+    /// Episode terminated at this transition (goal reached or truncation).
+    pub done: bool,
+}
+
+/// A POMDP family indexed by levels (paper §3.1).
+///
+/// `State` is the full environment state; `Level` the underspecified
+/// parameters; `Obs` an associated observation buffer the env writes into
+/// (the rollout engine owns the backing storage — observation writing is
+/// allocation-free).
+pub trait UnderspecifiedEnv {
+    type State: Clone;
+    type Level: Clone;
+
+    /// Number of discrete actions.
+    fn num_actions(&self) -> usize;
+
+    /// Stochastically initialize a state from a level (never an implicit
+    /// level distribution — that is the caller's job).
+    fn reset_to_level(&self, level: &Self::Level, rng: &mut Pcg64) -> Self::State;
+
+    /// Transition. Returns reward and termination; mutates the state.
+    fn step(&self, state: &mut Self::State, action: usize, rng: &mut Pcg64) -> StepResult;
+
+    /// Write the observation of `state` into `obs` (length = obs_len()).
+    fn observe(&self, state: &Self::State, obs: &mut [f32]);
+
+    /// Flat observation length.
+    fn obs_len(&self) -> usize;
+
+    /// Lengths of the observation's components, in the order the policy
+    /// artifact expects its observation inputs (e.g. the student policy
+    /// takes `[img(75), dir(4)]`). The flat `observe` buffer is the
+    /// concatenation of these.
+    fn obs_components(&self) -> Vec<usize> {
+        vec![self.obs_len()]
+    }
+}

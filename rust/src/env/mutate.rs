@@ -1,0 +1,160 @@
+//! Parameterized level mutation (paper §4), the ACCEL edit operator.
+//!
+//! ACCEL (Parker-Holder et al., 2022) evolves high-regret levels by applying
+//! a small number of random edits to replayed levels. Following
+//! JaxUED/ACCEL, each edit is drawn from: toggle a wall at a random cell
+//! (the dominant move), relocate the goal, or relocate the agent. Edits
+//! never produce structurally invalid levels.
+
+use super::level::{Dir, Level, GRID_CELLS, GRID_W};
+use crate::util::rng::Pcg64;
+
+/// Mutation-operator parameters. `num_edits` matches Table 3 (20).
+#[derive(Clone, Copy, Debug)]
+pub struct Mutator {
+    pub num_edits: usize,
+    /// Probability an edit toggles a wall (the remainder splits evenly
+    /// between moving the goal and moving the agent).
+    pub p_wall: f64,
+}
+
+impl Default for Mutator {
+    fn default() -> Self {
+        Mutator { num_edits: 20, p_wall: 0.8 }
+    }
+}
+
+impl Mutator {
+    pub fn new(num_edits: usize) -> Self {
+        Mutator { num_edits, ..Default::default() }
+    }
+
+    /// Apply one random edit in place.
+    pub fn edit(&self, level: &mut Level, rng: &mut Pcg64) {
+        let u = rng.next_f64();
+        if u < self.p_wall {
+            // Toggle a wall anywhere except under the agent or goal.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let pos = ((c % GRID_W) as u8, (c / GRID_W) as u8);
+                if pos != level.agent_pos && pos != level.goal_pos {
+                    level.walls.toggle(pos.0 as usize, pos.1 as usize);
+                    break;
+                }
+            }
+        } else if u < self.p_wall + (1.0 - self.p_wall) / 2.0 {
+            // Move the goal to a random free, non-agent cell.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let (x, y) = (c % GRID_W, c / GRID_W);
+                let pos = (x as u8, y as u8);
+                if pos != level.agent_pos && !level.walls.get(x, y) {
+                    level.goal_pos = pos;
+                    break;
+                }
+            }
+        } else {
+            // Move the agent to a random free, non-goal cell + random dir.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let (x, y) = (c % GRID_W, c / GRID_W);
+                let pos = (x as u8, y as u8);
+                if pos != level.goal_pos && !level.walls.get(x, y) {
+                    level.agent_pos = pos;
+                    level.agent_dir = Dir::from_index(rng.gen_range(4));
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Produce a mutated child: `num_edits` independent edits.
+    pub fn mutate(&self, parent: &Level, rng: &mut Pcg64) -> Level {
+        let mut child = *parent;
+        for _ in 0..self.num_edits {
+            self.edit(&mut child, rng);
+        }
+        debug_assert!(child.is_valid());
+        child
+    }
+
+    /// Mutate a batch of parents (one child per parent).
+    pub fn mutate_batch(&self, parents: &[Level], rng: &mut Pcg64) -> Vec<Level> {
+        parents.iter().map(|p| self.mutate(p, rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::gen::LevelGenerator;
+    use crate::prop_assert;
+    use crate::util::proptest::props;
+
+    #[test]
+    fn children_always_valid() {
+        let g = LevelGenerator::new(60);
+        let m = Mutator::default();
+        let mut rng = Pcg64::seed_from_u64(0);
+        for _ in 0..200 {
+            let parent = g.generate(&mut rng);
+            let child = m.mutate(&parent, &mut rng);
+            assert!(child.is_valid());
+        }
+    }
+
+    #[test]
+    fn zero_edits_is_identity() {
+        let g = LevelGenerator::new(30);
+        let m = Mutator::new(0);
+        let mut rng = Pcg64::seed_from_u64(1);
+        let parent = g.generate(&mut rng);
+        assert_eq!(m.mutate(&parent, &mut rng), parent);
+    }
+
+    #[test]
+    fn edits_change_levels() {
+        let g = LevelGenerator::new(30);
+        let m = Mutator::new(20);
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut changed = 0;
+        for _ in 0..50 {
+            let parent = g.generate(&mut rng);
+            if m.mutate(&parent, &mut rng) != parent {
+                changed += 1;
+            }
+        }
+        assert!(changed >= 49, "20 edits almost surely change the level");
+    }
+
+    #[test]
+    fn wall_only_mutator_preserves_positions() {
+        let g = LevelGenerator::new(30);
+        let m = Mutator { num_edits: 10, p_wall: 1.0 };
+        let mut rng = Pcg64::seed_from_u64(3);
+        for _ in 0..50 {
+            let parent = g.generate(&mut rng);
+            let child = m.mutate(&parent, &mut rng);
+            assert_eq!(child.agent_pos, parent.agent_pos);
+            assert_eq!(child.goal_pos, parent.goal_pos);
+        }
+    }
+
+    #[test]
+    fn prop_mutation_validity_and_wall_delta() {
+        props(200, |gen| {
+            let edits = gen.usize_in(0, 30);
+            let g = LevelGenerator::new(40);
+            let m = Mutator::new(edits);
+            let parent = g.generate(gen.rng());
+            let child = m.mutate(&parent, gen.rng());
+            prop_assert!(child.is_valid(), "invalid child");
+            let delta = (child.num_walls() as isize - parent.num_walls() as isize).abs();
+            prop_assert!(
+                delta <= edits as isize,
+                "wall count changed by {delta} > {edits} edits"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,237 @@
+//! Level and trajectory rendering (paper §4 "Efficient rendering").
+//!
+//! Produces RGB images (binary PPM, viewable everywhere, zero deps):
+//! single levels, holdout montages (Figure 2), and step-by-step trajectory
+//! frame sequences. The palette follows MiniGrid: grey walls, dark floor,
+//! green goal, red agent triangle.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::level::{Dir, Level, GRID_H, GRID_W};
+use super::maze::MazeState;
+
+/// Pixels per grid cell.
+pub const CELL_PX: usize = 8;
+
+const FLOOR: [u8; 3] = [28, 28, 28];
+const WALL: [u8; 3] = [120, 120, 120];
+const GOAL: [u8; 3] = [40, 160, 40];
+const AGENT: [u8; 3] = [200, 40, 40];
+const GRIDLINE: [u8; 3] = [46, 46, 46];
+
+/// A simple owned RGB image.
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>, // RGB, row-major
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Image {
+        Image { width, height, data: vec![0; width * height * 3] }
+    }
+
+    #[inline]
+    pub fn put(&mut self, x: usize, y: usize, c: [u8; 3]) {
+        debug_assert!(x < self.width && y < self.height);
+        let i = (y * self.width + x) * 3;
+        self.data[i..i + 3].copy_from_slice(&c);
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    pub fn fill_rect(&mut self, x0: usize, y0: usize, w: usize, h: usize, c: [u8; 3]) {
+        for y in y0..(y0 + h).min(self.height) {
+            for x in x0..(x0 + w).min(self.width) {
+                self.put(x, y, c);
+            }
+        }
+    }
+
+    /// Write as binary PPM (P6).
+    pub fn write_ppm(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P6\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.data)?;
+        Ok(())
+    }
+}
+
+fn draw_cell(img: &mut Image, cx: usize, cy: usize, color: [u8; 3], ox: usize, oy: usize) {
+    img.fill_rect(ox + cx * CELL_PX, oy + cy * CELL_PX, CELL_PX, CELL_PX, color);
+}
+
+/// Draw the agent as a direction-indicating triangle inside its cell.
+fn draw_agent(img: &mut Image, cx: usize, cy: usize, dir: Dir, ox: usize, oy: usize) {
+    let x0 = ox + cx * CELL_PX;
+    let y0 = oy + cy * CELL_PX;
+    let n = CELL_PX;
+    for py in 0..n {
+        for px in 0..n {
+            // Triangle pointing up in local coords, then rotate by dir.
+            let (tx, ty) = match dir {
+                Dir::Up => (px, py),
+                Dir::Right => (n - 1 - py, px),
+                Dir::Down => (n - 1 - px, n - 1 - py),
+                Dir::Left => (py, n - 1 - px),
+            };
+            // up-pointing triangle: widens with ty
+            let half_width = ty / 2 + 1;
+            let mid = n / 2;
+            let inside = tx + half_width > mid && tx < mid + half_width && ty >= 1 && ty < n - 1;
+            if inside {
+                img.put(x0 + px, y0 + py, AGENT);
+            }
+        }
+    }
+}
+
+/// Render a single level (optionally with the agent at a live state
+/// position rather than its start).
+pub fn render_level(level: &Level, state: Option<&MazeState>) -> Image {
+    let mut img = Image::new(GRID_W * CELL_PX, GRID_H * CELL_PX);
+    for y in 0..GRID_H {
+        for x in 0..GRID_W {
+            let c = if level.wall_at(x, y) { WALL } else { FLOOR };
+            draw_cell(&mut img, x, y, c, 0, 0);
+            // 1px gridline at cell borders for readability
+            for i in 0..CELL_PX {
+                img.put(x * CELL_PX, y * CELL_PX + i, GRIDLINE);
+                img.put(x * CELL_PX + i, y * CELL_PX, GRIDLINE);
+            }
+        }
+    }
+    let (gx, gy) = (level.goal_pos.0 as usize, level.goal_pos.1 as usize);
+    draw_cell(&mut img, gx, gy, GOAL, 0, 0);
+    let (pos, dir) = match state {
+        Some(s) => (s.pos, s.dir),
+        None => (level.agent_pos, level.agent_dir),
+    };
+    draw_agent(&mut img, pos.0 as usize, pos.1 as usize, dir, 0, 0);
+    img
+}
+
+/// Render a batch of levels as a `cols`-wide montage with 2px separators
+/// (Figure 2 style).
+pub fn render_montage(levels: &[Level], cols: usize) -> Image {
+    assert!(cols > 0 && !levels.is_empty());
+    let rows = levels.len().div_ceil(cols);
+    let sep = 2;
+    let tile_w = GRID_W * CELL_PX;
+    let tile_h = GRID_H * CELL_PX;
+    let mut img = Image::new(
+        cols * tile_w + (cols - 1) * sep,
+        rows * tile_h + (rows - 1) * sep,
+    );
+    // white background separators
+    img.data.fill(255);
+    for (i, level) in levels.iter().enumerate() {
+        let tile = render_level(level, None);
+        let ox = (i % cols) * (tile_w + sep);
+        let oy = (i / cols) * (tile_h + sep);
+        for y in 0..tile_h {
+            for x in 0..tile_w {
+                img.put(ox + x, oy + y, tile.get(x, y));
+            }
+        }
+    }
+    img
+}
+
+/// Render a trajectory as numbered PPM frames in `dir`.
+pub fn render_trajectory(
+    level: &Level, states: &[MazeState], dir: &Path, prefix: &str,
+) -> Result<Vec<std::path::PathBuf>> {
+    std::fs::create_dir_all(dir)?;
+    let mut paths = Vec::with_capacity(states.len());
+    for (i, s) in states.iter().enumerate() {
+        let img = render_level(level, Some(s));
+        let p = dir.join(format!("{prefix}_{i:04}.ppm"));
+        img.write_ppm(&p)?;
+        paths.push(p);
+    }
+    Ok(paths)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::gen::LevelGenerator;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn image_dimensions() {
+        let l = Level::empty();
+        let img = render_level(&l, None);
+        assert_eq!(img.width, GRID_W * CELL_PX);
+        assert_eq!(img.height, GRID_H * CELL_PX);
+        assert_eq!(img.data.len(), img.width * img.height * 3);
+    }
+
+    #[test]
+    fn goal_and_wall_pixels_colored() {
+        let mut l = Level::empty();
+        l.walls.set(5, 5, true);
+        l.goal_pos = (7, 7);
+        l.agent_pos = (1, 1);
+        let img = render_level(&l, None);
+        let center = |c: usize| c * CELL_PX + CELL_PX / 2;
+        assert_eq!(img.get(center(5), center(5)), WALL);
+        assert_eq!(img.get(center(7), center(7)), GOAL);
+        assert_eq!(img.get(center(1), center(1)), AGENT);
+        assert_eq!(img.get(center(3), center(3)), FLOOR);
+    }
+
+    #[test]
+    fn agent_triangle_rotates() {
+        let mut l = Level::empty();
+        l.agent_pos = (6, 6);
+        let imgs: Vec<Image> = crate::env::level::Dir::ALL
+            .iter()
+            .map(|&d| {
+                let mut lv = l;
+                lv.agent_dir = d;
+                render_level(&lv, None)
+            })
+            .collect();
+        // the four renderings must differ pairwise
+        for i in 0..4 {
+            for j in (i + 1)..4 {
+                assert_ne!(imgs[i].data, imgs[j].data, "dirs {i} vs {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn montage_shape() {
+        let g = LevelGenerator::new(30);
+        let mut rng = Pcg64::seed_from_u64(0);
+        let levels = g.generate_batch(10, &mut rng);
+        let img = render_montage(&levels, 4);
+        let tile = GRID_W * CELL_PX;
+        assert_eq!(img.width, 4 * tile + 3 * 2);
+        assert_eq!(img.height, 3 * (GRID_H * CELL_PX) + 2 * 2);
+    }
+
+    #[test]
+    fn ppm_roundtrip_header() {
+        let l = Level::empty();
+        let img = render_level(&l, None);
+        let dir = std::env::temp_dir().join("jaxued_render_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("x.ppm");
+        img.write_ppm(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let header = format!("P6\n{} {}\n255\n", img.width, img.height);
+        assert!(bytes.starts_with(header.as_bytes()));
+        assert_eq!(bytes.len(), header.len() + img.data.len());
+    }
+}

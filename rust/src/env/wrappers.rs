@@ -1,0 +1,199 @@
+//! Environment wrappers (paper §3.2).
+//!
+//! `UnderspecifiedEnv` deliberately has no implicit reset distribution, so
+//! it cannot auto-reset on episode end. Training wants auto-reset; the two
+//! wrappers reintroduce it explicitly, and the choice between them is the
+//! §5.2 semantic difference between DR and the PLR family:
+//!
+//! * [`AutoReplayWrapper`] — reset to *the same level* (PLR-family rollouts:
+//!   several episodes on one level sharpen its regret estimate).
+//! * [`AutoResetWrapper`] — sample a *new level* from an injected
+//!   distribution (DR semantics: trailing episodes continue across update
+//!   boundaries like standard RL).
+//!
+//! Both transform an `UnderspecifiedEnv` into another `UnderspecifiedEnv`,
+//! inheriting observation behaviour.
+
+use super::{StepResult, UnderspecifiedEnv};
+use crate::util::rng::Pcg64;
+
+/// On episode end, re-reset to the level that was just played.
+pub struct AutoReplayWrapper<E: UnderspecifiedEnv> {
+    pub env: E,
+}
+
+/// State pairs the inner state with the level to replay.
+#[derive(Debug)]
+pub struct ReplayState<E: UnderspecifiedEnv> {
+    pub inner: E::State,
+    pub level: E::Level,
+    /// Episodes completed on this level so far (diagnostics / scoring).
+    pub episodes: u32,
+}
+
+// Manual impl: derive would demand `E: Clone`, but only the associated
+// state/level types need to be cloneable.
+impl<E: UnderspecifiedEnv> Clone for ReplayState<E> {
+    fn clone(&self) -> Self {
+        ReplayState {
+            inner: self.inner.clone(),
+            level: self.level.clone(),
+            episodes: self.episodes,
+        }
+    }
+}
+
+impl<E: UnderspecifiedEnv> AutoReplayWrapper<E> {
+    pub fn new(env: E) -> Self {
+        AutoReplayWrapper { env }
+    }
+}
+
+impl<E: UnderspecifiedEnv> UnderspecifiedEnv for AutoReplayWrapper<E> {
+    type State = ReplayState<E>;
+    type Level = E::Level;
+
+    fn num_actions(&self) -> usize {
+        self.env.num_actions()
+    }
+
+    fn reset_to_level(&self, level: &Self::Level, rng: &mut Pcg64) -> Self::State {
+        ReplayState {
+            inner: self.env.reset_to_level(level, rng),
+            level: level.clone(),
+            episodes: 0,
+        }
+    }
+
+    fn step(&self, s: &mut Self::State, action: usize, rng: &mut Pcg64) -> StepResult {
+        let r = self.env.step(&mut s.inner, action, rng);
+        if r.done {
+            s.episodes += 1;
+            s.inner = self.env.reset_to_level(&s.level, rng);
+        }
+        r
+    }
+
+    fn observe(&self, s: &Self::State, obs: &mut [f32]) {
+        self.env.observe(&s.inner, obs)
+    }
+
+    fn obs_len(&self) -> usize {
+        self.env.obs_len()
+    }
+
+    fn obs_components(&self) -> Vec<usize> {
+        self.env.obs_components()
+    }
+}
+
+/// On episode end, sample a fresh level from the injected distribution and
+/// reset to it (dependency injection of the level distribution — the
+/// wrapper owns a sampling closure, not the env).
+pub struct AutoResetWrapper<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> {
+    pub env: E,
+    pub sample_level: F,
+}
+
+impl<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> AutoResetWrapper<E, F> {
+    pub fn new(env: E, sample_level: F) -> Self {
+        AutoResetWrapper { env, sample_level }
+    }
+}
+
+impl<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> UnderspecifiedEnv
+    for AutoResetWrapper<E, F>
+{
+    type State = E::State;
+    type Level = E::Level;
+
+    fn num_actions(&self) -> usize {
+        self.env.num_actions()
+    }
+
+    fn reset_to_level(&self, level: &Self::Level, rng: &mut Pcg64) -> Self::State {
+        self.env.reset_to_level(level, rng)
+    }
+
+    fn step(&self, s: &mut Self::State, action: usize, rng: &mut Pcg64) -> StepResult {
+        let r = self.env.step(s, action, rng);
+        if r.done {
+            let level = (self.sample_level)(rng);
+            *s = self.env.reset_to_level(&level, rng);
+        }
+        r
+    }
+
+    fn observe(&self, s: &Self::State, obs: &mut [f32]) {
+        self.env.observe(s, obs)
+    }
+
+    fn obs_len(&self) -> usize {
+        self.env.obs_len()
+    }
+
+    fn obs_components(&self) -> Vec<usize> {
+        self.env.obs_components()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::gen::LevelGenerator;
+    use crate::env::level::{Dir, Level};
+    use crate::env::maze::{MazeEnv, ACT_FORWARD};
+
+    fn short_goal_level() -> Level {
+        let mut l = Level::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Right;
+        l.goal_pos = (1, 0);
+        l
+    }
+
+    #[test]
+    fn auto_replay_resets_to_same_level() {
+        let env = AutoReplayWrapper::new(MazeEnv::default());
+        let mut rng = Pcg64::seed_from_u64(0);
+        let level = short_goal_level();
+        let mut s = env.reset_to_level(&level, &mut rng);
+        let r = env.step(&mut s, ACT_FORWARD, &mut rng);
+        assert!(r.done && r.reward > 0.0);
+        // after auto-replay the inner state is back at the SAME start
+        assert_eq!(s.inner.pos, level.agent_pos);
+        assert_eq!(s.inner.level, level);
+        assert_eq!(s.episodes, 1);
+        // and the level is immediately solvable again
+        let r2 = env.step(&mut s, ACT_FORWARD, &mut rng);
+        assert!(r2.done);
+        assert_eq!(s.episodes, 2);
+    }
+
+    #[test]
+    fn auto_reset_samples_new_level() {
+        let gen = LevelGenerator::new(0); // open mazes, always solvable
+        let env = AutoResetWrapper::new(MazeEnv::default(), move |r: &mut Pcg64| {
+            gen.generate(r)
+        });
+        let mut rng = Pcg64::seed_from_u64(1);
+        let level = short_goal_level();
+        let mut s = env.reset_to_level(&level, &mut rng);
+        let r = env.step(&mut s, ACT_FORWARD, &mut rng);
+        assert!(r.done);
+        // state was re-initialized from a *fresh* level (t reset)
+        assert_eq!(s.t, 0);
+        // overwhelmingly unlikely to be the same 2-cell toy level
+        assert_ne!(s.level, level);
+    }
+
+    #[test]
+    fn wrappers_preserve_obs_interface() {
+        let inner = MazeEnv::default();
+        let obs_len = inner.obs_len();
+        let comps = inner.obs_components();
+        let w = AutoReplayWrapper::new(inner);
+        assert_eq!(w.obs_len(), obs_len);
+        assert_eq!(w.obs_components(), comps);
+    }
+}

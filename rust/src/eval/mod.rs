@@ -1,0 +1,130 @@
+//! Holdout evaluation (paper §6.1 / Figure 3 / Table 2).
+//!
+//! Runs the student policy on each holdout level for `trials` stochastic
+//! episodes and reports per-level solve rates plus the paper's aggregates:
+//! mean solve rate (Table 2) and IQM with min–max over seeds (Figure 3,
+//! aggregated by the bench harness across runs).
+
+use anyhow::Result;
+
+use crate::env::holdout::{named_levels, procedural_suite};
+use crate::env::level::Level;
+use crate::env::maze::MazeEnv;
+use crate::env::UnderspecifiedEnv;
+use crate::rollout::{Policy, RolloutEngine};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// Per-level evaluation result.
+#[derive(Clone, Debug)]
+pub struct LevelResult {
+    pub name: String,
+    pub solve_rate: f64,
+    pub mean_steps: f64,
+}
+
+/// Full evaluation report.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub levels: Vec<LevelResult>,
+    /// Mean over levels of per-level solve rate (Table 2 number).
+    pub mean_solve_rate: f64,
+    /// IQM over levels (Figure 3 number).
+    pub iqm_solve_rate: f64,
+}
+
+/// The evaluation suite: named mazes + a deterministic procedural batch.
+pub struct Evaluator {
+    pub levels: Vec<(String, Level)>,
+    pub env: MazeEnv,
+    pub trials: usize,
+    b: usize,
+}
+
+impl Evaluator {
+    /// The default suite: 12 named mazes + `n_procedural` seeded minimax-
+    /// recipe levels (solvable, ≤ 60 walls).
+    pub fn default_suite(
+        b: usize, trials: usize, n_procedural: usize, max_episode_steps: usize,
+    ) -> Evaluator {
+        let mut levels: Vec<(String, Level)> = named_levels()
+            .into_iter()
+            .map(|nl| (nl.name.to_string(), nl.level))
+            .collect();
+        for (i, l) in procedural_suite(n_procedural, 60, 0xE7A1).into_iter().enumerate() {
+            levels.push((format!("Proc{i:02}"), l));
+        }
+        Evaluator { levels, env: MazeEnv::new(max_episode_steps), trials, b }
+    }
+
+    /// Evaluate a policy. Episodes are batched B at a time through the
+    /// fixed-shape apply artifact (tail batches padded with repeats).
+    pub fn run(&self, policy: &Policy, rng: &mut Pcg64) -> Result<EvalReport> {
+        let mut engine = RolloutEngine::new(&self.env, self.b);
+        // Build the work list: every (level, trial) pair.
+        let mut work: Vec<usize> = Vec::with_capacity(self.levels.len() * self.trials);
+        for i in 0..self.levels.len() {
+            for _ in 0..self.trials {
+                work.push(i);
+            }
+        }
+        let mut solves = vec![0u32; self.levels.len()];
+        let mut steps_sum = vec![0u64; self.levels.len()];
+        let mut runs = vec![0u32; self.levels.len()];
+
+        for chunk in work.chunks(self.b) {
+            // Pad the tail with repeats of the first work item; padded
+            // columns are run but ignored.
+            let mut states: Vec<_> = chunk
+                .iter()
+                .map(|&i| self.env.reset_to_level(&self.levels[i].1, rng))
+                .collect();
+            while states.len() < self.b {
+                states.push(self.env.reset_to_level(&self.levels[chunk[0]].1, rng));
+            }
+            let outcomes = engine.run_episodes(
+                &self.env, &mut states, policy, self.env.max_steps, rng, false,
+            )?;
+            for (j, &i) in chunk.iter().enumerate() {
+                runs[i] += 1;
+                steps_sum[i] += outcomes[j].steps as u64;
+                if outcomes[j].solved {
+                    solves[i] += 1;
+                }
+            }
+        }
+
+        let levels: Vec<LevelResult> = self
+            .levels
+            .iter()
+            .enumerate()
+            .map(|(i, (name, _))| LevelResult {
+                name: name.clone(),
+                solve_rate: solves[i] as f64 / runs[i].max(1) as f64,
+                mean_steps: steps_sum[i] as f64 / runs[i].max(1) as f64,
+            })
+            .collect();
+        let rates: Vec<f64> = levels.iter().map(|l| l.solve_rate).collect();
+        Ok(EvalReport {
+            mean_solve_rate: stats::mean(&rates),
+            iqm_solve_rate: stats::iqm(&rates),
+            levels,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_composition() {
+        let e = Evaluator::default_suite(8, 2, 10, 250);
+        assert_eq!(e.levels.len(), 12 + 10);
+        // all names unique
+        let mut names: Vec<&String> = e.levels.iter().map(|(n, _)| n).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 22);
+    }
+}

@@ -1,0 +1,414 @@
+//! The `LevelSampler` (paper §3.3): a rolling buffer of levels with
+//! associated regret scores and staleness, implementing the adversary of
+//! replay-based UED methods (PLR, PLR⊥, ACCEL).
+//!
+//! Supports: replay decisions, batch insertion with capacity eviction,
+//! batch score updates, optional de-duplication (insertion of a known level
+//! updates it in place), staleness-mixed prioritized sampling, and
+//! arbitrary per-level auxiliary data (`level_extra` — e.g. the running max
+//! return that the MaxMC score needs).
+
+pub mod prioritization;
+
+use std::collections::HashMap;
+
+use prioritization::{replay_weights, Prioritization};
+
+use crate::util::rng::Pcg64;
+
+/// Sampler hyperparameters (paper Table 3 defaults).
+#[derive(Clone, Debug)]
+pub struct SamplerConfig {
+    /// Buffer size K.
+    pub capacity: usize,
+    /// Score→weight transform.
+    pub prioritization: Prioritization,
+    /// Temperature β.
+    pub temperature: f64,
+    /// Staleness mixing coefficient ρ.
+    pub staleness_coef: f64,
+    /// Fraction of capacity that must be filled before replay is allowed
+    /// (paper §5.1: 50% by default).
+    pub min_fill_ratio: f64,
+    /// De-duplicate on insert by level fingerprint.
+    pub duplicate_check: bool,
+}
+
+impl Default for SamplerConfig {
+    fn default() -> Self {
+        SamplerConfig {
+            capacity: 4000,
+            prioritization: Prioritization::Rank,
+            temperature: 0.3,
+            staleness_coef: 0.3,
+            min_fill_ratio: 0.5,
+            duplicate_check: true,
+        }
+    }
+}
+
+/// A buffered level with its bookkeeping.
+#[derive(Clone, Debug)]
+pub struct Slot<L, E> {
+    pub level: L,
+    pub score: f64,
+    /// Sampler tick when this level was last inserted/updated/sampled.
+    pub last_touch: u64,
+    /// Arbitrary auxiliary data (the paper's `level_extra`).
+    pub extra: E,
+    pub fingerprint: u64,
+}
+
+/// Rolling prioritized level buffer.
+pub struct LevelSampler<L: Clone, E: Clone + Default> {
+    pub config: SamplerConfig,
+    slots: Vec<Slot<L, E>>,
+    by_fingerprint: HashMap<u64, usize>,
+    /// Monotone tick counting insert/sample events (staleness clock).
+    tick: u64,
+}
+
+impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
+    pub fn new(config: SamplerConfig) -> Self {
+        LevelSampler {
+            slots: Vec::with_capacity(config.capacity.min(1 << 20)),
+            by_fingerprint: HashMap::new(),
+            tick: 0,
+            config,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn proportion_filled(&self) -> f64 {
+        self.slots.len() as f64 / self.config.capacity as f64
+    }
+
+    /// Replay is allowed once the buffer passes the fill threshold.
+    pub fn can_replay(&self) -> bool {
+        self.proportion_filled() >= self.config.min_fill_ratio
+    }
+
+    /// The replay decision (paper Fig. 1): Bernoulli(p) gated on fill.
+    pub fn sample_replay_decision(&self, p_replay: f64, rng: &mut Pcg64) -> bool {
+        self.can_replay() && rng.gen_bool(p_replay)
+    }
+
+    pub fn get(&self, idx: usize) -> &Slot<L, E> {
+        &self.slots[idx]
+    }
+
+    pub fn get_mut(&mut self, idx: usize) -> &mut Slot<L, E> {
+        &mut self.slots[idx]
+    }
+
+    pub fn scores(&self) -> Vec<f64> {
+        self.slots.iter().map(|s| s.score).collect()
+    }
+
+    fn touches(&self) -> Vec<u64> {
+        self.slots.iter().map(|s| s.last_touch).collect()
+    }
+
+    /// Insert one level. Returns its slot index, or None if it was rejected
+    /// (buffer full and score below the current minimum).
+    ///
+    /// * duplicate (when `duplicate_check`): update score/extra in place.
+    /// * buffer not full: append.
+    /// * buffer full: evict the lowest-score slot if the new score beats it.
+    pub fn insert(&mut self, level: L, score: f64, fingerprint: u64, extra: E) -> Option<usize> {
+        self.tick += 1;
+        if self.config.duplicate_check {
+            if let Some(&idx) = self.by_fingerprint.get(&fingerprint) {
+                let slot = &mut self.slots[idx];
+                slot.score = score;
+                slot.extra = extra;
+                slot.last_touch = self.tick;
+                return Some(idx);
+            }
+        }
+        if self.slots.len() < self.config.capacity {
+            let idx = self.slots.len();
+            self.slots.push(Slot {
+                level, score, last_touch: self.tick, extra, fingerprint,
+            });
+            self.by_fingerprint.insert(fingerprint, idx);
+            return Some(idx);
+        }
+        // Evict the minimum-score slot (ties: lowest index).
+        let (min_idx, min_score) = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.score))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        if score <= min_score {
+            return None;
+        }
+        self.by_fingerprint.remove(&self.slots[min_idx].fingerprint);
+        self.by_fingerprint.insert(fingerprint, min_idx);
+        self.slots[min_idx] = Slot {
+            level, score, last_touch: self.tick, extra, fingerprint,
+        };
+        Some(min_idx)
+    }
+
+    /// Insert a batch; returns per-level slot indices (None = rejected).
+    pub fn insert_batch(
+        &mut self, levels: &[L], scores: &[f64], fingerprints: &[u64], extras: &[E],
+    ) -> Vec<Option<usize>> {
+        assert_eq!(levels.len(), scores.len());
+        assert_eq!(levels.len(), fingerprints.len());
+        assert_eq!(levels.len(), extras.len());
+        levels
+            .iter()
+            .zip(scores)
+            .zip(fingerprints)
+            .zip(extras)
+            .map(|(((l, &s), &f), e)| self.insert(l.clone(), s, f, e.clone()))
+            .collect()
+    }
+
+    /// Update scores/extras of existing slots (after replaying them).
+    pub fn update_batch(&mut self, indices: &[usize], scores: &[f64], extras: &[E]) {
+        assert_eq!(indices.len(), scores.len());
+        self.tick += 1;
+        for ((&i, &s), e) in indices.iter().zip(scores).zip(extras) {
+            let slot = &mut self.slots[i];
+            slot.score = s;
+            slot.extra = e.clone();
+            slot.last_touch = self.tick;
+        }
+    }
+
+    /// Sample `n` distinct slots from the staleness-mixed prioritized
+    /// replay distribution; marks them as touched (resets staleness).
+    pub fn sample_replay_indices(&mut self, n: usize, rng: &mut Pcg64) -> Vec<usize> {
+        assert!(!self.slots.is_empty(), "sampling from empty buffer");
+        let n = n.min(self.slots.len());
+        let mut weights = replay_weights(
+            &self.scores(),
+            &self.touches(),
+            self.tick,
+            self.config.prioritization,
+            self.config.temperature,
+            self.config.staleness_coef,
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let i = rng.sample_weighted(&weights);
+            out.push(i);
+            weights[i] = 0.0; // without replacement
+        }
+        self.tick += 1;
+        for &i in &out {
+            self.slots[i].last_touch = self.tick;
+        }
+        out
+    }
+
+    /// The current replay distribution (diagnostics / tests).
+    pub fn replay_distribution(&self) -> Vec<f64> {
+        replay_weights(
+            &self.scores(),
+            &self.touches(),
+            self.tick,
+            self.config.prioritization,
+            self.config.temperature,
+            self.config.staleness_coef,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::props;
+
+    type S = LevelSampler<u32, f32>;
+
+    fn sampler(capacity: usize) -> S {
+        LevelSampler::new(SamplerConfig { capacity, ..Default::default() })
+    }
+
+    #[test]
+    fn insert_until_capacity_then_evict_min() {
+        let mut s = sampler(3);
+        assert_eq!(s.insert(10, 0.5, 10, 0.0), Some(0));
+        assert_eq!(s.insert(11, 0.2, 11, 0.0), Some(1));
+        assert_eq!(s.insert(12, 0.8, 12, 0.0), Some(2));
+        // full; score below min rejected
+        assert_eq!(s.insert(13, 0.1, 13, 0.0), None);
+        assert_eq!(s.len(), 3);
+        // score above min evicts the 0.2 slot (index 1)
+        assert_eq!(s.insert(14, 0.9, 14, 0.0), Some(1));
+        assert_eq!(s.get(1).level, 14);
+    }
+
+    #[test]
+    fn dedup_updates_in_place() {
+        let mut s = sampler(4);
+        s.insert(7, 0.3, 777, 1.0);
+        let idx = s.insert(7, 0.6, 777, 2.0);
+        assert_eq!(idx, Some(0));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(0).score, 0.6);
+        assert_eq!(s.get(0).extra, 2.0);
+    }
+
+    #[test]
+    fn dedup_disabled_appends() {
+        let mut s: S = LevelSampler::new(SamplerConfig {
+            capacity: 4,
+            duplicate_check: false,
+            ..Default::default()
+        });
+        s.insert(7, 0.3, 777, 0.0);
+        s.insert(7, 0.6, 777, 0.0);
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn replay_gating() {
+        let mut s = sampler(4);
+        let mut rng = Pcg64::seed_from_u64(0);
+        assert!(!s.sample_replay_decision(1.0, &mut rng)); // empty
+        s.insert(1, 0.5, 1, 0.0);
+        assert!(!s.can_replay()); // 25% < 50%
+        s.insert(2, 0.5, 2, 0.0);
+        assert!(s.can_replay());
+        assert!(s.sample_replay_decision(1.0, &mut rng));
+        assert!(!s.sample_replay_decision(0.0, &mut rng));
+    }
+
+    #[test]
+    fn sampling_prefers_high_scores() {
+        let mut s = sampler(10);
+        for i in 0..10u32 {
+            s.insert(i, i as f64 / 10.0, i as u64, 0.0);
+        }
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut counts = [0usize; 10];
+        for _ in 0..2000 {
+            let idx = s.sample_replay_indices(1, &mut rng)[0];
+            counts[s.get(idx).level as usize] += 1;
+        }
+        assert!(counts[9] > counts[0], "{counts:?}");
+        assert!(counts[9] > counts[5], "{counts:?}");
+    }
+
+    #[test]
+    fn sampling_without_replacement() {
+        let mut s = sampler(8);
+        for i in 0..8u32 {
+            s.insert(i, 0.5, i as u64, 0.0);
+        }
+        let mut rng = Pcg64::seed_from_u64(2);
+        let idx = s.sample_replay_indices(8, &mut rng);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 8);
+    }
+
+    #[test]
+    fn staleness_resets_on_sample() {
+        let mut s = sampler(4);
+        s.insert(1, 0.9, 1, 0.0);
+        s.insert(2, 0.9, 2, 0.0);
+        let mut rng = Pcg64::seed_from_u64(3);
+        let idx = s.sample_replay_indices(1, &mut rng)[0];
+        let other = 1 - idx;
+        // the sampled slot is fresher than the other
+        assert!(s.get(idx).last_touch > s.get(other).last_touch);
+    }
+
+    #[test]
+    fn update_batch_bumps_scores_and_touch() {
+        let mut s = sampler(4);
+        s.insert(1, 0.1, 1, 0.0);
+        s.insert(2, 0.2, 2, 0.0);
+        let t0 = s.get(0).last_touch;
+        s.update_batch(&[0], &[0.7], &[3.5]);
+        assert_eq!(s.get(0).score, 0.7);
+        assert_eq!(s.get(0).extra, 3.5);
+        assert!(s.get(0).last_touch > t0);
+    }
+
+    #[test]
+    fn staleness_influences_sampling() {
+        let mut s: S = LevelSampler::new(SamplerConfig {
+            capacity: 2,
+            staleness_coef: 0.9,
+            ..Default::default()
+        });
+        s.insert(1, 0.99, 1, 0.0); // high score
+        s.insert(2, 0.01, 2, 0.0); // low score
+        let mut rng = Pcg64::seed_from_u64(4);
+        // repeatedly sample; high staleness coef must let the low-score
+        // level through regularly because it goes stale whenever unsampled
+        let mut low_hits = 0;
+        for _ in 0..200 {
+            let idx = s.sample_replay_indices(1, &mut rng)[0];
+            if s.get(idx).level == 2 {
+                low_hits += 1;
+            }
+        }
+        assert!(low_hits > 30, "staleness ignored: {low_hits}");
+    }
+
+    #[test]
+    fn prop_fingerprint_map_consistent() {
+        props(100, |g| {
+            let cap = g.usize_in(1, 16);
+            let n_ops = g.usize_in(1, 60);
+            let mut s: S = LevelSampler::new(SamplerConfig {
+                capacity: cap,
+                ..Default::default()
+            });
+            for _ in 0..n_ops {
+                let fp = g.usize_in(0, 24) as u64;
+                let score = g.f64_in(0.0, 1.0);
+                s.insert(fp as u32, score, fp, 0.0);
+            }
+            prop_assert!(s.len() <= cap, "len {} > cap {cap}", s.len());
+            // fingerprint map matches slots exactly
+            for i in 0..s.len() {
+                let fp = s.get(i).fingerprint;
+                prop_assert!(
+                    s.by_fingerprint.get(&fp) == Some(&i),
+                    "map inconsistent at slot {i}"
+                );
+            }
+            prop_assert!(
+                s.by_fingerprint.len() == s.len(),
+                "map size {} != slots {}", s.by_fingerprint.len(), s.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_distribution_normalized() {
+        props(50, |g| {
+            let n = g.usize_in(1, 30);
+            let mut s = sampler(64);
+            for i in 0..n {
+                s.insert(i as u32, g.f64_in(0.0, 1.0), i as u64, 0.0);
+            }
+            let w = s.replay_distribution();
+            let total: f64 = w.iter().sum();
+            prop_assert!((total - 1.0).abs() < 1e-9, "sum {total}");
+            prop_assert!(w.iter().all(|&x| x >= 0.0), "negative weight");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Score→probability transforms for the level sampler (Jiang et al. 2021b).
+//!
+//! The replay distribution mixes a score-prioritized term with a staleness
+//! term:  P = (1 − ρ)·P_score + ρ·P_stale.  P_score supports rank
+//! prioritization (the paper's default, Table 3: rank with temperature
+//! β = 0.3), proportional, and greedy; P_stale is proportional to the time
+//! since a level was last sampled.
+
+/// How scores become sampling weights.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Prioritization {
+    /// weight_i = (1 / rank_i)^(1/β); rank 1 = highest score.
+    Rank,
+    /// weight_i = score_i^(1/β) (scores must be non-negative).
+    Proportional,
+    /// All mass on the argmax score.
+    Greedy,
+}
+
+/// Normalized score-prioritized distribution over `scores`.
+pub fn score_weights(
+    scores: &[f64], prioritization: Prioritization, temperature: f64,
+) -> Vec<f64> {
+    assert!(temperature > 0.0);
+    let n = scores.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut w = vec![0.0; n];
+    match prioritization {
+        Prioritization::Rank => {
+            // argsort by score descending; ties broken by index (stable).
+            let mut order: Vec<usize> = (0..n).collect();
+            order.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            for (rank0, &i) in order.iter().enumerate() {
+                w[i] = (1.0 / (rank0 + 1) as f64).powf(1.0 / temperature);
+            }
+        }
+        Prioritization::Proportional => {
+            for (i, &s) in scores.iter().enumerate() {
+                debug_assert!(s >= 0.0, "proportional prioritization wants non-negative scores");
+                w[i] = s.max(0.0).powf(1.0 / temperature);
+            }
+        }
+        Prioritization::Greedy => {
+            let mut best = 0;
+            for i in 1..n {
+                if scores[i] > scores[best] {
+                    best = i;
+                }
+            }
+            w[best] = 1.0;
+        }
+    }
+    normalize(&mut w);
+    w
+}
+
+/// Normalized staleness distribution: proportional to `now − last_touch`;
+/// uniform when nothing is stale.
+pub fn staleness_weights(last_touch: &[u64], now: u64) -> Vec<f64> {
+    let n = last_touch.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut w: Vec<f64> = last_touch
+        .iter()
+        .map(|&t| now.saturating_sub(t) as f64)
+        .collect();
+    if w.iter().sum::<f64>() <= 0.0 {
+        w.iter_mut().for_each(|x| *x = 1.0);
+    }
+    normalize(&mut w);
+    w
+}
+
+/// Final replay distribution.
+pub fn replay_weights(
+    scores: &[f64], last_touch: &[u64], now: u64,
+    prioritization: Prioritization, temperature: f64, staleness_coef: f64,
+) -> Vec<f64> {
+    let ps = score_weights(scores, prioritization, temperature);
+    if staleness_coef <= 0.0 {
+        return ps;
+    }
+    let pt = staleness_weights(last_touch, now);
+    ps.iter()
+        .zip(&pt)
+        .map(|(&a, &b)| (1.0 - staleness_coef) * a + staleness_coef * b)
+        .collect()
+}
+
+fn normalize(w: &mut [f64]) {
+    let total: f64 = w.iter().sum();
+    if total > 0.0 {
+        w.iter_mut().for_each(|x| *x /= total);
+    } else if !w.is_empty() {
+        let u = 1.0 / w.len() as f64;
+        w.iter_mut().for_each(|x| *x = u);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-9
+    }
+
+    #[test]
+    fn rank_orders_weights() {
+        let w = score_weights(&[0.1, 0.9, 0.5], Prioritization::Rank, 0.3);
+        assert!(w[1] > w[2] && w[2] > w[0]);
+        assert!(close(w.iter().sum(), 1.0));
+    }
+
+    #[test]
+    fn rank_temperature_sharpens() {
+        let sharp = score_weights(&[0.1, 0.9, 0.5], Prioritization::Rank, 0.1);
+        let flat = score_weights(&[0.1, 0.9, 0.5], Prioritization::Rank, 10.0);
+        assert!(sharp[1] > flat[1]);
+        assert!(flat[0] > sharp[0]);
+    }
+
+    #[test]
+    fn rank_invariant_to_scale() {
+        let a = score_weights(&[1.0, 2.0, 3.0], Prioritization::Rank, 0.3);
+        let b = score_weights(&[10.0, 20.0, 30.0], Prioritization::Rank, 0.3);
+        for (x, y) in a.iter().zip(&b) {
+            assert!(close(*x, *y));
+        }
+    }
+
+    #[test]
+    fn proportional_weights() {
+        let w = score_weights(&[1.0, 3.0], Prioritization::Proportional, 1.0);
+        assert!(close(w[0], 0.25) && close(w[1], 0.75));
+    }
+
+    #[test]
+    fn greedy_all_mass_on_max() {
+        let w = score_weights(&[0.2, 0.9, 0.4], Prioritization::Greedy, 0.3);
+        assert_eq!(w, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn staleness_proportional() {
+        let w = staleness_weights(&[10, 0, 5], 10);
+        assert!(close(w[0], 0.0));
+        assert!(close(w[1], 10.0 / 15.0));
+        assert!(close(w[2], 5.0 / 15.0));
+    }
+
+    #[test]
+    fn staleness_uniform_when_fresh() {
+        let w = staleness_weights(&[5, 5], 5);
+        assert!(close(w[0], 0.5) && close(w[1], 0.5));
+    }
+
+    #[test]
+    fn replay_mixes() {
+        let scores = [0.9, 0.1];
+        let touch = [10, 0]; // second level much staler
+        let w_pure = replay_weights(&scores, &touch, 10, Prioritization::Rank, 0.3, 0.0);
+        let w_mixed = replay_weights(&scores, &touch, 10, Prioritization::Rank, 0.3, 0.5);
+        assert!(w_pure[0] > w_mixed[0], "staleness should pull mass to level 1");
+        assert!(close(w_mixed.iter().sum(), 1.0));
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert!(score_weights(&[], Prioritization::Rank, 0.3).is_empty());
+        assert!(staleness_weights(&[], 0).is_empty());
+    }
+}

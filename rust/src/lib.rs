@@ -1,0 +1,27 @@
+//! # JaxUED-rs
+//!
+//! A Rust + JAX + Pallas reproduction of **JaxUED** (Coward, Beukman,
+//! Foerster 2024): Unsupervised Environment Design algorithms — DR, PLR,
+//! robust PLR (PLR⊥), ACCEL, and PAIRED — as a Rust coordinator driving
+//! AOT-compiled XLA compute artifacts. Python/JAX runs only at build time
+//! (`make artifacts`); the training hot path is pure Rust + PJRT.
+//!
+//! Layering (DESIGN.md):
+//! * [`env`] — the `UnderspecifiedEnv` interface, maze + editor envs,
+//!   wrappers, generation/mutation, rendering, holdout suites.
+//! * [`level_sampler`] — the prioritized rolling level buffer.
+//! * [`runtime`] — PJRT client, artifact manifest, parameter store.
+//! * [`rollout`] — vectorized B-way rollout engine + trajectory storage.
+//! * [`ppo`] — the train-step driver (the update itself is an AOT artifact).
+//! * [`algo`] — DR / PLR / PLR⊥ / ACCEL / PAIRED drivers + training loop.
+//! * [`eval`], [`metrics`], [`config`], [`util`] — support systems.
+pub mod algo;
+pub mod config;
+pub mod env;
+pub mod eval;
+pub mod level_sampler;
+pub mod metrics;
+pub mod ppo;
+pub mod rollout;
+pub mod runtime;
+pub mod util;

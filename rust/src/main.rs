@@ -1,0 +1,177 @@
+//! `jaxued` — the launcher.
+//!
+//! Subcommands:
+//!   train       run a UED algorithm (DR | PLR | PLR⊥ | ACCEL | PAIRED)
+//!   eval        evaluate a checkpoint on the holdout suite
+//!   render      render the holdout suite / generated levels to PPM
+//!   meta-policy print the Figure-1 transition matrix + empirical rates
+//!   info        print manifest + artifact inventory
+//!
+//! Examples:
+//!   jaxued train --algo accel --seed 1 --env-steps 1000000
+//!   jaxued train --algo paired --variant small --env-steps 50000
+//!   jaxued eval --ckpt runs/dr_s0/student.ckpt
+//!   jaxued render --out figure2.ppm
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use jaxued::algo::meta_policy::{Cycle, MetaPolicy};
+use jaxued::algo::train;
+use jaxued::config::TrainConfig;
+use jaxued::env::gen::LevelGenerator;
+use jaxued::env::holdout;
+use jaxued::env::render::render_montage;
+use jaxued::eval::Evaluator;
+use jaxued::rollout::Policy;
+use jaxued::runtime::{ParamSet, Runtime};
+use jaxued::util::cli::Args;
+use jaxued::util::rng::Pcg64;
+
+const USAGE: &str = "usage: jaxued <train|eval|render|meta-policy|info> [flags]
+see README.md for per-command flags";
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    match cmd {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "render" => cmd_render(&args),
+        "meta-policy" => cmd_meta_policy(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let unknown = args.unknown_flags();
+    if !unknown.is_empty() {
+        anyhow::bail!("unknown flags: {unknown:?}");
+    }
+    println!(
+        "jaxued train: algo={} seed={} variant={} budget={} env steps ({} cycles)",
+        cfg.algo.name(), cfg.seed, cfg.variant.name,
+        cfg.env_steps_budget, cfg.num_cycles(),
+    );
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let outcome = train(&rt, &cfg, false)?;
+    println!(
+        "done: {} cycles, {} env steps in {:.1}s ({:.0} steps/s)",
+        outcome.cycles, outcome.env_steps, outcome.wallclock_secs,
+        outcome.env_steps as f64 / outcome.wallclock_secs,
+    );
+    println!(
+        "final eval: mean_solve={:.3} iqm_solve={:.3}",
+        outcome.final_eval.mean_solve_rate, outcome.final_eval.iqm_solve_rate,
+    );
+    println!(
+        "Table-1 extrapolation: {:.2} h for 245.76M steps",
+        outcome.table1_hours,
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = TrainConfig::from_args(args)?;
+    let ckpt = args.get_str("ckpt", "runs/dr_s0/student.ckpt");
+    let trials = args.get_usize("trials", 10);
+    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let params = ParamSet::load(Path::new(&ckpt), "student")?;
+    let apply = rt.load(&cfg.student_apply_artifact())?;
+    let policy = Policy {
+        apply,
+        params: &params.params,
+        num_actions: jaxued::env::maze::NUM_ACTIONS,
+    };
+    let evaluator = Evaluator::default_suite(cfg.variant.b, trials, 20, cfg.max_episode_steps);
+    let mut rng = Pcg64::new(cfg.seed, 0x6576); // "ev"
+    let report = evaluator.run(&policy, &mut rng)?;
+    println!("{:<22} {:>10} {:>12}", "level", "solve", "mean_steps");
+    for l in &report.levels {
+        println!("{:<22} {:>10.3} {:>12.1}", l.name, l.solve_rate, l.mean_steps);
+    }
+    println!(
+        "mean={:.3} iqm={:.3}",
+        report.mean_solve_rate, report.iqm_solve_rate,
+    );
+    Ok(())
+}
+
+fn cmd_render(args: &Args) -> Result<()> {
+    let out = args.get_str("out", "holdout.ppm");
+    let n_proc = args.get_usize("procedural", 12);
+    let max_walls = args.get_usize("max-walls", 60);
+    let seed = args.get_u64("seed", 0xE7A1);
+    let mut levels: Vec<_> = holdout::named_levels().into_iter().map(|n| n.level).collect();
+    if args.has("random") {
+        let gen = LevelGenerator::new(max_walls);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        levels = gen.generate_batch(n_proc.max(1), &mut rng);
+    } else {
+        levels.extend(holdout::procedural_suite(n_proc, max_walls, seed));
+    }
+    let img = render_montage(&levels, 6);
+    img.write_ppm(Path::new(&out))?;
+    println!("wrote {} levels to {out} ({}x{})", levels.len(), img.width, img.height);
+    Ok(())
+}
+
+fn cmd_meta_policy(args: &Args) -> Result<()> {
+    let p = args.get_f64("p", 0.5);
+    let q = args.get_f64("q", 1.0);
+    let n = args.get_usize("samples", 100_000);
+    let mp = MetaPolicy::new(p, q);
+    println!("Figure-1 meta-policy (p={p}, q={q})");
+    println!("{:<10} {:>8} {:>8} {:>8}", "stage", "DR", "Replay", "Mutate");
+    for (name, stage) in [("DR", Cycle::Dr), ("Replay", Cycle::Replay)] {
+        let row = mp.transition_row(stage);
+        println!("{:<10} {:>8.3} {:>8.3} {:>8.3}  (theory)", name, row[0], row[1], row[2]);
+    }
+    // empirical long-run frequencies of each cycle kind
+    let mut mp = MetaPolicy::new(p, q);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let mut counts = [0usize; 3];
+    for _ in 0..n {
+        counts[mp.next(true, &mut rng) as usize] += 1;
+    }
+    println!(
+        "empirical long-run: DR={:.3} Replay={:.3} Mutate={:.3} ({n} draws)",
+        counts[0] as f64 / n as f64,
+        counts[1] as f64 / n as f64,
+        counts[2] as f64 / n as f64,
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.get_str("artifacts", "artifacts");
+    let rt = Runtime::new(Path::new(&dir))?;
+    let m = &rt.manifest;
+    println!("platform: {}", rt.client.platform_name());
+    println!(
+        "grid {}x{}, view {}, actions {}, adversary actions {}",
+        m.constants.grid_w, m.constants.grid_h, m.constants.view,
+        m.constants.num_actions, m.constants.adv_num_actions,
+    );
+    println!("networks:");
+    for (name, net) in &m.networks {
+        println!(
+            "  {:<10} {} tensors, {} parameters",
+            name, net.num_params(), net.total_elements(),
+        );
+    }
+    println!("artifacts ({}):", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!(
+            "  {:<34} kind={:<10} {} in / {} out",
+            name, a.kind, a.inputs.len(), a.outputs.len(),
+        );
+    }
+    Ok(())
+}

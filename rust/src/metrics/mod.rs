@@ -1,0 +1,133 @@
+//! Metric logging and wallclock accounting.
+//!
+//! The paper logs to Weights & Biases; we substitute a CSV sink plus
+//! stdout (DESIGN.md substitutions). `Stopwatch` provides the Table-1
+//! wallclock accounting: cumulative seconds and env-steps/s, with
+//! extrapolation to the paper's full 245.76M-step budget.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+/// Append-only CSV metric sink. Columns are fixed at creation.
+pub struct CsvSink {
+    file: std::io::BufWriter<std::fs::File>,
+    columns: Vec<String>,
+}
+
+impl CsvSink {
+    pub fn create(path: &Path, columns: &[&str]) -> Result<CsvSink> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", columns.join(","))?;
+        Ok(CsvSink {
+            file,
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+        })
+    }
+
+    /// Write one row; values must match the column count.
+    pub fn write_row(&mut self, values: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns.len(),
+            "row has {} values, sink has {} columns", values.len(), self.columns.len()
+        );
+        let row: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", row.join(","))?;
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Wallclock + throughput accounting for Table 1.
+pub struct Stopwatch {
+    start: Instant,
+    pub env_steps: u64,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Stopwatch {
+        Stopwatch { start: Instant::now(), env_steps: 0 }
+    }
+
+    pub fn add_steps(&mut self, n: u64) {
+        self.env_steps += n;
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Environment interactions per second so far.
+    pub fn steps_per_sec(&self) -> f64 {
+        let e = self.elapsed_secs();
+        if e > 0.0 {
+            self.env_steps as f64 / e
+        } else {
+            0.0
+        }
+    }
+
+    /// Hours this run would take to reach `budget` env steps at the
+    /// observed rate (the Table-1 number).
+    pub fn extrapolate_hours(&self, budget: u64) -> f64 {
+        let rate = self.steps_per_sec();
+        if rate > 0.0 {
+            budget as f64 / rate / 3600.0
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Pretty-print a metric row to stdout.
+pub fn log_stdout(cycle: usize, env_steps: u64, pairs: &[(&str, f64)]) {
+    let body: Vec<String> = pairs
+        .iter()
+        .map(|(k, v)| format!("{k}={v:.4}"))
+        .collect();
+    println!("[cycle {cycle:>6} | steps {env_steps:>12}] {}", body.join(" "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_rows() {
+        let dir = std::env::temp_dir().join("jaxued_metrics_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.csv");
+        {
+            let mut s = CsvSink::create(&p, &["a", "b"]).unwrap();
+            s.write_row(&[1.0, 2.5]).unwrap();
+            s.write_row(&[3.0, -4.0]).unwrap();
+            assert!(s.write_row(&[1.0]).is_err());
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "1,2.5");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn stopwatch_rates() {
+        let mut w = Stopwatch::new();
+        w.add_steps(1000);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(w.steps_per_sec() > 0.0);
+        assert!(w.extrapolate_hours(1_000_000_000).is_finite());
+        assert_eq!(w.env_steps, 1000);
+    }
+}

@@ -1,0 +1,132 @@
+//! PPO driver: one `update()` = one PJRT call into the `*_train_step`
+//! artifact (GAE → 5 epochs → Adam, all fused inside the module — see
+//! DESIGN.md decision 1). This module owns parameter state and the
+//! learning-rate schedule (Table 3: linear anneal).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::rollout::Trajectory;
+use crate::runtime::executor::Executable;
+use crate::runtime::{ParamSet, Runtime};
+
+/// Metrics returned by a train step (names from the manifest ABI).
+#[derive(Clone, Debug)]
+pub struct UpdateMetrics {
+    pub names: Vec<String>,
+    pub values: Vec<f32>,
+}
+
+impl UpdateMetrics {
+    pub fn get(&self, name: &str) -> Option<f32> {
+        self.names.iter().position(|n| n == name).map(|i| self.values[i])
+    }
+
+    pub fn total_loss(&self) -> f32 {
+        self.get("total_loss").unwrap_or(f32::NAN)
+    }
+}
+
+/// Linear learning-rate schedule (Table 3: anneal to 0 over the budget).
+#[derive(Clone, Copy, Debug)]
+pub struct LrSchedule {
+    pub lr0: f64,
+    pub anneal: bool,
+    pub total_updates: usize,
+}
+
+impl LrSchedule {
+    pub fn at(&self, update: usize) -> f32 {
+        if !self.anneal || self.total_updates == 0 {
+            return self.lr0 as f32;
+        }
+        let frac = 1.0 - (update.min(self.total_updates) as f64 / self.total_updates as f64);
+        (self.lr0 * frac) as f32
+    }
+}
+
+/// PPO trainer for one network (student, antagonist, or adversary).
+pub struct PpoTrainer {
+    pub params: ParamSet,
+    train_exe: Rc<Executable>,
+    metric_names: Vec<String>,
+    /// Structured `[T, B, …]` observation shapes from the artifact ABI.
+    obs_dims: Vec<Vec<usize>>,
+    pub schedule: LrSchedule,
+    pub updates_done: usize,
+}
+
+impl PpoTrainer {
+    /// Build a trainer: initializes parameters via `<network>_init` and
+    /// compiles the given train-step artifact.
+    pub fn new(
+        rt: &Runtime, network: &str, train_artifact: &str, seed: i32, schedule: LrSchedule,
+    ) -> Result<PpoTrainer> {
+        let params = rt.init_params(network, seed)?;
+        let train_exe = rt.load(train_artifact)?;
+        let net = rt.manifest.network(network)?;
+        let p = net.num_params();
+        let n_obs = net.n_obs;
+        let obs_dims: Vec<Vec<usize>> = train_exe.def.inputs[3 * p + 2..3 * p + 2 + n_obs]
+            .iter()
+            .map(|spec| spec.shape.clone())
+            .collect();
+        Ok(PpoTrainer {
+            params,
+            train_exe,
+            metric_names: rt.manifest.metric_names.clone(),
+            obs_dims,
+            schedule,
+            updates_done: 0,
+        })
+    }
+
+    /// Restore parameters from a checkpoint (schedule position resumes from
+    /// the stored Adam count / epochs).
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        self.params = ParamSet::load(path, &self.params.network)?;
+        Ok(())
+    }
+
+    /// The rollout shape this trainer's artifact was lowered for.
+    pub fn rollout_shape(&self) -> (usize, usize) {
+        (
+            self.train_exe.def.t.expect("train artifact has T"),
+            self.train_exe.def.b.expect("train artifact has B"),
+        )
+    }
+
+    /// One PPO update-cycle on a full trajectory.
+    pub fn update(&mut self, traj: &Trajectory) -> Result<UpdateMetrics> {
+        let lr = self.schedule.at(self.updates_done);
+        let mut args = self.params.train_args();
+        args.push(xla::Literal::scalar(lr));
+        args.extend(traj.train_args(&self.obs_dims)?);
+        let outputs = self.train_exe.call(&args)?;
+        let rest = self.params.absorb_train_outputs(outputs)?;
+        self.updates_done += 1;
+        let values = rest[0].to_vec::<f32>()?;
+        Ok(UpdateMetrics { names: self.metric_names.clone(), values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_linear() {
+        let s = LrSchedule { lr0: 1e-4, anneal: true, total_updates: 100 };
+        assert!((s.at(0) - 1e-4).abs() < 1e-12);
+        assert!((s.at(50) - 0.5e-4).abs() < 1e-9);
+        assert_eq!(s.at(100), 0.0);
+        assert_eq!(s.at(999), 0.0);
+    }
+
+    #[test]
+    fn lr_schedule_constant() {
+        let s = LrSchedule { lr0: 3e-4, anneal: false, total_updates: 100 };
+        assert_eq!(s.at(0), s.at(99));
+    }
+}

@@ -1,0 +1,112 @@
+//! Host-side categorical action sampling from policy logits.
+//!
+//! The apply artifact returns `logits [B, A]`; sampling and log-prob
+//! evaluation happen on the host (B·A is tiny — 32×3 for the student —
+//! so a device round-trip per step would cost far more than the flops).
+//! Numerically stable log-softmax; Gumbel-max sampling keeps a single
+//! uniform draw per action.
+
+use crate::util::rng::Pcg64;
+
+/// Sample an action and return `(action, log_prob)` from one logits row.
+pub fn sample_action(logits: &[f32], rng: &mut Pcg64) -> (usize, f32) {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_val = f32::NEG_INFINITY;
+    for (i, &l) in logits.iter().enumerate() {
+        // Gumbel(0,1) = -ln(-ln(U)); clamp away 0.
+        let u = rng.next_f32().max(1e-12);
+        let g = -(-(u.ln())).ln();
+        let v = l + g;
+        if v > best_val {
+            best_val = v;
+            best = i;
+        }
+    }
+    (best, log_prob(logits, best))
+}
+
+/// Greedy argmax action (evaluation-mode option).
+pub fn argmax_action(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for i in 1..logits.len() {
+        if logits[i] > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Stable log-softmax probability of `action`.
+pub fn log_prob(logits: &[f32], action: usize) -> f32 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+    logits[action] - lse
+}
+
+/// Policy entropy from one logits row (diagnostics).
+pub fn entropy(logits: &[f32]) -> f32 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exp: Vec<f32> = logits.iter().map(|&l| (l - m).exp()).collect();
+    let z: f32 = exp.iter().sum();
+    let mut h = 0.0;
+    for e in exp {
+        let p = e / z;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logprob_matches_softmax() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let z: f32 = logits.iter().map(|l| l.exp()).sum();
+        for (a, &l) in logits.iter().enumerate() {
+            let expect = (l.exp() / z).ln();
+            assert!((log_prob(&logits, a) - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn logprob_stable_large_logits() {
+        let logits = [1000.0f32, 999.0, 998.0];
+        let p = log_prob(&logits, 0);
+        assert!(p.is_finite() && p < 0.0);
+    }
+
+    #[test]
+    fn sampling_follows_distribution() {
+        let logits = [0.0f32, (3.0f32).ln()]; // p = [0.25, 0.75]
+        let mut rng = Pcg64::seed_from_u64(0);
+        let n = 40_000;
+        let mut count1 = 0;
+        for _ in 0..n {
+            let (a, lp) = sample_action(&logits, &mut rng);
+            if a == 1 {
+                count1 += 1;
+                assert!((lp - 0.75f32.ln()).abs() < 1e-5);
+            }
+        }
+        let frac = count1 as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax_action(&[0.1, 0.9, 0.5]), 1);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        let uniform = [0.0f32; 4];
+        assert!((entropy(&uniform) - (4.0f32).ln()).abs() < 1e-5);
+        let peaked = [100.0f32, 0.0, 0.0, 0.0];
+        assert!(entropy(&peaked) < 1e-3);
+    }
+}

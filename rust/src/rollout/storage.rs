@@ -1,0 +1,152 @@
+//! Trajectory storage: the `[T, B, …]` buffers the train-step ABI wants.
+//!
+//! One `Trajectory` is allocated per rollout shape and reused across
+//! update-cycles (the hot loop does not allocate). Observation components
+//! are stored as separate tensors matching the artifact's positional
+//! observation inputs.
+
+use anyhow::Result;
+
+use crate::util::tensor::{TensorF32, TensorI32};
+
+/// Fixed-shape rollout storage.
+pub struct Trajectory {
+    pub t: usize,
+    pub b: usize,
+    /// One `[T, B, comp]` tensor per observation component.
+    pub obs: Vec<TensorF32>,
+    pub actions: TensorI32,
+    pub logp: TensorF32,
+    pub values: TensorF32,
+    pub rewards: TensorF32,
+    pub dones: TensorF32,
+    pub last_value: TensorF32,
+}
+
+impl Trajectory {
+    pub fn new(t: usize, b: usize, obs_components: &[usize]) -> Trajectory {
+        Trajectory {
+            t,
+            b,
+            obs: obs_components
+                .iter()
+                .map(|&c| TensorF32::zeros(&[t, b, c]))
+                .collect(),
+            actions: TensorI32::zeros(&[t, b]),
+            logp: TensorF32::zeros(&[t, b]),
+            values: TensorF32::zeros(&[t, b]),
+            rewards: TensorF32::zeros(&[t, b]),
+            dones: TensorF32::zeros(&[t, b]),
+            last_value: TensorF32::zeros(&[b]),
+        }
+    }
+
+    /// Trajectory-tensor argument tail for the train-step artifact:
+    /// obs…, actions, old_logp, old_values, rewards, dones, last_value.
+    /// `obs_dims` gives the artifact's structured observation shapes
+    /// (e.g. `[T, B, 5, 5, 3]`) for the flat `[T, B, comp]` buffers.
+    pub fn train_args(&self, obs_dims: &[Vec<usize>]) -> Result<Vec<xla::Literal>> {
+        assert_eq!(obs_dims.len(), self.obs.len());
+        let mut out = Vec::with_capacity(self.obs.len() + 6);
+        for (o, dims) in self.obs.iter().zip(obs_dims) {
+            out.push(o.to_literal_as(dims)?);
+        }
+        out.push(self.actions.to_literal()?);
+        out.push(self.logp.to_literal()?);
+        out.push(self.values.to_literal()?);
+        out.push(self.rewards.to_literal()?);
+        out.push(self.dones.to_literal()?);
+        out.push(self.last_value.to_literal()?);
+        Ok(out)
+    }
+
+    /// Argument list for the score artifact:
+    /// values, rewards, dones, last_value (+ caller appends prev_max_return).
+    pub fn score_args(&self) -> Result<Vec<xla::Literal>> {
+        Ok(vec![
+            self.values.to_literal()?,
+            self.rewards.to_literal()?,
+            self.dones.to_literal()?,
+            self.last_value.to_literal()?,
+        ])
+    }
+
+    /// Per-env (column) episode statistics from the stored rewards/dones.
+    /// In the maze, an episode is "solved" iff its terminal reward is
+    /// positive. Returns, per column: (episodes completed, episodes solved,
+    /// summed reward).
+    pub fn episode_stats(&self) -> Vec<EpisodeStats> {
+        let mut stats = vec![EpisodeStats::default(); self.b];
+        for t in 0..self.t {
+            for b in 0..self.b {
+                let i = t * self.b + b;
+                let r = self.rewards.data()[i];
+                stats[b].reward_sum += r as f64;
+                if self.dones.data()[i] > 0.5 {
+                    stats[b].episodes += 1;
+                    if r > 0.0 {
+                        stats[b].solved += 1;
+                    }
+                    stats[b].max_end_reward = stats[b].max_end_reward.max(r);
+                    stats[b].mean_end_reward += r as f64;
+                }
+            }
+        }
+        for s in stats.iter_mut() {
+            if s.episodes > 0 {
+                s.mean_end_reward /= s.episodes as f64;
+            }
+        }
+        stats
+    }
+}
+
+/// Per-column episode summary (PAIRED regret and logging use this).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EpisodeStats {
+    pub episodes: u32,
+    pub solved: u32,
+    pub reward_sum: f64,
+    /// Highest terminal reward across completed episodes (antagonist max).
+    pub max_end_reward: f32,
+    /// Mean terminal reward across completed episodes (protagonist mean).
+    pub mean_end_reward: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let tr = Trajectory::new(4, 3, &[75, 4]);
+        assert_eq!(tr.obs[0].shape(), &[4, 3, 75]);
+        assert_eq!(tr.obs[1].shape(), &[4, 3, 4]);
+        assert_eq!(tr.actions.shape(), &[4, 3]);
+        assert_eq!(tr.last_value.shape(), &[3]);
+    }
+
+    #[test]
+    fn episode_stats_counts() {
+        let mut tr = Trajectory::new(4, 2, &[1]);
+        // col 0: solve at t=1 (r=0.9), truncate at t=3 (r=0)
+        tr.rewards.set(&[1, 0], 0.9);
+        tr.dones.set(&[1, 0], 1.0);
+        tr.dones.set(&[3, 0], 1.0);
+        // col 1: nothing finishes
+        let s = tr.episode_stats();
+        assert_eq!(s[0].episodes, 2);
+        assert_eq!(s[0].solved, 1);
+        assert!((s[0].max_end_reward - 0.9).abs() < 1e-6);
+        assert!((s[0].mean_end_reward - 0.45).abs() < 1e-6);
+        assert_eq!(s[1].episodes, 0);
+    }
+
+    #[test]
+    fn train_args_count() {
+        let tr = Trajectory::new(2, 2, &[75, 4]);
+        let dims = vec![vec![2, 2, 5, 5, 3], vec![2, 2, 4]];
+        assert_eq!(tr.train_args(&dims).unwrap().len(), 2 + 6);
+        assert_eq!(tr.score_args().unwrap().len(), 4);
+    }
+}

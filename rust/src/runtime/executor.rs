@@ -1,0 +1,72 @@
+//! Compiled-artifact wrapper: shape-checked positional calls into PJRT.
+//!
+//! Wraps `xla::PjRtLoadedExecutable` with the manifest signature so every
+//! call validates argument count (and, in debug builds, shapes) before
+//! hitting the C API, and unpacks the tuple result into a flat literal
+//! list. All compute artifacts return tuples (`return_tuple=True` at
+//! lowering), so `call` always untuples.
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::ArtifactDef;
+
+/// A compiled, callable artifact.
+pub struct Executable {
+    pub def: ArtifactDef,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    pub fn compile(
+        client: &xla::PjRtClient, def: &ArtifactDef, dir: &std::path::Path,
+    ) -> Result<Executable> {
+        let path = dir.join(&def.file);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {}", def.name))?;
+        Ok(Executable { def: def.clone(), exe })
+    }
+
+    /// Execute with positional literal arguments; returns the untupled
+    /// output literals (order per `def.outputs`).
+    pub fn call(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.def.inputs.len() {
+            bail!(
+                "artifact {} wants {} inputs, got {}",
+                self.def.name,
+                self.def.inputs.len(),
+                args.len()
+            );
+        }
+        #[cfg(debug_assertions)]
+        for (i, (a, spec)) in args.iter().zip(&self.def.inputs).enumerate() {
+            let n = a.element_count();
+            if n != spec.elements() {
+                bail!(
+                    "artifact {} input {i}: {} elements, expected {:?}",
+                    self.def.name, n, spec.shape
+                );
+            }
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.def.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.def.name))?;
+        let parts = literal.to_tuple()?;
+        if parts.len() != self.def.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                self.def.name,
+                parts.len(),
+                self.def.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+}

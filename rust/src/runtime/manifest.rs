@@ -1,0 +1,285 @@
+//! The artifact manifest: the ABI contract between `python/compile/aot.py`
+//! and the Rust runtime.
+//!
+//! `artifacts/manifest.json` records, for every lowered HLO module, its
+//! positional input/output signature, plus the parameter ordering of each
+//! network and the environment geometry constants baked into the python
+//! model. The runtime cross-checks those constants against the Rust env at
+//! startup so an incompatible artifact set fails loudly, not numerically.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("shape not an array")?
+            .iter()
+            .map(|x| x.as_usize().context("bad dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.req("dtype")?.as_str().context("bad dtype")?.to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactDef {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub network: Option<String>,
+    pub t: Option<usize>,
+    pub b: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// A network's parameter layout.
+#[derive(Clone, Debug)]
+pub struct NetworkDef {
+    pub param_order: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub n_obs: usize,
+}
+
+impl NetworkDef {
+    pub fn num_params(&self) -> usize {
+        self.param_order.len()
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Environment/model constants baked at AOT time.
+#[derive(Clone, Debug)]
+pub struct Constants {
+    pub grid_w: usize,
+    pub grid_h: usize,
+    pub view: usize,
+    pub obs_channels: usize,
+    pub num_actions: usize,
+    pub num_directions: usize,
+    pub adv_num_actions: usize,
+    pub adv_noise_dim: usize,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub constants: Constants,
+    pub metric_names: Vec<String>,
+    pub score_output_names: Vec<String>,
+    pub networks: BTreeMap<String, NetworkDef>,
+    pub artifacts: BTreeMap<String, ArtifactDef>,
+}
+
+fn str_list(j: &Json) -> Result<Vec<String>> {
+    Ok(j.as_arr()
+        .context("expected array")?
+        .iter()
+        .filter_map(|x| x.as_str().map(String::from))
+        .collect())
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let c = j.req("constants")?;
+        let constant = |k: &str| -> Result<usize> {
+            c.req(k)?.as_usize().with_context(|| format!("constant {k}"))
+        };
+        let constants = Constants {
+            grid_w: constant("grid_w")?,
+            grid_h: constant("grid_h")?,
+            view: constant("view")?,
+            obs_channels: constant("obs_channels")?,
+            num_actions: constant("num_actions")?,
+            num_directions: constant("num_directions")?,
+            adv_num_actions: constant("adv_num_actions")?,
+            adv_noise_dim: constant("adv_noise_dim")?,
+        };
+
+        let mut networks = BTreeMap::new();
+        for (name, nd) in j.req("networks")?.as_obj().context("networks")? {
+            let param_order = str_list(nd.req("param_order")?)?;
+            let param_shapes = nd
+                .req("params")?
+                .as_arr()
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    p.req("shape")?
+                        .as_arr()
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().context("dim"))
+                        .collect::<Result<Vec<_>>>()
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let n_obs = nd.req("n_obs")?.as_usize().context("n_obs")?;
+            networks.insert(
+                name.clone(),
+                NetworkDef { param_order, param_shapes, n_obs },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.req("artifacts")?.as_arr().context("artifacts")? {
+            let name = a.req("name")?.as_str().context("name")?.to_string();
+            let def = ArtifactDef {
+                name: name.clone(),
+                file: a.req("file")?.as_str().context("file")?.to_string(),
+                kind: a.req("kind")?.as_str().context("kind")?.to_string(),
+                network: a.get("network").and_then(|x| x.as_str()).map(String::from),
+                t: a.get("T").and_then(|x| x.as_usize()),
+                b: a.get("B").and_then(|x| x.as_usize()),
+                inputs: a
+                    .req("inputs")?
+                    .as_arr()
+                    .context("inputs")?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .req("outputs")?
+                    .as_arr()
+                    .context("outputs")?
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            artifacts.insert(name, def);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            constants,
+            metric_names: str_list(j.req("metric_names")?)?,
+            score_output_names: str_list(j.req("score_output_names")?)?,
+            networks,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactDef> {
+        self.artifacts
+            .get(name)
+            .with_context(|| {
+                format!(
+                    "artifact {name:?} not in manifest (have: {:?})",
+                    self.artifacts.keys().collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn network(&self, name: &str) -> Result<&NetworkDef> {
+        self.networks
+            .get(name)
+            .with_context(|| format!("network {name:?} not in manifest"))
+    }
+
+    /// Cross-check baked constants against the Rust env geometry. Called at
+    /// runtime startup; a mismatch means artifacts were built from a
+    /// different model than this binary expects.
+    pub fn validate_against_env(&self) -> Result<()> {
+        use crate::env::editor::NOISE_DIM;
+        use crate::env::level::{GRID_CELLS, GRID_H, GRID_W};
+        use crate::env::maze::{NUM_ACTIONS, OBS_CHANNELS, VIEW};
+        let c = &self.constants;
+        if c.grid_w != GRID_W || c.grid_h != GRID_H {
+            bail!("grid {}x{} != env {GRID_W}x{GRID_H}", c.grid_w, c.grid_h);
+        }
+        if c.view != VIEW || c.obs_channels != OBS_CHANNELS {
+            bail!("view/channels {}x{} != env {VIEW}x{OBS_CHANNELS}", c.view, c.obs_channels);
+        }
+        if c.num_actions != NUM_ACTIONS {
+            bail!("num_actions {} != env {NUM_ACTIONS}", c.num_actions);
+        }
+        if c.adv_num_actions != GRID_CELLS {
+            bail!("adv_num_actions {} != {GRID_CELLS}", c.adv_num_actions);
+        }
+        if c.adv_noise_dim != NOISE_DIM {
+            bail!("adv_noise_dim {} != {NOISE_DIM}", c.adv_noise_dim);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert!(m.artifacts.len() >= 7, "{:?}", m.artifacts.keys());
+        m.validate_against_env().unwrap();
+        assert_eq!(m.metric_names.len(), 8);
+        let student = m.network("student").unwrap();
+        assert_eq!(student.num_params(), 8);
+        assert_eq!(student.n_obs, 2);
+    }
+
+    #[test]
+    fn init_artifact_signature() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.artifact("student_init").unwrap();
+        assert_eq!(a.kind, "init");
+        assert_eq!(a.inputs.len(), 1);
+        // params + m + v + count
+        assert_eq!(a.outputs.len(), 3 * 8 + 1);
+    }
+
+    #[test]
+    fn train_step_shapes_consistent() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        for a in m.artifacts.values().filter(|a| a.kind == "train_step") {
+            let p = m.network(a.network.as_ref().unwrap()).unwrap().num_params();
+            let n_obs = m.network(a.network.as_ref().unwrap()).unwrap().n_obs;
+            // params,m,v + count,lr + obs… + act,logp,val,rew,done + last_val
+            assert_eq!(a.inputs.len(), 3 * p + 2 + n_obs + 5 + 1, "{}", a.name);
+            assert_eq!(a.outputs.len(), 3 * p + 2, "{}", a.name);
+            let (t, b) = (a.t.unwrap(), a.b.unwrap());
+            // actions tensor is (T, B) i32
+            let act = &a.inputs[3 * p + 2 + n_obs];
+            assert_eq!(act.shape, vec![t, b]);
+            assert_eq!(act.dtype, "int32");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,65 @@
+//! The PJRT runtime: loads AOT artifacts (HLO text → compile → execute).
+//!
+//! Pattern per /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compiled executables are cached per artifact name; the training hot
+//! path never recompiles.
+
+pub mod executor;
+pub mod manifest;
+pub mod params;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use executor::Executable;
+pub use manifest::Manifest;
+pub use params::ParamSet;
+
+/// The runtime: PJRT client + manifest + executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl Runtime {
+    /// Start a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        manifest
+            .validate_against_env()
+            .context("artifact/env geometry mismatch — rebuild artifacts")?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: $JAXUED_ARTIFACTS or ./artifacts.
+    pub fn from_env() -> Result<Runtime> {
+        let dir = std::env::var("JAXUED_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::new(Path::new(&dir))
+    }
+
+    /// Fetch (compiling + caching on first use) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let def = self.manifest.artifact(name)?;
+        let exe = Rc::new(Executable::compile(&self.client, def, &self.manifest.dir)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Initialize a fresh `ParamSet` for `network` with the given seed.
+    pub fn init_params(&self, network: &str, seed: i32) -> Result<ParamSet> {
+        let init = self.load(&format!("{network}_init"))?;
+        let outputs = init.call(&[xla::Literal::scalar(seed)])?;
+        let net = self.manifest.network(network)?;
+        ParamSet::from_init_outputs(network, net, outputs)
+    }
+}

@@ -1,0 +1,168 @@
+//! Parameter + optimizer-state management and checkpoints.
+//!
+//! A `ParamSet` owns the flat literal lists the train-step ABI threads
+//! through every update: `params…, m…, v…, count`. It is produced by the
+//! `*_init` artifact, consumed/updated by `*_train_step`, and its `params`
+//! prefix feeds `*_apply`. Checkpointing uses a self-describing little-
+//! endian binary format (magic, network name, per-tensor shape + f32 data).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::NetworkDef;
+
+const CKPT_MAGIC: &[u8; 8] = b"JAXUED01";
+
+/// Adam-optimized parameter state for one network.
+pub struct ParamSet {
+    /// Which network this belongs to (checkpoint sanity checks).
+    pub network: String,
+    /// P parameter tensors, manifest order.
+    pub params: Vec<xla::Literal>,
+    /// Adam first/second moments, same order.
+    pub m: Vec<xla::Literal>,
+    pub v: Vec<xla::Literal>,
+    /// Adam step count (scalar f32).
+    pub count: xla::Literal,
+}
+
+impl ParamSet {
+    /// Build from the `*_init` artifact's output list.
+    pub fn from_init_outputs(
+        network: &str, net: &NetworkDef, mut outputs: Vec<xla::Literal>,
+    ) -> Result<ParamSet> {
+        let p = net.num_params();
+        if outputs.len() != 3 * p + 1 {
+            bail!("init returned {} tensors, expected {}", outputs.len(), 3 * p + 1);
+        }
+        let count = outputs.pop().unwrap();
+        let v = outputs.split_off(2 * p);
+        let m = outputs.split_off(p);
+        Ok(ParamSet { network: network.to_string(), params: outputs, m, v, count })
+    }
+
+    /// Flat argument prefix for `*_train_step`: params…, m…, v…, count.
+    pub fn train_args(&self) -> Vec<xla::Literal> {
+        let mut out = Vec::with_capacity(3 * self.params.len() + 1);
+        out.extend(self.params.iter().cloned());
+        out.extend(self.m.iter().cloned());
+        out.extend(self.v.iter().cloned());
+        out.push(self.count.clone());
+        out
+    }
+
+    /// Absorb the `params'…, m'…, v'…, count'` prefix of a train-step
+    /// result; returns the remaining outputs (the metrics tail).
+    pub fn absorb_train_outputs(&mut self, mut outputs: Vec<xla::Literal>) -> Result<Vec<xla::Literal>> {
+        let p = self.params.len();
+        if outputs.len() < 3 * p + 1 {
+            bail!("train step returned {} tensors, need >= {}", outputs.len(), 3 * p + 1);
+        }
+        let rest = outputs.split_off(3 * p + 1);
+        self.count = outputs.pop().unwrap();
+        self.v = outputs.split_off(2 * p);
+        self.m = outputs.split_off(p);
+        self.params = outputs;
+        Ok(rest)
+    }
+
+    /// Adam step count as an integer (diagnostics).
+    pub fn step_count(&self) -> Result<u64> {
+        Ok(self.count.to_vec::<f32>()?[0] as u64)
+    }
+
+    /// Serialize params + optimizer state.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(CKPT_MAGIC)?;
+        let name = self.network.as_bytes();
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name)?;
+        let groups: [&[xla::Literal]; 3] = [&self.params, &self.m, &self.v];
+        f.write_all(&(self.params.len() as u32).to_le_bytes())?;
+        for group in groups {
+            for lit in group {
+                write_tensor(&mut f, lit)?;
+            }
+        }
+        write_tensor(&mut f, &self.count)?;
+        Ok(())
+    }
+
+    /// Load a checkpoint previously written by `save`.
+    pub fn load(path: &Path, expect_network: &str) -> Result<ParamSet> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != CKPT_MAGIC {
+            bail!("{path:?} is not a jaxued checkpoint");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let mut name = vec![0u8; u32::from_le_bytes(len4) as usize];
+        f.read_exact(&mut name)?;
+        let network = String::from_utf8(name)?;
+        if network != expect_network {
+            bail!("checkpoint is for network {network:?}, expected {expect_network:?}");
+        }
+        f.read_exact(&mut len4)?;
+        let p = u32::from_le_bytes(len4) as usize;
+        let read_group = |f: &mut dyn Read| -> Result<Vec<xla::Literal>> {
+            (0..p).map(|_| read_tensor(f)).collect()
+        };
+        let params = read_group(&mut f)?;
+        let m = read_group(&mut f)?;
+        let v = read_group(&mut f)?;
+        let count = read_tensor(&mut f)?;
+        Ok(ParamSet { network, params, m, v, count })
+    }
+
+    /// Total parameter count (excluding optimizer state).
+    pub fn num_parameters(&self) -> usize {
+        self.params.iter().map(|l| l.element_count()).sum()
+    }
+}
+
+fn write_tensor(f: &mut dyn Write, lit: &xla::Literal) -> Result<()> {
+    let shape = lit.array_shape()?;
+    let dims = shape.dims();
+    f.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for &d in dims {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    let data = lit.to_vec::<f32>()?;
+    for x in data {
+        f.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_tensor(f: &mut dyn Read) -> Result<xla::Literal> {
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let rank = u32::from_le_bytes(b4) as usize;
+    let mut dims = Vec::with_capacity(rank);
+    let mut b8 = [0u8; 8];
+    for _ in 0..rank {
+        f.read_exact(&mut b8)?;
+        dims.push(u64::from_le_bytes(b8) as i64);
+    }
+    let n: i64 = dims.iter().product::<i64>().max(1);
+    let mut data = vec![0f32; n as usize];
+    let mut buf = [0u8; 4];
+    for x in data.iter_mut() {
+        f.read_exact(&mut buf)?;
+        *x = f32::from_le_bytes(buf);
+    }
+    let lit = xla::Literal::vec1(&data);
+    if rank == 0 {
+        // scalar: vec1 gives shape [1]; reshape to []
+        Ok(lit.reshape(&[])?)
+    } else {
+        Ok(lit.reshape(&dims)?)
+    }
+}

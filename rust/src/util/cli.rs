@@ -1,0 +1,149 @@
+//! Tiny command-line flag parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments; produces self-describing usage errors. Used by the `jaxued`
+//! launcher and the example/bench binaries.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags the program looked up — for unknown-flag detection.
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit list (testable); `std::env::args` for real use.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.flags.insert(rest.to_string(), v);
+                } else {
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} wants a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key)
+            .map(|v| matches!(v, "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Flags that were provided but never queried (probable typos).
+    pub fn unknown_flags(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("--seed 7 --algo=plr train");
+        assert_eq!(a.get_usize("seed", 0), 7);
+        assert_eq!(a.get_str("algo", ""), "plr");
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse("--verbose --n 3");
+        assert!(a.get_bool("verbose", false));
+        assert_eq!(a.get_usize("n", 0), 3);
+        assert!(!a.get_bool("quiet", false));
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("--x 1 --flag");
+        assert!(a.get_bool("flag", false));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_f64("lr", 1e-4), 1e-4);
+        assert_eq!(a.get_str("algo", "dr"), "dr");
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("--good 1 --oops 2");
+        let _ = a.get_usize("good", 0);
+        assert_eq!(a.unknown_flags(), vec!["oops".to_string()]);
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("--x=-3.5");
+        assert_eq!(a.get_f64("x", 0.0), -3.5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained substrate utilities (the offline vendor set has no rand /
+//! serde / clap / proptest, so the library carries its own).
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod tensor;

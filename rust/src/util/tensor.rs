@@ -1,0 +1,198 @@
+//! Row-major host tensors.
+//!
+//! The rollout engine assembles observation/trajectory arrays on the host
+//! before staging them into PJRT literals; this module is the thin,
+//! allocation-conscious container it uses. Only the dtypes the artifact ABI
+//! needs exist (f32, i32).
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorF32 { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(TensorF32 { shape: shape.to_vec(), data })
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Zero all elements without reallocating (hot-loop reuse).
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// Flat offset of a multi-index (debug-checked).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&x, &d)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(x < d, "index {x} out of bounds for dim {i} ({d})");
+            off = off * d + x;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn get(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    /// Mutable view of the contiguous slice at leading index `i`
+    /// (e.g. row `t` of a `[T, B, ...]` buffer).
+    pub fn slice_mut(&mut self, i: usize) -> &mut [f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn slice(&self, i: usize) -> &[f32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &self.data[i * stride..(i + 1) * stride]
+    }
+
+    /// Convert to an xla literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Convert to a literal with an explicit shape (same element count) —
+    /// used to stage flat observation buffers as the artifact's structured
+    /// input shapes, e.g. `[B, 75]` data as a `[B, 5, 5, 3]` literal.
+    pub fn to_literal_as(&self, dims: &[usize]) -> Result<xla::Literal> {
+        let n: usize = dims.iter().product();
+        if n != self.data.len() {
+            bail!("cannot view {:?} as {:?}", self.shape, dims);
+        }
+        let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+/// Dense row-major i32 tensor (actions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        TensorI32 { shape: shape.to_vec(), data: vec![0; n] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    pub fn slice_mut(&mut self, i: usize) -> &mut [i32] {
+        let stride: usize = self.shape[1..].iter().product();
+        &mut self.data[i * stride..(i + 1) * stride]
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_row_major() {
+        let t = TensorF32::zeros(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 0, 0]), 12);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn get_set() {
+        let mut t = TensorF32::zeros(&[3, 3]);
+        t.set(&[1, 2], 5.0);
+        assert_eq!(t.get(&[1, 2]), 5.0);
+        assert_eq!(t.data().iter().filter(|&&x| x != 0.0).count(), 1);
+    }
+
+    #[test]
+    fn slice_mut_strides() {
+        let mut t = TensorF32::zeros(&[4, 2, 2]);
+        t.slice_mut(2).fill(7.0);
+        assert_eq!(t.get(&[2, 1, 1]), 7.0);
+        assert_eq!(t.get(&[1, 1, 1]), 0.0);
+        assert_eq!(t.get(&[3, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(TensorF32::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(TensorF32::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn fill_resets() {
+        let mut t = TensorF32::zeros(&[8]);
+        t.set(&[3], 1.0);
+        t.fill(0.0);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,223 @@
+//! Integration tests over the PJRT runtime: artifact loading, parameter
+//! lifecycle, numerical sanity of the apply/train/score artifacts, and
+//! checkpoint round-trips. Requires `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use jaxued::config::{Algo, TrainConfig, VARIANT_SMALL};
+use jaxued::env::gen::LevelGenerator;
+use jaxued::env::maze::{MazeEnv, NUM_ACTIONS};
+use jaxued::env::wrappers::AutoReplayWrapper;
+use jaxued::env::UnderspecifiedEnv;
+use jaxued::ppo::{LrSchedule, PpoTrainer};
+use jaxued::rollout::{Policy, RolloutEngine, Trajectory};
+use jaxued::runtime::{ParamSet, Runtime};
+use jaxued::util::rng::Pcg64;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(&artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn small_cfg(algo: Algo) -> TrainConfig {
+    let mut cfg = TrainConfig::defaults(algo);
+    cfg.variant = VARIANT_SMALL;
+    cfg
+}
+
+fn literals_equal(a: &xla::Literal, b: &xla::Literal) -> bool {
+    a.to_vec::<f32>().unwrap() == b.to_vec::<f32>().unwrap()
+}
+
+#[test]
+fn init_is_seed_deterministic() {
+    let rt = runtime();
+    let a = rt.init_params("student", 42).unwrap();
+    let b = rt.init_params("student", 42).unwrap();
+    let c = rt.init_params("student", 43).unwrap();
+    for (x, y) in a.params.iter().zip(&b.params) {
+        assert!(literals_equal(x, y));
+    }
+    assert!(a.params.iter().zip(&c.params).any(|(x, y)| !literals_equal(x, y)));
+    // optimizer state starts at zero
+    for m in &a.m {
+        assert!(m.to_vec::<f32>().unwrap().iter().all(|&v| v == 0.0));
+    }
+    assert_eq!(a.step_count().unwrap(), 0);
+}
+
+#[test]
+fn param_shapes_match_manifest() {
+    let rt = runtime();
+    let ps = rt.init_params("student", 0).unwrap();
+    let net = rt.manifest.network("student").unwrap();
+    assert_eq!(ps.params.len(), net.num_params());
+    for (lit, shape) in ps.params.iter().zip(&net.param_shapes) {
+        assert_eq!(lit.element_count(), shape.iter().product::<usize>());
+    }
+    assert_eq!(ps.num_parameters(), net.total_elements());
+}
+
+#[test]
+fn apply_outputs_finite_and_batch_consistent() {
+    let rt = runtime();
+    let ps = rt.init_params("student", 7).unwrap();
+    let apply = rt.load("student_apply_b8").unwrap();
+    let policy = Policy { apply, params: &ps.params, num_actions: NUM_ACTIONS };
+
+    // same obs replicated across the batch must give identical rows
+    let env = MazeEnv::default();
+    let gen = LevelGenerator::new(30);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let level = gen.generate_solvable(&mut rng, 100);
+    let state = env.reset_to_level(&level, &mut rng);
+    let mut flat = vec![0.0f32; env.obs_len()];
+    env.observe(&state, &mut flat);
+    let comps = env.obs_components();
+    let mut staged: Vec<jaxued::util::tensor::TensorF32> = comps
+        .iter()
+        .map(|&c| jaxued::util::tensor::TensorF32::zeros(&[8, c]))
+        .collect();
+    let mut off = 0;
+    for (k, &c) in comps.iter().enumerate() {
+        for b in 0..8 {
+            staged[k].data_mut()[b * c..(b + 1) * c].copy_from_slice(&flat[off..off + c]);
+        }
+        off += c;
+    }
+    let (logits, values) = policy.forward(&staged).unwrap();
+    assert_eq!(logits.len(), 8 * NUM_ACTIONS);
+    assert_eq!(values.len(), 8);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    for b in 1..8 {
+        assert_eq!(logits[0..3], logits[b * 3..b * 3 + 3], "batch row {b} differs");
+        assert_eq!(values[0], values[b]);
+    }
+}
+
+#[test]
+fn train_step_learns_on_synthetic_advantage() {
+    // Repeatedly updating on the same trajectory must reduce the loss.
+    let rt = runtime();
+    let cfg = small_cfg(Algo::Dr);
+    let schedule = LrSchedule { lr0: 1e-3, anneal: false, total_updates: 100 };
+    let mut trainer =
+        PpoTrainer::new(&rt, "student", &cfg.student_train_artifact(), 3, schedule).unwrap();
+    let apply = rt.load(&cfg.student_apply_artifact()).unwrap();
+
+    let env = AutoReplayWrapper::new(MazeEnv::new(cfg.max_episode_steps));
+    let gen = LevelGenerator::new(10);
+    let mut rng = Pcg64::seed_from_u64(5);
+    let levels = gen.generate_batch(8, &mut rng);
+    let mut states: Vec<_> = levels.iter().map(|l| env.reset_to_level(l, &mut rng)).collect();
+    let mut engine = RolloutEngine::new(&env, 8);
+    let mut traj = Trajectory::new(32, 8, &env.obs_components());
+    {
+        let policy = Policy { apply, params: &trainer.params.params, num_actions: NUM_ACTIONS };
+        engine.collect(&env, &mut states, &policy, &mut traj, &mut rng).unwrap();
+    }
+    let m0 = trainer.update(&traj).unwrap();
+    let mut last = f32::INFINITY;
+    for _ in 0..5 {
+        let m = trainer.update(&traj).unwrap();
+        last = m.total_loss();
+        assert!(last.is_finite());
+    }
+    // KL shrinks relative learning signal; loss should not blow up and the
+    // step count must advance 5 epochs per update (6 updates total).
+    assert_eq!(trainer.params.step_count().unwrap(), 6 * 5);
+    assert!(m0.total_loss().is_finite());
+    assert!(last.abs() < 100.0, "loss diverged: {last}");
+}
+
+#[test]
+fn score_artifact_sane() {
+    use jaxued::algo::scoring::Scorer;
+    use jaxued::config::ScoreFn;
+    let rt = runtime();
+    let scorer = Scorer::new(rt.load("score_t32_b8").unwrap(), ScoreFn::MaxMc).unwrap();
+    let mut traj = Trajectory::new(32, 8, &[75, 4]);
+    // column 0 gets a reward spike; its regret estimates should be positive
+    traj.rewards.set(&[10, 0], 1.0);
+    traj.dones.set(&[10, 0], 1.0);
+    let batch = scorer.score(&traj, &[0.0; 8]).unwrap();
+    assert_eq!(batch.scores.len(), 8);
+    assert!(batch.scores.iter().all(|s| s.is_finite() && *s >= 0.0));
+    assert!(batch.scores[0] > batch.scores[1], "{:?}", batch.scores);
+    assert!(batch.extras[0].max_return > 0.9);
+    // carry: prev max return dominates
+    let batch2 = scorer.score(&traj, &[5.0; 8]).unwrap();
+    assert!((batch2.extras[0].max_return - 5.0).abs() < 1e-5);
+    assert!(batch2.scores[0] > batch.scores[0]);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    let rt = runtime();
+    let ps = rt.init_params("student", 11).unwrap();
+    let dir = std::env::temp_dir().join("jaxued_ckpt_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("s.ckpt");
+    ps.save(&path).unwrap();
+    let loaded = ParamSet::load(&path, "student").unwrap();
+    for (a, b) in ps.params.iter().zip(&loaded.params) {
+        assert!(literals_equal(a, b));
+    }
+    for (a, b) in ps.v.iter().zip(&loaded.v) {
+        assert!(literals_equal(a, b));
+    }
+    assert_eq!(loaded.step_count().unwrap(), 0);
+    // wrong network name is rejected
+    assert!(ParamSet::load(&path, "adversary").is_err());
+}
+
+#[test]
+fn checkpoint_policy_equivalence() {
+    // a reloaded checkpoint must produce byte-identical policy outputs
+    let rt = runtime();
+    let ps = rt.init_params("student", 13).unwrap();
+    let dir = std::env::temp_dir().join("jaxued_ckpt_test2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("s.ckpt");
+    ps.save(&path).unwrap();
+    let loaded = ParamSet::load(&path, "student").unwrap();
+
+    let apply = rt.load("student_apply_b8").unwrap();
+    let staged: Vec<jaxued::util::tensor::TensorF32> = vec![
+        jaxued::util::tensor::TensorF32::zeros(&[8, 75]),
+        jaxued::util::tensor::TensorF32::zeros(&[8, 4]),
+    ];
+    let p1 = Policy { apply: apply.clone(), params: &ps.params, num_actions: 3 };
+    let p2 = Policy { apply, params: &loaded.params, num_actions: 3 };
+    let (l1, v1) = p1.forward(&staged).unwrap();
+    let (l2, v2) = p2.forward(&staged).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(v1, v2);
+}
+
+#[test]
+fn manifest_env_validation_works() {
+    // loading from a bogus dir fails cleanly
+    assert!(Runtime::new(Path::new("/nonexistent/artifacts")).is_err());
+}
+
+#[test]
+fn adversary_artifacts_load() {
+    let rt = runtime();
+    let ps = rt.init_params("adversary", 0).unwrap();
+    let net = rt.manifest.network("adversary").unwrap();
+    assert_eq!(ps.num_parameters(), net.total_elements());
+    let apply = rt.load("adversary_apply_b8").unwrap();
+    let staged: Vec<jaxued::util::tensor::TensorF32> = vec![
+        jaxued::util::tensor::TensorF32::zeros(&[8, 507]),
+        jaxued::util::tensor::TensorF32::zeros(&[8, 1]),
+        jaxued::util::tensor::TensorF32::zeros(&[8, 16]),
+    ];
+    let policy = Policy { apply, params: &ps.params, num_actions: 169 };
+    let (logits, values) = policy.forward(&staged).unwrap();
+    assert_eq!(logits.len(), 8 * 169);
+    assert!(values.iter().all(|v| v.is_finite()));
+}
