@@ -15,8 +15,8 @@ use jaxued::env::holdout::named_levels;
 use jaxued::env::maze::{MazeEnv, NUM_ACTIONS};
 use jaxued::env::render::{render_montage, render_trajectory};
 use jaxued::env::shortest_path::solve_distance;
-use jaxued::env::UnderspecifiedEnv;
-use jaxued::eval::Evaluator;
+use jaxued::env::{MazeFamily, UnderspecifiedEnv};
+use jaxued::eval::for_family;
 use jaxued::rollout::sampler::sample_action;
 use jaxued::rollout::Policy;
 use jaxued::runtime::{ParamSet, Runtime};
@@ -44,8 +44,9 @@ fn main() -> Result<()> {
     let apply = rt.load(&cfg.student_apply_artifact())?;
     let policy = Policy { apply, params: &params.params, num_actions: NUM_ACTIONS };
 
-    // 1. Per-level table over the full suite.
-    let evaluator = Evaluator::default_suite(cfg.variant.b, trials, 20, cfg.max_episode_steps);
+    // 1. Per-level table over the full suite (this zoo is a maze-family
+    //    analysis tool, so it names the family explicitly).
+    let evaluator = for_family(MazeFamily, &cfg, trials, 20);
     let mut rng = Pcg64::new(cfg.seed, 0x7a6f); // "zo"
     let report = evaluator.run(&policy, &mut rng)?;
     println!("\n{:<22} {:>8} {:>12} {:>10}", "level", "solve", "mean_steps", "opt_dist");

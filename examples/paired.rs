@@ -17,7 +17,7 @@ use jaxued::config::{Algo, TrainConfig, Variant};
 use jaxued::env::editor::{EditorEnv, EditorTask};
 use jaxued::env::render::render_montage;
 use jaxued::env::shortest_path::is_solvable;
-use jaxued::env::UnderspecifiedEnv;
+use jaxued::env::{MazeFamily, UnderspecifiedEnv};
 use jaxued::rollout::Policy;
 use jaxued::runtime::Runtime;
 use jaxued::util::cli::Args;
@@ -33,7 +33,7 @@ fn main() -> Result<()> {
     cfg.env_steps_budget = (cycles as u64) * cfg.env_steps_per_cycle();
 
     let rt = Runtime::new(std::path::Path::new(&cfg.artifacts_dir))?;
-    let mut algo = PairedAlgo::new(&rt, &cfg)?;
+    let mut algo = PairedAlgo::new(MazeFamily, &rt, &cfg)?;
     let mut rng = Pcg64::new(cfg.seed, 0x7061); // "pa"
     let out_dir = std::path::Path::new("runs/paired_example");
     std::fs::create_dir_all(out_dir)?;
@@ -68,7 +68,7 @@ fn main() -> Result<()> {
 /// Sample a fresh batch of levels from the *current* adversary (outside the
 /// training loop, purely for visualization).
 fn sample_adversary_levels(
-    rt: &Runtime, cfg: &TrainConfig, algo: &PairedAlgo, rng: &mut Pcg64,
+    rt: &Runtime, cfg: &TrainConfig, algo: &PairedAlgo<MazeFamily>, rng: &mut Pcg64,
 ) -> Result<Vec<jaxued::env::level::Level>> {
     let env = EditorEnv::new(cfg.editor_horizon());
     let apply = rt.load(&cfg.adversary_apply_artifact())?;

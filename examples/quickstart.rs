@@ -1,41 +1,52 @@
 //! Quickstart: the smallest end-to-end use of the library.
 //!
 //! Loads the AOT artifacts, trains Domain Randomization for a small budget
-//! on the maze UPOMDP, evaluates on the holdout suite, and renders one
-//! generated level. Run with:
+//! on the selected UPOMDP family, evaluates on its holdout suite, and
+//! renders one generated level. The environment is picked exactly like the
+//! algorithm — one config field — so the same code trains the maze or the
+//! lava grid:
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart -- --env lava
 //! ```
 
 use anyhow::Result;
 
 use jaxued::algo::train;
 use jaxued::config::{Algo, TrainConfig, VARIANT_SMALL};
-use jaxued::env::gen::LevelGenerator;
+use jaxued::env::gen::MazeLevelGenerator;
 use jaxued::env::render::render_level;
+use jaxued::env::EnvId;
 use jaxued::runtime::Runtime;
+use jaxued::util::cli::Args;
 use jaxued::util::rng::Pcg64;
 
 fn main() -> Result<()> {
-    // 1. The runtime: PJRT CPU client + compiled artifacts.
-    let rt = Runtime::from_env()?;
-    println!("platform: {}", rt.client.platform_name());
-
-    // 2. Configure DR with a small smoke budget (Table 3 defaults otherwise).
+    // 1. Configure DR with a small smoke budget (Table 3 defaults
+    //    otherwise). `--env lava` switches the whole stack to the lava
+    //    grid; no other line changes.
+    let args = Args::parse();
     let mut cfg = TrainConfig::defaults(Algo::Dr);
+    cfg.env = EnvId::parse(&args.get_str("env", "maze"))?;
     cfg.variant = VARIANT_SMALL;
     cfg.env_steps_budget = 64_000; // 250 update cycles at T=32, B=8
     cfg.eval_interval = 50;
     cfg.eval_trials = 2;
     cfg.out_dir = "runs/quickstart".into();
 
+    // 2. The runtime: PJRT CPU client + compiled artifacts, validated
+    //    against the selected family's geometry.
+    let rt = Runtime::from_env_with_geometry(&cfg.env.geometry())?;
+    println!("platform: {}", rt.client.platform_name());
+
     // 3. Train.
     let outcome = train(&rt, &cfg, false)?;
     println!(
-        "\ntrained {} cycles ({} env steps) in {:.1}s — {:.0} env-steps/s",
+        "\ntrained {} cycles ({} env steps) on {} in {:.1}s — {:.0} env-steps/s",
         outcome.cycles,
         outcome.env_steps,
+        cfg.env.name(),
         outcome.wallclock_secs,
         outcome.env_steps as f64 / outcome.wallclock_secs
     );
@@ -44,8 +55,9 @@ fn main() -> Result<()> {
         outcome.final_eval.mean_solve_rate, outcome.final_eval.iqm_solve_rate
     );
 
-    // 4. Render one level from the DR distribution.
-    let gen = LevelGenerator::new(60);
+    // 4. Render one level from the maze DR distribution (rendering is a
+    //    maze-family tool).
+    let gen = MazeLevelGenerator::new(60);
     let mut rng = Pcg64::seed_from_u64(7);
     let level = gen.generate_solvable(&mut rng, 100);
     let img = render_level(&level, None);

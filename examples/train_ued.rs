@@ -1,22 +1,24 @@
 //! End-to-end UED training driver (the §6-style experiment runner).
 //!
-//! Trains any of the five algorithms on the maze UPOMDP with the paper's
-//! Table-3 hyperparameters (scaled budget by default), logging the full
-//! loss / solve-rate curve to `runs/<algo>_s<seed>/metrics.csv` and
-//! printing per-level holdout results at the end. This is the run recorded
-//! in EXPERIMENTS.md §End-to-end.
+//! Trains any of the five algorithms on any registered environment family
+//! with the paper's Table-3 hyperparameters (scaled budget by default),
+//! logging the full loss / solve-rate curve to
+//! `runs/<run-name>/metrics.csv` and printing per-level holdout results at
+//! the end. `--env` selects the environment exactly the way `--algo`
+//! selects the method. This is the run recorded in EXPERIMENTS.md
+//! §End-to-end.
 //!
 //! ```sh
 //! cargo run --release --example train_ued -- --algo accel --env-steps 1000000
 //! cargo run --release --example train_ued -- --algo paired --variant small
+//! cargo run --release --example train_ued -- --algo accel --env lava
 //! ```
 
 use anyhow::Result;
 
 use jaxued::algo::train;
 use jaxued::config::TrainConfig;
-use jaxued::eval::Evaluator;
-use jaxued::rollout::Policy;
+use jaxued::eval::evaluate_params;
 use jaxued::runtime::{ParamSet, Runtime};
 use jaxued::util::cli::Args;
 use jaxued::util::rng::Pcg64;
@@ -32,11 +34,14 @@ fn main() -> Result<()> {
     let cfg = TrainConfig::from_args(&args)?;
 
     println!(
-        "=== train_ued: {} | seed {} | {} env steps ({} cycles of {}×{}) ===",
-        cfg.algo.name(), cfg.seed, cfg.env_steps_budget, cfg.num_cycles(),
-        cfg.variant.t, cfg.variant.b,
+        "=== train_ued: {} on {} | seed {} | {} env steps ({} cycles of {}×{}) ===",
+        cfg.algo.name(), cfg.env.name(), cfg.seed, cfg.env_steps_budget,
+        cfg.num_cycles(), cfg.variant.t, cfg.variant.b,
     );
-    let rt = Runtime::new(std::path::Path::new(&cfg.artifacts_dir))?;
+    let rt = Runtime::with_geometry(
+        std::path::Path::new(&cfg.artifacts_dir),
+        &cfg.env.geometry(),
+    )?;
     let outcome = train(&rt, &cfg, false)?;
 
     println!("\n=== final holdout report ===");
@@ -57,18 +62,10 @@ fn main() -> Result<()> {
 
     // Re-load the saved checkpoint and re-evaluate: proves the checkpoint
     // path round-trips (the eval numbers must match up to sampling noise).
-    let run_dir = std::path::Path::new(&cfg.out_dir)
-        .join(format!("{}_s{}", cfg.algo.name(), cfg.seed));
+    let run_dir = std::path::Path::new(&cfg.out_dir).join(cfg.run_name());
     let params = ParamSet::load(&run_dir.join("student.ckpt"), "student")?;
-    let apply = rt.load(&cfg.student_apply_artifact())?;
-    let policy = Policy {
-        apply,
-        params: &params.params,
-        num_actions: jaxued::env::maze::NUM_ACTIONS,
-    };
-    let evaluator =
-        Evaluator::default_suite(cfg.variant.b, cfg.eval_trials, 20, cfg.max_episode_steps);
-    let recheck = evaluator.run(&policy, &mut Pcg64::new(cfg.seed, 1))?;
+    let mut rng = Pcg64::new(cfg.seed, 1);
+    let recheck = evaluate_params(&rt, &cfg, &params, cfg.eval_trials, 20, &mut rng)?;
     println!(
         "checkpoint re-eval: mean solve = {:.3} (ckpt at {})",
         recheck.mean_solve_rate,

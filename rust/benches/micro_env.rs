@@ -1,18 +1,22 @@
-//! Microbenchmarks: the L3 environment substrate hot paths.
+//! Microbenchmarks: the L3 environment substrate hot paths, for *every*
+//! registered env family.
 //!
 //! jaxued's training loop budget is dominated by PJRT calls; these benches
 //! verify the Rust env layer stays far off the critical path (§Perf target:
-//! < 1 µs per env step+observe).
+//! < 1 µs per env step+observe). Both the maze and the lava grid are
+//! measured so per-env step/reset/generate/mutate cost is tracked from the
+//! moment a family lands.
 
 use std::time::Instant;
 
-use jaxued::env::gen::LevelGenerator;
+use jaxued::env::gen::MazeLevelGenerator;
 use jaxued::env::level::Level;
-use jaxued::env::maze::{MazeEnv, ACT_FORWARD, ACT_LEFT, ACT_RIGHT};
-use jaxued::env::mutate::Mutator;
 use jaxued::env::render::render_level;
 use jaxued::env::shortest_path::distance_field;
-use jaxued::env::UnderspecifiedEnv;
+use jaxued::env::{
+    EnvFamily, EnvParams, LavaFamily, LevelGenerator, LevelMeta, LevelMutator,
+    MazeFamily, UnderspecifiedEnv,
+};
 use jaxued::util::rng::Pcg64;
 
 fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
@@ -35,22 +39,27 @@ fn bench<F: FnMut() -> u64>(name: &str, mut f: F) {
     println!("{name:<32} {scaled:>9.1} {unit}/op   ({:>12.0} ops/s)", 1.0 / best);
 }
 
-fn main() {
+/// The family-generic hot-path suite: step+observe, step, generate,
+/// mutate, fingerprint — identical code for every registered env.
+fn bench_family<F: EnvFamily>(family: F) {
+    let id = family.id();
+    let params = EnvParams::default();
+    let env = family.make_env(&params);
+    let gen = family.make_generator(&params);
+    let mutator = family.make_mutator(&params);
     let mut rng = Pcg64::seed_from_u64(0);
-    let gen = LevelGenerator::new(60);
-    let env = MazeEnv::default();
-    let levels: Vec<Level> = gen.generate_batch(64, &mut rng);
+    let levels: Vec<F::Level> = gen.sample_batch(64, &mut rng);
+    let actions = env.num_actions();
 
-    println!("=== micro_env: L3 substrate hot paths ===");
+    println!("--- family: {id} ---");
 
-    bench("maze step+observe", || {
+    bench(&format!("[{id}] step+observe"), || {
         let mut rng = Pcg64::seed_from_u64(1);
         let mut obs = vec![0.0f32; env.obs_len()];
         let mut state = env.reset_to_level(&levels[0], &mut rng);
         let n = 1_000_000u64;
-        let actions = [ACT_LEFT, ACT_RIGHT, ACT_FORWARD];
         for i in 0..n {
-            let r = env.step(&mut state, actions[(i % 3) as usize], &mut rng);
+            let r = env.step(&mut state, (i % actions as u64) as usize, &mut rng);
             env.observe(&state, &mut obs);
             if r.done {
                 state = env.reset_to_level(&levels[(i % 64) as usize], &mut rng);
@@ -59,12 +68,12 @@ fn main() {
         n
     });
 
-    bench("maze step only", || {
+    bench(&format!("[{id}] step only"), || {
         let mut rng = Pcg64::seed_from_u64(2);
         let mut state = env.reset_to_level(&levels[1], &mut rng);
         let n = 4_000_000u64;
         for i in 0..n {
-            let r = env.step(&mut state, (i % 3) as usize, &mut rng);
+            let r = env.step(&mut state, (i % actions as u64) as usize, &mut rng);
             if r.done {
                 state = env.reset_to_level(&levels[(i % 64) as usize], &mut rng);
             }
@@ -72,37 +81,59 @@ fn main() {
         n
     });
 
-    bench("level generation (60 walls)", || {
+    bench(&format!("[{id}] level generation"), || {
         let mut rng = Pcg64::seed_from_u64(3);
         let n = 200_000u64;
         for _ in 0..n {
-            std::hint::black_box(gen.generate(&mut rng));
+            std::hint::black_box(gen.sample_level(&mut rng));
         }
         n
     });
 
-    bench("ACCEL mutation (20 edits)", || {
+    bench(&format!("[{id}] mutation (20 edits)"), || {
         let mut rng = Pcg64::seed_from_u64(4);
-        let m = Mutator::default();
         let n = 200_000u64;
         for i in 0..n {
-            std::hint::black_box(m.mutate(&levels[(i % 64) as usize], &mut rng));
+            std::hint::black_box(mutator.mutate_level(&levels[(i % 64) as usize], &mut rng));
         }
         n
     });
+
+    bench(&format!("[{id}] fingerprint"), || {
+        let n = 2_000_000u64;
+        for i in 0..n {
+            std::hint::black_box(levels[(i % 64) as usize].fingerprint());
+        }
+        n
+    });
+
+    bench(&format!("[{id}] solvability check"), || {
+        let n = 200_000u64;
+        for i in 0..n {
+            std::hint::black_box(levels[(i % 64) as usize].is_solvable());
+        }
+        n
+    });
+}
+
+fn main() {
+    println!("=== micro_env: L3 substrate hot paths ===");
+
+    // Family-generic suite over every registered env.
+    bench_family(MazeFamily);
+    bench_family(LavaFamily);
+
+    // Maze-specific extras (tools the family-generic suite can't cover).
+    let mut rng = Pcg64::seed_from_u64(0);
+    let gen = MazeLevelGenerator::new(60);
+    let levels: Vec<Level> = gen.generate_batch(64, &mut rng);
+
+    println!("--- maze extras ---");
 
     bench("BFS distance field", || {
         let n = 200_000u64;
         for i in 0..n {
             std::hint::black_box(distance_field(&levels[(i % 64) as usize]));
-        }
-        n
-    });
-
-    bench("level fingerprint", || {
-        let n = 2_000_000u64;
-        for i in 0..n {
-            std::hint::black_box(levels[(i % 64) as usize].fingerprint());
         }
         n
     });

@@ -6,7 +6,7 @@
 
 use std::time::Instant;
 
-use jaxued::env::gen::LevelGenerator;
+use jaxued::env::gen::MazeLevelGenerator;
 use jaxued::env::level::Level;
 use jaxued::level_sampler::{LevelSampler, SamplerConfig};
 use jaxued::util::rng::Pcg64;
@@ -40,7 +40,7 @@ fn full_sampler(levels: &[Level]) -> LevelSampler<Level, f32> {
 
 fn main() {
     let mut rng = Pcg64::seed_from_u64(0);
-    let gen = LevelGenerator::new(60);
+    let gen = MazeLevelGenerator::new(60);
     let levels = gen.generate_batch(4000, &mut rng);
 
     println!("=== micro_sampler: LevelSampler (K=4000, rank prioritization) ===");

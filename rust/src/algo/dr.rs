@@ -1,70 +1,75 @@
-//! Domain Randomization (paper §5.2).
+//! Domain Randomization (paper §5.2), generic over the environment family.
 //!
 //! PureJaxRL-style training: B parallel envs roll the same policy on
 //! uniformly-sampled levels and every trajectory trains the policy. Unlike
 //! the PLR family, episode boundaries do *not* align with update cycles:
-//! the `AutoResetWrapper` samples a fresh level whenever an episode ends,
-//! and trailing episodes continue across update boundaries — the standard
-//! RL treatment the paper argues for (its §5.2 critique of bundling DR
-//! into PLR's fixed-level rollout scheme).
+//! the `AutoResetWrapper` samples a fresh level from the family's base
+//! generator whenever an episode ends, and trailing episodes continue
+//! across update boundaries — the standard RL treatment the paper argues
+//! for (its §5.2 critique of bundling DR into PLR's fixed-level rollout
+//! scheme).
 
 use anyhow::Result;
 
 use super::{CycleMetrics, UedAlgorithm};
 use crate::config::TrainConfig;
-use crate::env::gen::LevelGenerator;
-use crate::env::level::Level;
-use crate::env::maze::{MazeEnv, MazeState, NUM_ACTIONS};
 use crate::env::wrappers::AutoResetWrapper;
-use crate::env::UnderspecifiedEnv;
+use crate::env::{EnvFamily, LevelGenerator, UnderspecifiedEnv};
 use crate::ppo::{LrSchedule, PpoTrainer};
 use crate::rollout::{Policy, RolloutEngine, Trajectory};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
-type DrEnv = AutoResetWrapper<MazeEnv, Box<dyn Fn(&mut Pcg64) -> Level>>;
+type DrEnv<F> = AutoResetWrapper<<F as EnvFamily>::Env, <F as EnvFamily>::Generator>;
+type DrState<F> = <<F as EnvFamily>::Env as UnderspecifiedEnv>::State;
 
 /// The DR baseline.
-pub struct DrAlgo {
-    env: DrEnv,
-    states: Vec<MazeState>,
+pub struct DrAlgo<F: EnvFamily> {
+    env: DrEnv<F>,
+    states: Vec<DrState<F>>,
     engine: RolloutEngine,
     traj: Trajectory,
     trainer: PpoTrainer,
     apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    num_actions: usize,
 }
 
-impl DrAlgo {
-    pub fn new(rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64) -> Result<DrAlgo> {
-        let gen = LevelGenerator::new(cfg.max_walls);
-        let maze = MazeEnv::new(cfg.max_episode_steps);
-        let env: DrEnv = AutoResetWrapper::new(
-            maze,
-            Box::new(move |r: &mut Pcg64| gen.generate(r)) as Box<dyn Fn(&mut Pcg64) -> Level>,
+impl<F: EnvFamily> DrAlgo<F> {
+    pub fn new(family: F, rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64) -> Result<DrAlgo<F>> {
+        let params = cfg.env_params();
+        let env: DrEnv<F> = AutoResetWrapper::new(
+            family.make_env(&params),
+            family.make_generator(&params),
         );
         let schedule = LrSchedule {
             lr0: cfg.lr,
             anneal: cfg.anneal_lr,
             total_updates: cfg.num_cycles(),
         };
+        let prefix = cfg.env.artifact_prefix();
         let trainer = PpoTrainer::new(
-            rt, "student", &cfg.student_train_artifact(), cfg.seed as i32, schedule,
+            rt,
+            "student",
+            &rt.resolve_name(prefix, &cfg.student_train_artifact()),
+            cfg.seed as i32,
+            schedule,
         )?;
-        let apply = rt.load(&cfg.student_apply_artifact())?;
+        let apply = rt.load_scoped(prefix, &cfg.student_apply_artifact())?;
         let (t, b) = trainer.rollout_shape();
         let states = (0..b)
             .map(|_| {
-                let l = gen.generate(rng);
+                let l = env.generator.sample_level(rng);
                 env.reset_to_level(&l, rng)
             })
             .collect();
         let engine = RolloutEngine::new(&env, b);
         let traj = Trajectory::new(t, b, &env.obs_components());
-        Ok(DrAlgo { env, states, engine, traj, trainer, apply })
+        let num_actions = env.num_actions();
+        Ok(DrAlgo { env, states, engine, traj, trainer, apply, num_actions })
     }
 }
 
-impl UedAlgorithm for DrAlgo {
+impl<F: EnvFamily> UedAlgorithm for DrAlgo<F> {
     fn name(&self) -> &'static str {
         "dr"
     }
@@ -74,7 +79,7 @@ impl UedAlgorithm for DrAlgo {
             let policy = Policy {
                 apply: self.apply.clone(),
                 params: &self.trainer.params.params,
-                num_actions: NUM_ACTIONS,
+                num_actions: self.num_actions,
             };
             self.engine.collect(&self.env, &mut self.states, &policy, &mut self.traj, rng)?;
         }

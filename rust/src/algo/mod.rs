@@ -1,9 +1,16 @@
-//! UED algorithm drivers and the shared training loop.
+//! UED algorithm drivers and the shared training loop, generic over the
+//! environment family.
 //!
-//! `UedAlgorithm` is the one-update-cycle interface every method (DR, the
-//! PLR family, PAIRED) implements; [`train`] iterates cycles against the
+//! `UedAlgorithm` is the object-safe one-update-cycle interface every
+//! method implements; the drivers themselves — [`dr::DrAlgo`],
+//! [`plr::PlrAlgo`], [`paired::PairedAlgo`] — are generic over
+//! [`EnvFamily`], so DR, the PLR family, and PAIRED run on *any* registered
+//! environment with zero algorithm-code changes: [`build_algo`] and
+//! [`train`] dispatch `cfg.env` through the env registry exactly the way
+//! `cfg.algo` selects the method. [`train`] iterates cycles against the
 //! paper's env-interaction budget accounting (§6), evaluating on the
-//! holdout suite at a fixed cadence and logging CSV + stdout metrics.
+//! selected family's holdout suite at a fixed cadence and logging CSV +
+//! stdout metrics.
 
 pub mod dr;
 pub mod meta_policy;
@@ -14,7 +21,9 @@ pub mod scoring;
 use anyhow::Result;
 
 use crate::config::{Algo, TrainConfig};
-use crate::eval::{EvalReport, Evaluator};
+use crate::env::registry::{dispatch, EnvVisitor};
+use crate::env::EnvFamily;
+use crate::eval::{for_family, EvalReport};
 use crate::metrics::{log_stdout, CsvSink, Stopwatch};
 use crate::ppo::{PpoTrainer, UpdateMetrics};
 use crate::rollout::storage::EpisodeStats;
@@ -59,7 +68,10 @@ impl CycleMetrics {
             } else {
                 0.0
             },
-            mean_reward: reward / stats.len().max(1) as f64,
+            // Per-*episode* mean reward: divide by completed episodes, not
+            // by rollout columns (a column can finish several episodes —
+            // or none — within one rollout).
+            mean_reward: if episodes > 0 { reward / episodes as f64 } else { 0.0 },
             buffer_fill,
             ..Default::default()
         };
@@ -73,7 +85,8 @@ impl CycleMetrics {
     }
 }
 
-/// One-update-cycle interface implemented by every UED method.
+/// One-update-cycle interface implemented by every UED method; object-safe
+/// so the training loop can hold any (algorithm × env family) pairing.
 pub trait UedAlgorithm {
     fn name(&self) -> &'static str;
 
@@ -87,15 +100,35 @@ pub trait UedAlgorithm {
     fn student_trainer(&mut self) -> &mut PpoTrainer;
 }
 
-/// Instantiate the configured algorithm.
+/// Instantiate the configured algorithm in a statically-known env family.
+pub fn build_algo_for<F: EnvFamily>(
+    family: F, rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64,
+) -> Result<Box<dyn UedAlgorithm>> {
+    Ok(match cfg.algo {
+        Algo::Dr => Box::new(dr::DrAlgo::new(family, rt, cfg, rng)?),
+        Algo::Plr | Algo::RobustPlr | Algo::Accel => {
+            Box::new(plr::PlrAlgo::new(family, rt, cfg)?)
+        }
+        Algo::Paired => Box::new(paired::PairedAlgo::new(family, rt, cfg)?),
+    })
+}
+
+/// Instantiate the configured algorithm on the configured environment.
 pub fn build_algo(
     rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64,
 ) -> Result<Box<dyn UedAlgorithm>> {
-    Ok(match cfg.algo {
-        Algo::Dr => Box::new(dr::DrAlgo::new(rt, cfg, rng)?),
-        Algo::Plr | Algo::RobustPlr | Algo::Accel => Box::new(plr::PlrAlgo::new(rt, cfg)?),
-        Algo::Paired => Box::new(paired::PairedAlgo::new(rt, cfg)?),
-    })
+    struct V<'a, 'r> {
+        rt: &'a Runtime,
+        cfg: &'a TrainConfig,
+        rng: &'r mut Pcg64,
+    }
+    impl EnvVisitor for V<'_, '_> {
+        type Out = Result<Box<dyn UedAlgorithm>>;
+        fn visit<F: EnvFamily>(self, family: F) -> Self::Out {
+            build_algo_for(family, self.rt, self.cfg, self.rng)
+        }
+    }
+    dispatch(cfg.env, V { rt, cfg, rng })
 }
 
 /// Outcome of a full training run.
@@ -108,19 +141,36 @@ pub struct TrainOutcome {
     pub table1_hours: f64,
 }
 
-/// The shared training loop: cycles → periodic eval → final report.
-pub fn train(
-    rt: &Runtime, cfg: &TrainConfig, quiet: bool,
+/// The shared training loop on the configured environment.
+pub fn train(rt: &Runtime, cfg: &TrainConfig, quiet: bool) -> Result<TrainOutcome> {
+    struct V<'a> {
+        rt: &'a Runtime,
+        cfg: &'a TrainConfig,
+        quiet: bool,
+    }
+    impl EnvVisitor for V<'_> {
+        type Out = Result<TrainOutcome>;
+        fn visit<F: EnvFamily>(self, family: F) -> Self::Out {
+            train_family(family, self.rt, self.cfg, self.quiet)
+        }
+    }
+    dispatch(cfg.env, V { rt, cfg, quiet })
+}
+
+/// The shared training loop: cycles → periodic eval → final report. Fully
+/// generic — nothing in here (or below it) names a concrete environment.
+pub fn train_family<F: EnvFamily>(
+    family: F, rt: &Runtime, cfg: &TrainConfig, quiet: bool,
 ) -> Result<TrainOutcome> {
     let mut rng = Pcg64::new(cfg.seed, 0x7261_696e); // "rain"
-    let mut algo = build_algo(rt, cfg, &mut rng)?;
-    let evaluator = Evaluator::default_suite(
-        cfg.variant.b, cfg.eval_trials, 20, cfg.max_episode_steps,
-    );
-    let stu_apply = rt.load(&cfg.student_apply_artifact())?;
+    let mut algo = build_algo_for(family, rt, cfg, &mut rng)?;
+    let evaluator = for_family(family, cfg, cfg.eval_trials, 20);
+    let stu_apply = rt.load_scoped(
+        cfg.env.artifact_prefix(),
+        &cfg.student_apply_artifact(),
+    )?;
 
-    let run_dir = std::path::Path::new(&cfg.out_dir)
-        .join(format!("{}_s{}", cfg.algo.name(), cfg.seed));
+    let run_dir = std::path::Path::new(&cfg.out_dir).join(cfg.run_name());
     let mut csv = CsvSink::create(
         &run_dir.join("metrics.csv"),
         &[
@@ -144,7 +194,7 @@ pub fn train(
             let policy = Policy {
                 apply: stu_apply.clone(),
                 params: algo.student_params(),
-                num_actions: crate::env::maze::NUM_ACTIONS,
+                num_actions: evaluator.num_actions(),
             };
             let report = evaluator.run(&policy, &mut rng)?;
             last_eval = (report.mean_solve_rate, report.iqm_solve_rate);
@@ -195,7 +245,7 @@ pub fn train(
     let policy = Policy {
         apply: stu_apply,
         params: algo.student_params(),
-        num_actions: crate::env::maze::NUM_ACTIONS,
+        num_actions: evaluator.num_actions(),
     };
     let final_eval = evaluator.run(&policy, &mut rng)?;
     Ok(TrainOutcome {

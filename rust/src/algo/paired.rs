@@ -1,11 +1,12 @@
-//! PAIRED (paper §5.3, Dennis et al. 2020).
+//! PAIRED (paper §5.3, Dennis et al. 2020), generic over the environment
+//! family.
 //!
-//! Three agents: an *adversary* policy that builds levels in the editor
-//! environment, and two students — *protagonist* and *antagonist* — that
-//! play them. Per cycle:
+//! Three agents: an *adversary* policy that builds levels in the family's
+//! editor environment, and two students — *protagonist* and *antagonist* —
+//! that play them. Per cycle:
 //!
 //!   1. roll the adversary in the editor env (fresh noise z per column) to
-//!      generate B levels;
+//!      generate B levels (extracted via `EnvFamily::editor_level`);
 //!   2. roll both students on those levels (AutoReplay: several episodes
 //!      sharpen the estimates);
 //!   3. regret(level) = max antagonist terminal reward − mean protagonist
@@ -20,20 +21,19 @@ use anyhow::Result;
 
 use super::{CycleMetrics, UedAlgorithm};
 use crate::config::TrainConfig;
-use crate::env::editor::{EditorEnv, EditorState, EditorTask};
-use crate::env::level::{Level, GRID_CELLS};
-use crate::env::maze::{MazeEnv, NUM_ACTIONS};
+use crate::env::editor::{EditorState, EditorTask};
 use crate::env::wrappers::AutoReplayWrapper;
-use crate::env::UnderspecifiedEnv;
+use crate::env::{EnvFamily, UnderspecifiedEnv};
 use crate::ppo::{LrSchedule, PpoTrainer};
 use crate::rollout::{Policy, RolloutEngine, Trajectory};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
 /// The PAIRED driver.
-pub struct PairedAlgo {
-    editor_env: EditorEnv,
-    student_env: AutoReplayWrapper<MazeEnv>,
+pub struct PairedAlgo<F: EnvFamily> {
+    family: F,
+    editor_env: F::Editor,
+    student_env: AutoReplayWrapper<F::Env>,
     adversary: PpoTrainer,
     protagonist: PpoTrainer,
     antagonist: PpoTrainer,
@@ -44,32 +44,48 @@ pub struct PairedAlgo {
     editor_traj: Trajectory,
     prot_traj: Trajectory,
     ant_traj: Trajectory,
+    adv_num_actions: usize,
+    stu_num_actions: usize,
     b: usize,
     /// Mean regret of the last cycle (logged).
     pub last_mean_regret: f64,
 }
 
-impl PairedAlgo {
-    pub fn new(rt: &Runtime, cfg: &TrainConfig) -> Result<PairedAlgo> {
+impl<F: EnvFamily> PairedAlgo<F> {
+    pub fn new(family: F, rt: &Runtime, cfg: &TrainConfig) -> Result<PairedAlgo<F>> {
         let schedule = LrSchedule {
             lr0: cfg.lr,
             anneal: cfg.anneal_lr,
             total_updates: cfg.num_cycles(),
         };
         let seed = cfg.seed as i32;
+        let prefix = cfg.env.artifact_prefix();
         let adversary = PpoTrainer::new(
-            rt, "adversary", &cfg.adversary_train_artifact(), seed, schedule,
+            rt,
+            "adversary",
+            &rt.resolve_name(prefix, &cfg.adversary_train_artifact()),
+            seed,
+            schedule,
         )?;
         let protagonist = PpoTrainer::new(
-            rt, "student", &cfg.student_train_artifact(), seed.wrapping_add(1), schedule,
+            rt,
+            "student",
+            &rt.resolve_name(prefix, &cfg.student_train_artifact()),
+            seed.wrapping_add(1),
+            schedule,
         )?;
         let antagonist = PpoTrainer::new(
-            rt, "student", &cfg.student_train_artifact(), seed.wrapping_add(2), schedule,
+            rt,
+            "student",
+            &rt.resolve_name(prefix, &cfg.student_train_artifact()),
+            seed.wrapping_add(2),
+            schedule,
         )?;
-        let adv_apply = rt.load(&cfg.adversary_apply_artifact())?;
-        let stu_apply = rt.load(&cfg.student_apply_artifact())?;
-        let editor_env = EditorEnv::new(cfg.editor_horizon());
-        let student_env = AutoReplayWrapper::new(MazeEnv::new(cfg.max_episode_steps));
+        let adv_apply = rt.load_scoped(prefix, &cfg.adversary_apply_artifact())?;
+        let stu_apply = rt.load_scoped(prefix, &cfg.student_apply_artifact())?;
+        let params = cfg.env_params();
+        let editor_env = family.make_editor(&params);
+        let student_env = AutoReplayWrapper::new(family.make_env(&params));
         let (t_adv, b) = adversary.rollout_shape();
         let (t, b2) = protagonist.rollout_shape();
         anyhow::ensure!(b == b2, "adversary/student batch mismatch: {b} vs {b2}");
@@ -83,7 +99,10 @@ impl PairedAlgo {
         let editor_traj = Trajectory::new(t_adv, b, &editor_env.obs_components());
         let prot_traj = Trajectory::new(t, b, &student_env.obs_components());
         let ant_traj = Trajectory::new(t, b, &student_env.obs_components());
+        let adv_num_actions = editor_env.num_actions();
+        let stu_num_actions = student_env.num_actions();
         Ok(PairedAlgo {
+            family,
             editor_env,
             student_env,
             adversary,
@@ -96,6 +115,8 @@ impl PairedAlgo {
             editor_traj,
             prot_traj,
             ant_traj,
+            adv_num_actions,
+            stu_num_actions,
             b,
             last_mean_regret: 0.0,
         })
@@ -108,7 +129,7 @@ impl PairedAlgo {
 
     /// Roll the adversary in the editor env; returns the generated levels
     /// (the editor trajectory stays in `self.editor_traj` for training).
-    fn generate_levels(&mut self, rng: &mut Pcg64) -> Result<Vec<Level>> {
+    fn generate_levels(&mut self, rng: &mut Pcg64) -> Result<Vec<F::Level>> {
         let mut states: Vec<EditorState> = (0..self.b)
             .map(|_| {
                 let task = EditorTask::sample(rng);
@@ -118,18 +139,18 @@ impl PairedAlgo {
         let policy = Policy {
             apply: self.adv_apply.clone(),
             params: &self.adversary.params.params,
-            num_actions: GRID_CELLS,
+            num_actions: self.adv_num_actions,
         };
         self.editor_engine.collect(
             &self.editor_env, &mut states, &policy, &mut self.editor_traj, rng,
         )?;
-        Ok(states.iter().map(|s| s.to_level()).collect())
+        Ok(states.iter().map(|s| self.family.editor_level(s)).collect())
     }
 
     fn student_rollout(
-        engine: &mut RolloutEngine, env: &AutoReplayWrapper<MazeEnv>,
+        engine: &mut RolloutEngine, env: &AutoReplayWrapper<F::Env>,
         trainer: &PpoTrainer, apply: &std::rc::Rc<crate::runtime::executor::Executable>,
-        traj: &mut Trajectory, levels: &[Level], rng: &mut Pcg64,
+        traj: &mut Trajectory, levels: &[F::Level], num_actions: usize, rng: &mut Pcg64,
     ) -> Result<()> {
         let mut states: Vec<_> = levels
             .iter()
@@ -138,13 +159,13 @@ impl PairedAlgo {
         let policy = Policy {
             apply: apply.clone(),
             params: &trainer.params.params,
-            num_actions: NUM_ACTIONS,
+            num_actions,
         };
         engine.collect(env, &mut states, &policy, traj, rng)
     }
 }
 
-impl UedAlgorithm for PairedAlgo {
+impl<F: EnvFamily> UedAlgorithm for PairedAlgo<F> {
     fn name(&self) -> &'static str {
         "paired"
     }
@@ -156,11 +177,11 @@ impl UedAlgorithm for PairedAlgo {
         // 2. both students play them
         Self::student_rollout(
             &mut self.student_engine, &self.student_env, &self.protagonist,
-            &self.stu_apply, &mut self.prot_traj, &levels, rng,
+            &self.stu_apply, &mut self.prot_traj, &levels, self.stu_num_actions, rng,
         )?;
         Self::student_rollout(
             &mut self.student_engine, &self.student_env, &self.antagonist,
-            &self.stu_apply, &mut self.ant_traj, &levels, rng,
+            &self.stu_apply, &mut self.ant_traj, &levels, self.stu_num_actions, rng,
         )?;
 
         // 3. regret per level: max antagonist − mean protagonist terminal

@@ -1,7 +1,9 @@
 //! The replay-based UED family (paper §5.1): PLR, robust PLR (PLR⊥), and
 //! ACCEL, as one driver with three subroutines — `on_new_levels`,
 //! `on_replay_levels`, `on_mutate_levels` — selected each cycle by the
-//! Figure-1 meta-policy.
+//! Figure-1 meta-policy. Generic over the environment family: level
+//! generation, mutation, fingerprinting, and buffering all go through the
+//! `LevelGenerator`/`LevelMutator`/`LevelMeta` capability traits.
 //!
 //! * PLR       (p = 0.5, q = 0): trains on new *and* replay cycles.
 //! * PLR⊥      (p = 0.5, q = 0): trains on replay cycles only.
@@ -17,43 +19,40 @@ use super::meta_policy::{Cycle, MetaPolicy};
 use super::scoring::{LevelExtra, Scorer};
 use super::{CycleMetrics, UedAlgorithm};
 use crate::config::{Algo, TrainConfig};
-use crate::env::gen::LevelGenerator;
-use crate::env::level::Level;
-use crate::env::maze::{MazeEnv, NUM_ACTIONS};
-use crate::env::mutate::Mutator;
 use crate::env::wrappers::{AutoReplayWrapper, ReplayState};
-use crate::env::UnderspecifiedEnv;
+use crate::env::{EnvFamily, LevelGenerator, LevelMeta, LevelMutator, UnderspecifiedEnv};
 use crate::level_sampler::LevelSampler;
 use crate::ppo::{LrSchedule, PpoTrainer};
 use crate::rollout::{Policy, RolloutEngine, Trajectory};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
-type PlrEnv = AutoReplayWrapper<MazeEnv>;
+type PlrEnv<F> = AutoReplayWrapper<<F as EnvFamily>::Env>;
 
 /// PLR / PLR⊥ / ACCEL driver.
-pub struct PlrAlgo {
+pub struct PlrAlgo<F: EnvFamily> {
     /// Train on `on_new_levels` cycles too (plain PLR)?
     train_on_new: bool,
     /// Enable mutation cycles (ACCEL)?
     name: &'static str,
-    gen: LevelGenerator,
-    mutator: Mutator,
+    gen: F::Generator,
+    mutator: F::Mutator,
     meta: MetaPolicy,
-    pub sampler: LevelSampler<Level, LevelExtra>,
-    env: PlrEnv,
+    pub sampler: LevelSampler<F::Level, LevelExtra>,
+    env: PlrEnv<F>,
     engine: RolloutEngine,
     traj: Trajectory,
     trainer: PpoTrainer,
     scorer: Scorer,
     apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    num_actions: usize,
     /// Slot indices of the most recent replay batch (mutation parents).
     last_replayed: Vec<usize>,
     b: usize,
 }
 
-impl PlrAlgo {
-    pub fn new(rt: &Runtime, cfg: &TrainConfig) -> Result<PlrAlgo> {
+impl<F: EnvFamily> PlrAlgo<F> {
+    pub fn new(family: F, rt: &Runtime, cfg: &TrainConfig) -> Result<PlrAlgo<F>> {
         let (train_on_new, name) = match cfg.algo {
             Algo::Plr => (true, "plr"),
             Algo::RobustPlr => (false, "robust_plr"),
@@ -65,20 +64,30 @@ impl PlrAlgo {
             anneal: cfg.anneal_lr,
             total_updates: cfg.num_cycles(),
         };
+        let prefix = cfg.env.artifact_prefix();
         let trainer = PpoTrainer::new(
-            rt, "student", &cfg.student_train_artifact(), cfg.seed as i32, schedule,
+            rt,
+            "student",
+            &rt.resolve_name(prefix, &cfg.student_train_artifact()),
+            cfg.seed as i32,
+            schedule,
         )?;
-        let apply = rt.load(&cfg.student_apply_artifact())?;
-        let scorer = Scorer::new(rt.load(&cfg.score_artifact())?, cfg.score_fn)?;
-        let env = AutoReplayWrapper::new(MazeEnv::new(cfg.max_episode_steps));
+        let apply = rt.load_scoped(prefix, &cfg.student_apply_artifact())?;
+        let scorer = Scorer::new(
+            rt.load_scoped(prefix, &cfg.score_artifact())?,
+            cfg.score_fn,
+        )?;
+        let params = cfg.env_params();
+        let env = AutoReplayWrapper::new(family.make_env(&params));
         let (t, b) = trainer.rollout_shape();
         let engine = RolloutEngine::new(&env, b);
         let traj = Trajectory::new(t, b, &env.obs_components());
+        let num_actions = env.num_actions();
         Ok(PlrAlgo {
             train_on_new,
             name,
-            gen: LevelGenerator::new(cfg.max_walls),
-            mutator: Mutator { num_edits: cfg.num_edits, ..Default::default() },
+            gen: family.make_generator(&params),
+            mutator: family.make_mutator(&params),
             meta: MetaPolicy::new(cfg.replay_prob, cfg.mutation_prob),
             sampler: LevelSampler::new(cfg.sampler_config()),
             env,
@@ -87,22 +96,23 @@ impl PlrAlgo {
             trainer,
             scorer,
             apply,
+            num_actions,
             last_replayed: Vec::new(),
             b,
         })
     }
 
     fn rollout(
-        &mut self, levels: &[Level], rng: &mut Pcg64,
-    ) -> Result<Vec<ReplayState<MazeEnv>>> {
-        let mut states: Vec<ReplayState<MazeEnv>> = levels
+        &mut self, levels: &[F::Level], rng: &mut Pcg64,
+    ) -> Result<Vec<ReplayState<F::Env>>> {
+        let mut states: Vec<ReplayState<F::Env>> = levels
             .iter()
             .map(|l| self.env.reset_to_level(l, rng))
             .collect();
         let policy = Policy {
             apply: self.apply.clone(),
             params: &self.trainer.params.params,
-            num_actions: NUM_ACTIONS,
+            num_actions: self.num_actions,
         };
         self.engine.collect(&self.env, &mut states, &policy, &mut self.traj, rng)?;
         Ok(states)
@@ -111,7 +121,7 @@ impl PlrAlgo {
     /// `on_new_levels`: random levels → rollout → score → insert;
     /// plain PLR also trains on the trajectories.
     fn on_new_levels(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
-        let levels = self.gen.generate_batch(self.b, rng);
+        let levels = self.gen.sample_batch(self.b, rng);
         self.rollout(&levels, rng)?;
         let batch = self.scorer.score(&self.traj, &vec![0.0; self.b])?;
         let fingerprints: Vec<u64> = levels.iter().map(|l| l.fingerprint()).collect();
@@ -134,7 +144,8 @@ impl PlrAlgo {
         while idx.len() < self.b {
             idx.push(idx[idx.len() % indices.len().max(1)]);
         }
-        let levels: Vec<Level> = idx.iter().map(|&i| self.sampler.get(i).level).collect();
+        let levels: Vec<F::Level> =
+            idx.iter().map(|&i| self.sampler.get(i).level.clone()).collect();
         let prev_max: Vec<f32> = idx
             .iter()
             .map(|&i| self.sampler.get(i).extra.max_return)
@@ -154,10 +165,10 @@ impl PlrAlgo {
     /// insert children (no policy update — ACCEL evaluates children only).
     fn on_mutate_levels(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
         debug_assert!(!self.last_replayed.is_empty());
-        let parents: Vec<Level> = self
+        let parents: Vec<F::Level> = self
             .last_replayed
             .iter()
-            .map(|&i| self.sampler.get(i).level)
+            .map(|&i| self.sampler.get(i).level.clone())
             .collect();
         let children = self.mutator.mutate_batch(&parents, rng);
         self.rollout(&children, rng)?;
@@ -171,7 +182,7 @@ impl PlrAlgo {
     }
 }
 
-impl UedAlgorithm for PlrAlgo {
+impl<F: EnvFamily> UedAlgorithm for PlrAlgo<F> {
     fn name(&self) -> &'static str {
         self.name
     }

@@ -1,14 +1,17 @@
 //! Training configuration: the paper's Table 3 hyperparameters plus
-//! algorithm selection, resolvable from CLI flags.
+//! algorithm *and environment* selection, resolvable from CLI flags
+//! (`--algo` picks the UED method, `--env` picks the [`EnvId`] family).
 //!
 //! PPO-loss constants (γ, λ, clip, epochs, …) are *baked into the
 //! artifacts* at AOT time and are therefore not here; this config owns
 //! everything the Rust coordinator decides at runtime: learning-rate
 //! schedule, level-sampler settings, meta-policy probabilities, rollout
-//! variant, budgets and evaluation cadence.
+//! variant, budgets and evaluation cadence, and the env-layer knobs it
+//! hands to the selected family via [`TrainConfig::env_params`].
 
 use anyhow::{bail, Result};
 
+use crate::env::{EnvId, EnvParams};
 use crate::level_sampler::prioritization::Prioritization;
 use crate::level_sampler::SamplerConfig;
 use crate::util::cli::Args;
@@ -95,6 +98,8 @@ impl Variant {
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub algo: Algo,
+    /// Which environment family to train in (`--env`).
+    pub env: EnvId,
     pub seed: u64,
     pub variant: Variant,
     /// Total environment-interaction budget (paper: 245,760,000).
@@ -104,7 +109,10 @@ pub struct TrainConfig {
     pub anneal_lr: bool,
     /// Base DR distribution wall budget (paper Figure 3: 25 or 60).
     pub max_walls: usize,
-    /// Maze episode horizon.
+    /// Base DR distribution hazard-tile budget (lava family; the maze
+    /// ignores it).
+    pub max_hazards: usize,
+    /// Student episode horizon.
     pub max_episode_steps: usize,
 
     // -- PLR family (Table 3) ------------------------------------------------
@@ -140,12 +148,14 @@ impl TrainConfig {
     pub fn defaults(algo: Algo) -> TrainConfig {
         TrainConfig {
             algo,
+            env: EnvId::Maze,
             seed: 0,
             variant: VARIANT_STD,
             env_steps_budget: 245_760_000,
             lr: 1e-4,
             anneal_lr: true,
             max_walls: 60,
+            max_hazards: 12,
             max_episode_steps: 250,
             replay_prob: if algo == Algo::Accel { 0.8 } else { 0.5 },
             buffer_size: 4000,
@@ -168,12 +178,14 @@ impl TrainConfig {
     pub fn from_args(args: &Args) -> Result<TrainConfig> {
         let algo = Algo::parse(&args.get_str("algo", "dr"))?;
         let mut c = TrainConfig::defaults(algo);
+        c.env = EnvId::parse(&args.get_str("env", c.env.name()))?;
         c.seed = args.get_u64("seed", c.seed);
         c.variant = Variant::parse(&args.get_str("variant", c.variant.name))?;
         c.env_steps_budget = args.get_u64("env-steps", c.env_steps_budget);
         c.lr = args.get_f64("lr", c.lr);
         c.anneal_lr = args.get_bool("anneal-lr", c.anneal_lr);
         c.max_walls = args.get_usize("max-walls", c.max_walls);
+        c.max_hazards = args.get_usize("max-hazards", c.max_hazards);
         c.max_episode_steps = args.get_usize("max-episode-steps", c.max_episode_steps);
         c.replay_prob = args.get_f64("replay-prob", c.replay_prob);
         c.buffer_size = args.get_usize("buffer-size", c.buffer_size);
@@ -212,6 +224,27 @@ impl TrainConfig {
         (self.env_steps_budget / self.env_steps_per_cycle()).max(1) as usize
     }
 
+    /// The env-layer knobs handed to the selected [`EnvId`] family.
+    pub fn env_params(&self) -> EnvParams {
+        EnvParams {
+            max_episode_steps: self.max_episode_steps,
+            max_walls: self.max_walls,
+            max_hazards: self.max_hazards,
+            num_edits: self.num_edits,
+            editor_steps: self.editor_horizon(),
+        }
+    }
+
+    /// Run-directory name. The maze keeps the legacy `{algo}_s{seed}` so
+    /// existing tooling keeps working; other families are scoped as
+    /// `{env}_{algo}_s{seed}`.
+    pub fn run_name(&self) -> String {
+        match self.env {
+            EnvId::Maze => format!("{}_s{}", self.algo.name(), self.seed),
+            e => format!("{}_{}_s{}", e.name(), self.algo.name(), self.seed),
+        }
+    }
+
     /// Sampler config view.
     pub fn sampler_config(&self) -> SamplerConfig {
         SamplerConfig {
@@ -235,6 +268,12 @@ impl TrainConfig {
     }
 
     // -- artifact name resolution --------------------------------------------
+    //
+    // Names are geometry-keyed (T/B); the runtime additionally prefers an
+    // env-scoped `"{env}_{name}"` when `env.artifact_prefix()` is set and
+    // the manifest carries one (see `Runtime::resolve_name`), falling back
+    // to these shared names — the lava family matches the maze observation
+    // geometry exactly, so the shared artifacts serve both.
 
     pub fn student_train_artifact(&self) -> String {
         format!("student_train_step_t{}_b{}", self.variant.t, self.variant.b)
@@ -305,9 +344,23 @@ mod tests {
     fn cli_overrides() {
         let c = parse("--algo accel --seed 7 --variant small --env-steps 100000 --max-walls 25");
         assert_eq!(c.algo, Algo::Accel);
+        assert_eq!(c.env, EnvId::Maze, "maze is the default family");
         assert_eq!(c.seed, 7);
         assert_eq!(c.variant.b, 8);
         assert_eq!(c.max_walls, 25);
+    }
+
+    #[test]
+    fn env_selection_and_run_names() {
+        let c = parse("--algo dr");
+        assert_eq!(c.run_name(), "dr_s0", "maze keeps the legacy run name");
+        let c = parse("--algo accel --env lava --seed 3 --max-hazards 6");
+        assert_eq!(c.env, EnvId::Lava);
+        assert_eq!(c.max_hazards, 6);
+        assert_eq!(c.run_name(), "lava_accel_s3");
+        let p = c.env_params();
+        assert_eq!(p.max_hazards, 6);
+        assert_eq!(p.editor_steps, c.editor_horizon());
     }
 
     #[test]

@@ -1,0 +1,173 @@
+//! Reusable env-trait conformance suite.
+//!
+//! Every [`EnvFamily`] must uphold the same contract for the generic
+//! training stack to be correct: deterministic `reset_to_level` under a
+//! fixed RNG, `observe` writing exactly `obs_len` values, `obs_components`
+//! summing to `obs_len`, generators emitting structurally valid levels,
+//! mutation preserving validity, round-trippable level encodings, and an
+//! editor whose finished episodes yield valid levels. The suite is plain
+//! library code (not test-gated) so unit tests, integration tests, and
+//! future env PRs can all run it against any family:
+//!
+//! ```no_run
+//! # // no_run: doctest binaries don't get the xla rpath link flag
+//! use jaxued::env::conformance::check_family_conformance;
+//! use jaxued::env::{EnvParams, MazeFamily};
+//! check_family_conformance(MazeFamily, &EnvParams::default(), 100);
+//! ```
+
+use super::editor::EditorTask;
+use super::{
+    EnvFamily, EnvParams, LevelGenerator, LevelMeta, LevelMutator, UnderspecifiedEnv,
+};
+use crate::util::rng::Pcg64;
+
+/// Sentinel poured into observation buffers to detect unwritten slots.
+const SENTINEL: f32 = -7_777.25;
+
+/// Run the full conformance suite against `family` with `cases` sampled
+/// levels. Panics (with a labelled message) on the first violation.
+pub fn check_family_conformance<F: EnvFamily>(family: F, params: &EnvParams, cases: usize) {
+    let id = family.id();
+    let env = family.make_env(params);
+    let gen = family.make_generator(params);
+    let mutator = family.make_mutator(params);
+
+    // -- observation geometry ------------------------------------------------
+    let comps = env.obs_components();
+    assert!(!comps.is_empty(), "[{id}] obs_components empty");
+    assert_eq!(
+        comps.iter().sum::<usize>(),
+        env.obs_len(),
+        "[{id}] obs_components must sum to obs_len"
+    );
+    assert!(env.num_actions() > 0, "[{id}] num_actions must be positive");
+
+    let mut rng = Pcg64::new(0xC0FF_EE00, 1);
+    for case in 0..cases {
+        // -- generator contract ----------------------------------------------
+        let level = gen.sample_level(&mut rng);
+        assert!(level.is_valid(), "[{id}] case {case}: generated level invalid");
+        assert!(
+            level.complexity() >= 0.0,
+            "[{id}] case {case}: negative complexity"
+        );
+
+        // -- encoding round-trip + fingerprint stability ---------------------
+        let bytes = level.encode();
+        let back = <F::Level as LevelMeta>::decode(&bytes)
+            .unwrap_or_else(|e| panic!("[{id}] case {case}: decode failed: {e}"));
+        assert_eq!(
+            back.encode(),
+            bytes,
+            "[{id}] case {case}: encode/decode not a round-trip"
+        );
+        assert_eq!(
+            back.fingerprint(),
+            level.fingerprint(),
+            "[{id}] case {case}: fingerprint unstable across encode/decode"
+        );
+
+        // -- deterministic reset under a fixed RNG ---------------------------
+        let seed = 0xAB00 + case as u64;
+        let sa = env.reset_to_level(&level, &mut Pcg64::seed_from_u64(seed));
+        let sb = env.reset_to_level(&level, &mut Pcg64::seed_from_u64(seed));
+        let mut oa = vec![SENTINEL; env.obs_len()];
+        let mut ob = vec![SENTINEL; env.obs_len()];
+        env.observe(&sa, &mut oa);
+        env.observe(&sb, &mut ob);
+        assert_eq!(oa, ob, "[{id}] case {case}: reset_to_level not deterministic");
+
+        // -- observe fills exactly obs_len -----------------------------------
+        assert!(
+            oa.iter().all(|&v| v != SENTINEL),
+            "[{id}] case {case}: observe left unwritten slots"
+        );
+        assert!(
+            oa.iter().all(|v| v.is_finite()),
+            "[{id}] case {case}: non-finite observation values"
+        );
+
+        // -- stepping is RNG-deterministic and observation stays well-formed -
+        let mut s1 = env.reset_to_level(&level, &mut Pcg64::seed_from_u64(seed));
+        let mut s2 = env.reset_to_level(&level, &mut Pcg64::seed_from_u64(seed));
+        let mut r1 = Pcg64::seed_from_u64(seed ^ 0x51E9);
+        let mut r2 = Pcg64::seed_from_u64(seed ^ 0x51E9);
+        for step in 0..8 {
+            let action = (case + step) % env.num_actions();
+            let t1 = env.step(&mut s1, action, &mut r1);
+            let t2 = env.step(&mut s2, action, &mut r2);
+            assert_eq!(t1, t2, "[{id}] case {case}: step not deterministic");
+            assert!(t1.reward.is_finite(), "[{id}] case {case}: non-finite reward");
+            if t1.done {
+                break;
+            }
+        }
+        oa.fill(SENTINEL);
+        env.observe(&s1, &mut oa);
+        assert!(
+            oa.iter().all(|&v| v != SENTINEL && v.is_finite()),
+            "[{id}] case {case}: post-step observation ill-formed"
+        );
+
+        // -- mutation preserves validity -------------------------------------
+        let child = mutator.mutate_level(&level, &mut rng);
+        assert!(
+            child.is_valid(),
+            "[{id}] case {case}: mutation produced an invalid level"
+        );
+    }
+
+    // -- solvable levels exist in the base distribution ----------------------
+    let mut rng = Pcg64::new(0xC0FF_EE01, 2);
+    let solvable = (0..200)
+        .filter(|_| gen.sample_level(&mut rng).is_solvable())
+        .count();
+    assert!(
+        solvable > 0,
+        "[{id}] base distribution produced no solvable level in 200 draws"
+    );
+
+    // -- editor episodes yield valid levels ----------------------------------
+    check_editor_conformance(family, params, (cases / 4).max(4));
+
+    // -- holdout suite is valid and solvable ---------------------------------
+    for (name, level) in family.holdout(8) {
+        assert!(level.is_valid(), "[{id}] holdout {name} invalid");
+        assert!(level.is_solvable(), "[{id}] holdout {name} unsolvable");
+    }
+}
+
+/// Editor sub-suite: random full episodes must produce valid levels, and
+/// the editor's observation geometry must be internally consistent.
+pub fn check_editor_conformance<F: EnvFamily>(family: F, params: &EnvParams, episodes: usize) {
+    let id = family.id();
+    let editor = family.make_editor(params);
+    assert_eq!(
+        editor.obs_components().iter().sum::<usize>(),
+        editor.obs_len(),
+        "[{id}] editor obs_components must sum to obs_len"
+    );
+    let mut rng = Pcg64::new(0xC0FF_EE02, 3);
+    for ep in 0..episodes {
+        let task = EditorTask::sample(&mut rng);
+        let mut s = editor.reset_to_level(&task, &mut rng);
+        let mut obs = vec![SENTINEL; editor.obs_len()];
+        loop {
+            editor.observe(&s, &mut obs);
+            assert!(
+                obs.iter().all(|&v| v != SENTINEL && v.is_finite()),
+                "[{id}] editor ep {ep}: ill-formed observation"
+            );
+            let action = rng.gen_range(editor.num_actions());
+            if editor.step(&mut s, action, &mut rng).done {
+                break;
+            }
+        }
+        let level = family.editor_level(&s);
+        assert!(
+            level.is_valid(),
+            "[{id}] editor ep {ep}: finished episode yielded an invalid level"
+        );
+    }
+}

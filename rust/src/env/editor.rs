@@ -1,13 +1,19 @@
-//! The maze-*editor* environment (paper §4): the UPOMDP in which the PAIRED
-//! adversary acts. The adversary policy sequentially constructs a maze
+//! The level-*editor* environment (paper §4): the UPOMDP in which the
+//! PAIRED adversary acts. The adversary policy sequentially constructs a
 //! level via atomic modifications; its episode return is set externally to
 //! the estimated regret (paper §5.3), so `step` always yields zero reward.
 //!
 //! Protocol (Dennis et al., 2020): each action is a flat cell index in the
 //! 13×13 grid. Step 0 places the agent (with a random facing drawn at
 //! placement), step 1 places the goal (deterministically displaced if it
-//! collides with the agent), and every later step toggles a wall (no-op on
-//! the agent/goal cells). The episode ends after `max_steps` edits.
+//! collides with the agent), and every later step cycles the tile at the
+//! targeted cell through the family's palette (no-op on the agent/goal
+//! cells). With the default two-tile palette a cell cycles empty ↔ wall
+//! (the classic wall toggle); the lava family's three-tile palette cycles
+//! empty → wall → lava → empty. Both palettes share the 169-action space
+//! and the observation layout (lava reads as 0.5 in the wall channel), so
+//! one compiled adversary artifact drives every family. The episode ends
+//! after `max_steps` edits.
 //!
 //! The editor's *level* is the conditioning noise vector z — PAIRED samples
 //! a fresh z per generated level so the adversary can produce diverse
@@ -18,8 +24,13 @@ use super::{StepResult, UnderspecifiedEnv};
 use crate::util::rng::Pcg64;
 
 pub const NOISE_DIM: usize = 16;
-pub const GRID_LEN: usize = GRID_CELLS * 3; // {wall, agent, goal} one-hot
+pub const GRID_LEN: usize = GRID_CELLS * 3; // {tile, agent, goal} one-hot
 pub const EDITOR_OBS_LEN: usize = GRID_LEN + 1 + NOISE_DIM;
+
+/// Wall intensity in the editor's tile channel.
+pub const TILE_WALL: f32 = 1.0;
+/// Hazard (lava) intensity in the editor's tile channel.
+pub const TILE_HAZARD: f32 = 0.5;
 
 /// The editor env's underspecified parameter: the conditioning noise.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -37,10 +48,12 @@ impl EditorTask {
     }
 }
 
-/// Editor state: the partially-built level.
+/// Editor state: the partially-built level. Walls and hazards are disjoint
+/// tile sets; the maze palette never populates `hazards`.
 #[derive(Clone, Debug)]
 pub struct EditorState {
     pub walls: WallSet,
+    pub hazards: WallSet,
     pub agent: Option<((u8, u8), Dir)>,
     pub goal: Option<(u8, u8)>,
     pub t: u32,
@@ -48,12 +61,19 @@ pub struct EditorState {
 }
 
 impl EditorState {
-    /// Extract the constructed level. Valid once t >= 2.
-    pub fn to_level(&self) -> Level {
-        let ((apos, adir), gpos) = match (self.agent, self.goal) {
+    /// The placed agent and goal. Panics before both placements (t < 2).
+    pub fn placements(&self) -> (((u8, u8), Dir), (u8, u8)) {
+        match (self.agent, self.goal) {
             (Some(a), Some(g)) => (a, g),
-            _ => panic!("to_level before agent+goal placed (t={})", self.t),
-        };
+            _ => panic!("level extraction before agent+goal placed (t={})", self.t),
+        }
+    }
+
+    /// Extract the constructed maze level (two-tile palette). Valid once
+    /// t >= 2. Hazard tiles, if any, are dropped — use the owning family's
+    /// `editor_level` for hazard-aware extraction.
+    pub fn to_level(&self) -> Level {
+        let ((apos, adir), gpos) = self.placements();
         let mut walls = self.walls;
         // Placement protocol guarantees agent/goal cells are wall-free, but
         // keep the invariant explicit.
@@ -63,17 +83,26 @@ impl EditorState {
     }
 }
 
-/// The maze-editor UPOMDP.
+/// The level-editor UPOMDP, parameterized by the tile palette size.
 #[derive(Clone, Copy, Debug)]
 pub struct EditorEnv {
     /// Total edit budget (the paper's PAIRED-25 / PAIRED-60 editor steps).
     pub max_steps: usize,
+    /// Palette size including empty: 2 = {empty, wall} (maze),
+    /// 3 = {empty, wall, hazard} (lava).
+    pub tile_kinds: u8,
 }
 
 impl EditorEnv {
+    /// The classic maze editor: empty ↔ wall toggling.
     pub fn new(max_steps: usize) -> Self {
+        Self::with_palette(max_steps, 2)
+    }
+
+    pub fn with_palette(max_steps: usize, tile_kinds: u8) -> Self {
         assert!(max_steps >= 2, "need at least agent+goal placement steps");
-        EditorEnv { max_steps }
+        assert!((2..=3).contains(&tile_kinds), "palette must be 2 or 3 tiles");
+        EditorEnv { max_steps, tile_kinds }
     }
 }
 
@@ -93,6 +122,7 @@ impl UnderspecifiedEnv for EditorEnv {
     fn reset_to_level(&self, task: &EditorTask, _rng: &mut Pcg64) -> EditorState {
         EditorState {
             walls: WallSet::empty(),
+            hazards: WallSet::empty(),
             agent: None,
             goal: None,
             t: 0,
@@ -121,7 +151,19 @@ impl UnderspecifiedEnv for EditorEnv {
                 let apos = s.agent.expect("agent placed").0;
                 let gpos = s.goal.expect("goal placed");
                 if pos != apos && pos != gpos {
-                    s.walls.toggle(pos.0 as usize, pos.1 as usize);
+                    let (x, y) = (pos.0 as usize, pos.1 as usize);
+                    // Cycle the tile through the palette:
+                    // empty → wall → (hazard →) empty.
+                    if s.walls.get(x, y) {
+                        s.walls.set(x, y, false);
+                        if self.tile_kinds >= 3 {
+                            s.hazards.set(x, y, true);
+                        }
+                    } else if s.hazards.get(x, y) {
+                        s.hazards.set(x, y, false);
+                    } else {
+                        s.walls.set(x, y, true);
+                    }
                 }
             }
         }
@@ -136,7 +178,9 @@ impl UnderspecifiedEnv for EditorEnv {
             for x in 0..GRID_W {
                 let base = (y * GRID_W + x) * 3;
                 if s.walls.get(x, y) {
-                    obs[base] = 1.0;
+                    obs[base] = TILE_WALL;
+                } else if s.hazards.get(x, y) {
+                    obs[base] = TILE_HAZARD;
                 }
             }
         }
@@ -183,6 +227,24 @@ mod tests {
         assert!(s.walls.get(40 % GRID_W, 40 / GRID_W));
         e.step(&mut s, 40, &mut r); // toggle back
         assert!(!s.walls.get(40 % GRID_W, 40 / GRID_W));
+        assert_eq!(s.hazards.count(), 0, "two-tile palette never places hazards");
+    }
+
+    #[test]
+    fn three_tile_palette_cycles_through_hazard() {
+        let e = EditorEnv::with_palette(8, 3);
+        let mut r = rng();
+        let mut s = e.reset_to_level(&EditorTask::sample(&mut r), &mut r);
+        e.step(&mut s, 0, &mut r);
+        e.step(&mut s, 1, &mut r);
+        let c = 40;
+        e.step(&mut s, c, &mut r); // empty → wall
+        assert!(s.walls.get(c % GRID_W, c / GRID_W));
+        e.step(&mut s, c, &mut r); // wall → hazard
+        assert!(!s.walls.get(c % GRID_W, c / GRID_W));
+        assert!(s.hazards.get(c % GRID_W, c / GRID_W));
+        e.step(&mut s, c, &mut r); // hazard → empty
+        assert!(!s.hazards.get(c % GRID_W, c / GRID_W));
     }
 
     #[test]
@@ -232,9 +294,23 @@ mod tests {
         e.observe(&s, &mut obs);
         assert_eq!(obs[0 * 3 + 1], 1.0, "agent channel");
         assert_eq!(obs[168 * 3 + 2], 1.0, "goal channel");
-        assert_eq!(obs[6 * 3], 1.0, "wall channel");
+        assert_eq!(obs[6 * 3], TILE_WALL, "wall channel");
         assert!((obs[GRID_LEN] - 3.0 / 8.0).abs() < 1e-6, "timestep");
         assert_eq!(&obs[GRID_LEN + 1..], &task.noise[..]);
+    }
+
+    #[test]
+    fn hazard_observation_intensity() {
+        let e = EditorEnv::with_palette(8, 3);
+        let mut r = rng();
+        let mut s = e.reset_to_level(&EditorTask::sample(&mut r), &mut r);
+        e.step(&mut s, 0, &mut r);
+        e.step(&mut s, 1, &mut r);
+        e.step(&mut s, 6, &mut r); // wall
+        e.step(&mut s, 6, &mut r); // → hazard
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        assert_eq!(obs[6 * 3], TILE_HAZARD);
     }
 
     #[test]

@@ -1,5 +1,6 @@
-//! Level generation callbacks (paper §4): the base Domain-Randomization
-//! distribution used by DR and by the PLR family's `on_new_levels` cycle.
+//! Maze level generation (paper §4): the base Domain-Randomization
+//! distribution used by DR and by the PLR family's `on_new_levels` cycle,
+//! implementing the [`LevelGenerator`](crate::env::LevelGenerator) trait.
 //!
 //! Recipe (matching JaxUED/minimax `make_level_generator`): sample a wall
 //! count uniformly in [0, max_walls], place that many walls at distinct
@@ -8,18 +9,19 @@
 
 use super::level::{Dir, Level, WallSet, GRID_CELLS, GRID_W};
 use super::shortest_path::is_solvable;
+use super::LevelGenerator;
 use crate::util::rng::Pcg64;
 
-/// Base-distribution parameters.
+/// Base-distribution parameters for the maze family.
 #[derive(Clone, Copy, Debug)]
-pub struct LevelGenerator {
+pub struct MazeLevelGenerator {
     pub max_walls: usize,
 }
 
-impl LevelGenerator {
+impl MazeLevelGenerator {
     pub fn new(max_walls: usize) -> Self {
         assert!(max_walls <= GRID_CELLS - 2, "must leave room for agent+goal");
-        LevelGenerator { max_walls }
+        MazeLevelGenerator { max_walls }
     }
 
     /// One draw from the DR distribution. Always structurally valid;
@@ -63,6 +65,14 @@ impl LevelGenerator {
     }
 }
 
+impl LevelGenerator for MazeLevelGenerator {
+    type Level = Level;
+
+    fn sample_level(&self, rng: &mut Pcg64) -> Level {
+        self.generate(rng)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,7 +81,7 @@ mod tests {
 
     #[test]
     fn generated_levels_valid() {
-        let g = LevelGenerator::new(60);
+        let g = MazeLevelGenerator::new(60);
         let mut rng = Pcg64::seed_from_u64(0);
         for _ in 0..200 {
             let l = g.generate(&mut rng);
@@ -82,7 +92,7 @@ mod tests {
 
     #[test]
     fn respects_wall_budget_25() {
-        let g = LevelGenerator::new(25);
+        let g = MazeLevelGenerator::new(25);
         let mut rng = Pcg64::seed_from_u64(1);
         for _ in 0..200 {
             assert!(g.generate(&mut rng).num_walls() <= 25);
@@ -91,7 +101,7 @@ mod tests {
 
     #[test]
     fn wall_count_roughly_uniform() {
-        let g = LevelGenerator::new(10);
+        let g = MazeLevelGenerator::new(10);
         let mut rng = Pcg64::seed_from_u64(2);
         let mut counts = [0usize; 11];
         let n = 22_000;
@@ -106,7 +116,7 @@ mod tests {
 
     #[test]
     fn solvable_generator_is_solvable() {
-        let g = LevelGenerator::new(60);
+        let g = MazeLevelGenerator::new(60);
         let mut rng = Pcg64::seed_from_u64(3);
         for _ in 0..50 {
             let l = g.generate_solvable(&mut rng, 100);
@@ -116,9 +126,17 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let g = LevelGenerator::new(40);
+        let g = MazeLevelGenerator::new(40);
         let a = g.generate_batch(5, &mut Pcg64::seed_from_u64(9));
         let b = g.generate_batch(5, &mut Pcg64::seed_from_u64(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn trait_and_inherent_draws_agree() {
+        let g = MazeLevelGenerator::new(40);
+        let a = g.generate(&mut Pcg64::seed_from_u64(11));
+        let b = g.sample_level(&mut Pcg64::seed_from_u64(11));
         assert_eq!(a, b);
     }
 
@@ -126,7 +144,7 @@ mod tests {
     fn prop_agent_goal_never_on_walls() {
         props(300, |gen| {
             let max_walls = gen.usize_in(0, 100);
-            let g = LevelGenerator::new(max_walls);
+            let g = MazeLevelGenerator::new(max_walls);
             let l = g.generate(gen.rng());
             prop_assert!(l.is_valid(), "invalid level {:?}", l);
             prop_assert!(

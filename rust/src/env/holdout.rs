@@ -9,7 +9,7 @@
 //! SixteenRooms, FourRooms, perfect DFS mazes, corridors, …). All
 //! constructions are verified solvable by unit tests.
 
-use super::gen::LevelGenerator;
+use super::gen::MazeLevelGenerator;
 use super::level::{Dir, Level, WallSet, GRID_H, GRID_W};
 use crate::util::rng::Pcg64;
 
@@ -24,7 +24,7 @@ pub struct NamedLevel {
 /// from the DR distribution with the given wall budget — the minimax
 /// `generate_eval_levels` recipe with a fixed seed.
 pub fn procedural_suite(n: usize, max_walls: usize, seed: u64) -> Vec<Level> {
-    let gen = LevelGenerator::new(max_walls);
+    let gen = MazeLevelGenerator::new(max_walls);
     let mut rng = Pcg64::new(seed, 0x4544); // "ED"
     (0..n).map(|_| gen.generate_solvable(&mut rng, 1000)).collect()
 }

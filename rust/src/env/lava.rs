@@ -1,0 +1,805 @@
+//! The lava-grid maze: the second `UnderspecifiedEnv` family, proving the
+//! training stack is env-generic (every algorithm runs on it with zero
+//! algorithm-code changes — only `--env lava`).
+//!
+//! Semantics extend the maze with hazard tiles:
+//!   * actions: 0 = turn left, 1 = turn right, 2 = move forward (as maze)
+//!   * forward into a wall or out of bounds is a no-op
+//!   * forward *into lava* moves the agent and terminates the episode with
+//!     zero reward — hazards are traversable but fatal, so the optimal
+//!     policy must path around them rather than being physically blocked
+//!   * reaching the goal terminates with reward `1 − 0.9·t/T_max`
+//!   * episodes truncate (done, zero reward) at `T_max` steps
+//!   * observation: identical geometry to the maze (egocentric 5×5 crop,
+//!     channels {obstacle, goal, out-of-bounds} + facing one-hot). Lava
+//!     renders at [`LAVA_INTENSITY`] in the obstacle channel (walls at
+//!     1.0), keeping the flat observation length — and therefore the
+//!     compiled policy artifacts — shared with the maze family.
+//!
+//! Levels carry *distinct parameters*: a wall set, a disjoint lava set,
+//! agent start, and goal. Their byte encoding is 53 bytes (the maze's 29
+//! plus three lava words).
+
+use anyhow::{bail, Result};
+
+use super::level::{Dir, Level, WallSet, GRID_CELLS, GRID_H, GRID_W};
+use super::maze::{DIR_LEN, IMG_LEN, NUM_ACTIONS, OBS_CHANNELS, OBS_LEN, VIEW};
+use super::shortest_path::{distance_field_from, UNREACHABLE};
+use super::{editor::EditorState, LevelGenerator, LevelMeta, LevelMutator};
+use super::{StepResult, UnderspecifiedEnv};
+use crate::util::rng::Pcg64;
+
+/// Lava intensity in the obstacle observation channel (walls are 1.0).
+pub const LAVA_INTENSITY: f32 = 0.5;
+
+/// Byte length of the [`LavaLevel`] encoding.
+pub const LAVA_LEVEL_BYTES: usize = 53;
+
+/// A lava level θ: walls + hazards + agent start + goal. Walls and lava
+/// are disjoint tile sets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LavaLevel {
+    pub walls: WallSet,
+    pub lava: WallSet,
+    pub agent_pos: (u8, u8),
+    pub agent_dir: Dir,
+    pub goal_pos: (u8, u8),
+}
+
+impl LavaLevel {
+    /// An empty level with agent at top-left facing right, goal
+    /// bottom-right, no hazards.
+    pub fn empty() -> LavaLevel {
+        let base = Level::empty();
+        LavaLevel {
+            walls: base.walls,
+            lava: WallSet::empty(),
+            agent_pos: base.agent_pos,
+            agent_dir: base.agent_dir,
+            goal_pos: base.goal_pos,
+        }
+    }
+
+    pub fn wall_at(&self, x: usize, y: usize) -> bool {
+        self.walls.get(x, y)
+    }
+
+    pub fn lava_at(&self, x: usize, y: usize) -> bool {
+        self.lava.get(x, y)
+    }
+
+    pub fn num_walls(&self) -> usize {
+        self.walls.count()
+    }
+
+    pub fn num_lava(&self) -> usize {
+        self.lava.count()
+    }
+
+    /// Structural validity: agent/goal distinct, in bounds, on neither
+    /// walls nor lava; wall and lava sets disjoint.
+    pub fn is_valid(&self) -> bool {
+        let (ax, ay) = (self.agent_pos.0 as usize, self.agent_pos.1 as usize);
+        let (gx, gy) = (self.goal_pos.0 as usize, self.goal_pos.1 as usize);
+        if !(ax < GRID_W && ay < GRID_H && gx < GRID_W && gy < GRID_H) {
+            return false;
+        }
+        if self.agent_pos == self.goal_pos {
+            return false;
+        }
+        for &(x, y) in &[(ax, ay), (gx, gy)] {
+            if self.walls.get(x, y) || self.lava.get(x, y) {
+                return false;
+            }
+        }
+        // Disjointness of the tile sets.
+        for y in 0..GRID_H {
+            for x in 0..GRID_W {
+                if self.walls.get(x, y) && self.lava.get(x, y) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// A safe path start→goal exists (lava counts as blocked: entering it
+    /// ends the episode unrewarded).
+    pub fn is_solvable(&self) -> bool {
+        self.solve_distance().is_some()
+    }
+
+    /// Moves along the shortest safe path, or None if unsolvable.
+    pub fn solve_distance(&self) -> Option<u16> {
+        let df = distance_field_from(
+            (self.goal_pos.0 as usize, self.goal_pos.1 as usize),
+            |x, y| self.walls.get(x, y) || self.lava.get(x, y),
+        );
+        let d = df.get(self.agent_pos.0 as usize, self.agent_pos.1 as usize);
+        (d != UNREACHABLE).then_some(d)
+    }
+
+    /// FNV-1a hash over the canonical byte encoding.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.to_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x1000_0000_01b3);
+        }
+        h
+    }
+
+    /// Binary encoding (fixed 53 bytes) for checkpoints and the buffer.
+    pub fn to_bytes(&self) -> [u8; LAVA_LEVEL_BYTES] {
+        let mut out = [0u8; LAVA_LEVEL_BYTES];
+        let w = self.walls.words();
+        let l = self.lava.words();
+        for (i, word) in w.iter().chain(l.iter()).enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&word.to_le_bytes());
+        }
+        out[48] = self.agent_pos.0;
+        out[49] = self.agent_pos.1;
+        out[50] = self.agent_dir.index() as u8;
+        out[51] = self.goal_pos.0;
+        out[52] = self.goal_pos.1;
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<LavaLevel> {
+        if b.len() != LAVA_LEVEL_BYTES {
+            bail!("lava level encoding must be {LAVA_LEVEL_BYTES} bytes, got {}", b.len());
+        }
+        let word = |i: usize| u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+        let mut walls = WallSet::empty();
+        let mut lava = WallSet::empty();
+        for y in 0..GRID_H {
+            for x in 0..GRID_W {
+                let i = y * GRID_W + x;
+                if (word(i / 64) >> (i % 64)) & 1 == 1 {
+                    walls.set(x, y, true);
+                }
+                if (word(3 + i / 64) >> (i % 64)) & 1 == 1 {
+                    lava.set(x, y, true);
+                }
+            }
+        }
+        Ok(LavaLevel {
+            walls,
+            lava,
+            agent_pos: (b[48], b[49]),
+            agent_dir: Dir::from_index(b[50] as usize),
+            goal_pos: (b[51], b[52]),
+        })
+    }
+
+    /// Extract from a finished editor episode (three-tile palette): walls
+    /// and hazards from the tile sets, agent/goal cells force-cleared.
+    pub fn from_editor(s: &EditorState) -> LavaLevel {
+        let ((apos, adir), gpos) = s.placements();
+        let mut walls = s.walls;
+        let mut lava = s.hazards;
+        for &(x, y) in &[
+            (apos.0 as usize, apos.1 as usize),
+            (gpos.0 as usize, gpos.1 as usize),
+        ] {
+            walls.set(x, y, false);
+            lava.set(x, y, false);
+        }
+        LavaLevel { walls, lava, agent_pos: apos, agent_dir: adir, goal_pos: gpos }
+    }
+}
+
+impl LevelMeta for LavaLevel {
+    fn is_valid(&self) -> bool {
+        LavaLevel::is_valid(self)
+    }
+
+    fn is_solvable(&self) -> bool {
+        LavaLevel::is_solvable(self)
+    }
+
+    fn complexity(&self) -> f64 {
+        // Hazards weigh double: they constrain paths *and* punish errors.
+        self.num_walls() as f64 + 2.0 * self.num_lava() as f64
+    }
+
+    fn fingerprint(&self) -> u64 {
+        LavaLevel::fingerprint(self)
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        self.to_bytes().to_vec()
+    }
+
+    fn decode(bytes: &[u8]) -> Result<LavaLevel> {
+        LavaLevel::from_bytes(bytes)
+    }
+}
+
+/// Full environment state (level embedded by value, as in the maze).
+#[derive(Clone, Debug)]
+pub struct LavaState {
+    pub level: LavaLevel,
+    pub pos: (u8, u8),
+    pub dir: Dir,
+    pub t: u32,
+}
+
+impl LavaState {
+    pub fn at_goal(&self) -> bool {
+        self.pos == self.level.goal_pos
+    }
+
+    pub fn in_lava(&self) -> bool {
+        self.level.lava_at(self.pos.0 as usize, self.pos.1 as usize)
+    }
+}
+
+/// The lava-grid UPOMDP.
+#[derive(Clone, Debug)]
+pub struct LavaEnv {
+    pub max_steps: usize,
+}
+
+impl Default for LavaEnv {
+    fn default() -> Self {
+        LavaEnv { max_steps: super::maze::DEFAULT_MAX_STEPS }
+    }
+}
+
+impl LavaEnv {
+    pub fn new(max_steps: usize) -> Self {
+        LavaEnv { max_steps }
+    }
+
+    #[inline]
+    fn goal_reward(&self, t: u32) -> f32 {
+        1.0 - 0.9 * (t as f32 / self.max_steps as f32)
+    }
+}
+
+impl UnderspecifiedEnv for LavaEnv {
+    type State = LavaState;
+    type Level = LavaLevel;
+
+    fn num_actions(&self) -> usize {
+        NUM_ACTIONS
+    }
+
+    fn reset_to_level(&self, level: &LavaLevel, _rng: &mut Pcg64) -> LavaState {
+        debug_assert!(level.is_valid(), "reset to invalid lava level");
+        LavaState {
+            level: *level,
+            pos: level.agent_pos,
+            dir: level.agent_dir,
+            t: 0,
+        }
+    }
+
+    fn step(&self, s: &mut LavaState, action: usize, _rng: &mut Pcg64) -> StepResult {
+        s.t += 1;
+        match action {
+            super::maze::ACT_LEFT => s.dir = s.dir.turn_left(),
+            super::maze::ACT_RIGHT => s.dir = s.dir.turn_right(),
+            super::maze::ACT_FORWARD => {
+                let (dx, dy) = s.dir.delta();
+                let nx = s.pos.0 as isize + dx;
+                let ny = s.pos.1 as isize + dy;
+                if nx >= 0
+                    && ny >= 0
+                    && (nx as usize) < GRID_W
+                    && (ny as usize) < GRID_H
+                    && !s.level.wall_at(nx as usize, ny as usize)
+                {
+                    s.pos = (nx as u8, ny as u8);
+                }
+            }
+            a => panic!("invalid lava-grid action {a}"),
+        }
+        if s.in_lava() {
+            return StepResult { reward: 0.0, done: true };
+        }
+        if s.at_goal() {
+            return StepResult { reward: self.goal_reward(s.t), done: true };
+        }
+        if s.t as usize >= self.max_steps {
+            return StepResult { reward: 0.0, done: true };
+        }
+        StepResult { reward: 0.0, done: false }
+    }
+
+    fn observe(&self, s: &LavaState, obs: &mut [f32]) {
+        debug_assert_eq!(obs.len(), OBS_LEN);
+        obs.fill(0.0);
+        let (ax, ay) = (s.pos.0 as isize, s.pos.1 as isize);
+        let half = (VIEW / 2) as isize;
+        for vy in 0..VIEW {
+            let f = (VIEW - 1 - vy) as isize;
+            for vx in 0..VIEW {
+                let l = vx as isize - half;
+                let (dx, dy) = match s.dir {
+                    Dir::Up => (l, -f),
+                    Dir::Right => (f, l),
+                    Dir::Down => (-l, f),
+                    Dir::Left => (-f, -l),
+                };
+                let (wx, wy) = (ax + dx, ay + dy);
+                let base = (vy * VIEW + vx) * OBS_CHANNELS;
+                if wx < 0 || wy < 0 || wx >= GRID_W as isize || wy >= GRID_H as isize {
+                    obs[base] = 1.0; // out-of-bounds reads as wall…
+                    obs[base + 2] = 1.0; // …and is marked oob
+                } else {
+                    let (wx, wy) = (wx as usize, wy as usize);
+                    if s.level.wall_at(wx, wy) {
+                        obs[base] = 1.0;
+                    } else if s.level.lava_at(wx, wy) {
+                        obs[base] = LAVA_INTENSITY;
+                    }
+                    if (wx as u8, wy as u8) == s.level.goal_pos {
+                        obs[base + 1] = 1.0;
+                    }
+                }
+            }
+        }
+        obs[IMG_LEN + s.dir.index()] = 1.0;
+    }
+
+    fn obs_len(&self) -> usize {
+        OBS_LEN
+    }
+
+    fn obs_components(&self) -> Vec<usize> {
+        vec![IMG_LEN, DIR_LEN]
+    }
+}
+
+/// Base-distribution parameters: independent wall and lava budgets.
+#[derive(Clone, Copy, Debug)]
+pub struct LavaLevelGenerator {
+    pub max_walls: usize,
+    pub max_lava: usize,
+}
+
+impl LavaLevelGenerator {
+    pub fn new(max_walls: usize, max_lava: usize) -> Self {
+        assert!(
+            max_walls + max_lava <= GRID_CELLS - 2,
+            "must leave room for agent+goal"
+        );
+        LavaLevelGenerator { max_walls, max_lava }
+    }
+
+    /// One draw: wall count ~ U[0, max_walls], lava count ~ U[0, max_lava],
+    /// all tiles plus agent and goal on distinct cells. Structurally valid;
+    /// solvability not guaranteed (same DR contract as the maze).
+    pub fn generate(&self, rng: &mut Pcg64) -> LavaLevel {
+        let n_walls = rng.gen_range(self.max_walls + 1);
+        let n_lava = rng.gen_range(self.max_lava + 1);
+        let cells = rng.sample_indices(GRID_CELLS, n_walls + n_lava + 2);
+        let mut walls = WallSet::empty();
+        let mut lava = WallSet::empty();
+        for &c in &cells[..n_walls] {
+            walls.set(c % GRID_W, c / GRID_W, true);
+        }
+        for &c in &cells[n_walls..n_walls + n_lava] {
+            lava.set(c % GRID_W, c / GRID_W, true);
+        }
+        let g = cells[n_walls + n_lava];
+        let a = cells[n_walls + n_lava + 1];
+        LavaLevel {
+            walls,
+            lava,
+            agent_pos: ((a % GRID_W) as u8, (a / GRID_W) as u8),
+            agent_dir: Dir::from_index(rng.gen_range(4)),
+            goal_pos: ((g % GRID_W) as u8, (g / GRID_W) as u8),
+        }
+    }
+
+    /// Rejection-sample a solvable level (evaluation suites).
+    pub fn generate_solvable(&self, rng: &mut Pcg64, max_tries: usize) -> LavaLevel {
+        for _ in 0..max_tries {
+            let l = self.generate(rng);
+            if l.is_solvable() {
+                return l;
+            }
+        }
+        panic!(
+            "no solvable lava level in {max_tries} tries (walls={}, lava={})",
+            self.max_walls, self.max_lava
+        );
+    }
+}
+
+impl LevelGenerator for LavaLevelGenerator {
+    type Level = LavaLevel;
+
+    fn sample_level(&self, rng: &mut Pcg64) -> LavaLevel {
+        self.generate(rng)
+    }
+}
+
+/// ACCEL edit operator for lava levels: toggle a wall, toggle a lava tile,
+/// relocate the goal, or relocate the agent. Edits preserve tile
+/// disjointness and structural validity.
+#[derive(Clone, Copy, Debug)]
+pub struct LavaMutator {
+    pub num_edits: usize,
+    /// Probability an edit toggles a wall.
+    pub p_wall: f64,
+    /// Probability an edit toggles a lava tile (remainder splits evenly
+    /// between moving the goal and moving the agent).
+    pub p_lava: f64,
+}
+
+impl Default for LavaMutator {
+    fn default() -> Self {
+        LavaMutator { num_edits: 20, p_wall: 0.6, p_lava: 0.2 }
+    }
+}
+
+impl LavaMutator {
+    pub fn new(num_edits: usize) -> Self {
+        LavaMutator { num_edits, ..Default::default() }
+    }
+
+    /// Apply one random edit in place.
+    pub fn edit(&self, level: &mut LavaLevel, rng: &mut Pcg64) {
+        let u = rng.next_f64();
+        let p_move = (1.0 - self.p_wall - self.p_lava) / 2.0;
+        if u < self.p_wall {
+            // Toggle a wall on a non-agent, non-goal, non-lava cell.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let (x, y) = (c % GRID_W, c / GRID_W);
+                let pos = (x as u8, y as u8);
+                if pos != level.agent_pos && pos != level.goal_pos && !level.lava.get(x, y) {
+                    level.walls.toggle(x, y);
+                    break;
+                }
+            }
+        } else if u < self.p_wall + self.p_lava {
+            // Toggle lava on a non-agent, non-goal, non-wall cell.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let (x, y) = (c % GRID_W, c / GRID_W);
+                let pos = (x as u8, y as u8);
+                if pos != level.agent_pos && pos != level.goal_pos && !level.walls.get(x, y) {
+                    level.lava.toggle(x, y);
+                    break;
+                }
+            }
+        } else if u < self.p_wall + self.p_lava + p_move {
+            // Move the goal to a random free, non-agent cell.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let (x, y) = (c % GRID_W, c / GRID_W);
+                let pos = (x as u8, y as u8);
+                if pos != level.agent_pos && !level.walls.get(x, y) && !level.lava.get(x, y) {
+                    level.goal_pos = pos;
+                    break;
+                }
+            }
+        } else {
+            // Move the agent to a random free, non-goal cell + random dir.
+            loop {
+                let c = rng.gen_range(GRID_CELLS);
+                let (x, y) = (c % GRID_W, c / GRID_W);
+                let pos = (x as u8, y as u8);
+                if pos != level.goal_pos && !level.walls.get(x, y) && !level.lava.get(x, y) {
+                    level.agent_pos = pos;
+                    level.agent_dir = Dir::from_index(rng.gen_range(4));
+                    break;
+                }
+            }
+        }
+    }
+
+    pub fn mutate(&self, parent: &LavaLevel, rng: &mut Pcg64) -> LavaLevel {
+        let mut child = *parent;
+        for _ in 0..self.num_edits {
+            self.edit(&mut child, rng);
+        }
+        debug_assert!(child.is_valid());
+        child
+    }
+}
+
+impl LevelMutator for LavaMutator {
+    type Level = LavaLevel;
+
+    fn mutate_level(&self, parent: &LavaLevel, rng: &mut Pcg64) -> LavaLevel {
+        self.mutate(parent, rng)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Holdout suite
+// ---------------------------------------------------------------------------
+
+/// The named lava holdout levels plus `n` deterministic solvable-filtered
+/// procedural draws (the lava analogue of the maze suite).
+pub fn holdout_suite(n_procedural: usize, max_walls: usize, max_lava: usize, seed: u64)
+    -> Vec<(String, LavaLevel)> {
+    let mut out: Vec<(String, LavaLevel)> = named_levels()
+        .into_iter()
+        .map(|(n, l)| (n.to_string(), l))
+        .collect();
+    let gen = LavaLevelGenerator::new(max_walls, max_lava);
+    let mut rng = Pcg64::new(seed, 0x4c41_5641); // "LAVA"
+    for i in 0..n_procedural {
+        out.push((format!("LavaProc{i:02}"), gen.generate_solvable(&mut rng, 1000)));
+    }
+    out
+}
+
+/// Hand-built named lava levels, all verified solvable by unit tests.
+pub fn named_levels() -> Vec<(&'static str, LavaLevel)> {
+    vec![
+        ("LavaEmpty", empty_crossing()),
+        ("LavaGap", gap(6)),
+        ("LavaGapWide", gap(3)),
+        ("LavaMoat", moat()),
+        ("LavaRiverBridge", river_bridge(9)),
+        ("LavaCorridors", corridors()),
+    ]
+}
+
+/// No hazards at all: the baseline open room.
+fn empty_crossing() -> LavaLevel {
+    let mut l = LavaLevel::empty();
+    l.agent_pos = (0, 12);
+    l.agent_dir = Dir::Up;
+    l.goal_pos = (12, 0);
+    l
+}
+
+/// A full-width lava band at row 6 with one safe gap at column `gap_x`.
+fn gap(gap_x: usize) -> LavaLevel {
+    let mut l = LavaLevel::empty();
+    for x in 0..GRID_W {
+        if x != gap_x {
+            l.lava.set(x, 6, true);
+        }
+    }
+    l.agent_pos = (6, 12);
+    l.agent_dir = Dir::Up;
+    l.goal_pos = (6, 0);
+    l
+}
+
+/// A lava ring around the goal with a single wall-protected entrance.
+fn moat() -> LavaLevel {
+    let mut l = LavaLevel::empty();
+    for i in 4..=8 {
+        l.lava.set(i, 4, true);
+        l.lava.set(i, 8, true);
+        l.lava.set(4, i, true);
+        l.lava.set(8, i, true);
+    }
+    // entrance at the top-center
+    l.lava.set(6, 4, false);
+    l.agent_pos = (0, 0);
+    l.agent_dir = Dir::Right;
+    l.goal_pos = (6, 6);
+    l
+}
+
+/// A vertical lava river with a wall-lined bridge at row `bridge_y`.
+fn river_bridge(bridge_y: usize) -> LavaLevel {
+    let mut l = LavaLevel::empty();
+    for y in 0..GRID_H {
+        for x in 5..=7 {
+            if y != bridge_y {
+                l.lava.set(x, y, true);
+            }
+        }
+    }
+    // guard rails above and below the bridge mouth
+    if bridge_y > 0 {
+        l.walls.set(4, bridge_y - 1, true);
+    }
+    if bridge_y + 1 < GRID_H {
+        l.walls.set(4, bridge_y + 1, true);
+    }
+    l.agent_pos = (1, 1);
+    l.agent_dir = Dir::Down;
+    l.goal_pos = (11, 1);
+    l
+}
+
+/// Wall corridors whose floors are partially lava: mixed tile reasoning.
+fn corridors() -> LavaLevel {
+    let mut l = LavaLevel::empty();
+    for x in 0..GRID_W {
+        l.walls.set(x, 4, true);
+        l.walls.set(x, 8, true);
+    }
+    l.walls.set(2, 4, false);
+    l.walls.set(10, 8, false);
+    // lava pockets inside the middle band
+    for x in [4usize, 5, 6] {
+        l.lava.set(x, 6, true);
+    }
+    l.agent_pos = (6, 0);
+    l.agent_dir = Dir::Down;
+    l.goal_pos = (6, 12);
+    l
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::maze::{ACT_FORWARD, ACT_LEFT};
+    use crate::prop_assert;
+    use crate::util::proptest::props;
+
+    fn rng() -> Pcg64 {
+        Pcg64::seed_from_u64(0)
+    }
+
+    #[test]
+    fn forward_into_lava_is_fatal_and_unrewarded() {
+        let mut l = LavaLevel::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Right;
+        l.lava.set(1, 0, true);
+        l.goal_pos = (5, 5);
+        let e = LavaEnv::default();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        let r = e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert!(r.done);
+        assert_eq!(r.reward, 0.0);
+        assert_eq!(s.pos, (1, 0), "agent moved into the lava tile");
+    }
+
+    #[test]
+    fn walls_still_block() {
+        let mut l = LavaLevel::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Right;
+        l.walls.set(1, 0, true);
+        l.goal_pos = (5, 5);
+        let e = LavaEnv::default();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        let r = e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert!(!r.done);
+        assert_eq!(s.pos, (0, 0));
+    }
+
+    #[test]
+    fn goal_reward_matches_maze_shape() {
+        let mut l = LavaLevel::empty();
+        l.agent_pos = (0, 0);
+        l.agent_dir = Dir::Right;
+        l.goal_pos = (1, 0);
+        let e = LavaEnv::default();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        let r = e.step(&mut s, ACT_FORWARD, &mut rng());
+        assert!(r.done);
+        let expect = 1.0 - 0.9 * (1.0 / e.max_steps as f32);
+        assert!((r.reward - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn truncation_at_max_steps() {
+        let e = LavaEnv::new(3);
+        let l = LavaLevel::empty();
+        let mut s = e.reset_to_level(&l, &mut rng());
+        assert!(!e.step(&mut s, ACT_LEFT, &mut rng()).done);
+        assert!(!e.step(&mut s, ACT_LEFT, &mut rng()).done);
+        let r = e.step(&mut s, ACT_LEFT, &mut rng());
+        assert!(r.done);
+        assert_eq!(r.reward, 0.0);
+    }
+
+    #[test]
+    fn observation_distinguishes_wall_from_lava() {
+        let mut l = LavaLevel::empty();
+        l.agent_pos = (5, 5);
+        l.agent_dir = Dir::Up;
+        l.walls.set(5, 4, true); // one ahead: wall
+        l.lava.set(5, 3, true); // two ahead: lava
+        l.goal_pos = (12, 12);
+        let e = LavaEnv::default();
+        let s = e.reset_to_level(&l, &mut rng());
+        let mut obs = vec![0.0; e.obs_len()];
+        e.observe(&s, &mut obs);
+        let ahead = ((VIEW - 2) * VIEW + VIEW / 2) * OBS_CHANNELS;
+        let two_ahead = ((VIEW - 3) * VIEW + VIEW / 2) * OBS_CHANNELS;
+        assert_eq!(obs[ahead], 1.0, "wall at full intensity");
+        assert_eq!(obs[two_ahead], LAVA_INTENSITY, "lava at half intensity");
+    }
+
+    #[test]
+    fn obs_geometry_matches_maze_artifacts() {
+        let e = LavaEnv::default();
+        assert_eq!(e.obs_len(), OBS_LEN);
+        assert_eq!(e.obs_components(), vec![IMG_LEN, DIR_LEN]);
+        assert_eq!(e.obs_components().iter().sum::<usize>(), e.obs_len());
+        assert_eq!(e.num_actions(), NUM_ACTIONS);
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let g = LavaLevelGenerator::new(40, 12);
+        let mut r = rng();
+        for _ in 0..50 {
+            let l = g.generate(&mut r);
+            let l2 = LavaLevel::from_bytes(&l.to_bytes()).unwrap();
+            assert_eq!(l, l2);
+        }
+        assert!(LavaLevel::from_bytes(&[0u8; 29]).is_err());
+    }
+
+    #[test]
+    fn generator_respects_budgets_and_validity() {
+        let g = LavaLevelGenerator::new(30, 8);
+        let mut r = rng();
+        for _ in 0..200 {
+            let l = g.generate(&mut r);
+            assert!(l.is_valid(), "{l:?}");
+            assert!(l.num_walls() <= 30);
+            assert!(l.num_lava() <= 8);
+        }
+    }
+
+    #[test]
+    fn solvability_accounts_for_lava() {
+        // A lava wall fully separating agent from goal: unsolvable even
+        // though no physical wall blocks the way.
+        let mut l = LavaLevel::empty();
+        for x in 0..GRID_W {
+            l.lava.set(x, 6, true);
+        }
+        l.agent_pos = (6, 12);
+        l.agent_dir = Dir::Up;
+        l.goal_pos = (6, 0);
+        assert!(l.is_valid());
+        assert!(!l.is_solvable());
+        // Open one gap and it becomes solvable.
+        l.lava.set(3, 6, false);
+        assert!(l.is_solvable());
+    }
+
+    #[test]
+    fn named_holdouts_valid_solvable_distinct() {
+        let levels = named_levels();
+        for (name, l) in &levels {
+            assert!(l.is_valid(), "{name} invalid");
+            assert!(l.is_solvable(), "{name} unsolvable");
+        }
+        for i in 0..levels.len() {
+            for j in (i + 1)..levels.len() {
+                assert_ne!(
+                    levels[i].1.fingerprint(),
+                    levels[j].1.fingerprint(),
+                    "{} == {}", levels[i].0, levels[j].0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn holdout_suite_deterministic() {
+        let a = holdout_suite(10, 40, 10, 7);
+        let b = holdout_suite(10, 40, 10, 7);
+        assert_eq!(a.len(), named_levels().len() + 10);
+        for ((na, la), (nb, lb)) in a.iter().zip(&b) {
+            assert_eq!(na, nb);
+            assert_eq!(la, lb);
+        }
+    }
+
+    #[test]
+    fn prop_mutation_preserves_validity_and_disjointness() {
+        props(200, |g| {
+            let edits = g.usize_in(0, 30);
+            let gen = LavaLevelGenerator::new(30, 10);
+            let m = LavaMutator::new(edits);
+            let parent = gen.generate(g.rng());
+            let child = m.mutate(&parent, g.rng());
+            prop_assert!(child.is_valid(), "invalid child {:?}", child);
+            Ok(())
+        });
+    }
+}

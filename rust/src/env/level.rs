@@ -279,6 +279,35 @@ impl Level {
     }
 }
 
+/// The maze level as seen by the env-generic layers: obstacle count is the
+/// complexity proxy, the 29-byte binary encoding backs checkpoints and the
+/// PLR buffer.
+impl crate::env::LevelMeta for Level {
+    fn is_valid(&self) -> bool {
+        Level::is_valid(self)
+    }
+
+    fn is_solvable(&self) -> bool {
+        crate::env::shortest_path::is_solvable(self)
+    }
+
+    fn complexity(&self) -> f64 {
+        self.num_walls() as f64
+    }
+
+    fn fingerprint(&self) -> u64 {
+        Level::fingerprint(self)
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        self.to_bytes().to_vec()
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Level> {
+        Level::from_bytes(bytes)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,4 +1,5 @@
-//! The `UnderspecifiedEnv` interface (paper §3.1) and the maze environments.
+//! The `UnderspecifiedEnv` interface (paper §3.1) and the level-lifecycle
+//! capability traits that make the training stack environment-generic.
 //!
 //! UED operates over Underspecified POMDPs: a *collection* of POMDPs indexed
 //! by free parameters ("levels"). Conventional env interfaces bake an
@@ -7,18 +8,46 @@
 //! caller (a UED algorithm, an evaluation routine, a wrapper). Levels are
 //! decoupled from states: a level induces a (possibly stochastic) initial
 //! state distribution.
+//!
+//! The interface is split into capability traits so every layer above the
+//! rollout engine can be written once, for any environment:
+//!
+//! * [`UnderspecifiedEnv`] — reset/step/observe over an associated
+//!   `State`/`Level` pair (the paper's core interface).
+//! * [`LevelGenerator`] — the base "domain randomization" distribution
+//!   (the paper's `sample_random_level`), used by DR and by the PLR
+//!   family's `on_new_levels` cycle.
+//! * [`LevelMutator`] — the ACCEL edit operator: small random perturbations
+//!   of a parent level.
+//! * [`LevelMeta`] — level introspection: validity, solvability, a
+//!   complexity proxy, a de-duplication fingerprint, and a compact byte
+//!   encoding for checkpoints and the PLR buffer.
+//! * [`EnvFamily`] — one environment's full bundle (env + generator +
+//!   mutator + PAIRED editor + holdout suite + artifact geometry). The
+//!   [`registry`] maps `--env` names onto families the way `--algo` maps
+//!   onto methods, so algorithms (`algo/`), evaluation (`eval/`) and the
+//!   rollout engine contain no env-specific types at all.
+//!
+//! Concrete families live below: [`maze`] (the paper's 13×13 MiniGrid-style
+//! maze) and [`lava`] (a hazard-tile variant proving the stack is generic).
 
+pub mod conformance;
 pub mod editor;
 pub mod gen;
 pub mod holdout;
+pub mod lava;
 pub mod level;
 pub mod maze;
 pub mod mutate;
+pub mod registry;
 pub mod render;
 pub mod shortest_path;
 pub mod wrappers;
 
 pub use level::Level;
+pub use registry::{EnvId, LavaFamily, MazeFamily};
+
+use anyhow::Result;
 
 use crate::util::rng::Pcg64;
 
@@ -33,7 +62,7 @@ pub struct StepResult {
 /// A POMDP family indexed by levels (paper §3.1).
 ///
 /// `State` is the full environment state; `Level` the underspecified
-/// parameters; `Obs` an associated observation buffer the env writes into
+/// parameters; observations are written into a caller-owned flat buffer
 /// (the rollout engine owns the backing storage — observation writing is
 /// allocation-free).
 pub trait UnderspecifiedEnv {
@@ -62,5 +91,182 @@ pub trait UnderspecifiedEnv {
     /// concatenation of these.
     fn obs_components(&self) -> Vec<usize> {
         vec![self.obs_len()]
+    }
+}
+
+/// The base level distribution (paper's `sample_random_level`): one draw
+/// per call, structurally valid but *not* necessarily solvable — unsolvable
+/// draws are part of the DR distribution and it is UED's job to cope.
+pub trait LevelGenerator {
+    type Level: Clone;
+
+    /// One draw from the base distribution.
+    fn sample_level(&self, rng: &mut Pcg64) -> Self::Level;
+
+    /// A batch of independent draws.
+    fn sample_batch(&self, n: usize, rng: &mut Pcg64) -> Vec<Self::Level> {
+        (0..n).map(|_| self.sample_level(rng)).collect()
+    }
+}
+
+/// The ACCEL edit operator: produce a slightly-perturbed child level.
+/// Mutation must preserve structural validity (`LevelMeta::is_valid`).
+pub trait LevelMutator {
+    type Level: Clone;
+
+    /// Produce a mutated child of `parent`.
+    fn mutate_level(&self, parent: &Self::Level, rng: &mut Pcg64) -> Self::Level;
+
+    /// Mutate a batch of parents (one child per parent).
+    fn mutate_batch(&self, parents: &[Self::Level], rng: &mut Pcg64) -> Vec<Self::Level> {
+        parents.iter().map(|p| self.mutate_level(p, rng)).collect()
+    }
+}
+
+/// Level introspection and serialization: everything the UED layers above
+/// the env need to know about a level without knowing its concrete type —
+/// buffer de-duplication, checkpointing, curriculum diagnostics.
+pub trait LevelMeta: Clone {
+    /// Structural validity (agent/goal placement, tile invariants).
+    fn is_valid(&self) -> bool;
+
+    /// A free path from start to goal exists.
+    fn is_solvable(&self) -> bool;
+
+    /// Scalar complexity proxy (e.g. obstacle count) for curriculum
+    /// diagnostics; larger = richer level.
+    fn complexity(&self) -> f64;
+
+    /// Stable hash over the canonical encoding — the LevelSampler
+    /// de-duplication key.
+    fn fingerprint(&self) -> u64;
+
+    /// Compact byte encoding for checkpoints and the PLR buffer.
+    fn encode(&self) -> Vec<u8>;
+
+    /// Inverse of [`encode`](LevelMeta::encode).
+    fn decode(bytes: &[u8]) -> Result<Self>;
+}
+
+/// Env-layer knobs extracted from the training config (so `env/` does not
+/// depend on the full `TrainConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct EnvParams {
+    /// Student episode horizon.
+    pub max_episode_steps: usize,
+    /// Base-distribution wall budget (paper Figure 3: 25 or 60).
+    pub max_walls: usize,
+    /// Base-distribution hazard-tile budget (lava family; ignored by maze).
+    pub max_hazards: usize,
+    /// ACCEL edits per mutation (Table 3: 20).
+    pub num_edits: usize,
+    /// PAIRED adversary edit budget.
+    pub editor_steps: usize,
+}
+
+impl Default for EnvParams {
+    fn default() -> Self {
+        EnvParams {
+            max_episode_steps: 250,
+            max_walls: 60,
+            max_hazards: 12,
+            num_edits: 20,
+            editor_steps: 60,
+        }
+    }
+}
+
+/// Environment geometry the AOT artifacts were compiled against. The
+/// runtime cross-checks this against the manifest constants at startup so
+/// an incompatible artifact set fails loudly, not numerically.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EnvGeometry {
+    pub grid_w: usize,
+    pub grid_h: usize,
+    pub view: usize,
+    pub obs_channels: usize,
+    pub num_actions: usize,
+    /// Student flat observation component lengths (artifact input order).
+    pub obs_components: Vec<usize>,
+    pub adv_num_actions: usize,
+    pub adv_noise_dim: usize,
+}
+
+impl EnvGeometry {
+    /// The maze family's geometry — also the compiled-artifact default.
+    pub fn maze_default() -> EnvGeometry {
+        EnvGeometry {
+            grid_w: level::GRID_W,
+            grid_h: level::GRID_H,
+            view: maze::VIEW,
+            obs_channels: maze::OBS_CHANNELS,
+            num_actions: maze::NUM_ACTIONS,
+            obs_components: vec![maze::IMG_LEN, maze::DIR_LEN],
+            adv_num_actions: level::GRID_CELLS,
+            adv_noise_dim: editor::NOISE_DIM,
+        }
+    }
+}
+
+/// One environment's complete capability bundle. Implementations are
+/// zero-sized tags (`MazeFamily`, `LavaFamily`); the [`registry`] selects
+/// one from `--env` and every layer above is generic over it.
+///
+/// The `'static` bounds (including the env-state where-clause) let
+/// algorithm drivers built from a family live behind
+/// `Box<dyn UedAlgorithm>`.
+pub trait EnvFamily: Copy + Default + 'static
+where
+    <Self::Env as UnderspecifiedEnv>::State: 'static,
+{
+    /// The student UPOMDP.
+    type Env: UnderspecifiedEnv<Level = Self::Level> + 'static;
+    /// Its level type.
+    type Level: LevelMeta + 'static;
+    /// The base DR distribution.
+    type Generator: LevelGenerator<Level = Self::Level> + 'static;
+    /// The ACCEL edit operator.
+    type Mutator: LevelMutator<Level = Self::Level> + 'static;
+    /// The PAIRED adversary's level-construction UPOMDP.
+    type Editor: UnderspecifiedEnv<Level = editor::EditorTask, State = editor::EditorState>
+        + 'static;
+
+    /// Stable family name (`--env` key, run-dir and artifact scoping).
+    fn id(&self) -> &'static str;
+
+    /// Geometry the artifacts must match.
+    fn geometry(&self) -> EnvGeometry;
+
+    fn make_env(&self, p: &EnvParams) -> Self::Env;
+    fn make_generator(&self, p: &EnvParams) -> Self::Generator;
+    fn make_mutator(&self, p: &EnvParams) -> Self::Mutator;
+    fn make_editor(&self, p: &EnvParams) -> Self::Editor;
+
+    /// Extract a playable level from a finished editor episode.
+    fn editor_level(&self, s: &editor::EditorState) -> Self::Level;
+
+    /// The named holdout levels plus `n_procedural` deterministic
+    /// solvable-filtered draws (paper §6.1 evaluation suite).
+    fn holdout(&self, n_procedural: usize) -> Vec<(String, Self::Level)>;
+}
+
+/// Adapter: any `Fn(&mut Pcg64) -> L` closure as a [`LevelGenerator`]
+/// (ad-hoc level distributions for tests and tools).
+pub struct FnLevelGen<L, F: Fn(&mut Pcg64) -> L> {
+    f: F,
+    _marker: std::marker::PhantomData<fn() -> L>,
+}
+
+impl<L, F: Fn(&mut Pcg64) -> L> FnLevelGen<L, F> {
+    pub fn new(f: F) -> Self {
+        FnLevelGen { f, _marker: std::marker::PhantomData }
+    }
+}
+
+impl<L: Clone, F: Fn(&mut Pcg64) -> L> LevelGenerator for FnLevelGen<L, F> {
+    type Level = L;
+
+    fn sample_level(&self, rng: &mut Pcg64) -> L {
+        (self.f)(rng)
     }
 }

@@ -1,4 +1,5 @@
-//! Parameterized level mutation (paper §4), the ACCEL edit operator.
+//! Maze level mutation (paper §4), the ACCEL edit operator, implementing
+//! the [`LevelMutator`](crate::env::LevelMutator) trait.
 //!
 //! ACCEL (Parker-Holder et al., 2022) evolves high-regret levels by applying
 //! a small number of random edits to replayed levels. Following
@@ -7,26 +8,27 @@
 //! never produce structurally invalid levels.
 
 use super::level::{Dir, Level, GRID_CELLS, GRID_W};
+use super::LevelMutator;
 use crate::util::rng::Pcg64;
 
 /// Mutation-operator parameters. `num_edits` matches Table 3 (20).
 #[derive(Clone, Copy, Debug)]
-pub struct Mutator {
+pub struct MazeMutator {
     pub num_edits: usize,
     /// Probability an edit toggles a wall (the remainder splits evenly
     /// between moving the goal and moving the agent).
     pub p_wall: f64,
 }
 
-impl Default for Mutator {
+impl Default for MazeMutator {
     fn default() -> Self {
-        Mutator { num_edits: 20, p_wall: 0.8 }
+        MazeMutator { num_edits: 20, p_wall: 0.8 }
     }
 }
 
-impl Mutator {
+impl MazeMutator {
     pub fn new(num_edits: usize) -> Self {
-        Mutator { num_edits, ..Default::default() }
+        MazeMutator { num_edits, ..Default::default() }
     }
 
     /// Apply one random edit in place.
@@ -77,24 +79,27 @@ impl Mutator {
         debug_assert!(child.is_valid());
         child
     }
+}
 
-    /// Mutate a batch of parents (one child per parent).
-    pub fn mutate_batch(&self, parents: &[Level], rng: &mut Pcg64) -> Vec<Level> {
-        parents.iter().map(|p| self.mutate(p, rng)).collect()
+impl LevelMutator for MazeMutator {
+    type Level = Level;
+
+    fn mutate_level(&self, parent: &Level, rng: &mut Pcg64) -> Level {
+        self.mutate(parent, rng)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::env::gen::LevelGenerator;
+    use crate::env::gen::MazeLevelGenerator;
     use crate::prop_assert;
     use crate::util::proptest::props;
 
     #[test]
     fn children_always_valid() {
-        let g = LevelGenerator::new(60);
-        let m = Mutator::default();
+        let g = MazeLevelGenerator::new(60);
+        let m = MazeMutator::default();
         let mut rng = Pcg64::seed_from_u64(0);
         for _ in 0..200 {
             let parent = g.generate(&mut rng);
@@ -105,8 +110,8 @@ mod tests {
 
     #[test]
     fn zero_edits_is_identity() {
-        let g = LevelGenerator::new(30);
-        let m = Mutator::new(0);
+        let g = MazeLevelGenerator::new(30);
+        let m = MazeMutator::new(0);
         let mut rng = Pcg64::seed_from_u64(1);
         let parent = g.generate(&mut rng);
         assert_eq!(m.mutate(&parent, &mut rng), parent);
@@ -114,8 +119,8 @@ mod tests {
 
     #[test]
     fn edits_change_levels() {
-        let g = LevelGenerator::new(30);
-        let m = Mutator::new(20);
+        let g = MazeLevelGenerator::new(30);
+        let m = MazeMutator::new(20);
         let mut rng = Pcg64::seed_from_u64(2);
         let mut changed = 0;
         for _ in 0..50 {
@@ -129,8 +134,8 @@ mod tests {
 
     #[test]
     fn wall_only_mutator_preserves_positions() {
-        let g = LevelGenerator::new(30);
-        let m = Mutator { num_edits: 10, p_wall: 1.0 };
+        let g = MazeLevelGenerator::new(30);
+        let m = MazeMutator { num_edits: 10, p_wall: 1.0 };
         let mut rng = Pcg64::seed_from_u64(3);
         for _ in 0..50 {
             let parent = g.generate(&mut rng);
@@ -144,8 +149,8 @@ mod tests {
     fn prop_mutation_validity_and_wall_delta() {
         props(200, |gen| {
             let edits = gen.usize_in(0, 30);
-            let g = LevelGenerator::new(40);
-            let m = Mutator::new(edits);
+            let g = MazeLevelGenerator::new(40);
+            let m = MazeMutator::new(edits);
             let parent = g.generate(gen.rng());
             let child = m.mutate(&parent, gen.rng());
             prop_assert!(child.is_valid(), "invalid child");

@@ -1,0 +1,258 @@
+//! The environment registry: `--env` selects an [`EnvFamily`] the way
+//! `--algo` selects a UED method.
+//!
+//! Families carry associated types (env, level, generator, mutator,
+//! editor), so the registry cannot be a map of trait objects; instead it is
+//! the idiomatic Rust equivalent — a closed [`EnvId`] enum plus a visitor
+//! [`dispatch`] that re-enters generic code with the statically-known
+//! family. Adding an environment is: implement `EnvFamily`, add an `EnvId`
+//! variant, extend the two match arms here. No algorithm, rollout, or
+//! evaluation code changes.
+
+use anyhow::{bail, Result};
+
+use super::editor::{EditorEnv, EditorState};
+use super::gen::MazeLevelGenerator;
+use super::holdout::{named_levels, procedural_suite};
+use super::lava::{self, LavaEnv, LavaLevel, LavaLevelGenerator, LavaMutator};
+use super::level::Level;
+use super::maze::MazeEnv;
+use super::mutate::MazeMutator;
+use super::{EnvFamily, EnvGeometry, EnvParams};
+
+/// Which environment family to run (the `--env` flag).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvId {
+    /// The paper's 13×13 MiniGrid-style maze.
+    Maze,
+    /// The lava-grid maze variant (hazard tiles).
+    Lava,
+}
+
+impl EnvId {
+    pub const ALL: [EnvId; 2] = [EnvId::Maze, EnvId::Lava];
+
+    pub fn parse(s: &str) -> Result<EnvId> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "maze" => EnvId::Maze,
+            "lava" | "lava_maze" | "lavagrid" => EnvId::Lava,
+            other => bail!("unknown env {other:?} (maze|lava)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            EnvId::Maze => "maze",
+            EnvId::Lava => "lava",
+        }
+    }
+
+    /// Artifact-name scope: `None` keeps the unprefixed legacy names (the
+    /// maze family the artifacts were first compiled for); `Some(p)` makes
+    /// the runtime prefer `"{p}_{name}"` over `"{name}"` in the manifest.
+    pub fn artifact_prefix(self) -> Option<&'static str> {
+        match self {
+            EnvId::Maze => None,
+            EnvId::Lava => Some("lava"),
+        }
+    }
+
+    /// The family's artifact geometry, without naming its concrete types.
+    pub fn geometry(self) -> EnvGeometry {
+        struct G;
+        impl EnvVisitor for G {
+            type Out = EnvGeometry;
+            fn visit<F: EnvFamily>(self, family: F) -> EnvGeometry {
+                family.geometry()
+            }
+        }
+        dispatch(self, G)
+    }
+}
+
+/// Re-enter generic code with the statically-known family for an [`EnvId`].
+pub trait EnvVisitor {
+    type Out;
+    fn visit<F: EnvFamily>(self, family: F) -> Self::Out;
+}
+
+/// Run `v` with the family selected by `id`.
+pub fn dispatch<V: EnvVisitor>(id: EnvId, v: V) -> V::Out {
+    match id {
+        EnvId::Maze => v.visit(MazeFamily),
+        EnvId::Lava => v.visit(LavaFamily),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Maze family
+// ---------------------------------------------------------------------------
+
+/// Procedural-holdout generation constants shared by both families (the
+/// paper's minimax recipe: 60-wall budget, fixed seed).
+const HOLDOUT_MAX_WALLS: usize = 60;
+const HOLDOUT_SEED: u64 = 0xE7A1;
+/// Lava holdout hazard budget (kept modest so rejection sampling stays
+/// cheap while the suite still exercises hazard avoidance).
+const HOLDOUT_MAX_LAVA: usize = 10;
+
+/// The paper's maze UPOMDP family.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MazeFamily;
+
+impl EnvFamily for MazeFamily {
+    type Env = MazeEnv;
+    type Level = Level;
+    type Generator = MazeLevelGenerator;
+    type Mutator = MazeMutator;
+    type Editor = EditorEnv;
+
+    fn id(&self) -> &'static str {
+        "maze"
+    }
+
+    fn geometry(&self) -> EnvGeometry {
+        EnvGeometry::maze_default()
+    }
+
+    fn make_env(&self, p: &EnvParams) -> MazeEnv {
+        MazeEnv::new(p.max_episode_steps)
+    }
+
+    fn make_generator(&self, p: &EnvParams) -> MazeLevelGenerator {
+        MazeLevelGenerator::new(p.max_walls)
+    }
+
+    fn make_mutator(&self, p: &EnvParams) -> MazeMutator {
+        MazeMutator::new(p.num_edits)
+    }
+
+    fn make_editor(&self, p: &EnvParams) -> EditorEnv {
+        EditorEnv::new(p.editor_steps)
+    }
+
+    fn editor_level(&self, s: &EditorState) -> Level {
+        s.to_level()
+    }
+
+    fn holdout(&self, n_procedural: usize) -> Vec<(String, Level)> {
+        let mut levels: Vec<(String, Level)> = named_levels()
+            .into_iter()
+            .map(|nl| (nl.name.to_string(), nl.level))
+            .collect();
+        for (i, l) in procedural_suite(n_procedural, HOLDOUT_MAX_WALLS, HOLDOUT_SEED)
+            .into_iter()
+            .enumerate()
+        {
+            levels.push((format!("Proc{i:02}"), l));
+        }
+        levels
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lava family
+// ---------------------------------------------------------------------------
+
+/// The lava-grid UPOMDP family (hazard tiles; observation geometry shared
+/// with the maze so the compiled artifacts serve both).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LavaFamily;
+
+impl EnvFamily for LavaFamily {
+    type Env = LavaEnv;
+    type Level = LavaLevel;
+    type Generator = LavaLevelGenerator;
+    type Mutator = LavaMutator;
+    type Editor = EditorEnv;
+
+    fn id(&self) -> &'static str {
+        "lava"
+    }
+
+    fn geometry(&self) -> EnvGeometry {
+        // Identical to the maze by construction (hazards ride in the
+        // obstacle channel at half intensity).
+        EnvGeometry::maze_default()
+    }
+
+    fn make_env(&self, p: &EnvParams) -> LavaEnv {
+        LavaEnv::new(p.max_episode_steps)
+    }
+
+    fn make_generator(&self, p: &EnvParams) -> LavaLevelGenerator {
+        LavaLevelGenerator::new(p.max_walls, p.max_hazards)
+    }
+
+    fn make_mutator(&self, p: &EnvParams) -> LavaMutator {
+        LavaMutator::new(p.num_edits)
+    }
+
+    fn make_editor(&self, p: &EnvParams) -> EditorEnv {
+        EditorEnv::with_palette(p.editor_steps, 3)
+    }
+
+    fn editor_level(&self, s: &EditorState) -> LavaLevel {
+        LavaLevel::from_editor(s)
+    }
+
+    fn holdout(&self, n_procedural: usize) -> Vec<(String, LavaLevel)> {
+        lava::holdout_suite(
+            n_procedural, HOLDOUT_MAX_WALLS, HOLDOUT_MAX_LAVA, HOLDOUT_SEED,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::conformance::check_family_conformance;
+
+    #[test]
+    fn env_id_parse_and_names() {
+        assert_eq!(EnvId::parse("maze").unwrap(), EnvId::Maze);
+        assert_eq!(EnvId::parse("LAVA").unwrap(), EnvId::Lava);
+        assert_eq!(EnvId::parse("lava_maze").unwrap(), EnvId::Lava);
+        assert!(EnvId::parse("pong").is_err());
+        for id in EnvId::ALL {
+            assert_eq!(EnvId::parse(id.name()).unwrap(), id);
+        }
+    }
+
+    #[test]
+    fn artifact_prefixes() {
+        assert_eq!(EnvId::Maze.artifact_prefix(), None);
+        assert_eq!(EnvId::Lava.artifact_prefix(), Some("lava"));
+    }
+
+    #[test]
+    fn geometries_share_artifact_shape() {
+        // The lava family deliberately matches the maze geometry so one
+        // compiled artifact set serves both.
+        assert_eq!(EnvId::Maze.geometry(), EnvId::Lava.geometry());
+    }
+
+    #[test]
+    fn maze_family_passes_conformance() {
+        check_family_conformance(MazeFamily, &EnvParams::default(), 100);
+    }
+
+    #[test]
+    fn lava_family_passes_conformance() {
+        check_family_conformance(LavaFamily, &EnvParams::default(), 100);
+    }
+
+    #[test]
+    fn holdout_suites_nonempty_and_distinctly_named() {
+        fn check<F: EnvFamily>(family: F) {
+            let suite = family.holdout(10);
+            assert!(suite.len() >= 10);
+            let mut names: Vec<&String> = suite.iter().map(|(n, _)| n).collect();
+            names.sort();
+            names.dedup();
+            assert_eq!(names.len(), suite.len(), "duplicate holdout names");
+        }
+        check(MazeFamily);
+        check(LavaFamily);
+    }
+}

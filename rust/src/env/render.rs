@@ -164,7 +164,7 @@ pub fn render_trajectory(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::env::gen::LevelGenerator;
+    use crate::env::gen::MazeLevelGenerator;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -212,7 +212,7 @@ mod tests {
 
     #[test]
     fn montage_shape() {
-        let g = LevelGenerator::new(30);
+        let g = MazeLevelGenerator::new(30);
         let mut rng = Pcg64::seed_from_u64(0);
         let levels = g.generate_batch(10, &mut rng);
         let img = render_montage(&levels, 4);

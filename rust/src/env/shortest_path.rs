@@ -23,10 +23,14 @@ impl DistanceField {
     }
 }
 
-/// BFS from the goal over free cells.
-pub fn distance_field(level: &Level) -> DistanceField {
+/// BFS from `goal` over the 4-connected cells for which `blocked` is false.
+/// The core routine behind every environment's solvability analysis: the
+/// maze treats walls as blocked, the lava variant walls *and* hazards.
+pub fn distance_field_from(
+    goal: (usize, usize), blocked: impl Fn(usize, usize) -> bool,
+) -> DistanceField {
     let mut dist = [UNREACHABLE; GRID_CELLS];
-    let (gx, gy) = (level.goal_pos.0 as usize, level.goal_pos.1 as usize);
+    let (gx, gy) = goal;
     let mut queue = [0usize; GRID_CELLS];
     let (mut head, mut tail) = (0usize, 0usize);
     let start = gy * GRID_W + gx;
@@ -41,7 +45,7 @@ pub fn distance_field(level: &Level) -> DistanceField {
         let push = |nx: usize, ny: usize, dist_arr: &mut [u16; GRID_CELLS],
                         q: &mut [usize; GRID_CELLS], t: &mut usize| {
             let ni = ny * GRID_W + nx;
-            if dist_arr[ni] == UNREACHABLE && !level.wall_at(nx, ny) {
+            if dist_arr[ni] == UNREACHABLE && !blocked(nx, ny) {
                 dist_arr[ni] = d + 1;
                 q[*t] = ni;
                 *t += 1;
@@ -61,6 +65,14 @@ pub fn distance_field(level: &Level) -> DistanceField {
         }
     }
     DistanceField { dist }
+}
+
+/// BFS from the goal over free (non-wall) cells.
+pub fn distance_field(level: &Level) -> DistanceField {
+    distance_field_from(
+        (level.goal_pos.0 as usize, level.goal_pos.1 as usize),
+        |x, y| level.wall_at(x, y),
+    )
 }
 
 /// Moves from the agent start to the goal, or None if unsolvable.

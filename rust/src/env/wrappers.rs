@@ -14,7 +14,7 @@
 //! Both transform an `UnderspecifiedEnv` into another `UnderspecifiedEnv`,
 //! inheriting observation behaviour.
 
-use super::{StepResult, UnderspecifiedEnv};
+use super::{LevelGenerator, StepResult, UnderspecifiedEnv};
 use crate::util::rng::Pcg64;
 
 /// On episode end, re-reset to the level that was just played.
@@ -89,20 +89,21 @@ impl<E: UnderspecifiedEnv> UnderspecifiedEnv for AutoReplayWrapper<E> {
 
 /// On episode end, sample a fresh level from the injected distribution and
 /// reset to it (dependency injection of the level distribution — the
-/// wrapper owns a sampling closure, not the env).
-pub struct AutoResetWrapper<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> {
+/// wrapper owns a [`LevelGenerator`], not the env; ad-hoc closures fit via
+/// [`FnLevelGen`](crate::env::FnLevelGen)).
+pub struct AutoResetWrapper<E: UnderspecifiedEnv, G: LevelGenerator<Level = E::Level>> {
     pub env: E,
-    pub sample_level: F,
+    pub generator: G,
 }
 
-impl<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> AutoResetWrapper<E, F> {
-    pub fn new(env: E, sample_level: F) -> Self {
-        AutoResetWrapper { env, sample_level }
+impl<E: UnderspecifiedEnv, G: LevelGenerator<Level = E::Level>> AutoResetWrapper<E, G> {
+    pub fn new(env: E, generator: G) -> Self {
+        AutoResetWrapper { env, generator }
     }
 }
 
-impl<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> UnderspecifiedEnv
-    for AutoResetWrapper<E, F>
+impl<E: UnderspecifiedEnv, G: LevelGenerator<Level = E::Level>> UnderspecifiedEnv
+    for AutoResetWrapper<E, G>
 {
     type State = E::State;
     type Level = E::Level;
@@ -118,7 +119,7 @@ impl<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> UnderspecifiedEnv
     fn step(&self, s: &mut Self::State, action: usize, rng: &mut Pcg64) -> StepResult {
         let r = self.env.step(s, action, rng);
         if r.done {
-            let level = (self.sample_level)(rng);
+            let level = self.generator.sample_level(rng);
             *s = self.env.reset_to_level(&level, rng);
         }
         r
@@ -140,9 +141,10 @@ impl<E: UnderspecifiedEnv, F: Fn(&mut Pcg64) -> E::Level> UnderspecifiedEnv
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::env::gen::LevelGenerator;
+    use crate::env::gen::MazeLevelGenerator;
     use crate::env::level::{Dir, Level};
     use crate::env::maze::{MazeEnv, ACT_FORWARD};
+    use crate::env::FnLevelGen;
 
     fn short_goal_level() -> Level {
         let mut l = Level::empty();
@@ -172,10 +174,8 @@ mod tests {
 
     #[test]
     fn auto_reset_samples_new_level() {
-        let gen = LevelGenerator::new(0); // open mazes, always solvable
-        let env = AutoResetWrapper::new(MazeEnv::default(), move |r: &mut Pcg64| {
-            gen.generate(r)
-        });
+        let gen = MazeLevelGenerator::new(0); // open mazes, always solvable
+        let env = AutoResetWrapper::new(MazeEnv::default(), gen);
         let mut rng = Pcg64::seed_from_u64(1);
         let level = short_goal_level();
         let mut s = env.reset_to_level(&level, &mut rng);
@@ -185,6 +185,21 @@ mod tests {
         assert_eq!(s.t, 0);
         // overwhelmingly unlikely to be the same 2-cell toy level
         assert_ne!(s.level, level);
+    }
+
+    #[test]
+    fn auto_reset_accepts_closure_generators() {
+        // FnLevelGen adapts an ad-hoc distribution to the trait.
+        let fixed = short_goal_level();
+        let env = AutoResetWrapper::new(
+            MazeEnv::default(),
+            FnLevelGen::new(move |_r: &mut Pcg64| fixed),
+        );
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut s = env.reset_to_level(&fixed, &mut rng);
+        let r = env.step(&mut s, ACT_FORWARD, &mut rng);
+        assert!(r.done);
+        assert_eq!(s.level, fixed, "closure generator resampled the fixed level");
     }
 
     #[test]

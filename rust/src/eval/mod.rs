@@ -1,17 +1,21 @@
-//! Holdout evaluation (paper §6.1 / Figure 3 / Table 2).
+//! Holdout evaluation (paper §6.1 / Figure 3 / Table 2), generic over the
+//! environment family.
 //!
 //! Runs the student policy on each holdout level for `trials` stochastic
 //! episodes and reports per-level solve rates plus the paper's aggregates:
 //! mean solve rate (Table 2) and IQM with min–max over seeds (Figure 3,
-//! aggregated by the bench harness across runs).
+//! aggregated by the bench harness across runs). The evaluator contains no
+//! env-specific types: any [`UnderspecifiedEnv`] plus a named level list
+//! works, and [`for_family`] / [`evaluate_params`] build the family's
+//! default suite from the registry.
 
 use anyhow::Result;
 
-use crate::env::holdout::{named_levels, procedural_suite};
-use crate::env::level::Level;
-use crate::env::maze::MazeEnv;
-use crate::env::UnderspecifiedEnv;
+use crate::config::TrainConfig;
+use crate::env::registry::{dispatch, EnvVisitor};
+use crate::env::{EnvFamily, UnderspecifiedEnv};
 use crate::rollout::{Policy, RolloutEngine};
+use crate::runtime::{ParamSet, Runtime};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
@@ -33,28 +37,28 @@ pub struct EvalReport {
     pub iqm_solve_rate: f64,
 }
 
-/// The evaluation suite: named mazes + a deterministic procedural batch.
-pub struct Evaluator {
-    pub levels: Vec<(String, Level)>,
-    pub env: MazeEnv,
+/// The evaluation suite: an environment plus named holdout levels.
+pub struct Evaluator<E: UnderspecifiedEnv> {
+    pub levels: Vec<(String, E::Level)>,
+    pub env: E,
     pub trials: usize,
+    /// Episode step cap driven by the engine (envs also self-truncate).
+    pub max_steps: usize,
     b: usize,
 }
 
-impl Evaluator {
-    /// The default suite: 12 named mazes + `n_procedural` seeded minimax-
-    /// recipe levels (solvable, ≤ 60 walls).
-    pub fn default_suite(
-        b: usize, trials: usize, n_procedural: usize, max_episode_steps: usize,
-    ) -> Evaluator {
-        let mut levels: Vec<(String, Level)> = named_levels()
-            .into_iter()
-            .map(|nl| (nl.name.to_string(), nl.level))
-            .collect();
-        for (i, l) in procedural_suite(n_procedural, 60, 0xE7A1).into_iter().enumerate() {
-            levels.push((format!("Proc{i:02}"), l));
-        }
-        Evaluator { levels, env: MazeEnv::new(max_episode_steps), trials, b }
+impl<E: UnderspecifiedEnv> Evaluator<E> {
+    pub fn new(
+        env: E, levels: Vec<(String, E::Level)>, trials: usize, b: usize,
+        max_steps: usize,
+    ) -> Evaluator<E> {
+        assert!(!levels.is_empty(), "empty holdout suite");
+        Evaluator { levels, env, trials, max_steps, b }
+    }
+
+    /// Student policy action count (for building the eval [`Policy`]).
+    pub fn num_actions(&self) -> usize {
+        self.env.num_actions()
     }
 
     /// Evaluate a policy. Episodes are batched B at a time through the
@@ -83,7 +87,7 @@ impl Evaluator {
                 states.push(self.env.reset_to_level(&self.levels[chunk[0]].1, rng));
             }
             let outcomes = engine.run_episodes(
-                &self.env, &mut states, policy, self.env.max_steps, rng, false,
+                &self.env, &mut states, policy, self.max_steps, rng, false,
             )?;
             for (j, &i) in chunk.iter().enumerate() {
                 runs[i] += 1;
@@ -113,18 +117,79 @@ impl Evaluator {
     }
 }
 
+/// A family's default suite: its named holdout levels + `n_procedural`
+/// deterministic solvable draws.
+pub fn for_family<F: EnvFamily>(
+    family: F, cfg: &TrainConfig, trials: usize, n_procedural: usize,
+) -> Evaluator<F::Env> {
+    let params = cfg.env_params();
+    Evaluator::new(
+        family.make_env(&params),
+        family.holdout(n_procedural),
+        trials,
+        cfg.variant.b,
+        params.max_episode_steps,
+    )
+}
+
+/// Evaluate a parameter set on the default holdout suite of the env the
+/// config selects — the env-erased entry point for `jaxued eval` and the
+/// examples (internally dispatches through the registry).
+pub fn evaluate_params(
+    rt: &Runtime, cfg: &TrainConfig, params: &ParamSet, trials: usize,
+    n_procedural: usize, rng: &mut Pcg64,
+) -> Result<EvalReport> {
+    struct V<'a> {
+        rt: &'a Runtime,
+        cfg: &'a TrainConfig,
+        params: &'a ParamSet,
+        trials: usize,
+        n_procedural: usize,
+        rng: &'a mut Pcg64,
+    }
+    impl EnvVisitor for V<'_> {
+        type Out = Result<EvalReport>;
+        fn visit<F: EnvFamily>(self, family: F) -> Self::Out {
+            let evaluator = for_family(family, self.cfg, self.trials, self.n_procedural);
+            let apply = self.rt.load_scoped(
+                self.cfg.env.artifact_prefix(),
+                &self.cfg.student_apply_artifact(),
+            )?;
+            let policy = Policy {
+                apply,
+                params: &self.params.params,
+                num_actions: evaluator.num_actions(),
+            };
+            evaluator.run(&policy, self.rng)
+        }
+    }
+    dispatch(cfg.env, V { rt, cfg, params, trials, n_procedural, rng })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Algo;
+    use crate::env::{LavaFamily, MazeFamily};
 
     #[test]
     fn suite_composition() {
-        let e = Evaluator::default_suite(8, 2, 10, 250);
+        let cfg = TrainConfig::defaults(Algo::Dr);
+        let e = for_family(MazeFamily, &cfg, 2, 10);
         assert_eq!(e.levels.len(), 12 + 10);
         // all names unique
         let mut names: Vec<&String> = e.levels.iter().map(|(n, _)| n).collect();
         names.sort();
         names.dedup();
         assert_eq!(names.len(), 22);
+    }
+
+    #[test]
+    fn lava_suite_composition() {
+        let mut cfg = TrainConfig::defaults(Algo::Dr);
+        cfg.env = crate::env::EnvId::Lava;
+        let e = for_family(LavaFamily, &cfg, 2, 8);
+        assert_eq!(e.levels.len(), 6 + 8);
+        assert_eq!(e.num_actions(), 3);
     }
 }

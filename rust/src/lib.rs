@@ -7,13 +7,18 @@
 //! (`make artifacts`); the training hot path is pure Rust + PJRT.
 //!
 //! Layering (DESIGN.md):
-//! * [`env`] — the `UnderspecifiedEnv` interface, maze + editor envs,
-//!   wrappers, generation/mutation, rendering, holdout suites.
+//! * [`env`] — the `UnderspecifiedEnv` interface plus the level-lifecycle
+//!   capability traits (`LevelGenerator`/`LevelMutator`/`LevelMeta`), the
+//!   `EnvFamily` registry (`--env maze|lava`), the maze + lava + editor
+//!   envs, wrappers, rendering, holdout suites, and the reusable
+//!   conformance property suite.
 //! * [`level_sampler`] — the prioritized rolling level buffer.
-//! * [`runtime`] — PJRT client, artifact manifest, parameter store.
+//! * [`runtime`] — PJRT client, artifact manifest (env-scoped artifact
+//!   name resolution), parameter store.
 //! * [`rollout`] — vectorized B-way rollout engine + trajectory storage.
 //! * [`ppo`] — the train-step driver (the update itself is an AOT artifact).
-//! * [`algo`] — DR / PLR / PLR⊥ / ACCEL / PAIRED drivers + training loop.
+//! * [`algo`] — DR / PLR / PLR⊥ / ACCEL / PAIRED drivers + training loop,
+//!   generic over the env family.
 //! * [`eval`], [`metrics`], [`config`], [`util`] — support systems.
 pub mod algo;
 pub mod config;

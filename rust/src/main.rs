@@ -2,15 +2,17 @@
 //!
 //! Subcommands:
 //!   train       run a UED algorithm (DR | PLR | PLR⊥ | ACCEL | PAIRED)
-//!   eval        evaluate a checkpoint on the holdout suite
-//!   render      render the holdout suite / generated levels to PPM
+//!               on any registered env (`--env maze|lava`)
+//!   eval        evaluate a checkpoint on the selected env's holdout suite
+//!   render      render the maze holdout suite / generated levels to PPM
 //!   meta-policy print the Figure-1 transition matrix + empirical rates
 //!   info        print manifest + artifact inventory
 //!
 //! Examples:
 //!   jaxued train --algo accel --seed 1 --env-steps 1000000
-//!   jaxued train --algo paired --variant small --env-steps 50000
+//!   jaxued train --algo paired --env lava --variant small --env-steps 50000
 //!   jaxued eval --ckpt runs/dr_s0/student.ckpt
+//!   jaxued eval --env lava --ckpt runs/lava_dr_s0/student.ckpt
 //!   jaxued render --out figure2.ppm
 
 use std::path::Path;
@@ -20,11 +22,10 @@ use anyhow::Result;
 use jaxued::algo::meta_policy::{Cycle, MetaPolicy};
 use jaxued::algo::train;
 use jaxued::config::TrainConfig;
-use jaxued::env::gen::LevelGenerator;
+use jaxued::env::gen::MazeLevelGenerator;
 use jaxued::env::holdout;
 use jaxued::env::render::render_montage;
-use jaxued::eval::Evaluator;
-use jaxued::rollout::Policy;
+use jaxued::eval::evaluate_params;
 use jaxued::runtime::{ParamSet, Runtime};
 use jaxued::util::cli::Args;
 use jaxued::util::rng::Pcg64;
@@ -55,11 +56,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         anyhow::bail!("unknown flags: {unknown:?}");
     }
     println!(
-        "jaxued train: algo={} seed={} variant={} budget={} env steps ({} cycles)",
-        cfg.algo.name(), cfg.seed, cfg.variant.name,
+        "jaxued train: env={} algo={} seed={} variant={} budget={} env steps ({} cycles)",
+        cfg.env.name(), cfg.algo.name(), cfg.seed, cfg.variant.name,
         cfg.env_steps_budget, cfg.num_cycles(),
     );
-    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let rt = Runtime::with_geometry(Path::new(&cfg.artifacts_dir), &cfg.env.geometry())?;
     let outcome = train(&rt, &cfg, false)?;
     println!(
         "done: {} cycles, {} env steps in {:.1}s ({:.0} steps/s)",
@@ -79,19 +80,13 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let ckpt = args.get_str("ckpt", "runs/dr_s0/student.ckpt");
+    let default_ckpt = format!("runs/{}/student.ckpt", cfg.run_name());
+    let ckpt = args.get_str("ckpt", &default_ckpt);
     let trials = args.get_usize("trials", 10);
-    let rt = Runtime::new(Path::new(&cfg.artifacts_dir))?;
+    let rt = Runtime::with_geometry(Path::new(&cfg.artifacts_dir), &cfg.env.geometry())?;
     let params = ParamSet::load(Path::new(&ckpt), "student")?;
-    let apply = rt.load(&cfg.student_apply_artifact())?;
-    let policy = Policy {
-        apply,
-        params: &params.params,
-        num_actions: jaxued::env::maze::NUM_ACTIONS,
-    };
-    let evaluator = Evaluator::default_suite(cfg.variant.b, trials, 20, cfg.max_episode_steps);
     let mut rng = Pcg64::new(cfg.seed, 0x6576); // "ev"
-    let report = evaluator.run(&policy, &mut rng)?;
+    let report = evaluate_params(&rt, &cfg, &params, trials, 20, &mut rng)?;
     println!("{:<22} {:>10} {:>12}", "level", "solve", "mean_steps");
     for l in &report.levels {
         println!("{:<22} {:>10.3} {:>12.1}", l.name, l.solve_rate, l.mean_steps);
@@ -110,7 +105,7 @@ fn cmd_render(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 0xE7A1);
     let mut levels: Vec<_> = holdout::named_levels().into_iter().map(|n| n.level).collect();
     if args.has("random") {
-        let gen = LevelGenerator::new(max_walls);
+        let gen = MazeLevelGenerator::new(max_walls);
         let mut rng = Pcg64::seed_from_u64(seed);
         levels = gen.generate_batch(n_proc.max(1), &mut rng);
     } else {

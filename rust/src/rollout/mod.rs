@@ -136,7 +136,10 @@ impl RolloutEngine {
     /// Run episodes to completion (no trajectory recording): used by the
     /// evaluator. Each column runs exactly one episode from its level;
     /// returns per-column (solved, steps, terminal reward). Columns whose
-    /// episode already finished are stepped but ignored.
+    /// episode already finished are *skipped* — their states are not
+    /// stepped again (their logits are still computed as part of the
+    /// fixed-shape batched forward pass, then discarded), and the loop
+    /// exits early once every column is done.
     pub fn run_episodes<E: UnderspecifiedEnv>(
         &mut self, env: &E, states: &mut [E::State], policy: &Policy,
         max_steps: usize, rng: &mut Pcg64, greedy: bool,

@@ -72,9 +72,10 @@ impl Trajectory {
     }
 
     /// Per-env (column) episode statistics from the stored rewards/dones.
-    /// In the maze, an episode is "solved" iff its terminal reward is
-    /// positive. Returns, per column: (episodes completed, episodes solved,
-    /// summed reward).
+    /// An episode counts as "solved" iff its terminal reward is positive
+    /// (the goal-reward convention every registered env family follows).
+    /// Returns, per column: (episodes completed, episodes solved, summed
+    /// reward).
     pub fn episode_stats(&self) -> Vec<EpisodeStats> {
         let mut stats = vec![EpisodeStats::default(); self.b];
         for t in 0..self.t {

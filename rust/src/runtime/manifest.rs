@@ -204,30 +204,47 @@ impl Manifest {
             .with_context(|| format!("network {name:?} not in manifest"))
     }
 
-    /// Cross-check baked constants against the Rust env geometry. Called at
-    /// runtime startup; a mismatch means artifacts were built from a
-    /// different model than this binary expects.
-    pub fn validate_against_env(&self) -> Result<()> {
-        use crate::env::editor::NOISE_DIM;
-        use crate::env::level::{GRID_CELLS, GRID_H, GRID_W};
-        use crate::env::maze::{NUM_ACTIONS, OBS_CHANNELS, VIEW};
+    /// Cross-check baked constants against an environment family's
+    /// geometry. Called at runtime startup; a mismatch means artifacts were
+    /// built from a different model than the selected env expects.
+    pub fn validate_geometry(&self, g: &crate::env::EnvGeometry) -> Result<()> {
         let c = &self.constants;
-        if c.grid_w != GRID_W || c.grid_h != GRID_H {
-            bail!("grid {}x{} != env {GRID_W}x{GRID_H}", c.grid_w, c.grid_h);
+        if c.grid_w != g.grid_w || c.grid_h != g.grid_h {
+            bail!("grid {}x{} != env {}x{}", c.grid_w, c.grid_h, g.grid_w, g.grid_h);
         }
-        if c.view != VIEW || c.obs_channels != OBS_CHANNELS {
-            bail!("view/channels {}x{} != env {VIEW}x{OBS_CHANNELS}", c.view, c.obs_channels);
+        if c.view != g.view || c.obs_channels != g.obs_channels {
+            bail!(
+                "view/channels {}x{} != env {}x{}",
+                c.view, c.obs_channels, g.view, g.obs_channels
+            );
         }
-        if c.num_actions != NUM_ACTIONS {
-            bail!("num_actions {} != env {NUM_ACTIONS}", c.num_actions);
+        if c.num_actions != g.num_actions {
+            bail!("num_actions {} != env {}", c.num_actions, g.num_actions);
         }
-        if c.adv_num_actions != GRID_CELLS {
-            bail!("adv_num_actions {} != {GRID_CELLS}", c.adv_num_actions);
+        if c.adv_num_actions != g.adv_num_actions {
+            bail!("adv_num_actions {} != {}", c.adv_num_actions, g.adv_num_actions);
         }
-        if c.adv_noise_dim != NOISE_DIM {
-            bail!("adv_noise_dim {} != {NOISE_DIM}", c.adv_noise_dim);
+        if c.adv_noise_dim != g.adv_noise_dim {
+            bail!("adv_noise_dim {} != {}", c.adv_noise_dim, g.adv_noise_dim);
+        }
+        // The student ABI is [egocentric crop, facing one-hot]: the env's
+        // flat observation must fill exactly that many artifact inputs.
+        let flat: usize = g.obs_components.iter().sum();
+        let expect = c.view * c.view * c.obs_channels + c.num_directions;
+        if flat != expect {
+            bail!(
+                "env obs components {:?} sum to {flat}, artifacts expect {expect} \
+                 (view²·channels + directions)",
+                g.obs_components
+            );
         }
         Ok(())
+    }
+
+    /// [`validate_geometry`](Manifest::validate_geometry) against the
+    /// compiled-artifact default (maze) geometry.
+    pub fn validate_against_env(&self) -> Result<()> {
+        self.validate_geometry(&crate::env::EnvGeometry::maze_default())
     }
 }
 

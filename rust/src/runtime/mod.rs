@@ -28,11 +28,19 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    /// Start a CPU PJRT client and load the manifest from `dir`.
+    /// Start a CPU PJRT client and load the manifest from `dir`, validating
+    /// against the compiled-artifact default (maze) geometry.
     pub fn new(dir: &Path) -> Result<Runtime> {
+        Self::with_geometry(dir, &crate::env::EnvGeometry::maze_default())
+    }
+
+    /// Start a runtime validated against a specific environment family's
+    /// geometry (`EnvId::geometry()`), so an incompatible artifact set
+    /// fails loudly at startup rather than numerically at rollout time.
+    pub fn with_geometry(dir: &Path, geometry: &crate::env::EnvGeometry) -> Result<Runtime> {
         let manifest = Manifest::load(dir)?;
         manifest
-            .validate_against_env()
+            .validate_geometry(geometry)
             .context("artifact/env geometry mismatch — rebuild artifacts")?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
@@ -40,8 +48,35 @@ impl Runtime {
 
     /// Default artifacts directory: $JAXUED_ARTIFACTS or ./artifacts.
     pub fn from_env() -> Result<Runtime> {
+        Self::from_env_with_geometry(&crate::env::EnvGeometry::maze_default())
+    }
+
+    /// [`from_env`](Runtime::from_env)'s directory lookup, validated
+    /// against a specific family's geometry.
+    pub fn from_env_with_geometry(geometry: &crate::env::EnvGeometry) -> Result<Runtime> {
         let dir = std::env::var("JAXUED_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
-        Self::new(Path::new(&dir))
+        Self::with_geometry(Path::new(&dir), geometry)
+    }
+
+    /// Resolve an artifact name under an optional env scope: prefer
+    /// `"{prefix}_{base}"` when the manifest carries it, falling back to
+    /// the shared `base` (families with identical observation geometry —
+    /// e.g. lava vs maze — share one compiled artifact set).
+    pub fn resolve_name(&self, prefix: Option<&str>, base: &str) -> String {
+        if let Some(p) = prefix {
+            let scoped = format!("{p}_{base}");
+            if self.manifest.artifacts.contains_key(&scoped) {
+                return scoped;
+            }
+        }
+        base.to_string()
+    }
+
+    /// [`load`](Runtime::load) through [`resolve_name`](Runtime::resolve_name).
+    pub fn load_scoped(
+        &self, prefix: Option<&str>, base: &str,
+    ) -> Result<Rc<Executable>> {
+        self.load(&self.resolve_name(prefix, base))
     }
 
     /// Fetch (compiling + caching on first use) an artifact by name.

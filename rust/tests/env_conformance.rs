@@ -1,0 +1,79 @@
+//! Env-trait conformance: the reusable property suite from
+//! `jaxued::env::conformance` run against every registered family, plus
+//! registry-level invariants. Needs no compiled artifacts — this is pure
+//! env-layer behaviour.
+
+use jaxued::env::conformance::{check_editor_conformance, check_family_conformance};
+use jaxued::env::registry::{dispatch, EnvVisitor};
+use jaxued::env::{
+    EnvFamily, EnvId, EnvParams, LavaFamily, LevelGenerator, LevelMeta, MazeFamily,
+};
+use jaxued::util::rng::Pcg64;
+
+#[test]
+fn maze_family_conforms() {
+    check_family_conformance(MazeFamily, &EnvParams::default(), 200);
+}
+
+#[test]
+fn lava_family_conforms() {
+    check_family_conformance(LavaFamily, &EnvParams::default(), 200);
+}
+
+#[test]
+fn every_registered_env_conforms_via_dispatch() {
+    // The registry path the trainer takes: every EnvId must dispatch to a
+    // family that passes the suite (new envs get covered automatically).
+    struct Check;
+    impl EnvVisitor for Check {
+        type Out = ();
+        fn visit<F: EnvFamily>(self, family: F) {
+            check_family_conformance(family, &EnvParams::default(), 50);
+            check_editor_conformance(family, &EnvParams::default(), 8);
+        }
+    }
+    for id in EnvId::ALL {
+        dispatch(id, Check);
+    }
+}
+
+#[test]
+fn editor_budget_respected_for_both_palettes() {
+    struct Check;
+    impl EnvVisitor for Check {
+        type Out = ();
+        fn visit<F: EnvFamily>(self, family: F) {
+            let params = EnvParams { editor_steps: 13, ..EnvParams::default() };
+            check_editor_conformance(family, &params, 4);
+        }
+    }
+    for id in EnvId::ALL {
+        dispatch(id, Check);
+    }
+}
+
+#[test]
+fn fingerprints_discriminate_within_each_family() {
+    // 200 base-distribution draws per family: distinct encodings must hash
+    // to distinct fingerprints (FNV collisions at this scale would break
+    // the PLR buffer's de-duplication).
+    fn check<F: EnvFamily>(family: F) {
+        let gen = family.make_generator(&EnvParams::default());
+        let mut rng = Pcg64::seed_from_u64(99);
+        let levels = gen.sample_batch(200, &mut rng);
+        for i in 0..levels.len() {
+            for j in (i + 1)..levels.len() {
+                if levels[i].encode() != levels[j].encode() {
+                    assert_ne!(
+                        levels[i].fingerprint(),
+                        levels[j].fingerprint(),
+                        "[{}] fingerprint collision between draws {i} and {j}",
+                        family.id()
+                    );
+                }
+            }
+        }
+    }
+    check(MazeFamily);
+    check(LavaFamily);
+}

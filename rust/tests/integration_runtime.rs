@@ -5,7 +5,7 @@
 use std::path::{Path, PathBuf};
 
 use jaxued::config::{Algo, TrainConfig, VARIANT_SMALL};
-use jaxued::env::gen::LevelGenerator;
+use jaxued::env::gen::MazeLevelGenerator;
 use jaxued::env::maze::{MazeEnv, NUM_ACTIONS};
 use jaxued::env::wrappers::AutoReplayWrapper;
 use jaxued::env::UnderspecifiedEnv;
@@ -70,7 +70,7 @@ fn apply_outputs_finite_and_batch_consistent() {
 
     // same obs replicated across the batch must give identical rows
     let env = MazeEnv::default();
-    let gen = LevelGenerator::new(30);
+    let gen = MazeLevelGenerator::new(30);
     let mut rng = Pcg64::seed_from_u64(0);
     let level = gen.generate_solvable(&mut rng, 100);
     let state = env.reset_to_level(&level, &mut rng);
@@ -109,7 +109,7 @@ fn train_step_learns_on_synthetic_advantage() {
     let apply = rt.load(&cfg.student_apply_artifact()).unwrap();
 
     let env = AutoReplayWrapper::new(MazeEnv::new(cfg.max_episode_steps));
-    let gen = LevelGenerator::new(10);
+    let gen = MazeLevelGenerator::new(10);
     let mut rng = Pcg64::seed_from_u64(5);
     let levels = gen.generate_batch(8, &mut rng);
     let mut states: Vec<_> = levels.iter().map(|l| env.reset_to_level(l, &mut rng)).collect();

@@ -8,6 +8,7 @@ use std::path::PathBuf;
 use jaxued::algo::plr::PlrAlgo;
 use jaxued::algo::{build_algo, train, UedAlgorithm};
 use jaxued::config::{Algo, TrainConfig, VARIANT_SMALL};
+use jaxued::env::MazeFamily;
 use jaxued::runtime::Runtime;
 use jaxued::util::rng::Pcg64;
 
@@ -56,7 +57,7 @@ fn plr_buffer_fills_and_replays() {
     let mut cfg = cfg_for(Algo::Plr, 0, "plr");
     cfg.buffer_size = 24; // small buffer so replay starts quickly
     let mut rng = Pcg64::seed_from_u64(0);
-    let mut algo = PlrAlgo::new(&rt, &cfg).unwrap();
+    let mut algo = PlrAlgo::new(MazeFamily, &rt, &cfg).unwrap();
     let mut kinds = std::collections::BTreeMap::new();
     for _ in 0..20 {
         let m = algo.cycle(&mut rng).unwrap();
@@ -74,7 +75,7 @@ fn accel_mutates_after_replay() {
     let mut cfg = cfg_for(Algo::Accel, 0, "accel");
     cfg.buffer_size = 24;
     let mut rng = Pcg64::seed_from_u64(1);
-    let mut algo = PlrAlgo::new(&rt, &cfg).unwrap();
+    let mut algo = PlrAlgo::new(MazeFamily, &rt, &cfg).unwrap();
     let mut last_kind = "";
     let mut saw_mutate = false;
     for _ in 0..24 {
@@ -94,7 +95,7 @@ fn robust_plr_never_updates_on_new_levels() {
     let mut cfg = cfg_for(Algo::RobustPlr, 0, "rplr");
     cfg.buffer_size = 24;
     let mut rng = Pcg64::seed_from_u64(2);
-    let mut algo = PlrAlgo::new(&rt, &cfg).unwrap();
+    let mut algo = PlrAlgo::new(MazeFamily, &rt, &cfg).unwrap();
     for _ in 0..16 {
         let m = algo.cycle(&mut rng).unwrap();
         match m.kind {
@@ -110,7 +111,7 @@ fn plain_plr_updates_on_new_levels() {
     let rt = runtime();
     let cfg = cfg_for(Algo::Plr, 0, "plr2");
     let mut rng = Pcg64::seed_from_u64(3);
-    let mut algo = PlrAlgo::new(&rt, &cfg).unwrap();
+    let mut algo = PlrAlgo::new(MazeFamily, &rt, &cfg).unwrap();
     let m = algo.cycle(&mut rng).unwrap();
     assert_eq!(m.kind, "new");
     assert!(m.updated, "plain PLR trains on new-level cycles");
@@ -164,4 +165,36 @@ fn all_algos_via_factory() {
         assert!(!driver.student_params().is_empty());
         assert_eq!(driver.name().is_empty(), false);
     }
+}
+
+#[test]
+fn lava_env_runs_all_algos_via_config_only() {
+    // The API-redesign acceptance check: the second environment trains
+    // under every algorithm with *only* cfg.env changed — no algorithm
+    // code knows it exists.
+    let rt = runtime();
+    let mut rng = Pcg64::seed_from_u64(6);
+    for algo in [Algo::Dr, Algo::Plr, Algo::RobustPlr, Algo::Accel, Algo::Paired] {
+        let mut cfg = cfg_for(algo, 1, "lava_factory");
+        cfg.env = jaxued::env::EnvId::Lava;
+        let mut driver = build_algo(&rt, &cfg, &mut rng).unwrap();
+        let m = driver.cycle(&mut rng).unwrap();
+        assert!(m.episodes < 10_000);
+        assert!(!driver.student_params().is_empty());
+    }
+}
+
+#[test]
+fn lava_trains_end_to_end_with_scoped_run_dir() {
+    let rt = runtime();
+    let mut cfg = cfg_for(Algo::Dr, 8, "lava_e2e");
+    cfg.env = jaxued::env::EnvId::Lava;
+    let outcome = train(&rt, &cfg, true).unwrap();
+    assert_eq!(outcome.cycles, 8);
+    assert!(outcome.final_eval.mean_solve_rate.is_finite());
+    // env-scoped run dir: lava_{algo}_s{seed}
+    let ckpt = std::path::Path::new(&cfg.out_dir)
+        .join("lava_dr_s0")
+        .join("student.ckpt");
+    assert!(ckpt.exists(), "missing {ckpt:?}");
 }
