@@ -1,0 +1,146 @@
+//! End-to-end rollout/eval throughput: collect + evaluation steps/sec for
+//! both rollout variants at 1 vs N threads, plus the work-queue vs
+//! padded-chunk forward-pass comparison — the first datapoint of the
+//! BENCH perf trajectory. Emits `BENCH_rollout.json` at the repo root.
+//!
+//! The policy is a synthetic host-side stand-in (fixed linear map), so
+//! the numbers isolate the host rollout path this engine parallelizes:
+//! observe/staging, action sampling, env stepping, trajectory writeback,
+//! and batch scheduling. PJRT device-call latencies are tracked
+//! separately by `micro_runtime`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use jaxued::env::wrappers::AutoReplayWrapper;
+use jaxued::env::{EnvFamily, EnvParams, LevelGenerator, MazeFamily, UnderspecifiedEnv};
+use jaxued::eval::{EvalMode, Evaluator};
+use jaxued::rollout::{auto_threads, RolloutEngine, SyntheticPolicy, Trajectory, WorkerPool};
+use jaxued::util::cli::Args;
+use jaxued::util::rng::Pcg64;
+
+struct Row {
+    variant: &'static str,
+    threads: usize,
+    collect_sps: f64,
+    eval_queue_sps: f64,
+    eval_chunked_sps: f64,
+    forwards_queue: u64,
+    forwards_chunked: u64,
+}
+
+fn bench_collect(t: usize, b: usize, threads: usize, iters: usize) -> f64 {
+    let params = EnvParams::default();
+    let env = AutoReplayWrapper::new(MazeFamily.make_env(&params));
+    let gen = MazeFamily.make_generator(&params);
+    let mut rng = Pcg64::new(0xBE, 0);
+    let levels = gen.sample_batch(b, &mut rng);
+    let mut states: Vec<_> = levels
+        .iter()
+        .map(|l| env.reset_to_level(l, &mut rng))
+        .collect();
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut engine = RolloutEngine::with_pool(&env, b, pool);
+    let mut traj = Trajectory::new(t, b, &env.obs_components());
+    let policy = SyntheticPolicy { num_actions: env.num_actions() };
+    // warmup
+    engine
+        .collect(&env, &mut states, &policy, &mut traj, &mut rng)
+        .unwrap();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine
+            .collect(&env, &mut states, &policy, &mut traj, &mut rng)
+            .unwrap();
+    }
+    (t * b * iters) as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// (steps/sec, forward passes) for one evaluation pass of the standard
+/// holdout suite (named + 12 procedural levels, 3 trials).
+fn bench_eval(b: usize, threads: usize, mode: EvalMode, reps: usize) -> (f64, u64) {
+    let params = EnvParams::default();
+    let env = MazeFamily.make_env(&params);
+    let levels = MazeFamily.holdout(12);
+    let policy = SyntheticPolicy { num_actions: env.num_actions() };
+    let pool = Arc::new(WorkerPool::new(threads));
+    let ev = Evaluator::with_pool(env, levels, 3, b, params.max_episode_steps, pool);
+    let mut rng = Pcg64::new(0xEA, 1);
+    // warmup + forward-pass count
+    let warm = ev.run_with_mode(mode, &policy, &mut rng).unwrap();
+    let forwards = warm.forward_passes;
+    let mut steps = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut rng = Pcg64::new(0xEA, 1);
+        let r = ev.run_with_mode(mode, &policy, &mut rng).unwrap();
+        steps += r
+            .levels
+            .iter()
+            .map(|l| (l.mean_steps * ev.trials as f64) as u64)
+            .sum::<u64>();
+    }
+    (steps as f64 / t0.elapsed().as_secs_f64(), forwards)
+}
+
+fn main() {
+    let args = Args::parse();
+    let iters = args.get_usize("iters", 8);
+    let reps = args.get_usize("reps", 2);
+    let n_threads = auto_threads();
+    let thread_settings: Vec<usize> =
+        if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
+
+    println!("=== bench_rollout: host rollout/eval throughput (synthetic policy) ===");
+    let mut rows = Vec::new();
+    for &(variant, t, b) in &[("std", 256usize, 32usize), ("small", 32, 8)] {
+        for &threads in &thread_settings {
+            let collect_sps = bench_collect(t, b, threads, iters);
+            let (q_sps, q_fwd) = bench_eval(b, threads, EvalMode::WorkQueue, reps);
+            let (c_sps, c_fwd) = bench_eval(b, threads, EvalMode::Chunked, reps);
+            println!(
+                "[{variant:<5} threads={threads:>2}] collect {collect_sps:>12.0} steps/s | \
+                 eval queue {q_sps:>11.0} steps/s ({q_fwd} fwd) | \
+                 eval chunked {c_sps:>11.0} steps/s ({c_fwd} fwd)"
+            );
+            rows.push(Row {
+                variant,
+                threads,
+                collect_sps,
+                eval_queue_sps: q_sps,
+                eval_chunked_sps: c_sps,
+                forwards_queue: q_fwd,
+                forwards_chunked: c_fwd,
+            });
+        }
+    }
+
+    // Emit BENCH_rollout.json at the repo root (rust/..).
+    let mut json = String::from("{\n  \"bench\": \"rollout\",\n");
+    json.push_str(
+        "  \"policy\": \"synthetic host-side stand-in (device forward excluded; see micro_runtime)\",\n",
+    );
+    json.push_str("  \"unit\": \"env steps per second\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"variant\": \"{}\", \"threads\": {}, \"collect_steps_per_sec\": {:.1}, \
+             \"eval_queue_steps_per_sec\": {:.1}, \"eval_chunked_steps_per_sec\": {:.1}, \
+             \"eval_forward_passes_queue\": {}, \"eval_forward_passes_chunked\": {}}}{}\n",
+            r.variant,
+            r.threads,
+            r.collect_sps,
+            r.eval_queue_sps,
+            r.eval_chunked_sps,
+            r.forwards_queue,
+            r.forwards_chunked,
+            if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .join("BENCH_rollout.json");
+    std::fs::write(&out, json).expect("writing BENCH_rollout.json");
+    println!("wrote {}", out.display());
+}

@@ -9,6 +9,8 @@
 //! for (its §5.2 critique of bundling DR into PLR's fixed-level rollout
 //! scheme).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::{CycleMetrics, UedAlgorithm};
@@ -16,7 +18,7 @@ use crate::config::TrainConfig;
 use crate::env::wrappers::AutoResetWrapper;
 use crate::env::{EnvFamily, LevelGenerator, UnderspecifiedEnv};
 use crate::ppo::{LrSchedule, PpoTrainer};
-use crate::rollout::{Policy, RolloutEngine, Trajectory};
+use crate::rollout::{Policy, RolloutEngine, Trajectory, WorkerPool};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
@@ -62,7 +64,8 @@ impl<F: EnvFamily> DrAlgo<F> {
                 env.reset_to_level(&l, rng)
             })
             .collect();
-        let engine = RolloutEngine::new(&env, b);
+        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+        let engine = RolloutEngine::with_pool(&env, b, pool);
         let traj = Trajectory::new(t, b, &env.obs_components());
         let num_actions = env.num_actions();
         Ok(DrAlgo { env, states, engine, traj, trainer, apply, num_actions })
@@ -94,5 +97,9 @@ impl<F: EnvFamily> UedAlgorithm for DrAlgo<F> {
 
     fn student_trainer(&mut self) -> &mut PpoTrainer {
         &mut self.trainer
+    }
+
+    fn rollout_pool(&self) -> Arc<WorkerPool> {
+        self.engine.pool().clone()
     }
 }

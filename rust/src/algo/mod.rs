@@ -18,16 +18,18 @@ pub mod paired;
 pub mod plr;
 pub mod scoring;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::{Algo, TrainConfig};
 use crate::env::registry::{dispatch, EnvVisitor};
 use crate::env::EnvFamily;
-use crate::eval::{for_family, EvalReport};
+use crate::eval::{for_family_with_pool, EvalReport};
 use crate::metrics::{log_stdout, CsvSink, Stopwatch};
 use crate::ppo::{PpoTrainer, UpdateMetrics};
 use crate::rollout::storage::EpisodeStats;
-use crate::rollout::Policy;
+use crate::rollout::{Policy, WorkerPool};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
@@ -98,6 +100,10 @@ pub trait UedAlgorithm {
 
     /// Student trainer (checkpointing).
     fn student_trainer(&mut self) -> &mut PpoTrainer;
+
+    /// The driver's rollout worker pool — the training loop hands it to
+    /// the evaluator so one process runs exactly one pool.
+    fn rollout_pool(&self) -> Arc<WorkerPool>;
 }
 
 /// Instantiate the configured algorithm in a statically-known env family.
@@ -164,7 +170,8 @@ pub fn train_family<F: EnvFamily>(
 ) -> Result<TrainOutcome> {
     let mut rng = Pcg64::new(cfg.seed, 0x7261_696e); // "rain"
     let mut algo = build_algo_for(family, rt, cfg, &mut rng)?;
-    let evaluator = for_family(family, cfg, cfg.eval_trials, 20);
+    let evaluator =
+        for_family_with_pool(family, cfg, cfg.eval_trials, 20, algo.rollout_pool());
     let stu_apply = rt.load_scoped(
         cfg.env.artifact_prefix(),
         &cfg.student_apply_artifact(),

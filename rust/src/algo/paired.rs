@@ -17,6 +17,8 @@
 //!
 //! Env-step accounting (paper §6): both students count, editor steps do not.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::{CycleMetrics, UedAlgorithm};
@@ -25,7 +27,7 @@ use crate::env::editor::{EditorState, EditorTask};
 use crate::env::wrappers::AutoReplayWrapper;
 use crate::env::{EnvFamily, UnderspecifiedEnv};
 use crate::ppo::{LrSchedule, PpoTrainer};
-use crate::rollout::{Policy, RolloutEngine, Trajectory};
+use crate::rollout::{Policy, RolloutEngine, Trajectory, WorkerPool};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
@@ -94,8 +96,11 @@ impl<F: EnvFamily> PairedAlgo<F> {
             "adversary artifact horizon {t_adv} != configured editor steps {}",
             cfg.editor_horizon()
         );
-        let editor_engine = RolloutEngine::new(&editor_env, b);
-        let student_engine = RolloutEngine::new(&student_env, b);
+        // All three agents' rollouts (adversary in the editor env, both
+        // students in the task env) share one persistent worker pool.
+        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+        let editor_engine = RolloutEngine::with_pool(&editor_env, b, pool.clone());
+        let student_engine = RolloutEngine::with_pool(&student_env, b, pool);
         let editor_traj = Trajectory::new(t_adv, b, &editor_env.obs_components());
         let prot_traj = Trajectory::new(t, b, &student_env.obs_components());
         let ant_traj = Trajectory::new(t, b, &student_env.obs_components());
@@ -221,5 +226,9 @@ impl<F: EnvFamily> UedAlgorithm for PairedAlgo<F> {
 
     fn student_trainer(&mut self) -> &mut PpoTrainer {
         &mut self.protagonist
+    }
+
+    fn rollout_pool(&self) -> Arc<WorkerPool> {
+        self.student_engine.pool().clone()
     }
 }

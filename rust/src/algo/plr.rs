@@ -13,6 +13,8 @@
 //! restarts *the same level*, so a level's regret estimate can average over
 //! multiple episodes (§5.2).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use super::meta_policy::{Cycle, MetaPolicy};
@@ -23,7 +25,7 @@ use crate::env::wrappers::{AutoReplayWrapper, ReplayState};
 use crate::env::{EnvFamily, LevelGenerator, LevelMeta, LevelMutator, UnderspecifiedEnv};
 use crate::level_sampler::LevelSampler;
 use crate::ppo::{LrSchedule, PpoTrainer};
-use crate::rollout::{Policy, RolloutEngine, Trajectory};
+use crate::rollout::{Policy, RolloutEngine, Trajectory, WorkerPool};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
@@ -80,7 +82,8 @@ impl<F: EnvFamily> PlrAlgo<F> {
         let params = cfg.env_params();
         let env = AutoReplayWrapper::new(family.make_env(&params));
         let (t, b) = trainer.rollout_shape();
-        let engine = RolloutEngine::new(&env, b);
+        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+        let engine = RolloutEngine::with_pool(&env, b, pool);
         let traj = Trajectory::new(t, b, &env.obs_components());
         let num_actions = env.num_actions();
         Ok(PlrAlgo {
@@ -202,5 +205,9 @@ impl<F: EnvFamily> UedAlgorithm for PlrAlgo<F> {
 
     fn student_trainer(&mut self) -> &mut PpoTrainer {
         &mut self.trainer
+    }
+
+    fn rollout_pool(&self) -> Arc<WorkerPool> {
+        self.engine.pool().clone()
     }
 }

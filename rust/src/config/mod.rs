@@ -114,6 +114,10 @@ pub struct TrainConfig {
     pub max_hazards: usize,
     /// Student episode horizon.
     pub max_episode_steps: usize,
+    /// Host-side rollout worker threads (`--rollout-threads`; 0 = auto,
+    /// i.e. available parallelism). Per-column RNG streams make rollout
+    /// results bit-identical at any setting.
+    pub rollout_threads: usize,
 
     // -- PLR family (Table 3) ------------------------------------------------
     /// Replay probability p (0.5 for PLR, 0.8 for ACCEL).
@@ -157,6 +161,7 @@ impl TrainConfig {
             max_walls: 60,
             max_hazards: 12,
             max_episode_steps: 250,
+            rollout_threads: 0,
             replay_prob: if algo == Algo::Accel { 0.8 } else { 0.5 },
             buffer_size: 4000,
             score_fn: ScoreFn::MaxMc,
@@ -187,6 +192,7 @@ impl TrainConfig {
         c.max_walls = args.get_usize("max-walls", c.max_walls);
         c.max_hazards = args.get_usize("max-hazards", c.max_hazards);
         c.max_episode_steps = args.get_usize("max-episode-steps", c.max_episode_steps);
+        c.rollout_threads = args.get_usize("rollout-threads", c.rollout_threads);
         c.replay_prob = args.get_f64("replay-prob", c.replay_prob);
         c.buffer_size = args.get_usize("buffer-size", c.buffer_size);
         c.score_fn = ScoreFn::parse(&args.get_str(
@@ -222,6 +228,16 @@ impl TrainConfig {
     /// Total update cycles implied by the env-step budget.
     pub fn num_cycles(&self) -> usize {
         (self.env_steps_budget / self.env_steps_per_cycle()).max(1) as usize
+    }
+
+    /// Concrete rollout worker count: `--rollout-threads`, or the host's
+    /// available parallelism when left at 0/auto.
+    pub fn resolve_rollout_threads(&self) -> usize {
+        if self.rollout_threads == 0 {
+            crate::rollout::auto_threads()
+        } else {
+            self.rollout_threads
+        }
     }
 
     /// The env-layer knobs handed to the selected [`EnvId`] family.
@@ -348,6 +364,16 @@ mod tests {
         assert_eq!(c.seed, 7);
         assert_eq!(c.variant.b, 8);
         assert_eq!(c.max_walls, 25);
+    }
+
+    #[test]
+    fn rollout_threads_flag() {
+        let c = parse("--algo dr");
+        assert_eq!(c.rollout_threads, 0, "default is auto");
+        assert!(c.resolve_rollout_threads() >= 1);
+        let c = parse("--algo dr --rollout-threads 3");
+        assert_eq!(c.rollout_threads, 3);
+        assert_eq!(c.resolve_rollout_threads(), 3);
     }
 
     #[test]

@@ -65,9 +65,17 @@ pub struct StepResult {
 /// parameters; observations are written into a caller-owned flat buffer
 /// (the rollout engine owns the backing storage — observation writing is
 /// allocation-free).
-pub trait UnderspecifiedEnv {
-    type State: Clone;
-    type Level: Clone;
+///
+/// Envs are `Sync` and states are `Send` so the rollout engine can fan
+/// `observe()`/`step()` out across its worker pool: the env is shared
+/// read-only while each batch column's state is stepped by exactly one
+/// worker. Every implementation is plain data, so these bounds are
+/// auto-derived — they only become visible if an env tries to smuggle in
+/// un-shareable interior state (which would also break rollout
+/// determinism).
+pub trait UnderspecifiedEnv: Sync {
+    type State: Clone + Send;
+    type Level: Clone + Send + Sync;
 
     /// Number of discrete actions.
     fn num_actions(&self) -> usize;
@@ -97,7 +105,11 @@ pub trait UnderspecifiedEnv {
 /// The base level distribution (paper's `sample_random_level`): one draw
 /// per call, structurally valid but *not* necessarily solvable — unsolvable
 /// draws are part of the DR distribution and it is UED's job to cope.
-pub trait LevelGenerator {
+///
+/// `Sync` because `AutoResetWrapper` embeds its generator inside an env
+/// that the rollout workers share (auto-reset draws happen on the
+/// stepping worker's own column stream).
+pub trait LevelGenerator: Sync {
     type Level: Clone;
 
     /// One draw from the base distribution.
@@ -263,7 +275,7 @@ impl<L, F: Fn(&mut Pcg64) -> L> FnLevelGen<L, F> {
     }
 }
 
-impl<L: Clone, F: Fn(&mut Pcg64) -> L> LevelGenerator for FnLevelGen<L, F> {
+impl<L: Clone, F: Fn(&mut Pcg64) -> L + Sync> LevelGenerator for FnLevelGen<L, F> {
     type Level = L;
 
     fn sample_level(&self, rng: &mut Pcg64) -> L {

@@ -8,16 +8,49 @@
 //! env-specific types: any [`UnderspecifiedEnv`] plus a named level list
 //! works, and [`for_family`] / [`evaluate_params`] build the family's
 //! default suite from the registry.
+//!
+//! # Scheduling: work-queue vs padded chunks
+//!
+//! Every (level, trial) pair is one work item with its own deterministic
+//! RNG stream (`Pcg64::new(master, EPISODE_STREAM + item)`), so an
+//! episode's outcome is a pure function of the item id — independent of
+//! which batch column runs it, when, or at what thread count. Two
+//! schedulers consume the queue ([`EvalMode`]):
+//!
+//! * [`EvalMode::WorkQueue`] (default) — a finished column is refilled
+//!   with the next pending episode each step, keeping the fixed-shape
+//!   `apply_b{B}` batch full instead of computing discarded logits for
+//!   dead columns.
+//! * [`EvalMode::Chunked`] — the legacy scheme (B-episode chunks, tails
+//!   padded with repeats), kept as the reference implementation: the
+//!   `rollout_determinism` suite asserts both modes produce identical
+//!   per-level results, with the work-queue issuing fewer device calls
+//!   ([`EvalReport::forward_passes`]).
+
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::env::registry::{dispatch, EnvVisitor};
 use crate::env::{EnvFamily, UnderspecifiedEnv};
-use crate::rollout::{Policy, RolloutEngine};
+use crate::rollout::{EpisodeOutcome, PolicyModel, RolloutEngine, WorkerPool};
 use crate::runtime::{ParamSet, Runtime};
 use crate::util::rng::Pcg64;
 use crate::util::stats;
+
+/// Stream-id offset for per-episode eval streams (disjoint from the
+/// rollout column streams and the drivers' subsystem streams).
+const EPISODE_STREAM_BASE: u64 = 0xE7A1;
+
+/// How the evaluator schedules episodes onto batch columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalMode {
+    /// Refill finished columns from the pending-episode queue (default).
+    WorkQueue,
+    /// Legacy padded B-chunks (reference implementation).
+    Chunked,
+}
 
 /// Per-level evaluation result.
 #[derive(Clone, Debug)]
@@ -35,6 +68,9 @@ pub struct EvalReport {
     pub mean_solve_rate: f64,
     /// IQM over levels (Figure 3 number).
     pub iqm_solve_rate: f64,
+    /// Device forward calls the evaluation issued (batch-utilization
+    /// metric: the work-queue scheduler needs fewer than padded chunks).
+    pub forward_passes: u64,
 }
 
 /// The evaluation suite: an environment plus named holdout levels.
@@ -44,57 +80,115 @@ pub struct Evaluator<E: UnderspecifiedEnv> {
     pub trials: usize,
     /// Episode step cap driven by the engine (envs also self-truncate).
     pub max_steps: usize,
+    /// Scheduling mode used by [`run`](Evaluator::run).
+    pub mode: EvalMode,
     b: usize,
+    pool: Arc<WorkerPool>,
 }
 
 impl<E: UnderspecifiedEnv> Evaluator<E> {
+    /// Single-threaded evaluator (work-queue mode).
     pub fn new(
         env: E, levels: Vec<(String, E::Level)>, trials: usize, b: usize,
         max_steps: usize,
     ) -> Evaluator<E> {
+        Self::with_pool(env, levels, trials, b, max_steps, Arc::new(WorkerPool::new(1)))
+    }
+
+    /// Evaluator sharing a caller-owned worker pool.
+    pub fn with_pool(
+        env: E, levels: Vec<(String, E::Level)>, trials: usize, b: usize,
+        max_steps: usize, pool: Arc<WorkerPool>,
+    ) -> Evaluator<E> {
         assert!(!levels.is_empty(), "empty holdout suite");
-        Evaluator { levels, env, trials, max_steps, b }
+        Evaluator { levels, env, trials, max_steps, mode: EvalMode::WorkQueue, b, pool }
     }
 
     /// Student policy action count (for building the eval [`Policy`]).
+    ///
+    /// [`Policy`]: crate::rollout::Policy
     pub fn num_actions(&self) -> usize {
         self.env.num_actions()
     }
 
-    /// Evaluate a policy. Episodes are batched B at a time through the
-    /// fixed-shape apply artifact (tail batches padded with repeats).
-    pub fn run(&self, policy: &Policy, rng: &mut Pcg64) -> Result<EvalReport> {
-        let mut engine = RolloutEngine::new(&self.env, self.b);
-        // Build the work list: every (level, trial) pair.
-        let mut work: Vec<usize> = Vec::with_capacity(self.levels.len() * self.trials);
-        for i in 0..self.levels.len() {
-            for _ in 0..self.trials {
-                work.push(i);
+    /// Evaluate a policy under the evaluator's configured [`EvalMode`].
+    pub fn run<P: PolicyModel>(&self, policy: &P, rng: &mut Pcg64) -> Result<EvalReport> {
+        self.run_with_mode(self.mode, policy, rng)
+    }
+
+    /// Evaluate a policy under an explicit scheduling mode. Both modes
+    /// consume one `next_u64` master draw from `rng` and derive identical
+    /// per-episode streams, so their reports match exactly.
+    pub fn run_with_mode<P: PolicyModel>(
+        &self, mode: EvalMode, policy: &P, rng: &mut Pcg64,
+    ) -> Result<EvalReport> {
+        let master = rng.next_u64();
+        let n = self.levels.len() * self.trials;
+        let mut engine = RolloutEngine::with_pool(&self.env, self.b, self.pool.clone());
+        let episode_rng = |e: usize| Pcg64::new(master, EPISODE_STREAM_BASE + e as u64);
+
+        let (outcomes, forward_passes) = match mode {
+            EvalMode::WorkQueue => {
+                let outcomes = engine.run_episode_queue(
+                    &self.env,
+                    policy,
+                    n,
+                    self.max_steps,
+                    false,
+                    |e| {
+                        let mut r = episode_rng(e);
+                        let s = self
+                            .env
+                            .reset_to_level(&self.levels[e / self.trials].1, &mut r);
+                        (s, r)
+                    },
+                )?;
+                (outcomes, engine.forward_passes())
             }
-        }
+            EvalMode::Chunked => {
+                let mut outcomes = vec![EpisodeOutcome::default(); n];
+                let mut forwards = 0u64;
+                let items: Vec<usize> = (0..n).collect();
+                for chunk in items.chunks(self.b) {
+                    let mut states = Vec::with_capacity(self.b);
+                    let mut rngs = Vec::with_capacity(self.b);
+                    for &e in chunk {
+                        let mut r = episode_rng(e);
+                        states.push(
+                            self.env
+                                .reset_to_level(&self.levels[e / self.trials].1, &mut r),
+                        );
+                        rngs.push(r);
+                    }
+                    // Pad the tail with repeats of the chunk's first
+                    // episode; padded columns are run but ignored.
+                    while states.len() < self.b {
+                        let pad_state = states[0].clone();
+                        let pad_rng = rngs[0].clone();
+                        states.push(pad_state);
+                        rngs.push(pad_rng);
+                    }
+                    let outs = engine.run_episodes(
+                        &self.env, &mut states, policy, self.max_steps, &mut rngs, false,
+                    )?;
+                    forwards += engine.forward_passes();
+                    for (j, &e) in chunk.iter().enumerate() {
+                        outcomes[e] = outs[j];
+                    }
+                }
+                (outcomes, forwards)
+            }
+        };
+
         let mut solves = vec![0u32; self.levels.len()];
         let mut steps_sum = vec![0u64; self.levels.len()];
         let mut runs = vec![0u32; self.levels.len()];
-
-        for chunk in work.chunks(self.b) {
-            // Pad the tail with repeats of the first work item; padded
-            // columns are run but ignored.
-            let mut states: Vec<_> = chunk
-                .iter()
-                .map(|&i| self.env.reset_to_level(&self.levels[i].1, rng))
-                .collect();
-            while states.len() < self.b {
-                states.push(self.env.reset_to_level(&self.levels[chunk[0]].1, rng));
-            }
-            let outcomes = engine.run_episodes(
-                &self.env, &mut states, policy, self.max_steps, rng, false,
-            )?;
-            for (j, &i) in chunk.iter().enumerate() {
-                runs[i] += 1;
-                steps_sum[i] += outcomes[j].steps as u64;
-                if outcomes[j].solved {
-                    solves[i] += 1;
-                }
+        for (e, o) in outcomes.iter().enumerate() {
+            let i = e / self.trials;
+            runs[i] += 1;
+            steps_sum[i] += o.steps as u64;
+            if o.solved {
+                solves[i] += 1;
             }
         }
 
@@ -112,23 +206,42 @@ impl<E: UnderspecifiedEnv> Evaluator<E> {
         Ok(EvalReport {
             mean_solve_rate: stats::mean(&rates),
             iqm_solve_rate: stats::iqm(&rates),
+            forward_passes,
             levels,
         })
     }
 }
 
 /// A family's default suite: its named holdout levels + `n_procedural`
-/// deterministic solvable draws.
+/// deterministic solvable draws, with its own worker pool sized by
+/// `cfg.rollout_threads` (standalone-eval entry point; the training loop
+/// uses [`for_family_with_pool`] to share the driver's pool instead).
 pub fn for_family<F: EnvFamily>(
     family: F, cfg: &TrainConfig, trials: usize, n_procedural: usize,
 ) -> Evaluator<F::Env> {
+    for_family_with_pool(
+        family,
+        cfg,
+        trials,
+        n_procedural,
+        Arc::new(WorkerPool::new(cfg.resolve_rollout_threads())),
+    )
+}
+
+/// [`for_family`] over a caller-provided pool, so one process runs one
+/// pool (the training loop hands in the algorithm driver's).
+pub fn for_family_with_pool<F: EnvFamily>(
+    family: F, cfg: &TrainConfig, trials: usize, n_procedural: usize,
+    pool: Arc<WorkerPool>,
+) -> Evaluator<F::Env> {
     let params = cfg.env_params();
-    Evaluator::new(
+    Evaluator::with_pool(
         family.make_env(&params),
         family.holdout(n_procedural),
         trials,
         cfg.variant.b,
         params.max_episode_steps,
+        pool,
     )
 }
 
@@ -155,7 +268,7 @@ pub fn evaluate_params(
                 self.cfg.env.artifact_prefix(),
                 &self.cfg.student_apply_artifact(),
             )?;
-            let policy = Policy {
+            let policy = crate::rollout::Policy {
                 apply,
                 params: &self.params.params,
                 num_actions: evaluator.num_actions(),
@@ -177,6 +290,7 @@ mod tests {
         let cfg = TrainConfig::defaults(Algo::Dr);
         let e = for_family(MazeFamily, &cfg, 2, 10);
         assert_eq!(e.levels.len(), 12 + 10);
+        assert_eq!(e.mode, EvalMode::WorkQueue);
         // all names unique
         let mut names: Vec<&String> = e.levels.iter().map(|(n, _)| n).collect();
         names.sort();

@@ -15,7 +15,9 @@
 //! * [`level_sampler`] — the prioritized rolling level buffer.
 //! * [`runtime`] — PJRT client, artifact manifest (env-scoped artifact
 //!   name resolution), parameter store.
-//! * [`rollout`] — vectorized B-way rollout engine + trajectory storage.
+//! * [`rollout`] — pipelined B-way rollout engine (persistent worker
+//!   pool, per-column RNG streams, work-queue episode runner) +
+//!   trajectory storage.
 //! * [`ppo`] — the train-step driver (the update itself is an AOT artifact).
 //! * [`algo`] — DR / PLR / PLR⊥ / ACCEL / PAIRED drivers + training loop,
 //!   generic over the env family.

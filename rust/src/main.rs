@@ -56,9 +56,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         anyhow::bail!("unknown flags: {unknown:?}");
     }
     println!(
-        "jaxued train: env={} algo={} seed={} variant={} budget={} env steps ({} cycles)",
+        "jaxued train: env={} algo={} seed={} variant={} budget={} env steps ({} cycles), {} rollout threads",
         cfg.env.name(), cfg.algo.name(), cfg.seed, cfg.variant.name,
-        cfg.env_steps_budget, cfg.num_cycles(),
+        cfg.env_steps_budget, cfg.num_cycles(), cfg.resolve_rollout_threads(),
     );
     let rt = Runtime::with_geometry(Path::new(&cfg.artifacts_dir), &cfg.env.geometry())?;
     let outcome = train(&rt, &cfg, false)?;

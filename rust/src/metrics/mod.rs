@@ -43,9 +43,17 @@ impl CsvSink {
     }
 }
 
+/// The stopwatch's time source: real monotonic time in production, a
+/// manually-advanced duration in tests (so rate assertions are exact and
+/// never sleep).
+enum Clock {
+    Monotonic { start: Instant },
+    Manual { elapsed: std::time::Duration },
+}
+
 /// Wallclock + throughput accounting for Table 1.
 pub struct Stopwatch {
-    start: Instant,
+    clock: Clock,
     pub env_steps: u64,
 }
 
@@ -56,8 +64,28 @@ impl Default for Stopwatch {
 }
 
 impl Stopwatch {
+    /// Real-time stopwatch (starts now).
     pub fn new() -> Stopwatch {
-        Stopwatch { start: Instant::now(), env_steps: 0 }
+        Stopwatch { clock: Clock::Monotonic { start: Instant::now() }, env_steps: 0 }
+    }
+
+    /// Deterministic stopwatch driven by [`advance`](Stopwatch::advance).
+    pub fn manual() -> Stopwatch {
+        Stopwatch {
+            clock: Clock::Manual { elapsed: std::time::Duration::ZERO },
+            env_steps: 0,
+        }
+    }
+
+    /// Advance a [`manual`](Stopwatch::manual) stopwatch's clock.
+    /// Panics on a real-time stopwatch (real time cannot be injected).
+    pub fn advance(&mut self, d: std::time::Duration) {
+        match &mut self.clock {
+            Clock::Manual { elapsed } => *elapsed += d,
+            Clock::Monotonic { .. } => {
+                panic!("Stopwatch::advance on a monotonic stopwatch")
+            }
+        }
     }
 
     pub fn add_steps(&mut self, n: u64) {
@@ -65,7 +93,10 @@ impl Stopwatch {
     }
 
     pub fn elapsed_secs(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        match &self.clock {
+            Clock::Monotonic { start } => start.elapsed().as_secs_f64(),
+            Clock::Manual { elapsed } => elapsed.as_secs_f64(),
+        }
     }
 
     /// Environment interactions per second so far.
@@ -123,11 +154,22 @@ mod tests {
 
     #[test]
     fn stopwatch_rates() {
-        let mut w = Stopwatch::new();
+        // deterministic: a manual clock replaces the old real 20 ms sleep
+        let mut w = Stopwatch::manual();
         w.add_steps(1000);
-        std::thread::sleep(std::time::Duration::from_millis(20));
-        assert!(w.steps_per_sec() > 0.0);
-        assert!(w.extrapolate_hours(1_000_000_000).is_finite());
+        w.advance(std::time::Duration::from_millis(20));
+        assert_eq!(w.elapsed_secs(), 0.02);
+        assert_eq!(w.steps_per_sec(), 50_000.0);
+        assert_eq!(w.extrapolate_hours(1_000_000_000), 1e9 / 50_000.0 / 3600.0);
         assert_eq!(w.env_steps, 1000);
+        w.advance(std::time::Duration::from_millis(20));
+        assert_eq!(w.steps_per_sec(), 25_000.0);
+    }
+
+    #[test]
+    fn stopwatch_zero_elapsed_is_safe() {
+        let w = Stopwatch::manual();
+        assert_eq!(w.steps_per_sec(), 0.0);
+        assert!(w.extrapolate_hours(1).is_infinite());
     }
 }

@@ -1,0 +1,480 @@
+//! The actor-pool substrate of the rollout engine: a persistent worker
+//! pool for column-parallel host work, per-column RNG streams, and the
+//! column-disjoint shared-access primitive the parallel phases use.
+//!
+//! Design invariants:
+//!
+//! * **Determinism is structural, not scheduled.** Every batch column owns
+//!   a private [`Pcg64`] stream ([`ColumnRngs`]) and writes only its own
+//!   disjoint slices, so the result of a parallel phase is a pure function
+//!   of (master seed, column index) — bit-identical at any
+//!   `--rollout-threads` setting, including 1. The integration test
+//!   `rollout_determinism` pins this invariant.
+//! * **Threads persist.** [`WorkerPool`] spawns its workers once and
+//!   reuses them for every phase of every step of every rollout (the
+//!   paper's hot loop runs millions of steps; per-step thread spawning
+//!   would dominate). Work is broadcast as one type-erased closure per
+//!   phase; workers take fixed contiguous column shards, which keeps the
+//!   partition deterministic and cache-friendly.
+//! * **The calling thread is worker 0.** `run` keeps the caller busy with
+//!   its own shard; `run_overlapped` instead gives the caller a different
+//!   task (the PJRT forward call) to overlap with the workers' column
+//!   sweep.
+
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use crate::util::rng::Pcg64;
+
+/// Stream-id offset for per-column rollout streams, keeping them disjoint
+/// from the subsystem streams the drivers derive (`"rain"`, `"ev"`, …).
+const COLUMN_STREAM_BASE: u64 = 0xC01;
+
+/// Host worker threads to use when `--rollout-threads` is 0/auto.
+pub fn auto_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// One deterministic [`Pcg64`] stream per batch column.
+///
+/// Streams are reseeded per rollout from a master seed drawn off the
+/// caller's serial RNG; column `i` gets the stream `(master, BASE + i)`,
+/// so per-column draws are independent of each other and of how columns
+/// are scheduled across workers.
+pub struct ColumnRngs {
+    streams: Vec<Pcg64>,
+}
+
+impl ColumnRngs {
+    /// `b` placeholder streams; call [`reseed`](ColumnRngs::reseed) before
+    /// use (the engine reseeds at the top of every rollout).
+    pub fn new(b: usize) -> ColumnRngs {
+        let mut rngs = ColumnRngs { streams: Vec::with_capacity(b) };
+        for i in 0..b {
+            rngs.streams.push(Pcg64::new(0, COLUMN_STREAM_BASE + i as u64));
+        }
+        rngs
+    }
+
+    /// Reset every column stream from a fresh master seed.
+    pub fn reseed(&mut self, master_seed: u64) {
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            *s = Pcg64::new(master_seed, COLUMN_STREAM_BASE + i as u64);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.streams.is_empty()
+    }
+
+    pub fn streams_mut(&mut self) -> &mut [Pcg64] {
+        &mut self.streams
+    }
+}
+
+/// Column-disjoint shared access to a mutable slice.
+///
+/// The parallel phases hand every worker the *same* view of a buffer and
+/// rely on the column partition for exclusivity; this wrapper carries the
+/// raw pointer across the closure boundary while the `PhantomData` keeps
+/// the underlying borrow alive for the phase's duration.
+pub struct ColumnAccess<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: access is handed between threads, but the unsafe accessors
+// require (and the engine upholds) that concurrently-touched indices are
+// disjoint, so this is equivalent to sending disjoint `&mut` sub-slices.
+unsafe impl<T: Send> Send for ColumnAccess<'_, T> {}
+unsafe impl<T: Send> Sync for ColumnAccess<'_, T> {}
+
+impl<'a, T> ColumnAccess<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> ColumnAccess<'a, T> {
+        ColumnAccess { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    /// Exclusive access to element `i`.
+    ///
+    /// # Safety
+    /// No two live references from this access may target the same index;
+    /// the engine guarantees it by giving each column a disjoint index
+    /// set within a phase.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get_mut(&self, i: usize) -> &mut T {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+
+    /// Exclusive access to `len` elements starting at `start`.
+    ///
+    /// # Safety
+    /// Same contract as [`get_mut`](ColumnAccess::get_mut): ranges handed
+    /// out concurrently must not overlap.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [T] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// A broadcast work item: one phase closure plus its column count and
+/// whether the calling thread takes a shard too.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    n_items: usize,
+    /// Shards the items are split into — clamped to the item count, so
+    /// surplus workers skip the epoch instead of syncing over an empty
+    /// range (matters when B is small and the pool is host-sized).
+    total_shards: usize,
+    main_participates: bool,
+}
+
+struct PoolState {
+    epoch: u64,
+    job: Option<Job>,
+    /// Spawned workers still processing the current epoch.
+    running: usize,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+/// Persistent scoped-thread worker pool for column-parallel phases.
+///
+/// `threads` counts the calling thread: `WorkerPool::new(1)` spawns
+/// nothing and runs phases inline (the zero-overhead serial mode), while
+/// `new(n)` spawns `n - 1` workers that live until the pool drops.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes whole phases: the pool has one job slot, so concurrent
+    /// `run`/`run_overlapped` callers (engines sharing one `Arc`) must
+    /// not interleave dispatch/wait — the second caller blocks here until
+    /// the first phase fully drains. Uncontended in the drivers (one
+    /// phase at a time), but it makes the `&self` API sound.
+    phase_guard: Mutex<()>,
+    threads: usize,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// A pool of `threads` total workers (minimum 1 = inline).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                running: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(threads.saturating_sub(1));
+        for id in 1..threads {
+            let sh = shared.clone();
+            let h = thread::Builder::new()
+                .name(format!("rollout-worker-{id}"))
+                .spawn(move || worker_loop(&sh, id))
+                .expect("spawning rollout worker");
+            handles.push(h);
+        }
+        WorkerPool { shared, phase_guard: Mutex::new(()), threads, handles }
+    }
+
+    /// Pool sized to the host (`auto_threads()`).
+    pub fn auto() -> WorkerPool {
+        WorkerPool::new(auto_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n_items`, the calling thread working
+    /// shard 0 alongside the pool. Returns after all items complete.
+    /// Concurrent callers are serialized (whole phases never interleave).
+    pub fn run<F: Fn(usize) + Sync>(&self, n_items: usize, f: F) {
+        if self.threads == 1 || n_items == 0 {
+            for i in 0..n_items {
+                f(i);
+            }
+            return;
+        }
+        let guard = self.phase_guard.lock().unwrap_or_else(|e| e.into_inner());
+        let shards = self.dispatch(&f, n_items, true);
+        let main = catch_unwind(AssertUnwindSafe(|| {
+            run_shard(&f, 0, shards, n_items);
+        }));
+        self.wait_done();
+        drop(guard);
+        if let Err(p) = main {
+            resume_unwind(p);
+        }
+    }
+
+    /// Run `f(i)` for every item on the pool's workers while the calling
+    /// thread runs `main_task` (e.g. the device forward call), returning
+    /// `main_task`'s result once both sides finish. With a single-thread
+    /// pool the items run inline first, then `main_task` — same data
+    /// effects, no concurrency.
+    pub fn run_overlapped<R, F, G>(&self, n_items: usize, f: F, main_task: G) -> R
+    where
+        F: Fn(usize) + Sync,
+        G: FnOnce() -> R,
+    {
+        if self.threads == 1 || n_items == 0 {
+            for i in 0..n_items {
+                f(i);
+            }
+            return main_task();
+        }
+        let guard = self.phase_guard.lock().unwrap_or_else(|e| e.into_inner());
+        self.dispatch(&f, n_items, false);
+        let main = catch_unwind(AssertUnwindSafe(main_task));
+        self.wait_done();
+        drop(guard);
+        match main {
+            Ok(r) => r,
+            Err(p) => resume_unwind(p),
+        }
+    }
+
+    /// Post a job; returns the shard count it was split into.
+    fn dispatch(
+        &self, f: &(dyn Fn(usize) + Sync), n_items: usize, main_participates: bool,
+    ) -> usize {
+        debug_assert!(self.threads > 1);
+        let available = if main_participates { self.threads } else { self.threads - 1 };
+        let total_shards = available.min(n_items);
+        let participating_workers = total_shards - usize::from(main_participates);
+        // SAFETY: the borrow behind `f` outlives the job because both
+        // `run` and `run_overlapped` call `wait_done` (which blocks until
+        // every worker finished the epoch) before returning — even on
+        // panic of the caller-side task.
+        let f_static: &'static (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(f) };
+        let mut st = self.shared.state.lock().unwrap();
+        st.epoch = st.epoch.wrapping_add(1);
+        st.job = Some(Job { f: f_static, n_items, total_shards, main_participates });
+        st.running = participating_workers;
+        drop(st);
+        self.shared.work_cv.notify_all();
+        total_shards
+    }
+
+    fn wait_done(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.running > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        if panicked {
+            panic!("rollout worker panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Items of shard `shard` (of `shards`) over `n` items: the fixed
+/// contiguous partition `[shard*n/shards, (shard+1)*n/shards)`.
+fn run_shard(f: &dyn Fn(usize), shard: usize, shards: usize, n: usize) {
+    let lo = shard * n / shards;
+    let hi = (shard + 1) * n / shards;
+    for i in lo..hi {
+        f(i);
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    if let Some(job) = st.job {
+                        last_epoch = st.epoch;
+                        break job;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // Shard 0 belongs to the caller when it participates; this worker
+        // is surplus for the epoch if the clamp left it without a shard
+        // (it was never counted in `running`, so just go back to waiting).
+        let shard = if job.main_participates { id } else { id - 1 };
+        if shard >= job.total_shards {
+            continue;
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            run_shard(job.f, shard, job.total_shards, job.n_items);
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_every_item_once() {
+        for threads in [1, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let n = 103;
+            let mut hits = vec![0u32; n];
+            let acc = ColumnAccess::new(&mut hits[..]);
+            pool.run(n, |i| unsafe {
+                *acc.get_mut(i) += 1;
+            });
+            assert!(hits.iter().all(|&h| h == 1), "threads={threads}: {hits:?}");
+        }
+    }
+
+    #[test]
+    fn overlapped_runs_main_and_items() {
+        let pool = WorkerPool::new(3);
+        let n = 64;
+        let mut out = vec![0usize; n];
+        let acc = ColumnAccess::new(&mut out[..]);
+        let counter = AtomicUsize::new(0);
+        let r = pool.run_overlapped(
+            n,
+            |i| {
+                unsafe { *acc.get_mut(i) = i * 2 };
+                counter.fetch_add(1, Ordering::Relaxed);
+            },
+            || 41 + 1,
+        );
+        assert_eq!(r, 42);
+        assert_eq!(counter.load(Ordering::Relaxed), n);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * 2));
+    }
+
+    #[test]
+    fn pool_is_reusable_across_phases() {
+        let pool = WorkerPool::new(4);
+        let mut total = 0u64;
+        for phase in 0..50u64 {
+            let mut buf = vec![0u64; 17];
+            let acc = ColumnAccess::new(&mut buf[..]);
+            pool.run(17, |i| unsafe {
+                *acc.get_mut(i) = phase + i as u64;
+            });
+            total += buf.iter().sum::<u64>();
+        }
+        // sum of (phase + i) over phases 0..50, i 0..17
+        let expect: u64 = (0..50u64).map(|p| 17 * p + (0..17u64).sum::<u64>()).sum();
+        assert_eq!(total, expect);
+    }
+
+    #[test]
+    fn column_rngs_are_schedule_independent() {
+        let mut a = ColumnRngs::new(8);
+        let mut b = ColumnRngs::new(8);
+        a.reseed(99);
+        b.reseed(99);
+        // draw in different interleavings; per-column sequences must match
+        let mut out_a = vec![Vec::new(); 8];
+        for col in 0..8 {
+            for _ in 0..16 {
+                out_a[col].push(a.streams_mut()[col].next_u64());
+            }
+        }
+        let mut out_b = vec![Vec::new(); 8];
+        for _round in 0..16 {
+            for col in (0..8).rev() {
+                out_b[col].push(b.streams_mut()[col].next_u64());
+            }
+        }
+        assert_eq!(out_a, out_b);
+        // distinct columns: distinct streams
+        assert_ne!(out_a[0], out_a[1]);
+    }
+
+    #[test]
+    fn concurrent_callers_are_serialized() {
+        // Two threads hammer the same pool; the phase guard must keep
+        // whole phases atomic, so each thread sees only its own writes.
+        let pool = Arc::new(WorkerPool::new(3));
+        let mut handles = Vec::new();
+        for t in 0..2u64 {
+            let p = pool.clone();
+            handles.push(thread::spawn(move || {
+                let mut buf = vec![0u64; 64];
+                for round in 0..50u64 {
+                    let acc = ColumnAccess::new(&mut buf[..]);
+                    p.run(64, |i| unsafe {
+                        *acc.get_mut(i) += round + t;
+                    });
+                }
+                buf.iter().sum::<u64>()
+            }));
+        }
+        let sums: Vec<u64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let base: u64 = (0..50u64).map(|r| 64 * r).sum();
+        assert_eq!(sums[0], base);
+        assert_eq!(sums[1], base + 50 * 64);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives_drop() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // pool still usable after a panic epoch
+        let n = AtomicUsize::new(0);
+        pool.run(8, |_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 8);
+    }
+}

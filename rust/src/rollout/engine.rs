@@ -1,0 +1,506 @@
+//! The pipelined rollout engine: batched policy-driven stepping of B
+//! environments with column-parallel host work.
+//!
+//! Each timestep runs three phases:
+//!
+//! 1. **stage** — `observe()` every column into the `[B, comp]` staging
+//!    tensors, columns fanned out across the [`WorkerPool`];
+//! 2. **forward ∥ writeback** — the calling thread runs the device
+//!    forward call while the workers copy the freshly-staged observation
+//!    row into the trajectory (`run_overlapped`);
+//! 3. **act/step** — sample an action per column from its own RNG stream
+//!    and `env.step()` it, again column-parallel, writing trajectory
+//!    scalars in place.
+//!
+//! Forward outputs land in engine-owned reusable buffers
+//! ([`PolicyModel::forward_into`]), so the per-step heap traffic is the
+//! PJRT literal staging alone. Per-column [`Pcg64`] streams make every
+//! result bit-identical at any thread count (see `rollout/actors.rs`).
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::actors::{ColumnAccess, ColumnRngs, WorkerPool};
+use super::sampler;
+use super::storage::Trajectory;
+use crate::env::UnderspecifiedEnv;
+use crate::runtime::executor::Executable;
+use crate::util::rng::Pcg64;
+use crate::util::tensor::TensorF32;
+
+/// A batched policy: anything that maps staged `[B, comp]` observation
+/// tensors to `logits [B*A]` / `values [B]`, writing into caller-owned
+/// reusable buffers. Row `bi` of the output must depend only on row `bi`
+/// of the input (true of the per-example networks every artifact lowers),
+/// which is what lets the work-queue evaluator mix unrelated episodes in
+/// one batch.
+pub trait PolicyModel {
+    fn num_actions(&self) -> usize;
+
+    /// Batched forward into reusable buffers (cleared and refilled).
+    fn forward_into(
+        &self,
+        obs: &[TensorF32],
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) -> Result<()>;
+}
+
+/// A policy backed by an `*_apply_b{B}` artifact plus its parameters.
+pub struct Policy<'p> {
+    pub apply: Rc<Executable>,
+    pub params: &'p [xla::Literal],
+    pub num_actions: usize,
+}
+
+impl Policy<'_> {
+    /// Allocation-per-call convenience wrapper over
+    /// [`forward_into`](PolicyModel::forward_into).
+    pub fn forward(&self, obs: &[TensorF32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut logits = Vec::new();
+        let mut values = Vec::new();
+        self.forward_buffers(obs, &mut logits, &mut values)?;
+        Ok((logits, values))
+    }
+
+    fn forward_buffers(
+        &self,
+        obs: &[TensorF32],
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) -> Result<()> {
+        let p = self.params.len();
+        let n_in = self.apply.def.inputs.len();
+        if p + obs.len() != n_in {
+            bail!(
+                "apply {} wants {} inputs, got {} params + {} obs",
+                self.apply.def.name, n_in, p, obs.len()
+            );
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(n_in);
+        args.extend(self.params.iter().cloned());
+        for (o, spec) in obs.iter().zip(&self.apply.def.inputs[p..]) {
+            args.push(o.to_literal_as(&spec.shape)?);
+        }
+        let out = self.apply.call(&args)?;
+        // `Literal::to_vec` must copy off the device, so the output fetch
+        // allocates once per call; move the fetched buffers into the
+        // caller's slots instead of copying a second time. (Removing the
+        // fetch allocation entirely needs device-resident buffers — see
+        // ROADMAP open items.)
+        *logits = out[0].to_vec::<f32>()?;
+        *values = out[1].to_vec::<f32>()?;
+        Ok(())
+    }
+}
+
+impl PolicyModel for Policy<'_> {
+    fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+
+    fn forward_into(
+        &self,
+        obs: &[TensorF32],
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.forward_buffers(obs, logits, values)
+    }
+}
+
+/// Result of one evaluation episode.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EpisodeOutcome {
+    pub solved: bool,
+    pub steps: u32,
+    pub terminal_reward: f32,
+}
+
+/// Work-queue slot bookkeeping (`episode == usize::MAX` marks a dead pad
+/// slot whose batch row is computed and discarded).
+#[derive(Clone, Copy)]
+struct SlotMeta {
+    episode: usize,
+    steps: u32,
+    live: bool,
+}
+
+/// Reusable staging + buffer state for B-way rollouts over one env type.
+pub struct RolloutEngine {
+    pub b: usize,
+    obs_components: Vec<usize>,
+    /// Per-component `[B, comp]` staging tensors for the apply artifact.
+    obs_step: Vec<TensorF32>,
+    /// Per-column flat observation scratch (each column owns one so the
+    /// stage phase needs no cross-column synchronization).
+    flats: Vec<Vec<f32>>,
+    /// Reusable forward-output buffers.
+    logits_buf: Vec<f32>,
+    values_buf: Vec<f32>,
+    /// Per-column RNG streams, reseeded per rollout.
+    rngs: ColumnRngs,
+    pool: Arc<WorkerPool>,
+    forward_passes: u64,
+}
+
+impl RolloutEngine {
+    /// Serial engine (single-thread pool) — same results as any pool size.
+    pub fn new<E: UnderspecifiedEnv>(env: &E, b: usize) -> RolloutEngine {
+        Self::with_pool(env, b, Arc::new(WorkerPool::new(1)))
+    }
+
+    /// Engine sharing a caller-owned worker pool (PAIRED runs three
+    /// engines over one pool; the evaluator shares the trainer's).
+    pub fn with_pool<E: UnderspecifiedEnv>(
+        env: &E, b: usize, pool: Arc<WorkerPool>,
+    ) -> RolloutEngine {
+        let obs_components = env.obs_components();
+        RolloutEngine {
+            b,
+            obs_step: obs_components
+                .iter()
+                .map(|&c| TensorF32::zeros(&[b, c]))
+                .collect(),
+            flats: (0..b).map(|_| vec![0.0; env.obs_len()]).collect(),
+            obs_components,
+            logits_buf: Vec::new(),
+            values_buf: Vec::new(),
+            rngs: ColumnRngs::new(b),
+            pool,
+            forward_passes: 0,
+        }
+    }
+
+    /// Device forward calls issued by the most recent
+    /// `collect`/`run_episodes`/`run_episode_queue`.
+    pub fn forward_passes(&self) -> u64 {
+        self.forward_passes
+    }
+
+    /// The engine's worker pool (for sharing with sibling engines).
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Phase 1: observe all columns into the step staging tensors.
+    fn stage_obs<E: UnderspecifiedEnv>(&mut self, env: &E, states: &mut [E::State]) {
+        let b = self.b;
+        debug_assert_eq!(states.len(), b);
+        let comps: &[usize] = &self.obs_components;
+        let obs_acc: Vec<ColumnAccess<f32>> = self
+            .obs_step
+            .iter_mut()
+            .map(|t| ColumnAccess::new(t.data_mut()))
+            .collect();
+        let flat_acc = ColumnAccess::new(&mut self.flats[..]);
+        let st_acc = ColumnAccess::new(states);
+        self.pool.run(b, |bi| {
+            // SAFETY: column `bi` is visited by exactly one shard, and
+            // every access below touches only column-`bi` slots.
+            let state = unsafe { st_acc.get_mut(bi) };
+            let flat = unsafe { flat_acc.get_mut(bi) };
+            env.observe(state, flat);
+            let mut off = 0;
+            for (k, &comp) in comps.iter().enumerate() {
+                let dst = unsafe { obs_acc[k].slice_mut(bi * comp, comp) };
+                dst.copy_from_slice(&flat[off..off + comp]);
+                off += comp;
+            }
+        });
+    }
+
+    /// Phase 2: run the device forward on the calling thread while the
+    /// workers copy the staged observation row into trajectory row `t`.
+    fn forward_with_writeback<P: PolicyModel>(
+        &mut self, policy: &P, traj: &mut Trajectory, t: usize,
+    ) -> Result<()> {
+        let b = self.b;
+        let comps: &[usize] = &self.obs_components;
+        let obs_step: &[TensorF32] = &self.obs_step;
+        let traj_obs_acc: Vec<ColumnAccess<f32>> = traj
+            .obs
+            .iter_mut()
+            .map(|o| ColumnAccess::new(o.data_mut()))
+            .collect();
+        let logits = &mut self.logits_buf;
+        let values = &mut self.values_buf;
+        let res = self.pool.run_overlapped(
+            b,
+            |bi| {
+                // SAFETY: disjoint per-column trajectory ranges; obs_step
+                // is only read here and in the (concurrent, read-only)
+                // forward call.
+                for (k, &comp) in comps.iter().enumerate() {
+                    let src = &obs_step[k].data()[bi * comp..(bi + 1) * comp];
+                    let dst =
+                        unsafe { traj_obs_acc[k].slice_mut((t * b + bi) * comp, comp) };
+                    dst.copy_from_slice(src);
+                }
+            },
+            || policy.forward_into(obs_step, logits, values),
+        );
+        self.forward_passes += 1;
+        res
+    }
+
+    /// Phase 3: per-column action sampling + env step + trajectory
+    /// scalar writes.
+    fn step_into_traj<E: UnderspecifiedEnv>(
+        &mut self, env: &E, states: &mut [E::State], traj: &mut Trajectory, t: usize,
+        a: usize,
+    ) {
+        let b = self.b;
+        let logits: &[f32] = &self.logits_buf;
+        let values: &[f32] = &self.values_buf;
+        let rng_acc = ColumnAccess::new(self.rngs.streams_mut());
+        let st_acc = ColumnAccess::new(states);
+        let act_acc = ColumnAccess::new(traj.actions.data_mut());
+        let logp_acc = ColumnAccess::new(traj.logp.data_mut());
+        let val_acc = ColumnAccess::new(traj.values.data_mut());
+        let rew_acc = ColumnAccess::new(traj.rewards.data_mut());
+        let done_acc = ColumnAccess::new(traj.dones.data_mut());
+        self.pool.run(b, |bi| {
+            // SAFETY: per-column disjoint indices throughout.
+            let rng = unsafe { rng_acc.get_mut(bi) };
+            let state = unsafe { st_acc.get_mut(bi) };
+            let row = &logits[bi * a..(bi + 1) * a];
+            let (action, lp) = sampler::sample_action(row, rng);
+            let step = env.step(state, action, rng);
+            let i = t * b + bi;
+            unsafe {
+                *act_acc.get_mut(i) = action as i32;
+                *logp_acc.get_mut(i) = lp;
+                *val_acc.get_mut(i) = values[bi];
+                *rew_acc.get_mut(i) = step.reward;
+                *done_acc.get_mut(i) = if step.done { 1.0 } else { 0.0 };
+            }
+        });
+    }
+
+    fn check_forward_shape(&self, a: usize) -> Result<()> {
+        ensure!(
+            self.logits_buf.len() == self.b * a && self.values_buf.len() == self.b,
+            "policy forward produced {} logits / {} values for B={} A={a}",
+            self.logits_buf.len(),
+            self.values_buf.len(),
+            self.b
+        );
+        Ok(())
+    }
+
+    /// Collect a fixed-length `[T, B]` rollout into `traj`, stepping the
+    /// given states in place. `rng` only seeds the per-column streams (one
+    /// `next_u64` draw), so results are bit-identical at any pool size.
+    pub fn collect<E: UnderspecifiedEnv, P: PolicyModel>(
+        &mut self, env: &E, states: &mut [E::State], policy: &P,
+        traj: &mut Trajectory, rng: &mut Pcg64,
+    ) -> Result<()> {
+        let (t_len, b) = (traj.t, traj.b);
+        assert_eq!(b, self.b);
+        assert_eq!(states.len(), b);
+        let a = policy.num_actions();
+        self.rngs.reseed(rng.next_u64());
+        self.forward_passes = 0;
+        for t in 0..t_len {
+            self.stage_obs(env, states);
+            self.forward_with_writeback(policy, traj, t)?;
+            self.check_forward_shape(a)?;
+            self.step_into_traj(env, states, traj, t, a);
+        }
+        // Bootstrap values for the post-rollout states.
+        self.stage_obs(env, states);
+        policy.forward_into(&self.obs_step, &mut self.logits_buf, &mut self.values_buf)?;
+        self.forward_passes += 1;
+        self.check_forward_shape(a)?;
+        traj.last_value.data_mut().copy_from_slice(&self.values_buf);
+        Ok(())
+    }
+
+    /// Run one episode per column to completion (no trajectory recording):
+    /// the fixed-batch evaluation primitive. Column `bi` draws from
+    /// `rngs[bi]` only, so outcomes are independent of scheduling. Columns
+    /// whose episode finished are skipped (their batch rows are still
+    /// computed by the fixed-shape forward, then discarded) and the loop
+    /// exits once every column is done — the padded-chunk waste the
+    /// work-queue variant [`run_episode_queue`](Self::run_episode_queue)
+    /// eliminates.
+    pub fn run_episodes<E: UnderspecifiedEnv, P: PolicyModel>(
+        &mut self, env: &E, states: &mut [E::State], policy: &P, max_steps: usize,
+        rngs: &mut [Pcg64], greedy: bool,
+    ) -> Result<Vec<EpisodeOutcome>> {
+        let b = self.b;
+        assert_eq!(states.len(), b);
+        assert_eq!(rngs.len(), b);
+        let a = policy.num_actions();
+        self.forward_passes = 0;
+        let mut outcomes = vec![EpisodeOutcome::default(); b];
+        let mut live = vec![true; b];
+        for _step in 0..max_steps {
+            if !live.iter().any(|&l| l) {
+                break;
+            }
+            self.stage_obs(env, states);
+            policy.forward_into(&self.obs_step, &mut self.logits_buf, &mut self.values_buf)?;
+            self.forward_passes += 1;
+            self.check_forward_shape(a)?;
+            self.step_episode_columns(env, states, rngs, &mut live, &mut outcomes, greedy, a);
+        }
+        Ok(outcomes)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step_episode_columns<E: UnderspecifiedEnv>(
+        &mut self, env: &E, states: &mut [E::State], rngs: &mut [Pcg64],
+        live: &mut [bool], outcomes: &mut [EpisodeOutcome], greedy: bool, a: usize,
+    ) {
+        let logits: &[f32] = &self.logits_buf;
+        let rng_acc = ColumnAccess::new(rngs);
+        let st_acc = ColumnAccess::new(states);
+        let live_acc = ColumnAccess::new(live);
+        let out_acc = ColumnAccess::new(outcomes);
+        self.pool.run(self.b, |bi| {
+            // SAFETY: per-column disjoint indices throughout.
+            let alive = unsafe { live_acc.get_mut(bi) };
+            if !*alive {
+                return;
+            }
+            let rng = unsafe { rng_acc.get_mut(bi) };
+            let state = unsafe { st_acc.get_mut(bi) };
+            let out = unsafe { out_acc.get_mut(bi) };
+            let row = &logits[bi * a..(bi + 1) * a];
+            let action = if greedy {
+                sampler::argmax_action(row)
+            } else {
+                sampler::sample_action(row, rng).0
+            };
+            let step = env.step(state, action, rng);
+            out.steps += 1;
+            if step.done {
+                out.solved = step.reward > 0.0;
+                out.terminal_reward = step.reward;
+                *alive = false;
+            }
+        });
+    }
+
+    /// Work-queue episode runner: completes `n_episodes` episodes while
+    /// keeping the fixed-shape `apply_b{B}` batch full — a finished column
+    /// is immediately refilled with the next pending episode instead of
+    /// computing discarded logits until its chunk drains.
+    ///
+    /// `reset(e)` must return episode `e`'s initial state *and* its
+    /// private RNG stream; because each episode carries its own stream,
+    /// outcomes are bit-identical to running the same episodes through
+    /// [`run_episodes`](Self::run_episodes) in padded chunks — never at a
+    /// higher forward-pass count, and strictly lower whenever episode
+    /// lengths are ragged (see [`forward_passes`](Self::forward_passes)).
+    pub fn run_episode_queue<E, P, R>(
+        &mut self, env: &E, policy: &P, n_episodes: usize, max_steps: usize,
+        greedy: bool, mut reset: R,
+    ) -> Result<Vec<EpisodeOutcome>>
+    where
+        E: UnderspecifiedEnv,
+        P: PolicyModel,
+        R: FnMut(usize) -> (E::State, Pcg64),
+    {
+        let b = self.b;
+        let a = policy.num_actions();
+        self.forward_passes = 0;
+        let mut outcomes = vec![EpisodeOutcome::default(); n_episodes];
+        if n_episodes == 0 {
+            return Ok(outcomes);
+        }
+
+        let mut states: Vec<E::State> = Vec::with_capacity(b);
+        let mut rngs: Vec<Pcg64> = Vec::with_capacity(b);
+        let mut meta: Vec<SlotMeta> = Vec::with_capacity(b);
+        let mut next = 0usize;
+        while states.len() < b && next < n_episodes {
+            let (s, r) = reset(next);
+            states.push(s);
+            rngs.push(r);
+            meta.push(SlotMeta { episode: next, steps: 0, live: true });
+            next += 1;
+        }
+        // Fewer episodes than columns: pad the fixed-shape batch with
+        // dead clones of slot 0 (computed, discarded).
+        while states.len() < b {
+            let pad_state = states[0].clone();
+            let pad_rng = rngs[0].clone();
+            states.push(pad_state);
+            rngs.push(pad_rng);
+            meta.push(SlotMeta { episode: usize::MAX, steps: 0, live: false });
+        }
+
+        while meta.iter().any(|m| m.live) {
+            self.stage_obs(env, &mut states);
+            policy.forward_into(&self.obs_step, &mut self.logits_buf, &mut self.values_buf)?;
+            self.forward_passes += 1;
+            self.check_forward_shape(a)?;
+            self.step_queue_columns(
+                env, &mut states, &mut rngs, &mut meta, &mut outcomes, greedy, a, max_steps,
+            );
+            // Serial refill of columns whose episode just finished (the
+            // queue pop is ordered by column index, so it too is
+            // schedule-independent).
+            for bi in 0..b {
+                if !meta[bi].live && meta[bi].episode != usize::MAX {
+                    if next < n_episodes {
+                        let (s, r) = reset(next);
+                        states[bi] = s;
+                        rngs[bi] = r;
+                        meta[bi] = SlotMeta { episode: next, steps: 0, live: true };
+                        next += 1;
+                    } else {
+                        meta[bi].episode = usize::MAX;
+                    }
+                }
+            }
+        }
+        Ok(outcomes)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn step_queue_columns<E: UnderspecifiedEnv>(
+        &mut self, env: &E, states: &mut [E::State], rngs: &mut [Pcg64],
+        meta: &mut [SlotMeta], outcomes: &mut [EpisodeOutcome], greedy: bool, a: usize,
+        max_steps: usize,
+    ) {
+        let logits: &[f32] = &self.logits_buf;
+        let rng_acc = ColumnAccess::new(rngs);
+        let st_acc = ColumnAccess::new(states);
+        let meta_acc = ColumnAccess::new(meta);
+        let out_acc = ColumnAccess::new(outcomes);
+        self.pool.run(self.b, |bi| {
+            // SAFETY: per-column disjoint indices; `m.episode` values are
+            // unique across live slots, so the outcome write is disjoint
+            // too.
+            let m = unsafe { meta_acc.get_mut(bi) };
+            if !m.live {
+                return;
+            }
+            let rng = unsafe { rng_acc.get_mut(bi) };
+            let state = unsafe { st_acc.get_mut(bi) };
+            let row = &logits[bi * a..(bi + 1) * a];
+            let action = if greedy {
+                sampler::argmax_action(row)
+            } else {
+                sampler::sample_action(row, rng).0
+            };
+            let step = env.step(state, action, rng);
+            m.steps += 1;
+            if step.done || m.steps as usize >= max_steps {
+                let out = unsafe { out_acc.get_mut(m.episode) };
+                *out = EpisodeOutcome {
+                    solved: step.done && step.reward > 0.0,
+                    steps: m.steps,
+                    terminal_reward: if step.done { step.reward } else { 0.0 },
+                };
+                m.live = false;
+            }
+        });
+    }
+}

@@ -1,188 +1,59 @@
-//! Vectorized rollout engine: steps B environments in lockstep, calling the
-//! AOT-compiled policy artifact once per timestep for the whole batch.
+//! Pipelined, multi-threaded rollout stack: steps B environments in
+//! lockstep, calling the AOT-compiled policy artifact once per timestep
+//! for the whole batch, with all host-side work parallelized across
+//! columns.
 //!
-//! The hot loop is allocation-free: observation staging tensors and the
-//! per-env flat buffer are owned by the engine and reused; trajectory
-//! tensors are written in place. The only per-step heap traffic is the
-//! literal staging into PJRT (one upload per observation component).
+//! # Architecture: actor pool + per-column RNG streams
+//!
+//! The stack splits into two layers:
+//!
+//! * [`actors`] — the substrate: a persistent [`WorkerPool`]
+//!   (`--rollout-threads`, default = available parallelism) whose threads
+//!   outlive every rollout, per-column [`Pcg64`](crate::util::rng::Pcg64)
+//!   streams ([`ColumnRngs`]), and the column-disjoint shared-access
+//!   primitive the parallel phases use.
+//! * [`engine`] — the [`RolloutEngine`]: per timestep it (1) stages
+//!   `observe()` of every column in parallel, (2) runs the device forward
+//!   call on the calling thread *while* workers copy the staged row into
+//!   the trajectory, and (3) samples + `env.step()`s every column in
+//!   parallel. Forward outputs land in engine-owned reusable buffers via
+//!   [`PolicyModel::forward_into`].
+//!
+//! **Determinism invariant.** Every batch column draws from a private RNG
+//! stream seeded by (master seed, column index) and writes only its own
+//! tensor slices, so results are *bit-identical at any thread count* —
+//! `--rollout-threads 1` and `--rollout-threads 16` produce the same
+//! trajectories, episode stats, and eval reports. The
+//! `rollout_determinism` integration test pins this for both env
+//! families; it is the refactor's safety net.
+//!
+//! # Evaluation primitives
+//!
+//! [`RolloutEngine::run_episodes`] is the legacy fixed-chunk episode
+//! runner (finished columns keep burning batch rows until the chunk
+//! drains); [`RolloutEngine::run_episode_queue`] is the work-queue
+//! variant that refills a finished column with the next pending (level,
+//! trial) episode so the fixed-shape `apply_b{B}` batch stays full. Both
+//! count their device calls ([`RolloutEngine::forward_passes`]); the
+//! work-queue needs strictly fewer on ragged episode lengths. The
+//! evaluator exposes both as [`EvalMode`](crate::eval::EvalMode) and the
+//! determinism suite asserts they produce identical per-level results.
+//!
+//! All host-side staging is reused: observation staging tensors, the
+//! per-column flat buffers, and the logits/values buffers are owned by
+//! the engine; trajectory tensors are written in place. Per-step heap
+//! traffic is dominated by the PJRT boundary — literal staging in and the
+//! `to_vec` output fetch — which device-resident buffers would remove
+//! (ROADMAP open item); beyond that, each parallel phase builds a few
+//! element-sized accessor `Vec`s, noise next to the device call.
 
+pub mod actors;
+pub mod engine;
 pub mod sampler;
 pub mod storage;
+pub mod synthetic;
 
-use std::rc::Rc;
-
-use anyhow::{bail, Result};
-
+pub use actors::{auto_threads, ColumnRngs, WorkerPool};
+pub use engine::{EpisodeOutcome, Policy, PolicyModel, RolloutEngine};
 pub use storage::{EpisodeStats, Trajectory};
-
-use crate::env::UnderspecifiedEnv;
-use crate::runtime::executor::Executable;
-use crate::util::rng::Pcg64;
-use crate::util::tensor::TensorF32;
-
-/// A policy backed by an `*_apply_b{B}` artifact plus its parameters.
-pub struct Policy<'p> {
-    pub apply: Rc<Executable>,
-    pub params: &'p [xla::Literal],
-    pub num_actions: usize,
-}
-
-impl<'p> Policy<'p> {
-    /// Batched forward: obs component tensors (flat `[B, comp]`) →
-    /// (logits `[B*A]`, values `[B]`). Observation literals are staged with
-    /// the artifact's structured shapes from the manifest.
-    pub fn forward(&self, obs: &[TensorF32]) -> Result<(Vec<f32>, Vec<f32>)> {
-        let p = self.params.len();
-        let n_in = self.apply.def.inputs.len();
-        if p + obs.len() != n_in {
-            bail!(
-                "apply {} wants {} inputs, got {} params + {} obs",
-                self.apply.def.name, n_in, p, obs.len()
-            );
-        }
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(n_in);
-        args.extend(self.params.iter().cloned());
-        for (o, spec) in obs.iter().zip(&self.apply.def.inputs[p..]) {
-            args.push(o.to_literal_as(&spec.shape)?);
-        }
-        let out = self.apply.call(&args)?;
-        let logits = out[0].to_vec::<f32>()?;
-        let values = out[1].to_vec::<f32>()?;
-        Ok((logits, values))
-    }
-}
-
-/// Reusable staging state for B-way rollouts over one env type.
-pub struct RolloutEngine {
-    pub b: usize,
-    obs_components: Vec<usize>,
-    /// Per-component `[B, comp]` staging tensors for the apply artifact.
-    obs_step: Vec<TensorF32>,
-    /// Per-env flat observation scratch.
-    flat: Vec<f32>,
-}
-
-impl RolloutEngine {
-    pub fn new<E: UnderspecifiedEnv>(env: &E, b: usize) -> RolloutEngine {
-        let obs_components = env.obs_components();
-        RolloutEngine {
-            b,
-            obs_step: obs_components
-                .iter()
-                .map(|&c| TensorF32::zeros(&[b, c]))
-                .collect(),
-            obs_components,
-            flat: vec![0.0; env.obs_len()],
-        }
-    }
-
-    /// Write observations of all states into the step staging tensors and
-    /// (optionally) into trajectory row `t`.
-    fn stage_obs<E: UnderspecifiedEnv>(
-        &mut self, env: &E, states: &[E::State], traj_row: Option<(&mut Trajectory, usize)>,
-    ) {
-        let b = self.b;
-        debug_assert_eq!(states.len(), b);
-        for (bi, state) in states.iter().enumerate() {
-            env.observe(state, &mut self.flat);
-            let mut off = 0;
-            for (k, &comp) in self.obs_components.iter().enumerate() {
-                let dst = &mut self.obs_step[k].data_mut()[bi * comp..(bi + 1) * comp];
-                dst.copy_from_slice(&self.flat[off..off + comp]);
-                off += comp;
-            }
-        }
-        if let Some((traj, t)) = traj_row {
-            for (k, &comp) in self.obs_components.iter().enumerate() {
-                let src = self.obs_step[k].data();
-                traj.obs[k].slice_mut(t).copy_from_slice(&src[..b * comp]);
-            }
-        }
-    }
-
-    /// Collect a fixed-length `[T, B]` rollout into `traj`, stepping the
-    /// given states in place. Returns nothing; all data lands in `traj`.
-    pub fn collect<E: UnderspecifiedEnv>(
-        &mut self, env: &E, states: &mut [E::State], policy: &Policy,
-        traj: &mut Trajectory, rng: &mut Pcg64,
-    ) -> Result<()> {
-        let (t_len, b) = (traj.t, traj.b);
-        assert_eq!(b, self.b);
-        assert_eq!(states.len(), b);
-        for t in 0..t_len {
-            self.stage_obs(env, states, Some((traj, t)));
-            let (logits, values) = policy.forward(&self.obs_step)?;
-            let a = policy.num_actions;
-            debug_assert_eq!(logits.len(), b * a);
-            for bi in 0..b {
-                let row = &logits[bi * a..(bi + 1) * a];
-                let (action, lp) = sampler::sample_action(row, rng);
-                let step = env.step(&mut states[bi], action, rng);
-                let i = t * b + bi;
-                traj.actions.data_mut()[i] = action as i32;
-                traj.logp.data_mut()[i] = lp;
-                traj.values.data_mut()[i] = values[bi];
-                traj.rewards.data_mut()[i] = step.reward;
-                traj.dones.data_mut()[i] = if step.done { 1.0 } else { 0.0 };
-            }
-        }
-        // Bootstrap values for the post-rollout states.
-        self.stage_obs(env, states, None);
-        let (_, values) = policy.forward(&self.obs_step)?;
-        traj.last_value.data_mut().copy_from_slice(&values);
-        Ok(())
-    }
-
-    /// Run episodes to completion (no trajectory recording): used by the
-    /// evaluator. Each column runs exactly one episode from its level;
-    /// returns per-column (solved, steps, terminal reward). Columns whose
-    /// episode already finished are *skipped* — their states are not
-    /// stepped again (their logits are still computed as part of the
-    /// fixed-shape batched forward pass, then discarded), and the loop
-    /// exits early once every column is done.
-    pub fn run_episodes<E: UnderspecifiedEnv>(
-        &mut self, env: &E, states: &mut [E::State], policy: &Policy,
-        max_steps: usize, rng: &mut Pcg64, greedy: bool,
-    ) -> Result<Vec<EpisodeOutcome>> {
-        let b = self.b;
-        let mut outcomes = vec![EpisodeOutcome::default(); b];
-        let mut live = vec![true; b];
-        let mut remaining = b;
-        for _step in 0..max_steps {
-            if remaining == 0 {
-                break;
-            }
-            self.stage_obs(env, states, None);
-            let (logits, _) = policy.forward(&self.obs_step)?;
-            let a = policy.num_actions;
-            for bi in 0..b {
-                if !live[bi] {
-                    continue;
-                }
-                let row = &logits[bi * a..(bi + 1) * a];
-                let action = if greedy {
-                    sampler::argmax_action(row)
-                } else {
-                    sampler::sample_action(row, rng).0
-                };
-                let step = env.step(&mut states[bi], action, rng);
-                outcomes[bi].steps += 1;
-                if step.done {
-                    outcomes[bi].solved = step.reward > 0.0;
-                    outcomes[bi].terminal_reward = step.reward;
-                    live[bi] = false;
-                    remaining -= 1;
-                }
-            }
-        }
-        Ok(outcomes)
-    }
-}
-
-/// Result of one evaluation episode.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct EpisodeOutcome {
-    pub solved: bool,
-    pub steps: u32,
-    pub terminal_reward: f32,
-}
+pub use synthetic::SyntheticPolicy;

@@ -103,7 +103,7 @@ impl Trajectory {
 }
 
 /// Per-column episode summary (PAIRED regret and logging use this).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EpisodeStats {
     pub episodes: u32,
     pub solved: u32,

@@ -1,0 +1,94 @@
+//! Synthetic stand-in policy: a fixed pseudo-random linear map per action
+//! over the flattened observation.
+//!
+//! Plain library code (like `env/conformance.rs`) so the artifact-free
+//! determinism tests and the rollout bench share one definition. It has
+//! exactly the properties the engine assumes of compiled `apply`
+//! artifacts — row `bi` of the output depends only on row `bi` of the
+//! input, and accumulation order is fixed — so it exercises every host
+//! path (staging, sampling, stepping, writeback, work-queue scheduling)
+//! without a PJRT backend.
+
+use anyhow::Result;
+
+use super::engine::PolicyModel;
+use crate::util::tensor::TensorF32;
+
+/// Deterministic row-independent linear policy.
+pub struct SyntheticPolicy {
+    pub num_actions: usize,
+}
+
+/// Fixed pseudo-random weight in [-0.5, 0.5) for (action, input index) —
+/// a splitmix-style hash, so no state and no platform dependence.
+fn weight(a: usize, i: usize) -> f32 {
+    let h = (a as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(i as u64)
+        .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    ((h >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+}
+
+impl PolicyModel for SyntheticPolicy {
+    fn num_actions(&self) -> usize {
+        self.num_actions
+    }
+
+    fn forward_into(
+        &self,
+        obs: &[TensorF32],
+        logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) -> Result<()> {
+        let b = obs[0].shape()[0];
+        logits.clear();
+        values.clear();
+        for bi in 0..b {
+            for a in 0..self.num_actions {
+                let mut z = 0.0f32;
+                let mut base = 0usize;
+                for t in obs {
+                    let comp = t.shape()[1];
+                    let row = &t.data()[bi * comp..(bi + 1) * comp];
+                    for (i, &x) in row.iter().enumerate() {
+                        z += x * weight(a, base + i);
+                    }
+                    base += comp;
+                }
+                logits.push(z);
+            }
+            values.push(0.25);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_independent_and_deterministic() {
+        let p = SyntheticPolicy { num_actions: 3 };
+        // batch of 4: rows 0/2 identical, rows 1/3 identical
+        let mut obs = TensorF32::zeros(&[4, 5]);
+        for i in 0..5 {
+            obs.set(&[0, i], i as f32 * 0.1);
+            obs.set(&[2, i], i as f32 * 0.1);
+            obs.set(&[1, i], 1.0 - i as f32 * 0.2);
+            obs.set(&[3, i], 1.0 - i as f32 * 0.2);
+        }
+        let (mut l1, mut v1) = (Vec::new(), Vec::new());
+        p.forward_into(&[obs.clone()], &mut l1, &mut v1).unwrap();
+        assert_eq!(l1.len(), 12);
+        assert_eq!(v1.len(), 4);
+        assert_eq!(l1[0..3], l1[6..9], "identical rows must give identical logits");
+        assert_eq!(l1[3..6], l1[9..12]);
+        assert_ne!(l1[0..3], l1[3..6], "distinct rows should differ");
+        // repeat call: bit-identical, buffers reused
+        let (mut l2, mut v2) = (Vec::new(), Vec::new());
+        p.forward_into(&[obs], &mut l2, &mut v2).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(v1, v2);
+    }
+}

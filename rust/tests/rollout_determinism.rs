@@ -1,0 +1,156 @@
+//! Determinism suite for the pipelined rollout engine — artifact-free
+//! (pure-Rust stand-in policy), so it runs everywhere the env layer runs,
+//! including the CI fallback path without `make artifacts`.
+//!
+//! Pins the refactor's safety-net invariants:
+//!
+//! 1. `collect` produces bit-identical trajectories and episode stats at
+//!    `--rollout-threads 1` vs 4, on both registered env families;
+//! 2. the work-queue evaluator reproduces the legacy chunked evaluator's
+//!    per-level solve rates exactly under a fixed seed, at any thread
+//!    count, while issuing no more device forward passes.
+
+use std::sync::Arc;
+
+use jaxued::env::wrappers::AutoReplayWrapper;
+use jaxued::env::{EnvFamily, EnvParams, LavaFamily, LevelGenerator, MazeFamily, UnderspecifiedEnv};
+use jaxued::eval::{EvalMode, EvalReport, Evaluator};
+use jaxued::rollout::{EpisodeStats, RolloutEngine, SyntheticPolicy, Trajectory, WorkerPool};
+use jaxued::util::rng::Pcg64;
+
+const B: usize = 8;
+const T: usize = 32;
+
+fn collect_rollout<F: EnvFamily>(family: F, threads: usize) -> (Trajectory, Vec<EpisodeStats>) {
+    let params = EnvParams::default();
+    let env = AutoReplayWrapper::new(family.make_env(&params));
+    let gen = family.make_generator(&params);
+    let mut rng = Pcg64::new(42, 7);
+    let levels = gen.sample_batch(B, &mut rng);
+    let mut states: Vec<_> = levels
+        .iter()
+        .map(|l| env.reset_to_level(l, &mut rng))
+        .collect();
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut engine = RolloutEngine::with_pool(&env, B, pool);
+    let mut traj = Trajectory::new(T, B, &env.obs_components());
+    let policy = SyntheticPolicy { num_actions: env.num_actions() };
+    engine
+        .collect(&env, &mut states, &policy, &mut traj, &mut rng)
+        .unwrap();
+    let stats = traj.episode_stats();
+    (traj, stats)
+}
+
+fn assert_traj_equal(a: &Trajectory, b: &Trajectory, label: &str) {
+    for (k, (oa, ob)) in a.obs.iter().zip(&b.obs).enumerate() {
+        assert_eq!(oa.data(), ob.data(), "[{label}] obs component {k} differs");
+    }
+    assert_eq!(a.actions.data(), b.actions.data(), "[{label}] actions differ");
+    assert_eq!(a.logp.data(), b.logp.data(), "[{label}] logp differs");
+    assert_eq!(a.values.data(), b.values.data(), "[{label}] values differ");
+    assert_eq!(a.rewards.data(), b.rewards.data(), "[{label}] rewards differ");
+    assert_eq!(a.dones.data(), b.dones.data(), "[{label}] dones differ");
+    assert_eq!(
+        a.last_value.data(),
+        b.last_value.data(),
+        "[{label}] last_value differs"
+    );
+}
+
+fn check_collect_thread_invariant<F: EnvFamily>(family: F) {
+    let id = family.id();
+    let (t1, s1) = collect_rollout(family, 1);
+    let (t4, s4) = collect_rollout(family, 4);
+    assert_traj_equal(&t1, &t4, id);
+    assert_eq!(s1, s4, "[{id}] episode stats differ across thread counts");
+    // sanity: the rollout actually did something
+    let total_eps: u32 = s1.iter().map(|s| s.episodes).sum();
+    assert!(t1.dones.data().iter().any(|&d| d > 0.5) == (total_eps > 0));
+}
+
+#[test]
+fn collect_is_thread_invariant_maze() {
+    check_collect_thread_invariant(MazeFamily);
+}
+
+#[test]
+fn collect_is_thread_invariant_lava() {
+    check_collect_thread_invariant(LavaFamily);
+}
+
+fn eval_report<F: EnvFamily>(family: F, mode: EvalMode, threads: usize) -> EvalReport {
+    let params = EnvParams::default();
+    let env = family.make_env(&params);
+    let levels = family.holdout(4);
+    let policy = SyntheticPolicy { num_actions: env.num_actions() };
+    let pool = Arc::new(WorkerPool::new(threads));
+    // short step cap keeps the random-ish policy's episodes cheap
+    let ev = Evaluator::with_pool(env, levels, 3, B, 60, pool);
+    let mut rng = Pcg64::new(7, 1);
+    ev.run_with_mode(mode, &policy, &mut rng).unwrap()
+}
+
+fn assert_reports_equal(a: &EvalReport, b: &EvalReport, label: &str) {
+    assert_eq!(a.levels.len(), b.levels.len());
+    for (la, lb) in a.levels.iter().zip(&b.levels) {
+        assert_eq!(la.name, lb.name, "[{label}] level order differs");
+        assert_eq!(
+            la.solve_rate, lb.solve_rate,
+            "[{label}] solve rate differs on {}", la.name
+        );
+        assert_eq!(
+            la.mean_steps, lb.mean_steps,
+            "[{label}] mean steps differs on {}", la.name
+        );
+    }
+    assert_eq!(a.mean_solve_rate, b.mean_solve_rate, "[{label}] mean differs");
+    assert_eq!(a.iqm_solve_rate, b.iqm_solve_rate, "[{label}] iqm differs");
+}
+
+fn check_eval_modes_agree<F: EnvFamily>(family: F) {
+    let id = family.id();
+    let q1 = eval_report(family, EvalMode::WorkQueue, 1);
+    let q4 = eval_report(family, EvalMode::WorkQueue, 4);
+    let c1 = eval_report(family, EvalMode::Chunked, 1);
+    let c4 = eval_report(family, EvalMode::Chunked, 4);
+    assert_reports_equal(&q1, &q4, &format!("{id} queue 1v4"));
+    assert_reports_equal(&c1, &c4, &format!("{id} chunked 1v4"));
+    assert_reports_equal(&q1, &c1, &format!("{id} queue-vs-chunked"));
+    // the whole point of the work-queue: no more forwards than the
+    // padded-chunk reference, on any suite
+    assert!(
+        q1.forward_passes <= c1.forward_passes,
+        "[{id}] queue used {} forwards, chunked {}",
+        q1.forward_passes,
+        c1.forward_passes
+    );
+    assert!(q1.forward_passes > 0);
+}
+
+#[test]
+fn eval_modes_agree_maze() {
+    check_eval_modes_agree(MazeFamily);
+}
+
+#[test]
+fn eval_modes_agree_lava() {
+    check_eval_modes_agree(LavaFamily);
+}
+
+#[test]
+fn work_queue_handles_fewer_episodes_than_columns() {
+    // n_episodes < B exercises the dead-pad slots
+    let params = EnvParams::default();
+    let env = MazeFamily.make_env(&params);
+    let mut levels = MazeFamily.holdout(0);
+    levels.truncate(3);
+    let policy = SyntheticPolicy { num_actions: env.num_actions() };
+    let ev = Evaluator::new(env, levels, 1, B, 40);
+    let mut rng = Pcg64::new(11, 2);
+    let queue = ev.run_with_mode(EvalMode::WorkQueue, &policy, &mut rng).unwrap();
+    let mut rng = Pcg64::new(11, 2);
+    let chunked = ev.run_with_mode(EvalMode::Chunked, &policy, &mut rng).unwrap();
+    assert_reports_equal(&queue, &chunked, "tiny-suite");
+    assert_eq!(queue.levels.len(), 3);
+}

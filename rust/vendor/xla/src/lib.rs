@@ -1,0 +1,267 @@
+//! Vendored stub of the `xla` (xla-rs) API surface jaxued compiles
+//! against.
+//!
+//! The offline build environment carries no XLA/PJRT shared libraries, so
+//! this path crate splits the binding in two:
+//!
+//! * **Host-side [`Literal`] operations are fully functional** pure Rust
+//!   (`vec1`/`scalar`/`reshape`/`to_vec`/`element_count`/`to_tuple`/
+//!   `array_shape`): trajectory staging, checkpoint IO, and every unit
+//!   test that manipulates literals work unchanged.
+//! * **The PJRT device path is gated off**: [`PjRtClient::cpu`] returns an
+//!   error, so artifact-backed code paths fail loudly at runtime-startup
+//!   (exactly where a missing `make artifacts` already fails) instead of
+//!   numerically.
+//!
+//! To run compiled artifacts, point the `xla` entry of `rust/Cargo.toml`
+//! at a real xla-rs binding; no jaxued source changes are required.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s role (message-only).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "XLA/PJRT backend unavailable: built against the vendored stub \
+     `xla` crate (rust/vendor/xla); point Cargo.toml at a real xla-rs \
+     binding to execute compiled artifacts";
+
+/// Element storage of a [`Literal`]. Public only so [`NativeType`] can
+/// name it; not part of the stable surface.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap_slice(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+
+    fn unwrap_slice(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+
+    fn unwrap_slice(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host tensor literal (dense, row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Total number of elements (summed over tuple members).
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.iter().map(Literal::element_count).sum(),
+        }
+    }
+
+    /// Same data under new dimensions (element count must match; the
+    /// empty dim list is a scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("cannot reshape a tuple literal"));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the elements (dtype-checked).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap_slice(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error::new("literal dtype mismatch in to_vec"))
+    }
+
+    /// Destructure a tuple literal into its members.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(t) => Ok(t),
+            _ => Err(Error::new("to_tuple on a non-tuple literal")),
+        }
+    }
+
+    /// The array shape (errors on tuples).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("tuple literal has no array shape"));
+        }
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+}
+
+/// Dimensions of a non-tuple literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module text (held opaquely; only a real backend lowers it).
+pub struct HloModuleProto {
+    _text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { _text: text })
+    }
+}
+
+/// Computation wrapper over a proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. The stub cannot create one, which gates every
+/// device code path at startup.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::new(UNAVAILABLE))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Compiled executable handle (unreachable through the stub client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+/// Device buffer handle (unreachable through the stub client).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(UNAVAILABLE))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(r.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.array_shape().unwrap().dims().is_empty());
+        // vec1 -> reshape(&[]) is the checkpoint-reader scalar path
+        let s2 = Literal::vec1(&[0.5f32]).reshape(&[]).unwrap();
+        assert_eq!(s2.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn device_path_gated() {
+        assert!(PjRtClient::cpu().is_err());
+    }
+}
