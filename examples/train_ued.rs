@@ -12,16 +12,23 @@
 //! cargo run --release --example train_ued -- --algo accel --env-steps 1000000
 //! cargo run --release --example train_ued -- --algo paired --variant small
 //! cargo run --release --example train_ued -- --algo accel --env lava
+//! cargo run --release --example train_ued -- --algo plr --seeds 0..4
 //! ```
+//!
+//! With `--seeds a..b` / `--num-seeds N` every seed trains concurrently
+//! in this process over one shared rollout pool, and the run reports the
+//! paper's cross-seed aggregate (mean/IQM ± stderr) instead of a single
+//! curve — see the "Seed packs" section of README.md.
 
 use anyhow::Result;
 
-use jaxued::algo::train;
+use jaxued::algo::{train, train_pack};
 use jaxued::config::TrainConfig;
 use jaxued::eval::evaluate_params;
 use jaxued::runtime::{ParamSet, Runtime};
 use jaxued::util::cli::Args;
 use jaxued::util::rng::Pcg64;
+use jaxued::util::stats;
 
 fn main() -> Result<()> {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -32,6 +39,10 @@ fn main() -> Result<()> {
     }
     let args = Args::parse_from(argv);
     let cfg = TrainConfig::from_args(&args)?;
+
+    if !cfg.pack_seeds.is_empty() {
+        return run_pack(&cfg);
+    }
 
     println!(
         "=== train_ued: {} on {} | seed {} | {} env steps ({} cycles of {}×{}) ===",
@@ -70,6 +81,38 @@ fn main() -> Result<()> {
         "checkpoint re-eval: mean solve = {:.3} (ckpt at {})",
         recheck.mean_solve_rate,
         run_dir.join("student.ckpt").display()
+    );
+    Ok(())
+}
+
+/// Seed-pack path: N concurrent runs over one shared pool, Figure-3
+/// style cross-seed aggregates at the end.
+fn run_pack(cfg: &TrainConfig) -> Result<()> {
+    let seeds = cfg.seed_list();
+    println!(
+        "=== train_ued: {} on {} | seed pack {:?} | {} env steps/seed ({} cycles) ===",
+        cfg.algo.name(), cfg.env.name(), seeds, cfg.env_steps_budget, cfg.num_cycles(),
+    );
+    let rt = Runtime::with_geometry(
+        std::path::Path::new(&cfg.artifacts_dir),
+        &cfg.env.geometry(),
+    )?;
+    let pack = train_pack(&rt, cfg, false)?;
+    println!("\n=== per-seed final holdout ===");
+    for (seed, o) in pack.seeds.iter().zip(&pack.outcomes) {
+        println!(
+            "seed {seed}: mean solve = {:.3}  IQM = {:.3}",
+            o.final_eval.mean_solve_rate, o.final_eval.iqm_solve_rate,
+        );
+    }
+    let finals = pack.final_mean_solves();
+    println!(
+        "\ncross-seed (Figure-3): mean = {:.3}  IQM = {:.3}  stderr = {:.3}",
+        stats::mean(&finals), stats::iqm(&finals), stats::std_err(&finals),
+    );
+    println!(
+        "aggregate curve + manifest: {}",
+        pack.pack_dir.display(),
     );
     Ok(())
 }

@@ -87,6 +87,7 @@ fn main() {
     let args = Args::parse();
     let iters = args.get_usize("iters", 8);
     let reps = args.get_usize("reps", 2);
+    assert!(iters > 0 && reps > 0, "--iters and --reps must be positive");
     let n_threads = auto_threads();
     let thread_settings: Vec<usize> =
         if n_threads > 1 { vec![1, n_threads] } else { vec![1] };
@@ -115,12 +116,35 @@ fn main() {
         }
     }
 
-    // Emit BENCH_rollout.json at the repo root (rust/..).
+    // Refuse to overwrite the committed JSON with a zeroed placeholder
+    // shape: a broken harness (stopped clock, empty suite, zero work)
+    // must fail loudly here, never publish zeros that look "measured".
+    let all_zero = rows.iter().all(|r| {
+        r.collect_sps <= 0.0 && r.eval_queue_sps <= 0.0 && r.eval_chunked_sps <= 0.0
+    });
+    assert!(
+        !all_zero,
+        "bench_rollout measured all-zero throughput across every variant — \
+         refusing to emit BENCH_rollout.json (is the harness broken?)"
+    );
+    assert!(
+        rows.iter().all(|r| {
+            r.collect_sps.is_finite()
+                && r.eval_queue_sps.is_finite()
+                && r.eval_chunked_sps.is_finite()
+        }),
+        "bench_rollout produced non-finite throughput — refusing to emit"
+    );
+
+    // Emit BENCH_rollout.json at the repo root (rust/..). `measured` is
+    // always true here: the committed `measured: false` placeholder can
+    // only be authored by hand, never by this bench.
     let mut json = String::from("{\n  \"bench\": \"rollout\",\n");
     json.push_str(
         "  \"policy\": \"synthetic host-side stand-in (device forward excluded; see micro_runtime)\",\n",
     );
-    json.push_str("  \"unit\": \"env steps per second\",\n  \"results\": [\n");
+    json.push_str("  \"unit\": \"env steps per second\",\n");
+    json.push_str("  \"measured\": true,\n  \"results\": [\n");
     for (i, r) in rows.iter().enumerate() {
         json.push_str(&format!(
             "    {{\"variant\": \"{}\", \"threads\": {}, \"collect_steps_per_sec\": {:.1}, \

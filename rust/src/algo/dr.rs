@@ -37,7 +37,18 @@ pub struct DrAlgo<F: EnvFamily> {
 }
 
 impl<F: EnvFamily> DrAlgo<F> {
+    /// Driver with its own worker pool sized by `cfg.rollout_threads`.
     pub fn new(family: F, rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64) -> Result<DrAlgo<F>> {
+        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+        Self::with_pool(family, rt, cfg, rng, pool)
+    }
+
+    /// Driver over a caller-owned pool (seed packs hand every per-seed
+    /// driver the same one so the host isn't oversubscribed N-fold).
+    pub fn with_pool(
+        family: F, rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64,
+        pool: Arc<WorkerPool>,
+    ) -> Result<DrAlgo<F>> {
         let params = cfg.env_params();
         let env: DrEnv<F> = AutoResetWrapper::new(
             family.make_env(&params),
@@ -64,7 +75,6 @@ impl<F: EnvFamily> DrAlgo<F> {
                 env.reset_to_level(&l, rng)
             })
             .collect();
-        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
         let engine = RolloutEngine::with_pool(&env, b, pool);
         let traj = Trajectory::new(t, b, &env.obs_components());
         let num_actions = env.num_actions();

@@ -10,10 +10,13 @@
 //! `cfg.algo` selects the method. [`train`] iterates cycles against the
 //! paper's env-interaction budget accounting (§6), evaluating on the
 //! selected family's holdout suite at a fixed cadence and logging CSV +
-//! stdout metrics.
+//! stdout metrics. [`orchestrator`] scales that to seed packs: N
+//! concurrent per-seed runs interleaved over one shared worker pool
+//! ([`train_pack`]), bit-identical to the solo runs.
 
 pub mod dr;
 pub mod meta_policy;
+pub mod orchestrator;
 pub mod paired;
 pub mod plr;
 pub mod scoring;
@@ -22,14 +25,15 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+pub use orchestrator::{train_pack, PackOutcome};
+
 use crate::config::{Algo, TrainConfig};
 use crate::env::registry::{dispatch, EnvVisitor};
 use crate::env::EnvFamily;
-use crate::eval::{for_family_with_pool, EvalReport};
-use crate::metrics::{log_stdout, CsvSink, Stopwatch};
+use crate::eval::EvalReport;
 use crate::ppo::{PpoTrainer, UpdateMetrics};
 use crate::rollout::storage::EpisodeStats;
-use crate::rollout::{Policy, WorkerPool};
+use crate::rollout::WorkerPool;
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
@@ -106,16 +110,27 @@ pub trait UedAlgorithm {
     fn rollout_pool(&self) -> Arc<WorkerPool>;
 }
 
-/// Instantiate the configured algorithm in a statically-known env family.
+/// Instantiate the configured algorithm in a statically-known env family,
+/// with its own worker pool sized by `cfg.rollout_threads`.
 pub fn build_algo_for<F: EnvFamily>(
     family: F, rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64,
 ) -> Result<Box<dyn UedAlgorithm>> {
+    let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+    build_algo_for_with_pool(family, rt, cfg, rng, pool)
+}
+
+/// [`build_algo_for`] over a caller-owned pool — the seed-pack
+/// orchestrator hands every per-seed driver the same one, so one process
+/// keeps exactly one pool no matter how many seeds it trains.
+pub fn build_algo_for_with_pool<F: EnvFamily>(
+    family: F, rt: &Runtime, cfg: &TrainConfig, rng: &mut Pcg64, pool: Arc<WorkerPool>,
+) -> Result<Box<dyn UedAlgorithm>> {
     Ok(match cfg.algo {
-        Algo::Dr => Box::new(dr::DrAlgo::new(family, rt, cfg, rng)?),
+        Algo::Dr => Box::new(dr::DrAlgo::with_pool(family, rt, cfg, rng, pool)?),
         Algo::Plr | Algo::RobustPlr | Algo::Accel => {
-            Box::new(plr::PlrAlgo::new(family, rt, cfg)?)
+            Box::new(plr::PlrAlgo::with_pool(family, rt, cfg, pool)?)
         }
-        Algo::Paired => Box::new(paired::PairedAlgo::new(family, rt, cfg)?),
+        Algo::Paired => Box::new(paired::PairedAlgo::with_pool(family, rt, cfg, pool)?),
     })
 }
 
@@ -165,101 +180,15 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig, quiet: bool) -> Result<TrainOutcom
 
 /// The shared training loop: cycles → periodic eval → final report. Fully
 /// generic — nothing in here (or below it) names a concrete environment.
+/// A solo run is literally a [`orchestrator::TrainSeedRun`] (the seed-pack
+/// unit) driven to completion, so pack and solo runs share one code path.
 pub fn train_family<F: EnvFamily>(
     family: F, rt: &Runtime, cfg: &TrainConfig, quiet: bool,
 ) -> Result<TrainOutcome> {
-    let mut rng = Pcg64::new(cfg.seed, 0x7261_696e); // "rain"
-    let mut algo = build_algo_for(family, rt, cfg, &mut rng)?;
-    let evaluator =
-        for_family_with_pool(family, cfg, cfg.eval_trials, 20, algo.rollout_pool());
-    let stu_apply = rt.load_scoped(
-        cfg.env.artifact_prefix(),
-        &cfg.student_apply_artifact(),
-    )?;
-
-    let run_dir = std::path::Path::new(&cfg.out_dir).join(cfg.run_name());
-    let mut csv = CsvSink::create(
-        &run_dir.join("metrics.csv"),
-        &[
-            "cycle", "env_steps", "loss", "value_loss", "entropy",
-            "train_solve_rate", "episodes", "buffer_fill", "mean_regret",
-            "eval_mean_solve", "eval_iqm_solve", "steps_per_sec",
-        ],
-    )?;
-
-    let mut watch = Stopwatch::new();
-    let total_cycles = cfg.num_cycles();
-    let per_cycle = cfg.env_steps_per_cycle();
-    let mut last_eval = (f64::NAN, f64::NAN);
-
-    for cycle in 0..total_cycles {
-        let m = algo.cycle(&mut rng)?;
-        watch.add_steps(per_cycle);
-
-        let do_eval = cfg.eval_interval > 0 && (cycle + 1) % cfg.eval_interval == 0;
-        if do_eval {
-            let policy = Policy {
-                apply: stu_apply.clone(),
-                params: algo.student_params(),
-                num_actions: evaluator.num_actions(),
-            };
-            let report = evaluator.run(&policy, &mut rng)?;
-            last_eval = (report.mean_solve_rate, report.iqm_solve_rate);
-            if !quiet {
-                log_stdout(
-                    cycle,
-                    watch.env_steps,
-                    &[
-                        ("eval_mean_solve", report.mean_solve_rate),
-                        ("eval_iqm_solve", report.iqm_solve_rate),
-                        ("sps", watch.steps_per_sec()),
-                    ],
-                );
-            }
-        }
-        csv.write_row(&[
-            cycle as f64,
-            watch.env_steps as f64,
-            m.total_loss,
-            m.value_loss,
-            m.entropy,
-            m.train_solve_rate,
-            m.episodes as f64,
-            m.buffer_fill,
-            m.mean_regret,
-            last_eval.0,
-            last_eval.1,
-            watch.steps_per_sec(),
-        ])?;
-        if !quiet && (cycle % 16 == 0) {
-            log_stdout(
-                cycle,
-                watch.env_steps,
-                &[
-                    ("loss", m.total_loss),
-                    ("train_solve", m.train_solve_rate),
-                    ("buffer", m.buffer_fill),
-                    ("sps", watch.steps_per_sec()),
-                ],
-            );
-        }
+    let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+    let mut run = orchestrator::TrainSeedRun::new(family, rt, cfg, quiet, "", pool)?;
+    while !run.done() {
+        run.step_cycle()?;
     }
-
-    // Final checkpoint + evaluation.
-    algo.student_trainer()
-        .params
-        .save(&run_dir.join("student.ckpt"))?;
-    let policy = Policy {
-        apply: stu_apply,
-        params: algo.student_params(),
-        num_actions: evaluator.num_actions(),
-    };
-    let final_eval = evaluator.run(&policy, &mut rng)?;
-    Ok(TrainOutcome {
-        cycles: total_cycles,
-        env_steps: watch.env_steps,
-        wallclock_secs: watch.elapsed_secs(),
-        table1_hours: watch.extrapolate_hours(245_760_000),
-        final_eval,
-    })
+    run.finish()
 }

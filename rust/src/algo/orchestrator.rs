@@ -1,0 +1,383 @@
+//! Seed-pack orchestration: N full training runs interleaved in one
+//! process over one shared rollout [`WorkerPool`].
+//!
+//! The paper's headline numbers (Figure 3, Table 1) are IQM aggregates
+//! over many independent seeds, which JaxUED gets almost for free from
+//! `jax.vmap`. The Rust port gets the same economy differently: a pack
+//! (`--seeds 0..8` / `--num-seeds N`) builds one [`TrainSeedRun`] per
+//! seed — each an ordinary solo run down to its run directory and CSV —
+//! and round-robins their update cycles, so every seed advances through
+//! cycle k before any seed starts k+1 and every phase of host work flows
+//! through the *single* per-process pool (saturated, never N-fold
+//! oversubscribed; the pool's FIFO phase lock keeps contending engines
+//! fair).
+//!
+//! **Bit-identity invariant.** Seed *s* trained inside a pack is
+//! bit-identical to seed *s* trained alone — same per-cycle metrics, same
+//! final sampler contents, at any `--rollout-threads` count. It holds
+//! structurally: every unit owns its RNG streams, trajectory, trainer and
+//! sampler; the shared pool only schedules column work, which the
+//! per-column RNG-stream design already makes schedule-independent. The
+//! artifact-free `pack_determinism` integration test pins it on both env
+//! families.
+//!
+//! Alongside the per-seed CSVs the pack writes a cross-seed
+//! [`CrossSeedSink`] aggregate (mean / IQM / stderr per cycle — the
+//! Figure-3 quantities) and a [`PackManifest`] naming every member run.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::{build_algo_for_with_pool, CycleMetrics, TrainOutcome, UedAlgorithm};
+use crate::config::TrainConfig;
+use crate::env::registry::{dispatch, EnvVisitor};
+use crate::env::EnvFamily;
+use crate::eval::{for_family_with_pool, Evaluator};
+use crate::metrics::{log_stdout_tagged, CrossSeedSink, CsvSink, Stopwatch};
+use crate::rollout::{Policy, WorkerPool};
+use crate::runtime::executor::Executable;
+use crate::runtime::{PackManifest, Runtime};
+use crate::util::rng::Pcg64;
+
+/// Metrics aggregated across seeds every cycle, in [`run_pack`]'s column
+/// order. A [`CrossSeedSink`] handed to `run_pack` must be created with
+/// exactly this list.
+pub const PACK_AGGREGATE_METRICS: &[&str] = &[
+    "loss",
+    "train_solve_rate",
+    "mean_reward",
+    "buffer_fill",
+    "eval_mean_solve",
+    "eval_iqm_solve",
+];
+
+/// One seed's training run viewed as a steppable unit. The orchestrator
+/// only needs "advance one cycle and tell me what happened", so packs are
+/// testable artifact-free with synthetic-policy units.
+pub trait SeedUnit {
+    fn seed(&self) -> u64;
+    fn total_cycles(&self) -> usize;
+    /// Cumulative env steps so far (the aggregate sink's x-axis).
+    fn env_steps(&self) -> u64;
+    /// Run one update cycle; returns that cycle's metrics row.
+    fn step_cycle(&mut self) -> Result<CycleMetrics>;
+    /// (mean_solve, iqm_solve) of the latest periodic evaluation; NaN
+    /// before the first eval or for units that never evaluate.
+    fn last_eval(&self) -> (f64, f64) {
+        (f64::NAN, f64::NAN)
+    }
+}
+
+/// Drive a pack of seed units to completion, round-robin one cycle at a
+/// time, writing one cross-seed aggregate row per cycle. Every unit must
+/// agree on the cycle count (they share one config).
+pub fn run_pack<U: SeedUnit>(
+    units: &mut [U], aggregate: &mut CrossSeedSink,
+) -> Result<()> {
+    anyhow::ensure!(!units.is_empty(), "empty seed pack");
+    let total = units[0].total_cycles();
+    anyhow::ensure!(
+        units.iter().all(|u| u.total_cycles() == total),
+        "seed units disagree on cycle count"
+    );
+    for cycle in 0..total {
+        let mut per_metric: Vec<Vec<f64>> = (0..PACK_AGGREGATE_METRICS.len())
+            .map(|_| Vec::with_capacity(units.len()))
+            .collect();
+        for u in units.iter_mut() {
+            let m = u.step_cycle()?;
+            let (eval_mean, eval_iqm) = u.last_eval();
+            per_metric[0].push(m.total_loss);
+            per_metric[1].push(m.train_solve_rate);
+            per_metric[2].push(m.mean_reward);
+            per_metric[3].push(m.buffer_fill);
+            per_metric[4].push(eval_mean);
+            per_metric[5].push(eval_iqm);
+        }
+        aggregate.write_cycle(cycle, units[0].env_steps(), &per_metric)?;
+    }
+    Ok(())
+}
+
+/// One seed's full training run — driver, evaluator, per-seed CSV and
+/// checkpointing — as a unit the orchestrator (or the solo `train_family`
+/// loop, which uses exactly this type) steps one cycle at a time.
+pub struct TrainSeedRun<F: EnvFamily> {
+    cfg: TrainConfig,
+    quiet: bool,
+    /// Log-line prefix (`"s3 "` inside a pack, empty solo).
+    tag: String,
+    rng: Pcg64,
+    algo: Box<dyn UedAlgorithm>,
+    evaluator: Evaluator<F::Env>,
+    stu_apply: Rc<Executable>,
+    run_dir: PathBuf,
+    csv: CsvSink,
+    watch: Stopwatch,
+    last_eval: (f64, f64),
+    cycle: usize,
+    total_cycles: usize,
+    per_cycle: u64,
+}
+
+impl<F: EnvFamily> TrainSeedRun<F> {
+    /// Build the unit over a caller-owned pool. The construction sequence
+    /// (RNG stream, driver, evaluator, apply artifact, CSV) matches the
+    /// solo path draw-for-draw — that is what makes pack and solo runs of
+    /// one seed bit-identical.
+    pub fn new(
+        family: F, rt: &Runtime, cfg: &TrainConfig, quiet: bool, tag: &str,
+        pool: Arc<WorkerPool>,
+    ) -> Result<TrainSeedRun<F>> {
+        let cfg = cfg.clone();
+        let mut rng = Pcg64::new(cfg.seed, 0x7261_696e); // "rain"
+        let algo = build_algo_for_with_pool(family, rt, &cfg, &mut rng, pool)?;
+        let evaluator =
+            for_family_with_pool(family, &cfg, cfg.eval_trials, 20, algo.rollout_pool());
+        let stu_apply = rt.load_scoped(
+            cfg.env.artifact_prefix(),
+            &cfg.student_apply_artifact(),
+        )?;
+        let run_dir = Path::new(&cfg.out_dir).join(cfg.run_name());
+        let csv = CsvSink::create(
+            &run_dir.join("metrics.csv"),
+            &[
+                "cycle", "env_steps", "loss", "value_loss", "entropy",
+                "train_solve_rate", "episodes", "buffer_fill", "mean_regret",
+                "eval_mean_solve", "eval_iqm_solve", "steps_per_sec",
+            ],
+        )?;
+        let total_cycles = cfg.num_cycles();
+        let per_cycle = cfg.env_steps_per_cycle();
+        Ok(TrainSeedRun {
+            cfg,
+            quiet,
+            tag: tag.to_string(),
+            rng,
+            algo,
+            evaluator,
+            stu_apply,
+            run_dir,
+            csv,
+            watch: Stopwatch::new(),
+            last_eval: (f64::NAN, f64::NAN),
+            cycle: 0,
+            total_cycles,
+            per_cycle,
+        })
+    }
+
+    pub fn done(&self) -> bool {
+        self.cycle >= self.total_cycles
+    }
+
+    /// One update cycle: algorithm cycle, periodic eval, CSV row, logs.
+    pub fn step_cycle(&mut self) -> Result<CycleMetrics> {
+        anyhow::ensure!(
+            self.cycle < self.total_cycles,
+            "seed {} already ran its {} cycles",
+            self.cfg.seed,
+            self.total_cycles
+        );
+        let cycle = self.cycle;
+        let m = self.algo.cycle(&mut self.rng)?;
+        self.watch.add_steps(self.per_cycle);
+
+        let do_eval =
+            self.cfg.eval_interval > 0 && (cycle + 1) % self.cfg.eval_interval == 0;
+        if do_eval {
+            let policy = Policy {
+                apply: self.stu_apply.clone(),
+                params: self.algo.student_params(),
+                num_actions: self.evaluator.num_actions(),
+            };
+            let report = self.evaluator.run(&policy, &mut self.rng)?;
+            self.last_eval = (report.mean_solve_rate, report.iqm_solve_rate);
+            if !self.quiet {
+                log_stdout_tagged(
+                    &self.tag,
+                    cycle,
+                    self.watch.env_steps,
+                    &[
+                        ("eval_mean_solve", report.mean_solve_rate),
+                        ("eval_iqm_solve", report.iqm_solve_rate),
+                        ("sps", self.watch.steps_per_sec()),
+                    ],
+                );
+            }
+        }
+        self.csv.write_row(&[
+            cycle as f64,
+            self.watch.env_steps as f64,
+            m.total_loss,
+            m.value_loss,
+            m.entropy,
+            m.train_solve_rate,
+            m.episodes as f64,
+            m.buffer_fill,
+            m.mean_regret,
+            self.last_eval.0,
+            self.last_eval.1,
+            self.watch.steps_per_sec(),
+        ])?;
+        if !self.quiet && (cycle % 16 == 0) {
+            log_stdout_tagged(
+                &self.tag,
+                cycle,
+                self.watch.env_steps,
+                &[
+                    ("loss", m.total_loss),
+                    ("train_solve", m.train_solve_rate),
+                    ("buffer", m.buffer_fill),
+                    ("sps", self.watch.steps_per_sec()),
+                ],
+            );
+        }
+        self.cycle += 1;
+        Ok(m)
+    }
+
+    /// Final checkpoint + evaluation (the tail of the solo loop).
+    pub fn finish(mut self) -> Result<TrainOutcome> {
+        anyhow::ensure!(
+            self.done(),
+            "seed {} finished only {}/{} cycles",
+            self.cfg.seed,
+            self.cycle,
+            self.total_cycles
+        );
+        // surface buffered-row I/O errors (a full disk) here instead of
+        // letting BufWriter's drop swallow them after an Ok return
+        self.csv.flush()?;
+        self.algo
+            .student_trainer()
+            .params
+            .save(&self.run_dir.join("student.ckpt"))?;
+        let policy = Policy {
+            apply: self.stu_apply.clone(),
+            params: self.algo.student_params(),
+            num_actions: self.evaluator.num_actions(),
+        };
+        let final_eval = self.evaluator.run(&policy, &mut self.rng)?;
+        Ok(TrainOutcome {
+            cycles: self.total_cycles,
+            env_steps: self.watch.env_steps,
+            wallclock_secs: self.watch.elapsed_secs(),
+            table1_hours: self.watch.extrapolate_hours(245_760_000),
+            final_eval,
+        })
+    }
+}
+
+impl<F: EnvFamily> SeedUnit for TrainSeedRun<F> {
+    fn seed(&self) -> u64 {
+        self.cfg.seed
+    }
+
+    fn total_cycles(&self) -> usize {
+        self.total_cycles
+    }
+
+    fn env_steps(&self) -> u64 {
+        self.watch.env_steps
+    }
+
+    fn step_cycle(&mut self) -> Result<CycleMetrics> {
+        TrainSeedRun::step_cycle(self)
+    }
+
+    fn last_eval(&self) -> (f64, f64) {
+        self.last_eval
+    }
+}
+
+/// Outcome of a full seed pack.
+pub struct PackOutcome {
+    pub seeds: Vec<u64>,
+    /// Per-seed outcomes, in `seeds` order.
+    pub outcomes: Vec<TrainOutcome>,
+    /// The pack directory (aggregate CSV + manifest).
+    pub pack_dir: PathBuf,
+}
+
+impl PackOutcome {
+    /// Final-evaluation mean solve rate per seed (Figure-3 raw points).
+    pub fn final_mean_solves(&self) -> Vec<f64> {
+        self.outcomes
+            .iter()
+            .map(|o| o.final_eval.mean_solve_rate)
+            .collect()
+    }
+
+    pub fn total_env_steps(&self) -> u64 {
+        self.outcomes.iter().map(|o| o.env_steps).sum()
+    }
+}
+
+/// Train every seed of `cfg.seed_list()` concurrently in this process
+/// over one shared worker pool (the `--seeds` entry point, env-erased).
+pub fn train_pack(rt: &Runtime, cfg: &TrainConfig, quiet: bool) -> Result<PackOutcome> {
+    struct V<'a> {
+        rt: &'a Runtime,
+        cfg: &'a TrainConfig,
+        quiet: bool,
+    }
+    impl EnvVisitor for V<'_> {
+        type Out = Result<PackOutcome>;
+        fn visit<F: EnvFamily>(self, family: F) -> Self::Out {
+            train_pack_family(family, self.rt, self.cfg, self.quiet)
+        }
+    }
+    dispatch(cfg.env, V { rt, cfg, quiet })
+}
+
+/// [`train_pack`] in a statically-known env family.
+pub fn train_pack_family<F: EnvFamily>(
+    family: F, rt: &Runtime, cfg: &TrainConfig, quiet: bool,
+) -> Result<PackOutcome> {
+    let seeds = cfg.seed_list();
+    let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+    let pack_dir = Path::new(&cfg.out_dir).join(cfg.pack_name());
+
+    let mut units: Vec<TrainSeedRun<F>> = Vec::with_capacity(seeds.len());
+    for &s in &seeds {
+        units.push(TrainSeedRun::new(
+            family,
+            rt,
+            &cfg.for_seed(s),
+            quiet,
+            &format!("s{s} "),
+            pool.clone(),
+        )?);
+    }
+
+    let mut aggregate = CrossSeedSink::create(
+        &pack_dir.join("aggregate.csv"),
+        PACK_AGGREGATE_METRICS,
+        seeds.len(),
+    )?;
+    run_pack(&mut units, &mut aggregate)?;
+    aggregate.flush()?;
+
+    let mut outcomes = Vec::with_capacity(units.len());
+    for u in units {
+        outcomes.push(u.finish()?);
+    }
+
+    let manifest = PackManifest {
+        env: cfg.env.name().to_string(),
+        algo: cfg.algo.name().to_string(),
+        variant: cfg.variant.name.to_string(),
+        seeds: seeds.clone(),
+        run_dirs: seeds.iter().map(|&s| cfg.for_seed(s).run_name()).collect(),
+        aggregate_csv: "aggregate.csv".to_string(),
+        env_steps_budget: cfg.env_steps_budget,
+        rollout_threads: pool.threads(),
+    };
+    manifest.write(&pack_dir)?;
+
+    Ok(PackOutcome { seeds, outcomes, pack_dir })
+}

@@ -54,7 +54,17 @@ pub struct PairedAlgo<F: EnvFamily> {
 }
 
 impl<F: EnvFamily> PairedAlgo<F> {
+    /// Driver with its own worker pool sized by `cfg.rollout_threads`.
     pub fn new(family: F, rt: &Runtime, cfg: &TrainConfig) -> Result<PairedAlgo<F>> {
+        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+        Self::with_pool(family, rt, cfg, pool)
+    }
+
+    /// Driver over a caller-owned pool (shared across a seed pack; the
+    /// three agents already share one pool within a driver).
+    pub fn with_pool(
+        family: F, rt: &Runtime, cfg: &TrainConfig, pool: Arc<WorkerPool>,
+    ) -> Result<PairedAlgo<F>> {
         let schedule = LrSchedule {
             lr0: cfg.lr,
             anneal: cfg.anneal_lr,
@@ -98,7 +108,6 @@ impl<F: EnvFamily> PairedAlgo<F> {
         );
         // All three agents' rollouts (adversary in the editor env, both
         // students in the task env) share one persistent worker pool.
-        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
         let editor_engine = RolloutEngine::with_pool(&editor_env, b, pool.clone());
         let student_engine = RolloutEngine::with_pool(&student_env, b, pool);
         let editor_traj = Trajectory::new(t_adv, b, &editor_env.obs_components());

@@ -54,7 +54,16 @@ pub struct PlrAlgo<F: EnvFamily> {
 }
 
 impl<F: EnvFamily> PlrAlgo<F> {
+    /// Driver with its own worker pool sized by `cfg.rollout_threads`.
     pub fn new(family: F, rt: &Runtime, cfg: &TrainConfig) -> Result<PlrAlgo<F>> {
+        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+        Self::with_pool(family, rt, cfg, pool)
+    }
+
+    /// Driver over a caller-owned pool (shared across a seed pack).
+    pub fn with_pool(
+        family: F, rt: &Runtime, cfg: &TrainConfig, pool: Arc<WorkerPool>,
+    ) -> Result<PlrAlgo<F>> {
         let (train_on_new, name) = match cfg.algo {
             Algo::Plr => (true, "plr"),
             Algo::RobustPlr => (false, "robust_plr"),
@@ -82,7 +91,6 @@ impl<F: EnvFamily> PlrAlgo<F> {
         let params = cfg.env_params();
         let env = AutoReplayWrapper::new(family.make_env(&params));
         let (t, b) = trainer.rollout_shape();
-        let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
         let engine = RolloutEngine::with_pool(&env, b, pool);
         let traj = Trajectory::new(t, b, &env.obs_components());
         let num_actions = env.num_actions();

@@ -94,6 +94,59 @@ impl Variant {
     }
 }
 
+/// Largest seed pack a single process will build. Every seed owns a full
+/// driver (trainer, engine, trajectory, evaluator), so packs beyond this
+/// are a typo (`--seeds 0..10000000000`), not a sweep — reject eagerly
+/// instead of OOMing while materializing the range.
+pub const MAX_PACK_SEEDS: u64 = 1024;
+
+/// Parse a `--seeds` specification: `a..b` (half-open), `a..=b`
+/// (inclusive), a comma list `0,3,7`, or a single seed (a pack of one).
+/// Duplicates are rejected — two identical seeds would race on one run
+/// directory — and the pack is capped at [`MAX_PACK_SEEDS`].
+pub fn parse_seed_spec(spec: &str) -> Result<Vec<u64>> {
+    let s = spec.trim();
+    let one = |t: &str| -> Result<u64> {
+        t.trim()
+            .parse::<u64>()
+            .map_err(|_| anyhow::anyhow!("bad seed {t:?} in --seeds {spec:?}"))
+    };
+    let check_len = |n: u64| -> Result<()> {
+        if n > MAX_PACK_SEEDS {
+            bail!("--seeds {spec:?} names {n} seeds (max {MAX_PACK_SEEDS} per pack)");
+        }
+        Ok(())
+    };
+    let seeds: Vec<u64> = if let Some((a, b)) = s.split_once("..=") {
+        let (a, b) = (one(a)?, one(b)?);
+        if a > b {
+            bail!("empty seed range --seeds {spec:?}");
+        }
+        check_len((b - a).saturating_add(1))?;
+        (a..=b).collect()
+    } else if let Some((a, b)) = s.split_once("..") {
+        let (a, b) = (one(a)?, one(b)?);
+        if a >= b {
+            bail!("empty seed range --seeds {spec:?}");
+        }
+        check_len(b - a)?;
+        (a..b).collect()
+    } else if s.contains(',') {
+        let list = s.split(',').map(one).collect::<Result<Vec<u64>>>()?;
+        check_len(list.len() as u64)?;
+        list
+    } else {
+        vec![one(s)?]
+    };
+    let mut uniq = seeds.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    if uniq.len() != seeds.len() {
+        bail!("duplicate seeds in --seeds {spec:?}");
+    }
+    Ok(seeds)
+}
+
 /// The full runtime configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -101,6 +154,10 @@ pub struct TrainConfig {
     /// Which environment family to train in (`--env`).
     pub env: EnvId,
     pub seed: u64,
+    /// Seed pack (`--seeds a..b` / `--num-seeds N`): every listed seed
+    /// trains concurrently in one process over one shared rollout worker
+    /// pool. Empty = single-seed mode using `seed`.
+    pub pack_seeds: Vec<u64>,
     pub variant: Variant,
     /// Total environment-interaction budget (paper: 245,760,000).
     pub env_steps_budget: u64,
@@ -154,6 +211,7 @@ impl TrainConfig {
             algo,
             env: EnvId::Maze,
             seed: 0,
+            pack_seeds: Vec::new(),
             variant: VARIANT_STD,
             env_steps_budget: 245_760_000,
             lr: 1e-4,
@@ -184,7 +242,26 @@ impl TrainConfig {
         let algo = Algo::parse(&args.get_str("algo", "dr"))?;
         let mut c = TrainConfig::defaults(algo);
         c.env = EnvId::parse(&args.get_str("env", c.env.name()))?;
+        let seed_given = args.has("seed");
         c.seed = args.get_u64("seed", c.seed);
+        let seeds_spec = args.get("seeds").map(str::to_string);
+        let num_seeds = args.get_usize("num-seeds", 0);
+        c.pack_seeds = match (&seeds_spec, num_seeds) {
+            (Some(_), n) if n > 0 => {
+                bail!("--seeds and --num-seeds are mutually exclusive")
+            }
+            (Some(spec), _) => parse_seed_spec(spec)?,
+            (None, 0) => Vec::new(),
+            (None, n) => {
+                if n as u64 > MAX_PACK_SEEDS {
+                    bail!("--num-seeds {n} exceeds the per-pack max of {MAX_PACK_SEEDS}");
+                }
+                (0..n as u64).collect()
+            }
+        };
+        if !c.pack_seeds.is_empty() && seed_given {
+            bail!("--seed conflicts with --seeds/--num-seeds (the pack supplies per-run seeds)");
+        }
         c.variant = Variant::parse(&args.get_str("variant", c.variant.name))?;
         c.env_steps_budget = args.get_u64("env-steps", c.env_steps_budget);
         c.lr = args.get_f64("lr", c.lr);
@@ -259,6 +336,53 @@ impl TrainConfig {
             EnvId::Maze => format!("{}_s{}", self.algo.name(), self.seed),
             e => format!("{}_{}_s{}", e.name(), self.algo.name(), self.seed),
         }
+    }
+
+    /// The seeds this invocation trains: the pack, or the single `--seed`.
+    pub fn seed_list(&self) -> Vec<u64> {
+        if self.pack_seeds.is_empty() {
+            vec![self.seed]
+        } else {
+            self.pack_seeds.clone()
+        }
+    }
+
+    /// Per-seed view of a pack config: `seed` pinned, pack field cleared,
+    /// everything else shared — each pack member is exactly the config a
+    /// solo `--seed N` run would get (the bit-identity requirement).
+    pub fn for_seed(&self, seed: u64) -> TrainConfig {
+        let mut c = self.clone();
+        c.seed = seed;
+        c.pack_seeds = Vec::new();
+        c
+    }
+
+    /// Pack directory name under `out_dir` (the per-seed run dirs stay
+    /// flat beside it): `{env}_{algo}_pack_s{min}-{max}_n{count}` for a
+    /// contiguous ascending range, with every seed spelled out
+    /// (`s0+2+4`) otherwise — two different comma-list packs must never
+    /// resolve to one directory and clobber each other's aggregates.
+    pub fn pack_name(&self) -> String {
+        let seeds = self.seed_list();
+        let min = seeds.iter().min().copied().unwrap_or(0);
+        let max = seeds.iter().max().copied().unwrap_or(0);
+        let contiguous = seeds.len() as u64 == max.wrapping_sub(min).wrapping_add(1)
+            && seeds.windows(2).all(|w| w[1] == w[0] + 1);
+        let tag = if contiguous {
+            format!("s{min}-{max}")
+        } else {
+            let mut sorted = seeds.clone();
+            sorted.sort_unstable();
+            let joined: Vec<String> = sorted.iter().map(u64::to_string).collect();
+            format!("s{}", joined.join("+"))
+        };
+        format!(
+            "{}_{}_pack_{}_n{}",
+            self.env.name(),
+            self.algo.name(),
+            tag,
+            seeds.len(),
+        )
     }
 
     /// Sampler config view.
@@ -405,5 +529,69 @@ mod tests {
     fn algo_parse_aliases() {
         assert_eq!(Algo::parse("PLR^").unwrap(), Algo::RobustPlr);
         assert!(Algo::parse("zzz").is_err());
+    }
+
+    #[test]
+    fn seed_spec_forms() {
+        assert_eq!(parse_seed_spec("0..4").unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(parse_seed_spec("2..=4").unwrap(), vec![2, 3, 4]);
+        assert_eq!(parse_seed_spec("7,1,3").unwrap(), vec![7, 1, 3]);
+        assert_eq!(parse_seed_spec("5").unwrap(), vec![5]);
+        assert_eq!(parse_seed_spec(" 1 .. 3 ").unwrap(), vec![1, 2]);
+        assert!(parse_seed_spec("4..4").is_err(), "empty half-open range");
+        assert!(parse_seed_spec("5..=4").is_err(), "inverted range");
+        assert!(parse_seed_spec("1,1").is_err(), "duplicates race on run dirs");
+        assert!(parse_seed_spec("x..2").is_err());
+        assert!(parse_seed_spec("").is_err());
+        // a typo'd range errors eagerly instead of materializing 80 GB
+        assert!(parse_seed_spec("0..10000000000").is_err(), "pack size cap");
+        assert!(parse_seed_spec("0..=18446744073709551615").is_err(), "no overflow");
+        assert_eq!(parse_seed_spec("0..1024").unwrap().len(), 1024, "cap is inclusive");
+    }
+
+    #[test]
+    fn pack_flags() {
+        let c = parse("--algo dr");
+        assert!(c.pack_seeds.is_empty(), "default is single-seed");
+        assert_eq!(c.seed_list(), vec![0]);
+
+        let c = parse("--algo dr --seeds 0..4");
+        assert_eq!(c.pack_seeds, vec![0, 1, 2, 3]);
+        assert_eq!(c.seed_list(), vec![0, 1, 2, 3]);
+        assert_eq!(c.pack_name(), "maze_dr_pack_s0-3_n4");
+
+        let c = parse("--algo accel --env lava --num-seeds 3");
+        assert_eq!(c.pack_seeds, vec![0, 1, 2]);
+        assert_eq!(c.pack_name(), "lava_accel_pack_s0-2_n3");
+
+        // non-contiguous packs spell out every seed so two different
+        // comma lists with equal min/max/count cannot share a directory
+        let a = parse("--algo dr --seeds 0,2,4");
+        let b = parse("--algo dr --seeds 0,1,4");
+        assert_eq!(a.pack_name(), "maze_dr_pack_s0+2+4_n3");
+        assert_eq!(b.pack_name(), "maze_dr_pack_s0+1+4_n3");
+        assert_ne!(a.pack_name(), b.pack_name());
+
+        // per-seed views are exactly the solo configs
+        let s3 = c.for_seed(3);
+        assert_eq!(s3.seed, 3);
+        assert!(s3.pack_seeds.is_empty());
+        assert_eq!(s3.run_name(), "lava_accel_s3");
+    }
+
+    #[test]
+    fn pack_flag_conflicts() {
+        let args = Args::parse_from(
+            "--algo dr --seeds 0..2 --num-seeds 4"
+                .split_whitespace()
+                .map(String::from),
+        );
+        assert!(TrainConfig::from_args(&args).is_err());
+        let args = Args::parse_from(
+            "--algo dr --seed 1 --seeds 0..2"
+                .split_whitespace()
+                .map(String::from),
+        );
+        assert!(TrainConfig::from_args(&args).is_err());
     }
 }

@@ -117,12 +117,17 @@ impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
     }
 
     /// Insert one level. Returns its slot index, or None if it was rejected
-    /// (buffer full and score below the current minimum).
+    /// (NaN score, or buffer full and score below the current minimum).
     ///
+    /// * NaN score (e.g. a MaxMC 0/0 regret estimate): rejected outright —
+    ///   a NaN must never enter the replay distribution.
     /// * duplicate (when `duplicate_check`): update score/extra in place.
     /// * buffer not full: append.
     /// * buffer full: evict the lowest-score slot if the new score beats it.
     pub fn insert(&mut self, level: L, score: f64, fingerprint: u64, extra: E) -> Option<usize> {
+        if score.is_nan() {
+            return None;
+        }
         self.tick += 1;
         if self.config.duplicate_check {
             if let Some(&idx) = self.by_fingerprint.get(&fingerprint) {
@@ -141,14 +146,19 @@ impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
             self.by_fingerprint.insert(fingerprint, idx);
             return Some(idx);
         }
-        // Evict the minimum-score slot (ties: lowest index).
+        // Evict the minimum-score slot (ties: lowest index). NaN sorts as
+        // the lowest priority, so a NaN-scored slot (possible only via
+        // direct `get_mut` mutation) is the first eviction candidate
+        // instead of a `partial_cmp().unwrap()` panic that kills training.
         let (min_idx, min_score) = self
             .slots
             .iter()
             .enumerate()
             .map(|(i, s)| (i, s.score))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| cmp_scores_nan_lowest(a.1, b.1))
             .unwrap();
+        // NaN min_score fails this check (any comparison with NaN is
+        // false), so the new finite score always beats a NaN slot.
         if score <= min_score {
             return None;
         }
@@ -177,12 +187,18 @@ impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
     }
 
     /// Update scores/extras of existing slots (after replaying them).
+    ///
+    /// A NaN score carries no information (a degenerate regret estimate),
+    /// so it keeps the slot's previous score; the extra and staleness
+    /// clock still update, since the level *was* replayed.
     pub fn update_batch(&mut self, indices: &[usize], scores: &[f64], extras: &[E]) {
         assert_eq!(indices.len(), scores.len());
         self.tick += 1;
         for ((&i, &s), e) in indices.iter().zip(scores).zip(extras) {
             let slot = &mut self.slots[i];
-            slot.score = s;
+            if !s.is_nan() {
+                slot.score = s;
+            }
             slot.extra = e.clone();
             slot.last_touch = self.tick;
         }
@@ -190,6 +206,9 @@ impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
 
     /// Sample `n` distinct slots from the staleness-mixed prioritized
     /// replay distribution; marks them as touched (resets staleness).
+    /// Once the positive-weight slots are exhausted, the remaining draws
+    /// are uniform over the undrawn slots (the defined degenerate-draw
+    /// behavior — see the fallback below).
     pub fn sample_replay_indices(&mut self, n: usize, rng: &mut Pcg64) -> Vec<usize> {
         assert!(!self.slots.is_empty(), "sampling from empty buffer");
         let n = n.min(self.slots.len());
@@ -201,10 +220,35 @@ impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
             self.config.temperature,
             self.config.staleness_coef,
         );
+        let mut drawn = vec![false; weights.len()];
         let mut out = Vec::with_capacity(n);
         for _ in 0..n {
-            let i = rng.sample_weighted(&weights);
+            let total: f64 = weights.iter().sum();
+            let i = if total > 0.0 {
+                let cand = rng.sample_weighted(&weights);
+                if drawn[cand] {
+                    // float-edge: rounding in the cumulative scan can
+                    // push sample_weighted onto its end-of-slice
+                    // fallback, which may be a zeroed (already drawn)
+                    // slot; remap to the highest undrawn index so the
+                    // without-replacement guarantee survives.
+                    (0..drawn.len()).rfind(|&j| !drawn[j]).unwrap()
+                } else {
+                    cand
+                }
+            } else {
+                // Degenerate draw: every positive-weight slot is already
+                // drawn (n exceeds the positive-weight count, e.g. under
+                // greedy or proportional prioritization with zero
+                // staleness). Fall back to a uniform draw over the
+                // undrawn slots instead of handing `sample_weighted` an
+                // all-zero vector, whose behavior is unspecified.
+                let undrawn: Vec<usize> =
+                    (0..drawn.len()).filter(|&j| !drawn[j]).collect();
+                undrawn[rng.gen_range(undrawn.len())]
+            };
             out.push(i);
+            drawn[i] = true;
             weights[i] = 0.0; // without replacement
         }
         self.tick += 1;
@@ -224,6 +268,20 @@ impl<L: Clone, E: Clone + Default> LevelSampler<L, E> {
             self.config.temperature,
             self.config.staleness_coef,
         )
+    }
+}
+
+/// Total order on scores with NaN as the lowest priority, so a NaN slot
+/// is always the first eviction candidate and never wins an insertion
+/// race. (`f64::total_cmp` would sort +NaN *above* +inf — exactly wrong
+/// for a priority.)
+fn cmp_scores_nan_lowest(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => a.partial_cmp(&b).unwrap(),
     }
 }
 
@@ -366,6 +424,76 @@ mod tests {
     }
 
     #[test]
+    fn nan_insert_rejected() {
+        // Regression: a single NaN regret score (MaxMC 0/0) used to panic
+        // inside the full-buffer eviction's partial_cmp().unwrap().
+        let mut s = sampler(2);
+        assert_eq!(s.insert(1, f64::NAN, 1, 0.0), None, "non-full buffer");
+        assert_eq!(s.len(), 0);
+        s.insert(1, 0.4, 1, 0.0);
+        s.insert(2, 0.6, 2, 0.0);
+        assert_eq!(s.insert(3, f64::NAN, 3, 0.0), None, "full buffer");
+        assert_eq!(s.len(), 2);
+        assert!(s.scores().iter().all(|x| !x.is_nan()));
+        // dedup path: NaN must not clobber an existing finite score
+        assert_eq!(s.insert(1, f64::NAN, 1, 9.0), None);
+        assert_eq!(s.get(0).score, 0.4);
+    }
+
+    #[test]
+    fn nan_slot_evicted_first() {
+        let mut s = sampler(2);
+        s.insert(1, 0.9, 1, 0.0);
+        s.insert(2, 0.8, 2, 0.0);
+        // a NaN can only enter via direct mutation; eviction must still
+        // treat it as lowest priority instead of panicking
+        s.get_mut(0).score = f64::NAN;
+        let idx = s.insert(3, 0.1, 3, 0.0);
+        assert_eq!(idx, Some(0), "NaN slot is the eviction candidate");
+        assert_eq!(s.get(0).level, 3);
+        assert!(s.scores().iter().all(|x| !x.is_nan()));
+    }
+
+    #[test]
+    fn update_batch_nan_keeps_previous_score() {
+        let mut s = sampler(4);
+        s.insert(1, 0.5, 1, 1.0);
+        let t0 = s.get(0).last_touch;
+        s.update_batch(&[0], &[f64::NAN], &[2.0]);
+        assert_eq!(s.get(0).score, 0.5, "NaN carries no score information");
+        assert_eq!(s.get(0).extra, 2.0, "extra still updates");
+        assert!(s.get(0).last_touch > t0, "staleness clock still resets");
+    }
+
+    #[test]
+    fn degenerate_draw_falls_back_to_uniform() {
+        // Proportional weights with zero staleness: only one slot has
+        // positive weight, so draws 2..4 exhaust the weight vector.
+        let mut s: S = LevelSampler::new(SamplerConfig {
+            capacity: 4,
+            prioritization: Prioritization::Proportional,
+            temperature: 1.0,
+            staleness_coef: 0.0,
+            ..Default::default()
+        });
+        s.insert(0, 1.0, 0, 0.0);
+        for i in 1..4u32 {
+            s.insert(i, 0.0, i as u64, 0.0);
+        }
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..50 {
+            let idx = s.sample_replay_indices(4, &mut rng);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "all slots drawn exactly once");
+        }
+        // the positive-weight slot always wins the first (weighted) draw
+        let idx = s.sample_replay_indices(3, &mut rng);
+        assert_eq!(idx[0], 0);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
     fn prop_fingerprint_map_consistent() {
         props(100, |g| {
             let cap = g.usize_in(1, 16);
@@ -385,6 +513,76 @@ mod tests {
                 let fp = s.get(i).fingerprint;
                 prop_assert!(
                     s.by_fingerprint.get(&fp) == Some(&i),
+                    "map inconsistent at slot {i}"
+                );
+            }
+            prop_assert!(
+                s.by_fingerprint.len() == s.len(),
+                "map size {} != slots {}", s.by_fingerprint.len(), s.len()
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_evict_reinsert_cycles_with_nan() {
+        // Hammer the buffer with interleaved insert / duplicate-update /
+        // rescore / sample ops, including NaN scores, and check the
+        // fingerprint map and the no-stored-NaN invariant survive
+        // arbitrary evict-reinsert cycles.
+        props(100, |g| {
+            let cap = g.usize_in(1, 8);
+            let n_ops = g.usize_in(1, 80);
+            let mut s: S = LevelSampler::new(SamplerConfig {
+                capacity: cap,
+                ..Default::default()
+            });
+            for _ in 0..n_ops {
+                match g.usize_in(0, 3) {
+                    0 | 1 => {
+                        let fp = g.usize_in(0, 12) as u64;
+                        let score = if g.bool(0.15) {
+                            f64::NAN
+                        } else {
+                            g.f64_in(0.0, 1.0)
+                        };
+                        s.insert(fp as u32, score, fp, 0.0);
+                    }
+                    2 => {
+                        if !s.is_empty() {
+                            let i = g.usize_in(0, s.len() - 1);
+                            let score = if g.bool(0.15) {
+                                f64::NAN
+                            } else {
+                                g.f64_in(0.0, 1.0)
+                            };
+                            s.update_batch(&[i], &[score], &[1.0]);
+                        }
+                    }
+                    _ => {
+                        if !s.is_empty() {
+                            let n = g.usize_in(1, s.len());
+                            let idx = s.sample_replay_indices(n, g.rng());
+                            let mut sorted = idx.clone();
+                            sorted.sort_unstable();
+                            sorted.dedup();
+                            prop_assert!(
+                                sorted.len() == n,
+                                "replay draw repeated a slot: {idx:?}"
+                            );
+                        }
+                    }
+                }
+            }
+            prop_assert!(s.len() <= cap, "len {} > cap {cap}", s.len());
+            for i in 0..s.len() {
+                let slot = s.get(i);
+                prop_assert!(
+                    !slot.score.is_nan(),
+                    "NaN score stored at slot {i}"
+                );
+                prop_assert!(
+                    s.by_fingerprint.get(&slot.fingerprint) == Some(&i),
                     "map inconsistent at slot {i}"
                 );
             }

@@ -10,6 +10,7 @@
 //!
 //! Examples:
 //!   jaxued train --algo accel --seed 1 --env-steps 1000000
+//!   jaxued train --algo plr --seeds 0..8 --env-steps 1000000
 //!   jaxued train --algo paired --env lava --variant small --env-steps 50000
 //!   jaxued eval --ckpt runs/dr_s0/student.ckpt
 //!   jaxued eval --env lava --ckpt runs/lava_dr_s0/student.ckpt
@@ -20,8 +21,9 @@ use std::path::Path;
 use anyhow::Result;
 
 use jaxued::algo::meta_policy::{Cycle, MetaPolicy};
-use jaxued::algo::train;
+use jaxued::algo::{train, train_pack};
 use jaxued::config::TrainConfig;
+use jaxued::util::stats;
 use jaxued::env::gen::MazeLevelGenerator;
 use jaxued::env::holdout;
 use jaxued::env::render::render_montage;
@@ -55,6 +57,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     if !unknown.is_empty() {
         anyhow::bail!("unknown flags: {unknown:?}");
     }
+    if !cfg.pack_seeds.is_empty() {
+        return cmd_train_pack(&cfg);
+    }
     println!(
         "jaxued train: env={} algo={} seed={} variant={} budget={} env steps ({} cycles), {} rollout threads",
         cfg.env.name(), cfg.algo.name(), cfg.seed, cfg.variant.name,
@@ -74,6 +79,41 @@ fn cmd_train(args: &Args) -> Result<()> {
     println!(
         "Table-1 extrapolation: {:.2} h for 245.76M steps",
         outcome.table1_hours,
+    );
+    Ok(())
+}
+
+/// `train --seeds a..b` / `--num-seeds N`: every seed trains concurrently
+/// in this process, interleaved cycle-by-cycle over one shared rollout
+/// worker pool.
+fn cmd_train_pack(cfg: &TrainConfig) -> Result<()> {
+    let seeds = cfg.seed_list();
+    println!(
+        "jaxued train pack: env={} algo={} seeds={:?} variant={} budget={} env steps \
+         ({} cycles) per seed, {} concurrent runs over one {}-thread pool",
+        cfg.env.name(), cfg.algo.name(), seeds, cfg.variant.name,
+        cfg.env_steps_budget, cfg.num_cycles(), seeds.len(),
+        cfg.resolve_rollout_threads(),
+    );
+    let rt = Runtime::with_geometry(Path::new(&cfg.artifacts_dir), &cfg.env.geometry())?;
+    let pack = train_pack(&rt, cfg, false)?;
+    println!("done: {} seeds x {} cycles, {} total env steps", seeds.len(),
+        cfg.num_cycles(), pack.total_env_steps());
+    for (seed, o) in pack.seeds.iter().zip(&pack.outcomes) {
+        println!(
+            "  seed {seed}: mean_solve={:.3} iqm_solve={:.3} ({:.0} steps/s)",
+            o.final_eval.mean_solve_rate, o.final_eval.iqm_solve_rate,
+            o.env_steps as f64 / o.wallclock_secs,
+        );
+    }
+    let finals = pack.final_mean_solves();
+    println!(
+        "cross-seed final eval (Figure-3 aggregate): mean={:.3} iqm={:.3} stderr={:.3}",
+        stats::mean(&finals), stats::iqm(&finals), stats::std_err(&finals),
+    );
+    println!(
+        "pack manifest + per-cycle aggregate.csv in {}",
+        pack.pack_dir.display(),
     );
     Ok(())
 }

@@ -1,9 +1,12 @@
 //! Metric logging and wallclock accounting.
 //!
 //! The paper logs to Weights & Biases; we substitute a CSV sink plus
-//! stdout (DESIGN.md substitutions). `Stopwatch` provides the Table-1
-//! wallclock accounting: cumulative seconds and env-steps/s, with
-//! extrapolation to the paper's full 245.76M-step budget.
+//! stdout (DESIGN.md substitutions). [`CrossSeedSink`] adds the seed-pack
+//! aggregation layer: one row per cycle with mean / IQM / stderr over the
+//! pack's seeds (the Figure-3 quantities, computed online). `Stopwatch`
+//! provides the Table-1 wallclock accounting: cumulative seconds and
+//! env-steps/s, with extrapolation to the paper's full 245.76M-step
+//! budget.
 
 use std::io::Write;
 use std::path::Path;
@@ -11,26 +14,56 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::util::stats;
+
+/// Rows between flushes for [`CsvSink::create`]. Small enough that a
+/// crashed run loses at most a few seconds of curve, large enough that N
+/// pack seeds logging every cycle don't turn the `BufWriter` into a
+/// per-row syscall.
+pub const DEFAULT_FLUSH_EVERY: usize = 64;
+
 /// Append-only CSV metric sink. Columns are fixed at creation.
+///
+/// Rows are buffered and flushed every `flush_every` rows, plus a
+/// best-effort flush on drop (the inner `BufWriter`'s own `Drop`) —
+/// flushing per row would defeat the `BufWriter` (one syscall per row ×
+/// N pack seeds × 30k cycles). The column-arity error stays eager: a
+/// malformed row fails at `write_row`, never at flush time.
 pub struct CsvSink {
     file: std::io::BufWriter<std::fs::File>,
     columns: Vec<String>,
+    flush_every: usize,
+    rows_since_flush: usize,
 }
 
 impl CsvSink {
+    /// Sink with the default flush cadence ([`DEFAULT_FLUSH_EVERY`]).
     pub fn create(path: &Path, columns: &[&str]) -> Result<CsvSink> {
+        Self::with_flush_interval(path, columns, DEFAULT_FLUSH_EVERY)
+    }
+
+    /// Sink flushing every `flush_every` rows (1 = per row, the old
+    /// behavior, useful when a live `tail -f` matters more than syscalls).
+    pub fn with_flush_interval(
+        path: &Path, columns: &[&str], flush_every: usize,
+    ) -> Result<CsvSink> {
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
         let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
         writeln!(file, "{}", columns.join(","))?;
+        // header lands immediately so monitoring tools see the schema
+        file.flush()?;
         Ok(CsvSink {
             file,
             columns: columns.iter().map(|s| s.to_string()).collect(),
+            flush_every: flush_every.max(1),
+            rows_since_flush: 0,
         })
     }
 
-    /// Write one row; values must match the column count.
+    /// Write one row; values must match the column count (checked
+    /// eagerly, before any buffering).
     pub fn write_row(&mut self, values: &[f64]) -> Result<()> {
         anyhow::ensure!(
             values.len() == self.columns.len(),
@@ -38,8 +71,87 @@ impl CsvSink {
         );
         let row: Vec<String> = values.iter().map(|v| format!("{v}")).collect();
         writeln!(self.file, "{}", row.join(","))?;
-        self.file.flush()?;
+        self.rows_since_flush += 1;
+        if self.rows_since_flush >= self.flush_every {
+            self.flush()?;
+        }
         Ok(())
+    }
+
+    /// Force buffered rows to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        self.rows_since_flush = 0;
+        Ok(())
+    }
+}
+
+/// Cross-seed aggregate sink for seed packs: one row per update cycle
+/// carrying mean / IQM / standard error over the pack's seeds for each
+/// tracked metric — the Figure-3 aggregation, computed online instead of
+/// by a post-hoc pass over N per-seed CSVs. Columns are
+/// `cycle,env_steps` followed by `{metric}_{mean,iqm,stderr}` triples.
+pub struct CrossSeedSink {
+    csv: CsvSink,
+    n_metrics: usize,
+    n_seeds: usize,
+}
+
+impl CrossSeedSink {
+    pub fn create(
+        path: &Path, metrics: &[&str], n_seeds: usize,
+    ) -> Result<CrossSeedSink> {
+        anyhow::ensure!(n_seeds > 0, "cross-seed sink needs at least one seed");
+        let mut columns: Vec<String> =
+            vec!["cycle".to_string(), "env_steps".to_string()];
+        for m in metrics {
+            columns.push(format!("{m}_mean"));
+            columns.push(format!("{m}_iqm"));
+            columns.push(format!("{m}_stderr"));
+        }
+        let cols: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
+        Ok(CrossSeedSink {
+            csv: CsvSink::create(path, &cols)?,
+            n_metrics: metrics.len(),
+            n_seeds,
+        })
+    }
+
+    /// Write one cycle's aggregates. `per_seed[m]` holds metric `m`'s
+    /// value for every seed, in pack order.
+    pub fn write_cycle(
+        &mut self, cycle: usize, env_steps: u64, per_seed: &[Vec<f64>],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            per_seed.len() == self.n_metrics,
+            "cycle row has {} metrics, sink has {}", per_seed.len(), self.n_metrics
+        );
+        let mut row = Vec::with_capacity(2 + 3 * self.n_metrics);
+        row.push(cycle as f64);
+        row.push(env_steps as f64);
+        for vals in per_seed {
+            anyhow::ensure!(
+                vals.len() == self.n_seeds,
+                "metric has {} seed values, pack has {} seeds",
+                vals.len(), self.n_seeds
+            );
+            if vals.iter().any(|v| v.is_nan()) {
+                // A NaN member (e.g. eval metrics before the first
+                // --eval-interval evaluation) makes the aggregate
+                // undefined; emit NaN rather than let the IQM's sort
+                // panic on an unordered value.
+                row.extend_from_slice(&[f64::NAN; 3]);
+            } else {
+                row.push(stats::mean(vals));
+                row.push(stats::iqm(vals));
+                row.push(stats::std_err(vals));
+            }
+        }
+        self.csv.write_row(&row)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.csv.flush()
     }
 }
 
@@ -123,11 +235,17 @@ impl Stopwatch {
 
 /// Pretty-print a metric row to stdout.
 pub fn log_stdout(cycle: usize, env_steps: u64, pairs: &[(&str, f64)]) {
+    log_stdout_tagged("", cycle, env_steps, pairs);
+}
+
+/// [`log_stdout`] with a run tag (e.g. `"s3 "`), so interleaved seed-pack
+/// logs stay attributable.
+pub fn log_stdout_tagged(tag: &str, cycle: usize, env_steps: u64, pairs: &[(&str, f64)]) {
     let body: Vec<String> = pairs
         .iter()
         .map(|(k, v)| format!("{k}={v:.4}"))
         .collect();
-    println!("[cycle {cycle:>6} | steps {env_steps:>12}] {}", body.join(" "));
+    println!("[{tag}cycle {cycle:>6} | steps {env_steps:>12}] {}", body.join(" "));
 }
 
 #[cfg(test)]
@@ -149,6 +267,79 @@ mod tests {
         let lines: Vec<&str> = text.trim().lines().collect();
         assert_eq!(lines[0], "a,b");
         assert_eq!(lines[1], "1,2.5");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn csv_flushes_on_interval_and_drop() {
+        let dir = std::env::temp_dir().join("jaxued_metrics_test_flush");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("interval.csv");
+        {
+            let mut s = CsvSink::with_flush_interval(&p, &["a"], 2).unwrap();
+            // header is flushed eagerly at creation
+            assert_eq!(std::fs::read_to_string(&p).unwrap(), "a\n");
+            s.write_row(&[1.0]).unwrap();
+            // one row < interval: still buffered
+            assert_eq!(std::fs::read_to_string(&p).unwrap(), "a\n");
+            s.write_row(&[2.0]).unwrap();
+            // interval reached: both rows on disk
+            assert_eq!(std::fs::read_to_string(&p).unwrap(), "a\n1\n2\n");
+            s.write_row(&[3.0]).unwrap();
+            // arity errors stay eager even while rows are buffered
+            assert!(s.write_row(&[1.0, 2.0]).is_err());
+        }
+        // drop flushed the tail row
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "a\n1\n2\n3\n");
+    }
+
+    #[test]
+    fn cross_seed_sink_aggregates() {
+        let dir = std::env::temp_dir().join("jaxued_metrics_test_pack");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("aggregate.csv");
+        {
+            let mut s = CrossSeedSink::create(&p, &["loss", "solve"], 4).unwrap();
+            s.write_cycle(
+                0,
+                1024,
+                &[vec![1.0, 2.0, 3.0, 4.0], vec![0.5, 0.5, 0.5, 0.5]],
+            )
+            .unwrap();
+            // a NaN member (pre-first-eval) yields NaN aggregates, not a
+            // panic inside the IQM sort
+            s.write_cycle(
+                1,
+                2048,
+                &[vec![1.0, f64::NAN, 3.0, 4.0], vec![0.5; 4]],
+            )
+            .unwrap();
+            // wrong metric count / wrong seed count fail eagerly
+            assert!(s.write_cycle(2, 0, &[vec![1.0; 4]]).is_err());
+            assert!(s
+                .write_cycle(2, 0, &[vec![1.0; 3], vec![1.0; 3]])
+                .is_err());
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.trim().lines().collect();
+        assert_eq!(
+            lines[0],
+            "cycle,env_steps,loss_mean,loss_iqm,loss_stderr,solve_mean,solve_iqm,solve_stderr"
+        );
+        let row: Vec<f64> = lines[1].split(',').map(|x| x.parse().unwrap()).collect();
+        assert_eq!(row[0], 0.0);
+        assert_eq!(row[1], 1024.0);
+        assert!((row[2] - 2.5).abs() < 1e-12, "loss mean");
+        assert!((row[3] - 2.5).abs() < 1e-12, "loss iqm");
+        // stderr of 1..4: sample std sqrt(5/3) / sqrt(4)
+        assert!((row[4] - (5.0f64 / 3.0).sqrt() / 2.0).abs() < 1e-12);
+        assert!((row[5] - 0.5).abs() < 1e-12);
+        assert_eq!(row[7], 0.0, "constant metric has zero stderr");
+        let nan_row: Vec<&str> = lines[2].split(',').collect();
+        assert_eq!(nan_row[2], "NaN");
+        assert_eq!(nan_row[3], "NaN");
+        assert_eq!(nan_row[4], "NaN");
+        assert_eq!(nan_row[5], "0.5", "finite metric still aggregates");
         assert_eq!(lines.len(), 3);
     }
 

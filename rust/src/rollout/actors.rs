@@ -125,6 +125,66 @@ impl<'a, T> ColumnAccess<'a, T> {
     }
 }
 
+/// FIFO ("ticket") lock serializing whole phases across the engines that
+/// share one pool. Tickets are granted strictly in arrival order, so when
+/// several drivers contend — a seed pack's per-seed engines, PAIRED's
+/// three agents, a trainer plus its evaluator — none can be starved by an
+/// unfair mutex wake-up race: every queued phase runs before any later
+/// arrival, which keeps per-seed progress even.
+struct FifoLock {
+    state: Mutex<TicketState>,
+    cv: Condvar,
+}
+
+struct TicketState {
+    /// Next ticket to hand out.
+    next: u64,
+    /// Ticket currently allowed to hold the lock.
+    serving: u64,
+}
+
+struct FifoGuard<'a> {
+    lock: &'a FifoLock,
+}
+
+impl FifoLock {
+    fn new() -> FifoLock {
+        FifoLock {
+            state: Mutex::new(TicketState { next: 0, serving: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Take a ticket and block until it is served.
+    fn lock(&self) -> FifoGuard<'_> {
+        let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let ticket = st.next;
+        st.next += 1;
+        while st.serving != ticket {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        drop(st);
+        FifoGuard { lock: self }
+    }
+
+    /// Tickets issued but not yet released (the holder plus the queue) —
+    /// test observability for the fairness invariant.
+    #[cfg(test)]
+    fn contenders(&self) -> u64 {
+        let st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.next - st.serving
+    }
+}
+
+impl Drop for FifoGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.lock.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.serving += 1;
+        drop(st);
+        self.lock.cv.notify_all();
+    }
+}
+
 /// A broadcast work item: one phase closure plus its column count and
 /// whether the calling thread takes a shard too.
 #[derive(Clone, Copy)]
@@ -163,9 +223,11 @@ pub struct WorkerPool {
     /// Serializes whole phases: the pool has one job slot, so concurrent
     /// `run`/`run_overlapped` callers (engines sharing one `Arc`) must
     /// not interleave dispatch/wait — the second caller blocks here until
-    /// the first phase fully drains. Uncontended in the drivers (one
-    /// phase at a time), but it makes the `&self` API sound.
-    phase_guard: Mutex<()>,
+    /// the first phase fully drains. FIFO, so contending engines (a seed
+    /// pack's drivers, PAIRED's three agents) are scheduled fairly in
+    /// arrival order. Uncontended in a single driver (one phase at a
+    /// time), but it makes the `&self` API sound.
+    phase_guard: FifoLock,
     threads: usize,
     handles: Vec<thread::JoinHandle<()>>,
 }
@@ -194,7 +256,7 @@ impl WorkerPool {
                 .expect("spawning rollout worker");
             handles.push(h);
         }
-        WorkerPool { shared, phase_guard: Mutex::new(()), threads, handles }
+        WorkerPool { shared, phase_guard: FifoLock::new(), threads, handles }
     }
 
     /// Pool sized to the host (`auto_threads()`).
@@ -216,7 +278,7 @@ impl WorkerPool {
             }
             return;
         }
-        let guard = self.phase_guard.lock().unwrap_or_else(|e| e.into_inner());
+        let guard = self.phase_guard.lock();
         let shards = self.dispatch(&f, n_items, true);
         let main = catch_unwind(AssertUnwindSafe(|| {
             run_shard(&f, 0, shards, n_items);
@@ -244,7 +306,7 @@ impl WorkerPool {
             }
             return main_task();
         }
-        let guard = self.phase_guard.lock().unwrap_or_else(|e| e.into_inner());
+        let guard = self.phase_guard.lock();
         self.dispatch(&f, n_items, false);
         let main = catch_unwind(AssertUnwindSafe(main_task));
         self.wait_done();
@@ -457,6 +519,35 @@ mod tests {
         let base: u64 = (0..50u64).map(|r| 64 * r).sum();
         assert_eq!(sums[0], base);
         assert_eq!(sums[1], base + 50 * 64);
+    }
+
+    #[test]
+    fn phase_lock_grants_in_arrival_order() {
+        // The pack orchestrator's fairness invariant: engines queued on
+        // one pool get their phases in arrival order, never reordered by
+        // an unfair wake-up.
+        let lock = Arc::new(FifoLock::new());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let held = lock.lock(); // everyone below queues behind this
+        let mut handles = Vec::new();
+        for id in 0..8u64 {
+            let l = lock.clone();
+            let o = order.clone();
+            handles.push(thread::spawn(move || {
+                let _g = l.lock();
+                o.lock().unwrap().push(id);
+            }));
+            // wait until thread `id` holds its ticket before spawning the
+            // next, so arrival order is exactly 0..8 (holder counts as 1)
+            while lock.contenders() < id + 2 {
+                thread::yield_now();
+            }
+        }
+        drop(held);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<u64>>());
     }
 
     #[test]

@@ -7,6 +7,7 @@
 
 pub mod executor;
 pub mod manifest;
+pub mod pack;
 pub mod params;
 
 use std::cell::RefCell;
@@ -18,6 +19,7 @@ use anyhow::{Context, Result};
 
 pub use executor::Executable;
 pub use manifest::Manifest;
+pub use pack::PackManifest;
 pub use params::ParamSet;
 
 /// The runtime: PJRT client + manifest + executable cache.

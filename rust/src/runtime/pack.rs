@@ -1,0 +1,207 @@
+//! Seed-pack run manifest: records which per-seed run directories a
+//! `--seeds` pack produced, plus enough config to interpret them, so
+//! downstream tooling (Figure-3 aggregation, `jaxued info`, resume
+//! logic) can locate every member run without globbing `out_dir`.
+//!
+//! Written as `pack_manifest.json` inside the pack directory by the
+//! orchestrator, next to the cross-seed `aggregate.csv`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// File name of the manifest inside a pack directory.
+pub const PACK_MANIFEST_NAME: &str = "pack_manifest.json";
+
+/// What a seed pack ran and where each member run lives.
+///
+/// Seeds are stored as JSON numbers, exact up to 2^53 — far beyond any
+/// seed a sweep would use.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackManifest {
+    pub env: String,
+    pub algo: String,
+    pub variant: String,
+    pub seeds: Vec<u64>,
+    /// Per-seed run-directory names (relative to the pack's parent
+    /// `out_dir`), in `seeds` order.
+    pub run_dirs: Vec<String>,
+    /// Cross-seed aggregate CSV file name inside the pack directory.
+    pub aggregate_csv: String,
+    pub env_steps_budget: u64,
+    /// Worker threads of the single shared rollout pool.
+    pub rollout_threads: usize,
+}
+
+impl PackManifest {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("env".to_string(), Json::from(self.env.as_str()));
+        m.insert("algo".to_string(), Json::from(self.algo.as_str()));
+        m.insert("variant".to_string(), Json::from(self.variant.as_str()));
+        m.insert(
+            "seeds".to_string(),
+            Json::Arr(self.seeds.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        m.insert(
+            "run_dirs".to_string(),
+            Json::Arr(
+                self.run_dirs
+                    .iter()
+                    .map(|d| Json::from(d.as_str()))
+                    .collect(),
+            ),
+        );
+        m.insert(
+            "aggregate_csv".to_string(),
+            Json::from(self.aggregate_csv.as_str()),
+        );
+        m.insert(
+            "env_steps_budget".to_string(),
+            Json::Num(self.env_steps_budget as f64),
+        );
+        m.insert(
+            "rollout_threads".to_string(),
+            Json::from(self.rollout_threads),
+        );
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<PackManifest> {
+        let str_field = |key: &str| -> Result<String> {
+            Ok(j.req(key)?
+                .as_str()
+                .with_context(|| format!("pack manifest {key:?} is not a string"))?
+                .to_string())
+        };
+        let seeds = j
+            .req("seeds")?
+            .as_arr()
+            .context("pack manifest seeds is not an array")?
+            .iter()
+            .map(|x| {
+                let v = x
+                    .as_f64()
+                    .context("pack manifest seed is not a number")?;
+                anyhow::ensure!(
+                    v >= 0.0 && v.fract() == 0.0,
+                    "pack manifest seed {v} is not a non-negative integer"
+                );
+                Ok(v as u64)
+            })
+            .collect::<Result<Vec<u64>>>()?;
+        let run_dirs = j
+            .req("run_dirs")?
+            .as_arr()
+            .context("pack manifest run_dirs is not an array")?
+            .iter()
+            .map(|x| {
+                x.as_str()
+                    .map(str::to_string)
+                    .context("pack manifest run_dir is not a string")
+            })
+            .collect::<Result<Vec<String>>>()?;
+        anyhow::ensure!(
+            seeds.len() == run_dirs.len(),
+            "pack manifest has {} seeds but {} run dirs",
+            seeds.len(),
+            run_dirs.len()
+        );
+        Ok(PackManifest {
+            env: str_field("env")?,
+            algo: str_field("algo")?,
+            variant: str_field("variant")?,
+            seeds,
+            run_dirs,
+            aggregate_csv: str_field("aggregate_csv")?,
+            env_steps_budget: j
+                .req("env_steps_budget")?
+                .as_f64()
+                .context("pack manifest env_steps_budget is not a number")?
+                as u64,
+            rollout_threads: j
+                .req("rollout_threads")?
+                .as_usize()
+                .context("pack manifest rollout_threads is not a number")?,
+        })
+    }
+
+    /// Write `pack_manifest.json` into `pack_dir` (created if missing);
+    /// returns the file path.
+    pub fn write(&self, pack_dir: &Path) -> Result<PathBuf> {
+        std::fs::create_dir_all(pack_dir)
+            .with_context(|| format!("creating pack dir {}", pack_dir.display()))?;
+        let path = pack_dir.join(PACK_MANIFEST_NAME);
+        std::fs::write(&path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Load the manifest from a pack directory.
+    pub fn load(pack_dir: &Path) -> Result<PackManifest> {
+        let path = pack_dir.join(PACK_MANIFEST_NAME);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PackManifest {
+        PackManifest {
+            env: "maze".into(),
+            algo: "accel".into(),
+            variant: "small".into(),
+            seeds: vec![0, 1, 3],
+            run_dirs: vec!["accel_s0".into(), "accel_s1".into(), "accel_s3".into()],
+            aggregate_csv: "aggregate.csv".into(),
+            env_steps_budget: 245_760_000,
+            rollout_threads: 8,
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_disk() {
+        let dir = std::env::temp_dir().join("jaxued_pack_manifest_test");
+        let m = sample();
+        let path = m.write(&dir).unwrap();
+        assert!(path.ends_with(PACK_MANIFEST_NAME));
+        let back = PackManifest::load(&dir).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let dir = std::env::temp_dir().join("jaxued_pack_manifest_bad");
+        let mut m = sample();
+        m.run_dirs.pop();
+        m.write(&dir).unwrap();
+        assert!(PackManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_non_integer_seeds() {
+        let dir = std::env::temp_dir().join("jaxued_pack_manifest_fracseed");
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = sample().to_json().to_string();
+        let bad = good.replace("[0,1,3]", "[1.5,-1,3]");
+        assert_ne!(good, bad, "replacement must hit the seeds array");
+        std::fs::write(dir.join(PACK_MANIFEST_NAME), bad).unwrap();
+        assert!(PackManifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn load_missing_is_err() {
+        let dir = std::env::temp_dir().join("jaxued_pack_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(PackManifest::load(&dir).is_err());
+    }
+}

@@ -24,6 +24,18 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Standard error of the mean (sample standard deviation / √n, the
+/// Figure-3 error-bar quantity for cross-seed aggregates); 0 for n < 2.
+pub fn std_err(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+    (var / n as f64).sqrt()
+}
+
 /// Linear-interpolation quantile (numpy default), q in [0, 1].
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
@@ -107,6 +119,16 @@ mod tests {
         let xs = [1.0, 2.0, 3.0, 4.0];
         assert!((mean(&xs) - 2.5).abs() < 1e-12);
         assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn std_err_basics() {
+        assert_eq!(std_err(&[]), 0.0);
+        assert_eq!(std_err(&[1.0]), 0.0);
+        assert_eq!(std_err(&[2.0, 2.0, 2.0]), 0.0);
+        // [1,2,3,4]: sample var 5/3, stderr sqrt(5/3)/2
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((std_err(&xs) - (5.0f64 / 3.0).sqrt() / 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -6,10 +6,10 @@
 use std::path::PathBuf;
 
 use jaxued::algo::plr::PlrAlgo;
-use jaxued::algo::{build_algo, train, UedAlgorithm};
+use jaxued::algo::{build_algo, train, train_pack, UedAlgorithm};
 use jaxued::config::{Algo, TrainConfig, VARIANT_SMALL};
 use jaxued::env::MazeFamily;
-use jaxued::runtime::Runtime;
+use jaxued::runtime::{PackManifest, Runtime};
 use jaxued::util::rng::Pcg64;
 
 fn artifacts_dir() -> PathBuf {
@@ -151,6 +151,73 @@ fn training_is_seed_deterministic() {
         // the full metric stream differs is overkill here
     }
     let _ = c;
+}
+
+#[test]
+fn seed_pack_matches_solo_run() {
+    // Unlike its siblings this test skips gracefully when the artifact
+    // set is absent, because the artifact-free CI fallback covers the
+    // same invariant through tests/pack_determinism.rs — here we pin the
+    // *full* train() path (PPO + checkpoints + CSVs) on top of it.
+    if !artifacts_dir().join("manifest.json").exists() {
+        eprintln!("seed_pack_matches_solo_run: artifacts missing, skipping");
+        return;
+    }
+    let rt = match Runtime::new(&artifacts_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("seed_pack_matches_solo_run: runtime unavailable ({e}), skipping");
+            return;
+        }
+    };
+    let mut cfg = cfg_for(Algo::Dr, 6, "pack");
+    cfg.pack_seeds = vec![0, 1, 3];
+    let pack = train_pack(&rt, &cfg, true).unwrap();
+    assert_eq!(pack.seeds, vec![0, 1, 3]);
+    assert_eq!(pack.outcomes.len(), 3);
+
+    // pack artifacts: manifest round-trips, aggregate has a row per cycle
+    let pm = PackManifest::load(&pack.pack_dir).unwrap();
+    assert_eq!(pm.seeds, vec![0, 1, 3]);
+    assert_eq!(pm.run_dirs, vec!["dr_s0", "dr_s1", "dr_s3"]);
+    let agg = std::fs::read_to_string(pack.pack_dir.join(&pm.aggregate_csv)).unwrap();
+    assert_eq!(agg.trim().lines().count(), 6 + 1, "aggregate rows");
+
+    // seed 3 inside the pack == seed 3 alone: final eval and every
+    // deterministic CSV column (steps_per_sec is wallclock, so stripped)
+    let mut solo_cfg = cfg_for(Algo::Dr, 6, "pack_solo");
+    solo_cfg.seed = 3;
+    let solo = train(&rt, &solo_cfg, true).unwrap();
+    assert_eq!(
+        solo.final_eval.mean_solve_rate,
+        pack.outcomes[2].final_eval.mean_solve_rate
+    );
+    assert_eq!(
+        solo.final_eval.iqm_solve_rate,
+        pack.outcomes[2].final_eval.iqm_solve_rate
+    );
+    let strip_sps = |p: &std::path::Path| -> String {
+        std::fs::read_to_string(p)
+            .unwrap()
+            .trim()
+            .lines()
+            .map(|l| l.rsplit_once(',').unwrap().0.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let pack_csv = std::path::Path::new(&cfg.out_dir).join("dr_s3").join("metrics.csv");
+    let solo_csv =
+        std::path::Path::new(&solo_cfg.out_dir).join("dr_s3").join("metrics.csv");
+    assert_eq!(strip_sps(&pack_csv), strip_sps(&solo_csv));
+    // both checkpoints exist and are byte-identical
+    let pack_ckpt =
+        std::fs::read(std::path::Path::new(&cfg.out_dir).join("dr_s3").join("student.ckpt"))
+            .unwrap();
+    let solo_ckpt = std::fs::read(
+        std::path::Path::new(&solo_cfg.out_dir).join("dr_s3").join("student.ckpt"),
+    )
+    .unwrap();
+    assert_eq!(pack_ckpt, solo_ckpt);
 }
 
 #[test]

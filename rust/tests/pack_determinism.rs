@@ -1,0 +1,256 @@
+//! Seed-pack determinism suite — artifact-free (synthetic stand-in
+//! policy), so it runs everywhere the env layer runs, including the CI
+//! fallback path without `make artifacts`.
+//!
+//! Pins the orchestrator's acceptance invariant: seed *s* trained inside
+//! a pack (`--seeds 0..N` semantics: N units interleaved cycle-by-cycle
+//! over ONE shared `WorkerPool`) is bit-identical to seed *s* trained
+//! alone — same per-cycle metrics, same final level-sampler contents — at
+//! any `--rollout-threads` count, on both registered env families. The
+//! units here run a PLR-shaped loop (generate/replay → rollout → score →
+//! buffer) through the real engine, sampler, and orchestrator core; only
+//! the PPO/PJRT layer is substituted.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use jaxued::algo::orchestrator::{run_pack, SeedUnit, PACK_AGGREGATE_METRICS};
+use jaxued::algo::CycleMetrics;
+use jaxued::env::wrappers::AutoReplayWrapper;
+use jaxued::env::{
+    EnvFamily, EnvParams, LavaFamily, LevelGenerator, LevelMeta, MazeFamily,
+    UnderspecifiedEnv,
+};
+use jaxued::level_sampler::{LevelSampler, SamplerConfig};
+use jaxued::metrics::CrossSeedSink;
+use jaxued::rollout::{RolloutEngine, SyntheticPolicy, Trajectory, WorkerPool};
+use jaxued::util::rng::Pcg64;
+
+const T: usize = 32;
+const B: usize = 8;
+const CYCLES: usize = 12;
+
+/// One per-cycle metrics row, bit-exact (f64s compared via to_bits).
+type Row = (&'static str, u32, u64, u64, u64);
+
+/// Final sampler contents, bit-exact: (fingerprint, score bits,
+/// last_touch, extra bits) per slot in slot order.
+type SamplerDump = Vec<(u64, u64, u64, u32)>;
+
+/// A PLR-shaped training unit over the synthetic policy: every RNG draw,
+/// rollout, score, and buffer op flows through the unit's own state, with
+/// only the worker pool shared — exactly the isolation contract
+/// `TrainSeedRun` relies on.
+struct SyntheticSeedRun<F: EnvFamily> {
+    seed: u64,
+    rng: Pcg64,
+    env: AutoReplayWrapper<F::Env>,
+    gen: F::Generator,
+    engine: RolloutEngine,
+    traj: Trajectory,
+    policy: SyntheticPolicy,
+    sampler: LevelSampler<F::Level, f32>,
+    cycle: usize,
+    rows: Vec<Row>,
+}
+
+impl<F: EnvFamily> SyntheticSeedRun<F> {
+    fn new(family: F, seed: u64, pool: Arc<WorkerPool>) -> SyntheticSeedRun<F> {
+        let params = EnvParams::default();
+        let env = AutoReplayWrapper::new(family.make_env(&params));
+        let gen = family.make_generator(&params);
+        let engine = RolloutEngine::with_pool(&env, B, pool);
+        let traj = Trajectory::new(T, B, &env.obs_components());
+        let policy = SyntheticPolicy { num_actions: env.num_actions() };
+        SyntheticSeedRun {
+            seed,
+            rng: Pcg64::new(seed, 0x7261_696e),
+            env,
+            gen,
+            engine,
+            traj,
+            policy,
+            sampler: LevelSampler::new(SamplerConfig {
+                capacity: 24,
+                ..Default::default()
+            }),
+            cycle: 0,
+            rows: Vec::new(),
+        }
+    }
+
+    fn sampler_dump(&self) -> SamplerDump {
+        (0..self.sampler.len())
+            .map(|i| {
+                let s = self.sampler.get(i);
+                (
+                    s.fingerprint,
+                    s.score.to_bits(),
+                    s.last_touch,
+                    s.extra.to_bits(),
+                )
+            })
+            .collect()
+    }
+}
+
+impl<F: EnvFamily> SeedUnit for SyntheticSeedRun<F> {
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn total_cycles(&self) -> usize {
+        CYCLES
+    }
+
+    fn env_steps(&self) -> u64 {
+        (self.cycle * T * B) as u64
+    }
+
+    fn step_cycle(&mut self) -> Result<CycleMetrics> {
+        let replay = self.sampler.sample_replay_decision(0.5, &mut self.rng);
+        let (kind, replay_idx, levels) = if replay {
+            let indices = self.sampler.sample_replay_indices(B, &mut self.rng);
+            let mut idx = indices.clone();
+            while idx.len() < B {
+                idx.push(idx[idx.len() % indices.len()]);
+            }
+            let levels: Vec<F::Level> = idx
+                .iter()
+                .map(|&i| self.sampler.get(i).level.clone())
+                .collect();
+            ("replay", Some(idx), levels)
+        } else {
+            ("new", None, self.gen.sample_batch(B, &mut self.rng))
+        };
+
+        let mut states: Vec<_> = levels
+            .iter()
+            .map(|l| self.env.reset_to_level(l, &mut self.rng))
+            .collect();
+        self.engine
+            .collect(&self.env, &mut states, &self.policy, &mut self.traj, &mut self.rng)?;
+        let stats = self.traj.episode_stats();
+
+        // synthetic regret stand-in: terminal-reward mean + episode bonus
+        let scores: Vec<f64> = stats
+            .iter()
+            .map(|s| s.mean_end_reward + 0.01 * s.episodes as f64)
+            .collect();
+        let extras: Vec<f32> = stats.iter().map(|s| s.max_end_reward).collect();
+        match replay_idx {
+            Some(idx) => self.sampler.update_batch(&idx, &scores, &extras),
+            None => {
+                let fps: Vec<u64> = levels.iter().map(|l| l.fingerprint()).collect();
+                self.sampler.insert_batch(&levels, &scores, &fps, &extras);
+            }
+        }
+
+        let m = CycleMetrics::from_rollout(
+            kind,
+            None,
+            &stats,
+            self.sampler.proportion_filled(),
+        );
+        self.rows.push((
+            m.kind,
+            m.episodes,
+            m.train_solve_rate.to_bits(),
+            m.mean_reward.to_bits(),
+            m.buffer_fill.to_bits(),
+        ));
+        self.cycle += 1;
+        Ok(m)
+    }
+}
+
+/// Train one seed alone (its own pool) and return its bit-exact history.
+fn run_solo<F: EnvFamily>(family: F, seed: u64, threads: usize) -> (Vec<Row>, SamplerDump) {
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut unit = SyntheticSeedRun::new(family, seed, pool);
+    for _ in 0..CYCLES {
+        unit.step_cycle().unwrap();
+    }
+    (unit.rows.clone(), unit.sampler_dump())
+}
+
+/// Train a pack of seeds over one shared pool through the orchestrator
+/// core (including the cross-seed aggregate sink); returns per-seed
+/// bit-exact histories plus the aggregate CSV text.
+fn run_packed<F: EnvFamily>(
+    family: F, seeds: &[u64], threads: usize, label: &str,
+) -> (Vec<(Vec<Row>, SamplerDump)>, String) {
+    let pool = Arc::new(WorkerPool::new(threads));
+    let mut units: Vec<SyntheticSeedRun<F>> = seeds
+        .iter()
+        .map(|&s| SyntheticSeedRun::new(family, s, pool.clone()))
+        .collect();
+    let dir = std::env::temp_dir().join(format!("jaxued_pack_det_{label}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("aggregate.csv");
+    let mut aggregate =
+        CrossSeedSink::create(&csv_path, PACK_AGGREGATE_METRICS, seeds.len()).unwrap();
+    run_pack(&mut units, &mut aggregate).unwrap();
+    aggregate.flush().unwrap();
+    let histories = units
+        .iter()
+        .map(|u| (u.rows.clone(), u.sampler_dump()))
+        .collect();
+    (histories, std::fs::read_to_string(&csv_path).unwrap())
+}
+
+fn check_pack_vs_solo<F: EnvFamily>(family: F) {
+    let id = family.id();
+    let seeds = [0u64, 1, 2, 3];
+    // pack at two thread counts, solo at two thread counts
+    let (pack1, csv1) = run_packed(family, &seeds, 1, &format!("{id}_t1"));
+    let (pack4, csv4) = run_packed(family, &seeds, 4, &format!("{id}_t4"));
+    for (si, &seed) in seeds.iter().enumerate() {
+        let solo1 = run_solo(family, seed, 1);
+        let solo4 = run_solo(family, seed, 4);
+        assert_eq!(
+            pack1[si].0, solo1.0,
+            "[{id}] seed {seed}: pack metrics != solo metrics"
+        );
+        assert_eq!(
+            pack1[si].1, solo1.1,
+            "[{id}] seed {seed}: pack sampler != solo sampler"
+        );
+        assert_eq!(
+            pack4[si], pack1[si],
+            "[{id}] seed {seed}: pack not thread-invariant"
+        );
+        assert_eq!(
+            solo4, solo1,
+            "[{id}] seed {seed}: solo not thread-invariant"
+        );
+    }
+    // distinct seeds must actually differ (the pack isn't training one
+    // seed four times)
+    assert_ne!(pack1[0].1, pack1[3].1, "[{id}] seeds 0 and 3 identical");
+    // the aggregate CSV is deterministic too, and shaped as documented
+    assert_eq!(csv1, csv4, "[{id}] aggregate CSV not thread-invariant");
+    let lines: Vec<&str> = csv1.trim().lines().collect();
+    assert_eq!(lines.len(), CYCLES + 1, "[{id}] one aggregate row per cycle");
+    let header_cols = lines[0].split(',').count();
+    assert_eq!(header_cols, 2 + 3 * PACK_AGGREGATE_METRICS.len());
+    assert_eq!(lines[1].split(',').count(), header_cols);
+}
+
+#[test]
+fn pack_is_bit_identical_to_solo_maze() {
+    check_pack_vs_solo(MazeFamily);
+}
+
+#[test]
+fn pack_is_bit_identical_to_solo_lava() {
+    check_pack_vs_solo(LavaFamily);
+}
+
+#[test]
+fn pack_of_one_matches_solo() {
+    let (pack, _) = run_packed(MazeFamily, &[5], 2, "maze_single");
+    let solo = run_solo(MazeFamily, 5, 2);
+    assert_eq!(pack[0], solo);
+}
