@@ -84,6 +84,24 @@ fn bench_eval(b: usize, threads: usize, mode: EvalMode, reps: usize) -> (f64, u6
 }
 
 fn main() {
+    // Benchmarks must never measure the debug-only ColumnAccess race
+    // detector; benches build with the release profile, where the
+    // per-element claim map is compiled out entirely.
+    assert!(
+        !jaxued::rollout::race_detector_enabled(),
+        "bench_rollout built with the race detector enabled (debug profile?) — \
+         numbers would include per-access atomics; build with --release"
+    );
+    #[cfg(not(debug_assertions))]
+    {
+        use jaxued::rollout::actors::ColumnAccess;
+        // The accessor must be back to exactly (ptr, len) — no claim map.
+        assert_eq!(
+            std::mem::size_of::<ColumnAccess<'static, f32>>(),
+            std::mem::size_of::<*mut f32>() + std::mem::size_of::<usize>(),
+            "release ColumnAccess carries detector state"
+        );
+    }
     let args = Args::parse();
     let iters = args.get_usize("iters", 8);
     let reps = args.get_usize("reps", 2);

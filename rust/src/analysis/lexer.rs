@@ -1,0 +1,349 @@
+//! A minimal Rust lexer for `ued-lint`.
+//!
+//! Splits source text into identifier / punctuation / literal / lifetime
+//! tokens plus a separate comment stream, each tagged with 1-based line
+//! numbers. It understands exactly as much Rust surface syntax as the
+//! lint rules need to avoid false positives: line and (nested) block
+//! comments, string / raw-string / byte-string literals, char literals
+//! vs. lifetimes, and numeric literals. It performs no parsing — the
+//! rules in [`super`] pattern-match on the token stream directly.
+
+/// Kind of a lexed token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `use`, `HashMap`, …).
+    Ident,
+    /// A single punctuation character (`:`, `*`, `;`, …).
+    Punct,
+    /// String / char / numeric literal (contents are never rule-matched).
+    Lit,
+    /// A lifetime such as `'a` (distinguished from char literals).
+    Lifetime,
+}
+
+/// One token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment (line or block) with its 1-based line span.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub text: String,
+    pub line: usize,
+    pub line_end: usize,
+}
+
+/// The output of [`lex`]: code tokens and comments, separately.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + comments. Never fails: unrecognized bytes
+/// become single-character punctuation tokens, which no rule matches.
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut out = Lexed::default();
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also covers `///` and `//!` doc comments).
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push(Comment {
+                text: b[start..i].iter().collect(),
+                line,
+                line_end: line,
+            });
+            continue;
+        }
+        // Block comment, with nesting (Rust allows it).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push(Comment {
+                text: b[start..i].iter().collect(),
+                line: start_line,
+                line_end: line,
+            });
+            continue;
+        }
+        // Plain string literal.
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            while i < n {
+                if b[i] == '\\' {
+                    i += 2;
+                } else if b[i] == '"' {
+                    i += 1;
+                    break;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            out.toks.push(Tok { kind: TokKind::Lit, text: String::from("\"…\""), line: start_line });
+            continue;
+        }
+        // Raw / byte string forms: r"…", r#"…"#, b"…", br#"…"#.
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if b[j] == 'b' {
+                j += 1;
+            }
+            let mut hashes = 0usize;
+            let mut k = j;
+            let mut raw = false;
+            if k < n && b[k] == 'r' {
+                raw = true;
+                k += 1;
+                while k < n && b[k] == '#' {
+                    hashes += 1;
+                    k += 1;
+                }
+            }
+            if k < n && b[k] == '"' && (raw || j > i) {
+                let start_line = line;
+                i = k + 1;
+                if raw {
+                    // Scan for `"` followed by `hashes` hash marks.
+                    'scan: while i < n {
+                        if b[i] == '\n' {
+                            line += 1;
+                            i += 1;
+                            continue;
+                        }
+                        if b[i] == '"' {
+                            let mut h = 0usize;
+                            while h < hashes && i + 1 + h < n && b[i + 1 + h] == '#' {
+                                h += 1;
+                            }
+                            if h == hashes {
+                                i += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        i += 1;
+                    }
+                } else {
+                    // Byte string: ordinary escape rules.
+                    while i < n {
+                        if b[i] == '\\' {
+                            i += 2;
+                        } else if b[i] == '"' {
+                            i += 1;
+                            break;
+                        } else {
+                            if b[i] == '\n' {
+                                line += 1;
+                            }
+                            i += 1;
+                        }
+                    }
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lit,
+                    text: String::from("r\"…\""),
+                    line: start_line,
+                });
+                continue;
+            }
+            // Fall through: it was an ordinary identifier starting with r/b.
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: skip the escape head, then scan to
+                // the closing quote (covers '\n', '\'', '\u{…}').
+                i += 2;
+                if i < n {
+                    i += 1; // the character after the backslash
+                }
+                while i < n && b[i] != '\'' {
+                    i += 1;
+                }
+                i += 1;
+                out.toks.push(Tok { kind: TokKind::Lit, text: String::from("'…'"), line });
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                // 'x' — a plain one-character literal.
+                i += 3;
+                out.toks.push(Tok { kind: TokKind::Lit, text: String::from("'…'"), line });
+                continue;
+            }
+            if i + 1 < n && is_ident_start(b[i + 1]) {
+                // A lifetime: 'a, '_, 'static.
+                let start = i;
+                i += 2;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // Stray quote — emit as punctuation, matched by no rule.
+            out.toks.push(Tok { kind: TokKind::Punct, text: String::from("'"), line });
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Numeric literal (loose: 0xC01, 1_000, 1e9 all lex as one token).
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Lit,
+                text: b[start..i].iter().collect(),
+                line,
+            });
+            continue;
+        }
+        // Everything else: single-character punctuation.
+        out.toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(lx: &Lexed) -> Vec<&str> {
+        lx.toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect()
+    }
+
+    #[test]
+    fn comments_are_separated_from_code() {
+        let src = "// top SAFETY: fine\nlet x = 1; /* block\nspan */ let y = 2;\n";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 2);
+        assert!(lx.comments[0].text.contains("SAFETY"));
+        assert_eq!(lx.comments[1].line, 2);
+        assert_eq!(lx.comments[1].line_end, 3);
+        assert!(idents(&lx).contains(&"x"));
+        assert!(idents(&lx).contains(&"y"));
+        // words inside comments never become identifier tokens
+        assert!(!idents(&lx).contains(&"top"));
+        assert!(!idents(&lx).contains(&"span"));
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let src = "let s = \"not // a comment HashMap\";\nlet r = r#\"raw \"q\" HashSet\"#;\nlet b = b\"bytes\";";
+        let lx = lex(src);
+        assert!(lx.comments.is_empty());
+        assert!(!idents(&lx).contains(&"HashMap"));
+        assert!(!idents(&lx).contains(&"HashSet"));
+        assert!(!idents(&lx).contains(&"bytes"));
+        assert!(idents(&lx).contains(&"s"));
+        assert!(idents(&lx).contains(&"r"));
+        assert!(idents(&lx).contains(&"b"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src = "fn f<'a>(x: &'a u32) -> &'static u32 { let c = 'y'; let nl = '\\n'; x }";
+        let lx = lex(src);
+        let lifetimes: Vec<&str> = lx
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, ["'a", "'a", "'static"]);
+        // 'y' and '\n' became literals, not identifiers named y / n
+        assert!(!idents(&lx).contains(&"y"));
+    }
+
+    #[test]
+    fn nested_block_comments_terminate() {
+        let src = "/* outer /* inner */ still comment */ fn f() {}";
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 1);
+        assert!(idents(&lx).contains(&"fn"));
+        assert!(!idents(&lx).contains(&"inner"));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "let a = 1;\nlet s = \"two\nlines\";\nunsafe {}\n";
+        let lx = lex(src);
+        let uns = lx
+            .toks
+            .iter()
+            .find(|t| t.text == "unsafe")
+            .expect("unsafe token");
+        assert_eq!(uns.line, 4);
+    }
+}

@@ -1,0 +1,649 @@
+//! `ued-lint`: the repo's in-tree static-analysis pass.
+//!
+//! The library's headline guarantee — rollouts, evals, and seed packs
+//! that are **bit-identical** across thread counts — is structural: it
+//! holds because the hot path only uses per-column RNG streams, ordered
+//! containers, and column-disjoint writes. This module makes those
+//! invariants mechanically checkable at CI time instead of relying on a
+//! long determinism sweep to diverge. It is dependency-free (a small
+//! hand-rolled lexer in [`lexer`]) and is driven by the `ued_lint`
+//! binary (`cargo run --bin ued_lint`) plus the `lint_self` test, which
+//! lints the crate's own source.
+//!
+//! # Rules
+//!
+//! Determinism rules (enforced in the deterministic modules `rollout`,
+//! `algo`, `level_sampler`, `ppo`, `env`):
+//!
+//! * `hash-collections` — importing `HashMap`/`HashSet` (or naming them
+//!   via `collections::`). Hasher iteration order is seeded per process,
+//!   so any iteration leaks schedule-dependent order into results; the
+//!   lexical pass cannot prove a map is never iterated, so the rule
+//!   conservatively bans the types and the escape hatch documents
+//!   lookup-only uses.
+//! * `thread-rng` — ambient RNGs (`thread_rng`, `ThreadRng`, `OsRng`,
+//!   `from_entropy`, `rand::random`): all randomness must flow from the
+//!   seeded per-column `Pcg64` streams.
+//! * `addr-hash` — casting a pointer/reference address to an integer
+//!   (`as *const _ as usize`, `.as_ptr() … as usize`): addresses vary
+//!   per run, so address-derived values are nondeterministic.
+//!
+//! Crate-wide rules:
+//!
+//! * `wallclock` — `Instant::now` / `SystemTime::now`. Real time must
+//!   never feed results; the one sanctioned reader is the metrics
+//!   stopwatch (wallclock CSV column), which carries an allow.
+//! * `safety-comment` — every `unsafe` token (block, fn, or
+//!   `unsafe impl`) must carry a `SAFETY`-bearing comment: on the same
+//!   line, in the contiguous comment/attribute block directly above
+//!   (doc sections titled `# Safety` count), or on the first line
+//!   inside the block.
+//! * `unsafe-op-lint` — `lib.rs` must deny `unsafe_op_in_unsafe_fn`
+//!   crate-wide, so every unsafe operation sits in an explicit (and
+//!   therefore SAFETY-commented) `unsafe` block even inside unsafe fns.
+//!
+//! # Escape hatch
+//!
+//! A violation is suppressed by a directive comment on the same line or
+//! the line directly above, of the exact form (the reason is
+//! mandatory): `ued-lint: allow(<rule>) — <reason>` written after the
+//! usual comment marker. A malformed directive — unknown rule, missing
+//! reason — is itself reported (`bad-allow`) and suppresses nothing.
+
+pub mod lexer;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use lexer::{Comment, Lexed, Tok, TokKind};
+
+/// Top-level source modules whose results must be bit-reproducible.
+pub const DETERMINISTIC_MODULES: [&str; 5] = ["rollout", "algo", "level_sampler", "ppo", "env"];
+
+/// Every rule `ued-lint` enforces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    HashCollections,
+    ThreadRng,
+    Wallclock,
+    AddrHash,
+    SafetyComment,
+    UnsafeOpLint,
+    /// A malformed `ued-lint: allow(...)` directive (not allowable).
+    BadAllow,
+}
+
+impl Rule {
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::HashCollections => "hash-collections",
+            Rule::ThreadRng => "thread-rng",
+            Rule::Wallclock => "wallclock",
+            Rule::AddrHash => "addr-hash",
+            Rule::SafetyComment => "safety-comment",
+            Rule::UnsafeOpLint => "unsafe-op-lint",
+            Rule::BadAllow => "bad-allow",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Rule> {
+        match name {
+            "hash-collections" => Some(Rule::HashCollections),
+            "thread-rng" => Some(Rule::ThreadRng),
+            "wallclock" => Some(Rule::Wallclock),
+            "addr-hash" => Some(Rule::AddrHash),
+            "safety-comment" => Some(Rule::SafetyComment),
+            "unsafe-op-lint" => Some(Rule::UnsafeOpLint),
+            _ => None,
+        }
+    }
+
+    /// The rules an allow directive may name (everything but `bad-allow`).
+    pub fn allowable() -> &'static [Rule] {
+        &[
+            Rule::HashCollections,
+            Rule::ThreadRng,
+            Rule::Wallclock,
+            Rule::AddrHash,
+            Rule::SafetyComment,
+            Rule::UnsafeOpLint,
+        ]
+    }
+}
+
+/// One reported lint violation.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule.name(), self.message)
+    }
+}
+
+/// Per-file lint configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LintConfig {
+    /// Apply the determinism rules (`hash-collections`, `thread-rng`,
+    /// `addr-hash`) in addition to the crate-wide ones.
+    pub deterministic: bool,
+    /// Require a `deny(unsafe_op_in_unsafe_fn)` attribute in this file
+    /// (set for the crate root).
+    pub expect_unsafe_op_deny: bool,
+}
+
+/// Result of linting a whole source tree.
+#[derive(Debug)]
+pub struct CrateReport {
+    /// Number of `.rs` files visited.
+    pub files: usize,
+    /// All violations, ordered by (file, line, rule).
+    pub violations: Vec<Violation>,
+}
+
+/// A parsed, well-formed allow directive.
+struct Allow {
+    rule: Rule,
+    line: usize,
+    line_end: usize,
+}
+
+enum Directive {
+    /// The comment is not a `ued-lint:` directive at all.
+    None,
+    Valid(Rule),
+    Malformed(String),
+}
+
+/// Parse a comment for an allow directive. Only comments whose content
+/// *begins* with `ued-lint:` count, so prose that merely mentions the
+/// syntax (like this module's docs) is never misread as a directive.
+fn parse_directive(comment: &str) -> Directive {
+    let body = comment.trim_start_matches(['/', '*', '!']).trim_start();
+    let rest = match body.strip_prefix("ued-lint:") {
+        Some(r) => r.trim_start(),
+        None => return Directive::None,
+    };
+    let inner = match rest.strip_prefix("allow(") {
+        Some(r) => r,
+        None => {
+            return Directive::Malformed(String::from(
+                "unknown ued-lint directive — only `allow(<rule>) — <reason>` exists",
+            ))
+        }
+    };
+    let close = match inner.find(')') {
+        Some(p) => p,
+        None => return Directive::Malformed(String::from("unclosed `allow(` directive")),
+    };
+    let rule_name = inner[..close].trim();
+    let rule = match Rule::from_name(rule_name) {
+        Some(r) => r,
+        None => {
+            let known: Vec<&str> = Rule::allowable().iter().map(|r| r.name()).collect();
+            return Directive::Malformed(format!(
+                "allow names unknown rule `{rule_name}` (known: {})",
+                known.join(", ")
+            ));
+        }
+    };
+    // The reason is mandatory: a dash separator followed by prose.
+    let after = inner[close + 1..].trim_start();
+    let reason = after
+        .strip_prefix('\u{2014}') // em dash
+        .or_else(|| after.strip_prefix("--"))
+        .or_else(|| after.strip_prefix('-'));
+    let reason_ok = match reason {
+        Some(r) => !r.trim_start_matches(['-', '\u{2014}']).trim().trim_end_matches("*/").trim().is_empty(),
+        None => false,
+    };
+    if !reason_ok {
+        return Directive::Malformed(format!(
+            "allow({}) has no reason — write `ued-lint: allow({}) — <why this is sound>`",
+            rule.name(),
+            rule.name()
+        ));
+    }
+    Directive::Valid(rule)
+}
+
+fn ident_is(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn punct_is(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// `toks[i]` begins the path segment pair `<toks[i]> :: <name>` for one
+/// of `names`; returns the line of the trailing segment.
+fn path_to(toks: &[Tok], i: usize, names: &[&str]) -> Option<(usize, String)> {
+    if i + 3 < toks.len()
+        && punct_is(&toks[i + 1], ":")
+        && punct_is(&toks[i + 2], ":")
+        && toks[i + 3].kind == TokKind::Ident
+        && names.contains(&toks[i + 3].text.as_str())
+    {
+        Some((toks[i + 3].line, toks[i + 3].text.clone()))
+    } else {
+        None
+    }
+}
+
+fn push(out: &mut Vec<Violation>, file: &str, line: usize, rule: Rule, message: String) {
+    out.push(Violation { file: file.to_string(), line, rule, message });
+}
+
+/// Token-stream rules: hash collections, ambient RNG, wallclock reads,
+/// address-as-hash.
+fn scan_tokens(file: &str, toks: &[Tok], cfg: &LintConfig, out: &mut Vec<Violation>) {
+    let n = toks.len();
+    // `addr-hash` state: a raw-pointer origin (`as *const/mut` cast or an
+    // `as_ptr`/`as_mut_ptr` call) is live until the statement-ish
+    // boundary tokens `;`, `,`, `{`, `}` reset it.
+    let mut ptr_origin_live = false;
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            if matches!(t.text.as_str(), ";" | "," | "{" | "}") {
+                ptr_origin_live = false;
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let s = t.text.as_str();
+
+        // wallclock — crate-wide.
+        if (s == "Instant" || s == "SystemTime") && path_to(toks, i, &["now"]).is_some() {
+            push(
+                out,
+                file,
+                t.line,
+                Rule::Wallclock,
+                format!(
+                    "`{s}::now()` — wallclock reads are nondeterministic; route timing \
+                     through `metrics::Stopwatch` (the one allowed reader)"
+                ),
+            );
+        }
+
+        if cfg.deterministic {
+            // hash-collections: imports …
+            if s == "use" {
+                let mut j = i + 1;
+                while j < n && !punct_is(&toks[j], ";") {
+                    if toks[j].kind == TokKind::Ident
+                        && (toks[j].text == "HashMap" || toks[j].text == "HashSet")
+                    {
+                        push(
+                            out,
+                            file,
+                            toks[j].line,
+                            Rule::HashCollections,
+                            format!(
+                                "`{}` imported in a deterministic module — hasher iteration \
+                                 order is per-process; use BTreeMap/BTreeSet, or allow with \
+                                 a lookup-only justification",
+                                toks[j].text
+                            ),
+                        );
+                    }
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // … and fully-qualified paths outside a `use`.
+            if s == "collections" {
+                if let Some((line, name)) = path_to(toks, i, &["HashMap", "HashSet"]) {
+                    push(
+                        out,
+                        file,
+                        line,
+                        Rule::HashCollections,
+                        format!("`collections::{name}` named in a deterministic module"),
+                    );
+                }
+            }
+
+            // thread-rng.
+            if matches!(s, "thread_rng" | "ThreadRng" | "OsRng" | "from_entropy") {
+                push(
+                    out,
+                    file,
+                    t.line,
+                    Rule::ThreadRng,
+                    format!(
+                        "`{s}` — ambient RNG in a deterministic module; draw from the \
+                         seeded per-column Pcg64 streams instead"
+                    ),
+                );
+            }
+            if s == "rand" && path_to(toks, i, &["random"]).is_some() {
+                push(
+                    out,
+                    file,
+                    t.line,
+                    Rule::ThreadRng,
+                    String::from("`rand::random` — ambient RNG in a deterministic module"),
+                );
+            }
+
+            // addr-hash.
+            if matches!(s, "as_ptr" | "as_mut_ptr") {
+                ptr_origin_live = true;
+            }
+            if s == "as" && i + 2 < n && punct_is(&toks[i + 1], "*") {
+                let q = &toks[i + 2];
+                if ident_is(q, "const") || ident_is(q, "mut") {
+                    ptr_origin_live = true;
+                }
+            }
+            if s == "as"
+                && ptr_origin_live
+                && i + 1 < n
+                && toks[i + 1].kind == TokKind::Ident
+                && matches!(toks[i + 1].text.as_str(), "usize" | "isize" | "u64" | "i64")
+            {
+                push(
+                    out,
+                    file,
+                    t.line,
+                    Rule::AddrHash,
+                    String::from(
+                        "pointer address cast to an integer — addresses vary per run, so \
+                         address-derived values (hashes, keys, seeds) are nondeterministic",
+                    ),
+                );
+                ptr_origin_live = false;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// A comment overlapping `line` whose text carries a safety marker.
+fn safety_comment_on(comments: &[Comment], line: usize) -> bool {
+    comments.iter().any(|c| {
+        c.line <= line
+            && line <= c.line_end
+            && (c.text.contains("SAFETY") || c.text.contains("# Safety"))
+    })
+}
+
+/// The unsafety audit: every `unsafe` token needs SAFETY coverage.
+fn scan_unsafe(file: &str, lexed: &Lexed, lines: &[&str], out: &mut Vec<Violation>) {
+    let mut checked_lines: Vec<usize> = Vec::new();
+    for t in &lexed.toks {
+        if !ident_is(t, "unsafe") {
+            continue;
+        }
+        if checked_lines.contains(&t.line) {
+            continue;
+        }
+        checked_lines.push(t.line);
+        if unsafe_is_covered(&lexed.comments, lines, t.line) {
+            continue;
+        }
+        push(
+            out,
+            file,
+            t.line,
+            Rule::SafetyComment,
+            String::from(
+                "`unsafe` without a SAFETY comment — document the proof obligation on \
+                 this line, in the comment block directly above, or on the first line \
+                 inside the block (`// SAFETY: …`, or a `# Safety` doc section)",
+            ),
+        );
+    }
+}
+
+fn unsafe_is_covered(comments: &[Comment], lines: &[&str], line: usize) -> bool {
+    // Same line.
+    if safety_comment_on(comments, line) {
+        return true;
+    }
+    // First line inside the block (`|i| unsafe {` followed by the comment).
+    if line < lines.len() {
+        let below = lines[line].trim_start(); // 0-indexed: this is line+1
+        if below.starts_with("//") && safety_comment_on(comments, line + 1) {
+            return true;
+        }
+    }
+    // The contiguous comment/attribute block directly above (doc comments
+    // and attributes like `#[allow(...)]` extend the block upward).
+    let mut k = line;
+    while k > 1 {
+        k -= 1;
+        let above = lines[k - 1].trim_start();
+        if above.starts_with("//") {
+            if safety_comment_on(comments, k) {
+                return true;
+            }
+        } else if above.starts_with('#') {
+            // attribute — keep scanning upward
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+/// Crate-root check: `unsafe_op_in_unsafe_fn` must be denied.
+fn check_unsafe_op_deny(file: &str, toks: &[Tok], out: &mut Vec<Violation>) {
+    for (i, t) in toks.iter().enumerate() {
+        if ident_is(t, "unsafe_op_in_unsafe_fn") {
+            let lo = i.saturating_sub(4);
+            if toks[lo..i].iter().any(|p| ident_is(p, "deny")) {
+                return;
+            }
+        }
+    }
+    push(
+        out,
+        file,
+        1,
+        Rule::UnsafeOpLint,
+        String::from(
+            "crate root must carry `#![deny(unsafe_op_in_unsafe_fn)]` so unsafe \
+             operations need explicit (SAFETY-commented) blocks even in unsafe fns",
+        ),
+    );
+}
+
+/// Lint one source file. `file` is a display label only.
+pub fn lint_source(file: &str, src: &str, cfg: &LintConfig) -> Vec<Violation> {
+    let lexed = lexer::lex(src);
+    let lines: Vec<&str> = src.lines().collect();
+
+    let mut raw: Vec<Violation> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    for c in &lexed.comments {
+        match parse_directive(&c.text) {
+            Directive::None => {}
+            Directive::Valid(rule) => {
+                allows.push(Allow { rule, line: c.line, line_end: c.line_end })
+            }
+            Directive::Malformed(msg) => push(&mut raw, file, c.line, Rule::BadAllow, msg),
+        }
+    }
+
+    scan_tokens(file, &lexed.toks, cfg, &mut raw);
+    scan_unsafe(file, &lexed, &lines, &mut raw);
+    if cfg.expect_unsafe_op_deny {
+        check_unsafe_op_deny(file, &lexed.toks, &mut raw);
+    }
+
+    raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    raw.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    // An allow suppresses matching violations on its own line(s) and the
+    // line directly below. `bad-allow` itself is never suppressible.
+    raw.retain(|v| {
+        v.rule == Rule::BadAllow
+            || !allows
+                .iter()
+                .any(|a| a.rule == v.rule && v.line >= a.line && v.line <= a.line_end + 1)
+    });
+    raw
+}
+
+fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path.strip_prefix(root).unwrap_or(&path).to_path_buf();
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Whether a path (relative to `src/`) belongs to a deterministic module.
+pub fn is_deterministic_module(rel: &Path) -> bool {
+    let first = match rel.components().next() {
+        Some(c) => c.as_os_str().to_string_lossy().into_owned(),
+        None => return false,
+    };
+    let name = first.strip_suffix(".rs").unwrap_or(&first);
+    DETERMINISTIC_MODULES.contains(&name)
+}
+
+/// Lint every `.rs` file under `src_root` (normally the crate's `src/`).
+/// Files are visited in sorted order, so the report itself is
+/// deterministic.
+pub fn lint_crate(src_root: &Path) -> io::Result<CrateReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs_files(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for rel in &files {
+        let src = fs::read_to_string(src_root.join(rel))?;
+        let cfg = LintConfig {
+            deterministic: is_deterministic_module(rel),
+            expect_unsafe_op_deny: rel.as_os_str() == "lib.rs",
+        };
+        violations.extend(lint_source(&rel.display().to_string(), &src, &cfg));
+    }
+    Ok(CrateReport { files: files.len(), violations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det() -> LintConfig {
+        LintConfig { deterministic: true, expect_unsafe_op_deny: false }
+    }
+
+    fn rules_of(v: &[Violation]) -> Vec<Rule> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn directive_must_start_the_comment() {
+        // prose mentioning the syntax is not a directive
+        let lx = lexer::lex("// the syntax is `ued-lint: allow(x) — reason`\nlet a = 1;\n");
+        assert_eq!(lx.comments.len(), 1);
+        match parse_directive(&lx.comments[0].text) {
+            Directive::None => {}
+            _ => panic!("backtick-prefixed prose must not parse as a directive"),
+        }
+    }
+
+    #[test]
+    fn allow_requires_reason_and_known_rule() {
+        match parse_directive("// ued-lint: allow(wallclock) — stopwatch is sanctioned") {
+            Directive::Valid(Rule::Wallclock) => {}
+            _ => panic!("well-formed allow must parse"),
+        }
+        assert!(matches!(
+            parse_directive("// ued-lint: allow(wallclock)"),
+            Directive::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_directive("// ued-lint: allow(no-such-rule) — reason"),
+            Directive::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn hash_import_flagged_only_in_deterministic_modules() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of(&lint_source("x.rs", src, &det())), [Rule::HashCollections]);
+        let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: false };
+        assert!(lint_source("x.rs", src, &cfg).is_empty());
+    }
+
+    #[test]
+    fn wallclock_is_crate_wide() {
+        let src = "fn t() { let _ = Instant::now(); }\n";
+        let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: false };
+        assert_eq!(rules_of(&lint_source("x.rs", src, &cfg)), [Rule::Wallclock]);
+    }
+
+    #[test]
+    fn addr_hash_needs_a_pointer_origin() {
+        let flagged = "fn f(x: &u64) -> usize { &*x as *const u64 as usize }\n";
+        assert_eq!(rules_of(&lint_source("x.rs", flagged, &det())), [Rule::AddrHash]);
+        // a plain integer cast is not an address
+        let clean = "fn g(n: u32) -> usize { n as usize }\n";
+        assert!(lint_source("x.rs", clean, &det()).is_empty());
+        // a pointer origin neutralized by a statement boundary is clean
+        let reset = "fn h(v: &[u8]) -> usize { let _p = v.as_ptr(); v.len() as usize }\n";
+        assert!(lint_source("x.rs", reset, &det()).is_empty());
+    }
+
+    #[test]
+    fn safety_coverage_positions() {
+        let same_line = "fn f(p: *const u8) -> u8 { unsafe { *p } } // SAFETY: caller checks\n";
+        assert!(lint_source("x.rs", same_line, &det()).is_empty());
+        let above = "// SAFETY: caller checks\nfn g(p: *const u8) -> u8 { unsafe { *p } }\n";
+        // the comment block above belongs to the fn, and the unsafe sits
+        // on the same line as the fn header here
+        assert!(lint_source("x.rs", above, &det()).is_empty());
+        let inside = "fn h(p: *const u8) -> u8 {\n    unsafe {\n        // SAFETY: caller checks\n        *p\n    }\n}\n";
+        assert!(lint_source("x.rs", inside, &det()).is_empty());
+        let uncovered = "fn k(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules_of(&lint_source("x.rs", uncovered, &det())), [Rule::SafetyComment]);
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "// unsafe in prose\nfn f() -> &'static str { \"unsafe { }\" }\n";
+        assert!(lint_source("x.rs", src, &det()).is_empty());
+    }
+
+    #[test]
+    fn unsafe_op_deny_detected() {
+        let good = "#![deny(unsafe_op_in_unsafe_fn)]\nfn main() {}\n";
+        let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: true };
+        assert!(lint_source("lib.rs", good, &cfg).is_empty());
+        let bad = "fn main() {}\n";
+        assert_eq!(rules_of(&lint_source("lib.rs", bad, &cfg)), [Rule::UnsafeOpLint]);
+    }
+
+    #[test]
+    fn module_classification() {
+        assert!(is_deterministic_module(Path::new("rollout/actors.rs")));
+        assert!(is_deterministic_module(Path::new("env.rs")));
+        assert!(!is_deterministic_module(Path::new("metrics/mod.rs")));
+        assert!(!is_deterministic_module(Path::new("runtime/mod.rs")));
+        assert!(!is_deterministic_module(Path::new("bin/ued_lint.rs")));
+    }
+}

@@ -1,0 +1,78 @@
+//! `ued-lint` — run the in-repo determinism/unsafety analysis pass over
+//! the crate source and fail (exit 1) on any violation.
+//!
+//! Usage: `cargo run --release --bin ued_lint [-- <src-dir>]`
+//!
+//! With no argument it lints `src/` relative to the working directory
+//! (falling back to the crate's own `src/` when invoked from elsewhere,
+//! e.g. the repository root). See `jaxued::analysis` for the rule set,
+//! the deterministic-module list, and the allow-comment escape hatch;
+//! the README's "Determinism invariants" section is the human-facing
+//! summary. CI runs this as a required job.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use jaxued::analysis::{lint_crate, DETERMINISTIC_MODULES};
+
+fn usage() {
+    eprintln!("usage: ued_lint [<src-dir>]");
+    eprintln!("lints every .rs file under <src-dir> (default: src/)");
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    for arg in std::env::args().skip(1) {
+        if arg == "-h" || arg == "--help" {
+            usage();
+            return ExitCode::SUCCESS;
+        }
+        if root.is_none() {
+            root = Some(PathBuf::from(arg));
+        } else {
+            eprintln!("ued-lint: unexpected argument `{arg}`");
+            usage();
+            return ExitCode::from(2);
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        let cwd_src = PathBuf::from("src");
+        if cwd_src.is_dir() {
+            cwd_src
+        } else {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+        }
+    });
+    if !root.is_dir() {
+        eprintln!("ued-lint: source directory `{}` not found", root.display());
+        return ExitCode::from(2);
+    }
+
+    match lint_crate(&root) {
+        Err(e) => {
+            eprintln!("ued-lint: i/o error walking `{}`: {e}", root.display());
+            ExitCode::from(2)
+        }
+        Ok(report) if report.violations.is_empty() => {
+            println!(
+                "ued-lint: clean — {} files under `{}` ({} deterministic modules: {})",
+                report.files,
+                root.display(),
+                DETERMINISTIC_MODULES.len(),
+                DETERMINISTIC_MODULES.join(", ")
+            );
+            ExitCode::SUCCESS
+        }
+        Ok(report) => {
+            for v in &report.violations {
+                println!("{v}");
+            }
+            println!(
+                "ued-lint: {} violation(s) in {} files",
+                report.violations.len(),
+                report.files
+            );
+            ExitCode::FAILURE
+        }
+    }
+}

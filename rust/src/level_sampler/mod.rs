@@ -10,6 +10,7 @@
 
 pub mod prioritization;
 
+// ued-lint: allow(hash-collections) — lookup-only fingerprint→slot map, never iterated
 use std::collections::HashMap;
 
 use prioritization::{replay_weights, Prioritization};

@@ -21,8 +21,17 @@
 //! * [`ppo`] — the train-step driver (the update itself is an AOT artifact).
 //! * [`algo`] — DR / PLR / PLR⊥ / ACCEL / PAIRED drivers + training loop,
 //!   generic over the env family.
+//! * [`analysis`] — `ued-lint`, the in-tree determinism/unsafety
+//!   static-analysis pass (run by the `ued_lint` binary and CI).
 //! * [`eval`], [`metrics`], [`config`], [`util`] — support systems.
+
+// Enforced by `ued-lint` (rule `unsafe-op-lint`): every unsafe operation
+// must sit in an explicit `unsafe` block — each carrying its own SAFETY
+// comment — even inside `unsafe fn` bodies.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod algo;
+pub mod analysis;
 pub mod config;
 pub mod env;
 pub mod eval;

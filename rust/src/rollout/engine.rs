@@ -198,13 +198,17 @@ impl RolloutEngine {
         let flat_acc = ColumnAccess::new(&mut self.flats[..]);
         let st_acc = ColumnAccess::new(states);
         self.pool.run(b, |bi| {
-            // SAFETY: column `bi` is visited by exactly one shard, and
-            // every access below touches only column-`bi` slots.
+            // SAFETY: column `bi` is visited by exactly one shard per
+            // phase, so this is the only live reference to state `bi`.
             let state = unsafe { st_acc.get_mut(bi) };
+            // SAFETY: same disjointness — each column owns its private
+            // flat scratch buffer.
             let flat = unsafe { flat_acc.get_mut(bi) };
             env.observe(state, flat);
             let mut off = 0;
             for (k, &comp) in comps.iter().enumerate() {
+                // SAFETY: rows `[bi*comp, (bi+1)*comp)` of each staging
+                // tensor belong to column `bi` alone.
                 let dst = unsafe { obs_acc[k].slice_mut(bi * comp, comp) };
                 dst.copy_from_slice(&flat[off..off + comp]);
                 off += comp;
@@ -230,13 +234,12 @@ impl RolloutEngine {
         let res = self.pool.run_overlapped(
             b,
             |bi| {
-                // SAFETY: disjoint per-column trajectory ranges; obs_step
-                // is only read here and in the (concurrent, read-only)
-                // forward call.
                 for (k, &comp) in comps.iter().enumerate() {
                     let src = &obs_step[k].data()[bi * comp..(bi + 1) * comp];
-                    let dst =
-                        unsafe { traj_obs_acc[k].slice_mut((t * b + bi) * comp, comp) };
+                    // SAFETY: trajectory row `t`, column `bi` — disjoint
+                    // ranges across columns; `obs_step` is only read here
+                    // and by the (concurrent, read-only) forward call.
+                    let dst = unsafe { traj_obs_acc[k].slice_mut((t * b + bi) * comp, comp) };
                     dst.copy_from_slice(src);
                 }
             },
@@ -263,13 +266,17 @@ impl RolloutEngine {
         let rew_acc = ColumnAccess::new(traj.rewards.data_mut());
         let done_acc = ColumnAccess::new(traj.dones.data_mut());
         self.pool.run(b, |bi| {
-            // SAFETY: per-column disjoint indices throughout.
+            // SAFETY: column `bi` is visited by exactly one shard per
+            // phase, so its RNG stream has no other user.
             let rng = unsafe { rng_acc.get_mut(bi) };
+            // SAFETY: same per-column disjointness for the env state.
             let state = unsafe { st_acc.get_mut(bi) };
             let row = &logits[bi * a..(bi + 1) * a];
             let (action, lp) = sampler::sample_action(row, rng);
             let step = env.step(state, action, rng);
             let i = t * b + bi;
+            // SAFETY: trajectory scalars at `[t, bi]` — index `i` is
+            // unique to this column within the phase.
             unsafe {
                 *act_acc.get_mut(i) = action as i32;
                 *logp_acc.get_mut(i) = lp;
@@ -362,13 +369,17 @@ impl RolloutEngine {
         let live_acc = ColumnAccess::new(live);
         let out_acc = ColumnAccess::new(outcomes);
         self.pool.run(self.b, |bi| {
-            // SAFETY: per-column disjoint indices throughout.
+            // SAFETY: column `bi` is visited by exactly one shard per
+            // phase; every access in this closure touches index `bi` only.
             let alive = unsafe { live_acc.get_mut(bi) };
             if !*alive {
                 return;
             }
+            // SAFETY: same per-column disjointness for the RNG stream.
             let rng = unsafe { rng_acc.get_mut(bi) };
+            // SAFETY: same per-column disjointness for the env state.
             let state = unsafe { st_acc.get_mut(bi) };
+            // SAFETY: same per-column disjointness for the outcome slot.
             let out = unsafe { out_acc.get_mut(bi) };
             let row = &logits[bi * a..(bi + 1) * a];
             let action = if greedy {
@@ -475,14 +486,15 @@ impl RolloutEngine {
         let meta_acc = ColumnAccess::new(meta);
         let out_acc = ColumnAccess::new(outcomes);
         self.pool.run(self.b, |bi| {
-            // SAFETY: per-column disjoint indices; `m.episode` values are
-            // unique across live slots, so the outcome write is disjoint
-            // too.
+            // SAFETY: column `bi` is visited by exactly one shard per
+            // phase, so slot metadata `bi` has no other user.
             let m = unsafe { meta_acc.get_mut(bi) };
             if !m.live {
                 return;
             }
+            // SAFETY: same per-column disjointness for the slot's RNG.
             let rng = unsafe { rng_acc.get_mut(bi) };
+            // SAFETY: same per-column disjointness for the slot's state.
             let state = unsafe { st_acc.get_mut(bi) };
             let row = &logits[bi * a..(bi + 1) * a];
             let action = if greedy {
@@ -493,6 +505,8 @@ impl RolloutEngine {
             let step = env.step(state, action, rng);
             m.steps += 1;
             if step.done || m.steps as usize >= max_steps {
+                // SAFETY: `m.episode` ids are unique across live slots, so
+                // no two columns ever write the same outcome element.
                 let out = unsafe { out_acc.get_mut(m.episode) };
                 *out = EpisodeOutcome {
                     solved: step.done && step.reward > 0.0,

@@ -27,6 +27,18 @@
 //! `rollout_determinism` integration test pins this for both env
 //! families; it is the refactor's safety net.
 //!
+//! Two mechanical checks back the invariant (see the README's
+//! "Determinism invariants" section). `ued-lint` ([`crate::analysis`])
+//! statically bans ambient RNGs, hash-ordered collections, wallclock
+//! reads, and address-derived values from this module tree, and audits
+//! every `unsafe` site for a SAFETY comment. And in debug builds the
+//! column-disjointness contract itself is *checked at runtime*: every
+//! [`ColumnAccess`](actors::ColumnAccess) carries a per-element atomic
+//! claim map that panics with a column/thread diagnostic the moment two
+//! threads claim the same index within a phase. Release builds compile
+//! the detector out entirely ([`race_detector_enabled`] tells you which
+//! build you have; `bench_rollout` asserts it is off).
+//!
 //! # Evaluation primitives
 //!
 //! [`RolloutEngine::run_episodes`] is the legacy fixed-chunk episode
@@ -53,7 +65,7 @@ pub mod sampler;
 pub mod storage;
 pub mod synthetic;
 
-pub use actors::{auto_threads, ColumnRngs, WorkerPool};
+pub use actors::{auto_threads, race_detector_enabled, ColumnRngs, WorkerPool};
 pub use engine::{EpisodeOutcome, Policy, PolicyModel, RolloutEngine};
 pub use storage::{EpisodeStats, Trajectory};
 pub use synthetic::SyntheticPolicy;

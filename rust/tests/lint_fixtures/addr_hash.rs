@@ -1,0 +1,6 @@
+//! Violation fixture: a pointer address cast to an integer. Addresses
+//! vary run to run, so address-derived keys are nondeterministic.
+
+pub fn level_key(level: &[u8]) -> u64 {
+    (level as *const [u8] as *const u8 as usize) as u64
+}

@@ -1,0 +1,14 @@
+//! Violation fixture: malformed allow directives. A bad directive is
+//! itself reported (`bad-allow`) and suppresses nothing — the ambient
+//! RNG under the reason-less allow below must still be flagged.
+
+pub fn no_reason() -> u64 {
+    // ued-lint: allow(thread-rng)
+    let mut rng = thread_rng();
+    rng.next_u64()
+}
+
+pub fn unknown_rule() -> f32 {
+    // ued-lint: allow(fast-math) — no such rule exists
+    1.0f32
+}

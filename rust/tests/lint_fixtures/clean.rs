@@ -1,0 +1,30 @@
+//! A fixture that follows every `ued-lint` rule: ordered collections,
+//! seeded randomness (with one documented escape hatch), and fully
+//! audited unsafety. Linted as a deterministic module; must be clean.
+//! Not compiled — lexed by `tests/lint_self.rs` only.
+
+use std::collections::BTreeMap;
+
+pub fn ordered_histogram(xs: &[u32]) -> BTreeMap<u32, u32> {
+    let mut out = BTreeMap::new();
+    for &x in xs {
+        *out.entry(x).or_insert(0) += 1;
+    }
+    out
+}
+
+pub fn demo_allowed_ambient_draw() -> u64 {
+    // ued-lint: allow(thread-rng) — fixture demo of the escape hatch; not rollout code
+    let mut rng = thread_rng();
+    rng.next_u64()
+}
+
+/// Reads the first element without a bounds check.
+///
+/// # Safety
+///
+/// `xs` must be non-empty; the caller guarantees it.
+pub unsafe fn first_unchecked(xs: &[u64]) -> u64 {
+    // SAFETY: the caller contract above guarantees `xs` is non-empty.
+    unsafe { *xs.as_ptr() }
+}

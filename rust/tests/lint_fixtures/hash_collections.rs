@@ -1,0 +1,16 @@
+//! Violation fixture: hash-ordered collections in a deterministic
+//! module. The fold below depends on per-process hasher iteration order.
+
+use std::collections::HashMap;
+
+pub fn schedule_dependent_sum(xs: &[(u64, f32)]) -> f32 {
+    let mut m: HashMap<u64, f32> = HashMap::new();
+    for &(k, v) in xs {
+        *m.entry(k).or_insert(0.0) += v;
+    }
+    let mut acc = 0.0;
+    for (_k, v) in m.iter() {
+        acc = acc * 0.5 + v;
+    }
+    acc
+}

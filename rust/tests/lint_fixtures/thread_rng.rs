@@ -1,0 +1,9 @@
+//! Violation fixture: ambient RNG in a deterministic module. All
+//! randomness must flow from the seeded per-column Pcg64 streams.
+
+pub fn ambient_draws() -> (u64, u64) {
+    let mut rng = rand::thread_rng();
+    let a = rng.gen();
+    let b = rand::random::<u64>();
+    (a, b)
+}

@@ -1,0 +1,10 @@
+//! Violation fixture: unaudited unsafety — an `unsafe impl` and an
+//! `unsafe` block, neither carrying a SAFETY comment.
+
+pub struct Wrapper(pub *mut u8);
+
+unsafe impl Send for Wrapper {}
+
+pub fn read_first(xs: &[u8]) -> u8 {
+    unsafe { *xs.as_ptr() }
+}

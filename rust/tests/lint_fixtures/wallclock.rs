@@ -1,0 +1,11 @@
+//! Violation fixture: wallclock reads (a crate-wide rule — real time
+//! must never feed results; `metrics::Stopwatch` is the one reader).
+
+pub fn stamp() -> u64 {
+    let t0 = std::time::Instant::now();
+    let s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    s.wrapping_add(t0.elapsed().as_secs())
+}

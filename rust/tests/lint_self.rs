@@ -1,0 +1,129 @@
+//! `ued-lint` integration suite: the fixture corpus under
+//! `tests/lint_fixtures/` (one clean file, one file per violation
+//! class), plus the lint's most important property — the real crate's
+//! own `src/` tree is lint-clean. CI runs this alongside the `ued_lint`
+//! binary; if you add an `unsafe` site without a SAFETY comment, or an
+//! ambient RNG / hash map / wallclock read to a deterministic module,
+//! `real_crate_is_lint_clean` is the test that goes red.
+
+use std::fs;
+use std::path::Path;
+
+use jaxued::analysis::{lint_crate, lint_source, LintConfig, Rule, Violation};
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Fixtures model code in deterministic modules (all rules active).
+fn det() -> LintConfig {
+    LintConfig { deterministic: true, expect_unsafe_op_deny: false }
+}
+
+fn render(violations: &[Violation]) -> String {
+    violations
+        .iter()
+        .map(|v| v.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn clean_fixture_passes() {
+    let v = lint_source("clean.rs", &fixture("clean.rs"), &det());
+    assert!(v.is_empty(), "clean fixture must lint clean, got:\n{}", render(&v));
+}
+
+#[test]
+fn each_violation_fixture_fails_with_its_rule() {
+    let table: &[(&str, Rule)] = &[
+        ("hash_collections.rs", Rule::HashCollections),
+        ("thread_rng.rs", Rule::ThreadRng),
+        ("wallclock.rs", Rule::Wallclock),
+        ("addr_hash.rs", Rule::AddrHash),
+        ("unsafe_no_safety.rs", Rule::SafetyComment),
+        ("bad_allow.rs", Rule::BadAllow),
+    ];
+    for &(file, rule) in table {
+        let v = lint_source(file, &fixture(file), &det());
+        assert!(!v.is_empty(), "{file}: expected violations, got none");
+        assert!(
+            v.iter().any(|x| x.rule == rule),
+            "{file}: expected a [{}] violation, got:\n{}",
+            rule.name(),
+            render(&v)
+        );
+    }
+}
+
+#[test]
+fn violation_fixtures_flag_every_seeded_site() {
+    // Beyond "at least one": the multi-site fixtures must report each
+    // seeded violation (distinct lines are never collapsed).
+    let rng = lint_source("thread_rng.rs", &fixture("thread_rng.rs"), &det());
+    assert_eq!(rng.iter().filter(|v| v.rule == Rule::ThreadRng).count(), 2, "{}", render(&rng));
+    let wall = lint_source("wallclock.rs", &fixture("wallclock.rs"), &det());
+    assert_eq!(wall.iter().filter(|v| v.rule == Rule::Wallclock).count(), 2, "{}", render(&wall));
+    let uns = lint_source("unsafe_no_safety.rs", &fixture("unsafe_no_safety.rs"), &det());
+    assert_eq!(uns.iter().filter(|v| v.rule == Rule::SafetyComment).count(), 2, "{}", render(&uns));
+}
+
+#[test]
+fn malformed_allows_suppress_nothing() {
+    // bad_allow.rs: both bad directives are reported, and the ambient
+    // RNG sitting under the reason-less one still surfaces.
+    let v = lint_source("bad_allow.rs", &fixture("bad_allow.rs"), &det());
+    assert_eq!(v.iter().filter(|x| x.rule == Rule::BadAllow).count(), 2, "{}", render(&v));
+    assert!(
+        v.iter().any(|x| x.rule == Rule::ThreadRng),
+        "a malformed allow must not suppress the violation under it:\n{}",
+        render(&v)
+    );
+}
+
+#[test]
+fn allow_comment_is_required_for_suppression() {
+    // Strip the escape hatch from the clean fixture: its (previously
+    // allowed) ambient draw must surface as a violation.
+    let stripped: String = fixture("clean.rs")
+        .lines()
+        .filter(|l| !l.contains("ued-lint:"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let v = lint_source("clean.rs", &stripped, &det());
+    assert!(
+        v.iter().any(|x| x.rule == Rule::ThreadRng),
+        "without its allow, the demo draw must be flagged, got:\n{}",
+        render(&v)
+    );
+}
+
+#[test]
+fn nondeterministic_modules_skip_determinism_rules_but_not_the_audit() {
+    let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: false };
+    // Determinism rules are scoped to deterministic modules …
+    let rng = lint_source("thread_rng.rs", &fixture("thread_rng.rs"), &cfg);
+    assert!(rng.is_empty(), "thread-rng must not fire outside deterministic modules:\n{}", render(&rng));
+    // … the unsafety audit is crate-wide …
+    let uns = lint_source("unsafe_no_safety.rs", &fixture("unsafe_no_safety.rs"), &cfg);
+    assert_eq!(uns.iter().filter(|v| v.rule == Rule::SafetyComment).count(), 2, "{}", render(&uns));
+    // … and so is the wallclock rule.
+    let wall = lint_source("wallclock.rs", &fixture("wallclock.rs"), &cfg);
+    assert_eq!(wall.iter().filter(|v| v.rule == Rule::Wallclock).count(), 2, "{}", render(&wall));
+}
+
+#[test]
+fn real_crate_is_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_crate(&src).expect("walking src/");
+    assert!(report.files > 10, "expected to visit the whole crate, saw {} files", report.files);
+    assert!(
+        report.violations.is_empty(),
+        "the crate's own source must be ued-lint clean; {} violation(s):\n{}",
+        report.violations.len(),
+        render(&report.violations)
+    );
+}
