@@ -1,7 +1,8 @@
 //! End-to-end rollout/eval throughput: collect + evaluation steps/sec for
-//! both rollout variants at 1 vs N threads, plus the work-queue vs
-//! padded-chunk forward-pass comparison — the first datapoint of the
-//! BENCH perf trajectory. Emits `BENCH_rollout.json` at the repo root.
+//! both rollout variants at 1 vs N threads, the work-queue vs
+//! padded-chunk forward-pass comparison, and seed-pack throughput at
+//! `--drivers 1` vs N (the driver-thread overlap win) — the BENCH perf
+//! trajectory. Emits `BENCH_rollout.json` at the repo root.
 //!
 //! The policy is a synthetic host-side stand-in (fixed linear map), so
 //! the numbers isolate the host rollout path this engine parallelizes:
@@ -12,9 +13,12 @@
 use std::sync::Arc;
 use std::time::Instant;
 
+use jaxued::algo::orchestrator::{run_pack, SeedUnit, PACK_AGGREGATE_METRICS};
+use jaxued::algo::CycleMetrics;
 use jaxued::env::wrappers::AutoReplayWrapper;
 use jaxued::env::{EnvFamily, EnvParams, LevelGenerator, MazeFamily, UnderspecifiedEnv};
 use jaxued::eval::{EvalMode, Evaluator};
+use jaxued::metrics::CrossSeedSink;
 use jaxued::rollout::{auto_threads, RolloutEngine, SyntheticPolicy, Trajectory, WorkerPool};
 use jaxued::util::cli::Args;
 use jaxued::util::rng::Pcg64;
@@ -54,6 +58,96 @@ fn bench_collect(t: usize, b: usize, threads: usize, iters: usize) -> f64 {
             .unwrap();
     }
     (t * b * iters) as f64 / t0.elapsed().as_secs_f64()
+}
+
+const PACK_T: usize = 32;
+const PACK_B: usize = 8;
+
+/// A collect-only seed unit for the pack bench: same engine/pool path as
+/// `TrainSeedRun`'s rollout, with the PPO/PJRT layer substituted.
+struct PackUnit {
+    seed: u64,
+    rng: Pcg64,
+    env: AutoReplayWrapper<<MazeFamily as EnvFamily>::Env>,
+    gen: <MazeFamily as EnvFamily>::Generator,
+    engine: RolloutEngine,
+    traj: Trajectory,
+    policy: SyntheticPolicy,
+    cycle: usize,
+    total: usize,
+}
+
+impl PackUnit {
+    fn new(seed: u64, total: usize, pool: Arc<WorkerPool>) -> PackUnit {
+        let params = EnvParams::default();
+        let env = AutoReplayWrapper::new(MazeFamily.make_env(&params));
+        let gen = MazeFamily.make_generator(&params);
+        let engine = RolloutEngine::with_pool(&env, PACK_B, pool);
+        let traj = Trajectory::new(PACK_T, PACK_B, &env.obs_components());
+        let policy = SyntheticPolicy { num_actions: env.num_actions() };
+        PackUnit {
+            seed,
+            rng: Pcg64::new(seed, 0x7261_696e),
+            env,
+            gen,
+            engine,
+            traj,
+            policy,
+            cycle: 0,
+            total,
+        }
+    }
+}
+
+impl SeedUnit for PackUnit {
+    fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn total_cycles(&self) -> usize {
+        self.total
+    }
+
+    fn env_steps(&self) -> u64 {
+        (self.cycle * PACK_T * PACK_B) as u64
+    }
+
+    fn step_cycle(&mut self) -> anyhow::Result<CycleMetrics> {
+        let levels = self.gen.sample_batch(PACK_B, &mut self.rng);
+        let mut states: Vec<_> = levels
+            .iter()
+            .map(|l| self.env.reset_to_level(l, &mut self.rng))
+            .collect();
+        self.engine
+            .collect(&self.env, &mut states, &self.policy, &mut self.traj, &mut self.rng)?;
+        let stats = self.traj.episode_stats();
+        self.cycle += 1;
+        Ok(CycleMetrics::from_rollout("bench", None, &stats, 0.0))
+    }
+}
+
+/// Steps/sec for a seed pack run through the real orchestrator core at a
+/// given driver count (multi-driver packs flip the pool to the fused
+/// schedule, exactly as `train_pack_family` does).
+fn bench_pack(seeds: usize, threads: usize, drivers: usize, cycles: usize) -> f64 {
+    let pool = Arc::new(WorkerPool::new(threads));
+    pool.set_multi_driver(drivers > 1);
+    let mut units: Vec<PackUnit> = (0..seeds as u64)
+        .map(|s| PackUnit::new(s, cycles, pool.clone()))
+        .collect();
+    let dir = std::env::temp_dir().join(format!("jaxued_bench_pack_t{threads}_d{drivers}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut aggregate =
+        CrossSeedSink::create(&dir.join("aggregate.csv"), PACK_AGGREGATE_METRICS, seeds)
+            .unwrap();
+    // warmup pass (first collect per unit pays allocation/faulting costs)
+    for u in units.iter_mut() {
+        u.step_cycle().unwrap();
+        u.cycle = 0;
+    }
+    let t0 = Instant::now();
+    run_pack(&mut units, &mut aggregate, drivers).unwrap();
+    (seeds * cycles * PACK_T * PACK_B) as f64 / t0.elapsed().as_secs_f64()
 }
 
 /// (steps/sec, forward passes) for one evaluation pass of the standard
@@ -134,6 +228,31 @@ fn main() {
         }
     }
 
+    // Seed-pack throughput through the real orchestrator core (`run_pack`,
+    // exactly what `train --seeds` drives): drivers=1 is the legacy
+    // single-thread cycle interleave, drivers=N overlaps every seed's
+    // device forward with every other seed's host sweep.
+    let pack_seeds = 4usize;
+    let pack_cycles = args.get_usize("pack-cycles", 24);
+    let mut pack_rows: Vec<(usize, usize, f64)> = Vec::new();
+    for &threads in &thread_settings {
+        for drivers in [1usize, pack_seeds] {
+            if drivers > 1 && pack_seeds == 1 {
+                continue;
+            }
+            let sps = bench_pack(pack_seeds, threads, drivers, pack_cycles);
+            println!(
+                "[pack  threads={threads:>2} drivers={drivers}] collect {sps:>12.0} steps/s \
+                 ({pack_seeds} seeds x {pack_cycles} cycles)"
+            );
+            pack_rows.push((threads, drivers, sps));
+        }
+    }
+    assert!(
+        pack_rows.iter().all(|&(_, _, s)| s.is_finite() && s > 0.0),
+        "pack bench produced non-positive or non-finite throughput — refusing to emit"
+    );
+
     // Refuse to overwrite the committed JSON with a zeroed placeholder
     // shape: a broken harness (stopped clock, empty suite, zero work)
     // must fail loudly here, never publish zeros that look "measured".
@@ -176,6 +295,21 @@ fn main() {
             r.forwards_queue,
             r.forwards_chunked,
             if i + 1 < rows.len() { "," } else { "" },
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!(
+        "  \"pack\": {{\"seeds\": {pack_seeds}, \"cycles\": {pack_cycles}, \
+         \"rollout_t\": {PACK_T}, \"rollout_b\": {PACK_B}}},\n"
+    ));
+    json.push_str("  \"pack_results\": [\n");
+    for (i, &(threads, drivers, sps)) in pack_rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"threads\": {}, \"drivers\": {}, \"collect_steps_per_sec\": {:.1}}}{}\n",
+            threads,
+            drivers,
+            sps,
+            if i + 1 < pack_rows.len() { "," } else { "" },
         ));
     }
     json.push_str("  ]\n}\n");

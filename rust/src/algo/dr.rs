@@ -32,7 +32,7 @@ pub struct DrAlgo<F: EnvFamily> {
     engine: RolloutEngine,
     traj: Trajectory,
     trainer: PpoTrainer,
-    apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    apply: Arc<crate::runtime::executor::Executable>,
     num_actions: usize,
 }
 
@@ -98,7 +98,9 @@ impl<F: EnvFamily> UedAlgorithm for DrAlgo<F> {
         }
         let ppo = self.trainer.update(&self.traj)?;
         let stats = self.traj.episode_stats();
-        Ok(CycleMetrics::from_rollout("dr", Some(ppo), &stats, 0.0))
+        let mut m = CycleMetrics::from_rollout("dr", Some(ppo), &stats, 0.0);
+        m.timers = self.engine.take_timers();
+        Ok(m)
     }
 
     fn student_params(&self) -> &[xla::Literal] {

@@ -33,7 +33,7 @@ use crate::env::EnvFamily;
 use crate::eval::EvalReport;
 use crate::ppo::{PpoTrainer, UpdateMetrics};
 use crate::rollout::storage::EpisodeStats;
-use crate::rollout::WorkerPool;
+use crate::rollout::{PhaseTimers, WorkerPool};
 use crate::runtime::Runtime;
 use crate::util::rng::Pcg64;
 
@@ -56,6 +56,10 @@ pub struct CycleMetrics {
     /// PAIRED extras.
     pub mean_regret: f64,
     pub adversary_loss: f64,
+    /// Per-phase engine wall times for this cycle (PAIRED sums its
+    /// engines) — surfaced as `metrics.csv` columns so the
+    /// forward/host-sweep overlap is verifiable per run.
+    pub timers: PhaseTimers,
 }
 
 impl CycleMetrics {
@@ -93,7 +97,9 @@ impl CycleMetrics {
 
 /// One-update-cycle interface implemented by every UED method; object-safe
 /// so the training loop can hold any (algorithm × env family) pairing.
-pub trait UedAlgorithm {
+/// `Send` because a seed pack moves each driver onto its own thread
+/// (`orchestrator::run_pack` scatter/gathers `TrainSeedRun`s).
+pub trait UedAlgorithm: Send {
     fn name(&self) -> &'static str;
 
     /// Perform one update cycle (the Figure-1 unit of training).

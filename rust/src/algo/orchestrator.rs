@@ -6,28 +6,54 @@
 //! `jax.vmap`. The Rust port gets the same economy differently: a pack
 //! (`--seeds 0..8` / `--num-seeds N`) builds one [`TrainSeedRun`] per
 //! seed — each an ordinary solo run down to its run directory and CSV —
-//! and round-robins their update cycles, so every seed advances through
-//! cycle k before any seed starts k+1 and every phase of host work flows
-//! through the *single* per-process pool (saturated, never N-fold
-//! oversubscribed; the pool's FIFO phase lock keeps contending engines
-//! fair).
+//! and steps their update cycles concurrently, so every phase of host
+//! work flows through the *single* per-process pool (saturated, never
+//! N-fold oversubscribed; the pool's FIFO phase lock keeps contending
+//! engines fair).
+//!
+//! # Driver threads
+//!
+//! [`run_pack`] splits the units into `drivers` contiguous chunks and
+//! gives each chunk its own OS thread; within a chunk cycles stay
+//! cycle-major (every unit advances through cycle k before any unit
+//! starts k+1). With `drivers == 1` this is exactly the classic
+//! round-robin loop. With more drivers, one seed's *device forward* (a
+//! PJRT call that holds no pool lock — the pool is put in multi-driver
+//! mode, so engines run forwards outside any pool phase and fuse the
+//! writeback into the step phase) overlaps every other seed's host sweep.
+//! Driver threads report each finished cycle over a channel; the calling
+//! thread gathers reports into cycle-indexed slots and writes the
+//! cross-seed aggregate strictly in cycle order, so `aggregate.csv` is
+//! byte-identical at any driver count.
 //!
 //! **Bit-identity invariant.** Seed *s* trained inside a pack is
 //! bit-identical to seed *s* trained alone — same per-cycle metrics, same
-//! final sampler contents, at any `--rollout-threads` count. It holds
-//! structurally: every unit owns its RNG streams, trajectory, trainer and
-//! sampler; the shared pool only schedules column work, which the
-//! per-column RNG-stream design already makes schedule-independent. The
-//! artifact-free `pack_determinism` integration test pins it on both env
-//! families.
+//! final sampler contents, at any `--rollout-threads` count *and any
+//! `--drivers` count*. It holds structurally: every unit owns its RNG
+//! streams, trajectory, trainer and sampler; the shared pool only
+//! schedules column work, which the per-column RNG-stream design already
+//! makes schedule-independent; and the fused multi-driver schedule writes
+//! the same bytes to the same disjoint per-column locations with the same
+//! per-column draw order as the overlapped one. The artifact-free
+//! `pack_determinism` integration test pins it on both env families
+//! across the drivers × rollout-threads grid.
+//!
+//! **Error handling.** If any unit's `step_cycle` fails, the pack aborts:
+//! the failing driver raises the shared abort flag, the other drivers
+//! stop at their next step boundary, and `run_pack` flushes every unit's
+//! buffered sinks ([`SeedUnit::flush_sinks`]) plus the aggregate before
+//! propagating the first error (lowest cycle, then lowest unit index) —
+//! so a mid-pack crash leaves complete CSV rows on disk, not truncated
+//! buffers.
 //!
 //! Alongside the per-seed CSVs the pack writes a cross-seed
 //! [`CrossSeedSink`] aggregate (mean / IQM / stderr per cycle — the
 //! Figure-3 quantities) and a [`PackManifest`] naming every member run.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 use anyhow::Result;
 
@@ -56,7 +82,9 @@ pub const PACK_AGGREGATE_METRICS: &[&str] = &[
 
 /// One seed's training run viewed as a steppable unit. The orchestrator
 /// only needs "advance one cycle and tell me what happened", so packs are
-/// testable artifact-free with synthetic-policy units.
+/// testable artifact-free with synthetic-policy units. Units must be
+/// `Send` (the bound sits on [`run_pack`]): each one lives on a driver
+/// thread for the duration of the pack.
 pub trait SeedUnit {
     fn seed(&self) -> u64;
     fn total_cycles(&self) -> usize;
@@ -69,13 +97,60 @@ pub trait SeedUnit {
     fn last_eval(&self) -> (f64, f64) {
         (f64::NAN, f64::NAN)
     }
+    /// Flush any buffered per-unit sinks so a mid-pack abort leaves
+    /// complete rows on disk. Default: nothing buffered.
+    fn flush_sinks(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
-/// Drive a pack of seed units to completion, round-robin one cycle at a
-/// time, writing one cross-seed aggregate row per cycle. Every unit must
-/// agree on the cycle count (they share one config).
-pub fn run_pack<U: SeedUnit>(
-    units: &mut [U], aggregate: &mut CrossSeedSink,
+/// One unit's finished cycle, reported from a driver thread to the
+/// gathering thread.
+struct CycleReport {
+    cycle: usize,
+    /// Global unit index (position in `run_pack`'s `units` slice).
+    unit: usize,
+    env_steps: u64,
+    /// Values in [`PACK_AGGREGATE_METRICS`] order.
+    metrics: Vec<f64>,
+}
+
+/// Per-cycle gather slot: aggregate inputs accumulate here until every
+/// unit has reported the cycle, then the row is written.
+struct CycleSlot {
+    filled: usize,
+    /// Unit 0's cumulative env steps at this cycle (the x-axis value the
+    /// classic single-driver loop used).
+    env_steps: u64,
+    /// `[metric][unit]`, NaN until that unit reports.
+    per_metric: Vec<Vec<f64>>,
+}
+
+impl CycleSlot {
+    fn new(n_units: usize) -> CycleSlot {
+        CycleSlot {
+            filled: 0,
+            env_steps: 0,
+            per_metric: (0..PACK_AGGREGATE_METRICS.len())
+                .map(|_| vec![f64::NAN; n_units])
+                .collect(),
+        }
+    }
+}
+
+/// Drive a pack of seed units to completion over `drivers` driver
+/// threads, writing one cross-seed aggregate row per cycle, strictly in
+/// cycle order. Every unit must agree on the cycle count (they share one
+/// config). `drivers` is clamped to `[1, units.len()]`; units are split
+/// into contiguous chunks, one driver thread per chunk, and each chunk is
+/// stepped cycle-major — so `drivers == 1` reproduces the classic
+/// round-robin schedule exactly.
+///
+/// On any `step_cycle` error the pack aborts cooperatively, every unit's
+/// sinks and the aggregate are flushed, and the first error (lowest
+/// cycle, then lowest unit index) propagates.
+pub fn run_pack<U: SeedUnit + Send>(
+    units: &mut [U], aggregate: &mut CrossSeedSink, drivers: usize,
 ) -> Result<()> {
     anyhow::ensure!(!units.is_empty(), "empty seed pack");
     let total = units[0].total_cycles();
@@ -83,21 +158,119 @@ pub fn run_pack<U: SeedUnit>(
         units.iter().all(|u| u.total_cycles() == total),
         "seed units disagree on cycle count"
     );
-    for cycle in 0..total {
-        let mut per_metric: Vec<Vec<f64>> = (0..PACK_AGGREGATE_METRICS.len())
-            .map(|_| Vec::with_capacity(units.len()))
-            .collect();
-        for u in units.iter_mut() {
-            let m = u.step_cycle()?;
-            let (eval_mean, eval_iqm) = u.last_eval();
-            per_metric[0].push(m.total_loss);
-            per_metric[1].push(m.train_solve_rate);
-            per_metric[2].push(m.mean_reward);
-            per_metric[3].push(m.buffer_fill);
-            per_metric[4].push(eval_mean);
-            per_metric[5].push(eval_iqm);
+    let n = units.len();
+    let drivers = drivers.clamp(1, n);
+    let chunk_len = n.div_ceil(drivers);
+
+    let abort = AtomicBool::new(false);
+    let (tx, rx) = mpsc::channel::<CycleReport>();
+
+    // (cycle, unit, error) per failed driver; first by (cycle, unit) wins.
+    let mut driver_errs: Vec<(usize, usize, anyhow::Error)> = Vec::new();
+    let mut gather_err: Option<anyhow::Error> = None;
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(drivers);
+        for (d, chunk) in units.chunks_mut(chunk_len).enumerate() {
+            let tx = tx.clone();
+            let abort = &abort;
+            let base = d * chunk_len;
+            handles.push(scope.spawn(
+                move || -> Result<(), (usize, usize, anyhow::Error)> {
+                    for cycle in 0..total {
+                        for (i, u) in chunk.iter_mut().enumerate() {
+                            if abort.load(Ordering::Relaxed) {
+                                return Ok(());
+                            }
+                            match u.step_cycle() {
+                                Ok(m) => {
+                                    let (eval_mean, eval_iqm) = u.last_eval();
+                                    let report = CycleReport {
+                                        cycle,
+                                        unit: base + i,
+                                        env_steps: u.env_steps(),
+                                        metrics: vec![
+                                            m.total_loss,
+                                            m.train_solve_rate,
+                                            m.mean_reward,
+                                            m.buffer_fill,
+                                            eval_mean,
+                                            eval_iqm,
+                                        ],
+                                    };
+                                    // A closed channel means the gatherer
+                                    // bailed (aggregate I/O error); its
+                                    // error wins — stop quietly.
+                                    if tx.send(report).is_err() {
+                                        return Ok(());
+                                    }
+                                }
+                                Err(e) => {
+                                    abort.store(true, Ordering::Relaxed);
+                                    return Err((cycle, base + i, e));
+                                }
+                            }
+                        }
+                    }
+                    Ok(())
+                },
+            ));
         }
-        aggregate.write_cycle(cycle, units[0].env_steps(), &per_metric)?;
+        // Drop the gatherer's clone so `rx` disconnects once every driver
+        // finishes.
+        drop(tx);
+
+        // Gather: buffer out-of-order reports per cycle, emit aggregate
+        // rows strictly in cycle order as cycles complete.
+        let mut next = 0usize;
+        let mut pending: BTreeMap<usize, CycleSlot> = BTreeMap::new();
+        'recv: while let Ok(r) = rx.recv() {
+            let slot = pending.entry(r.cycle).or_insert_with(|| CycleSlot::new(n));
+            for (m, v) in r.metrics.iter().enumerate() {
+                slot.per_metric[m][r.unit] = *v;
+            }
+            if r.unit == 0 {
+                slot.env_steps = r.env_steps;
+            }
+            slot.filled += 1;
+            while pending.get(&next).is_some_and(|s| s.filled == n) {
+                let slot = pending.remove(&next).expect("slot just observed");
+                if let Err(e) =
+                    aggregate.write_cycle(next, slot.env_steps, &slot.per_metric)
+                {
+                    abort.store(true, Ordering::Relaxed);
+                    gather_err = Some(e);
+                    break 'recv;
+                }
+                next += 1;
+            }
+        }
+        // Dropping `rx` here closes the channel; aborted drivers stop at
+        // their next step boundary regardless.
+        drop(rx);
+
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err((cycle, unit, e))) => driver_errs.push((cycle, unit, e)),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+
+    let first_err = driver_errs
+        .into_iter()
+        .min_by_key(|(c, u, _)| (*c, *u))
+        .map(|(c, u, e)| e.context(format!("seed pack aborted at cycle {c} (unit {u})")))
+        .or(gather_err);
+    if let Some(err) = first_err {
+        // Leave complete rows on disk before propagating: a mid-pack
+        // abort must not truncate the survivors' buffered CSV rows.
+        for u in units.iter_mut() {
+            let _ = u.flush_sinks();
+        }
+        let _ = aggregate.flush();
+        return Err(err);
     }
     Ok(())
 }
@@ -113,7 +286,7 @@ pub struct TrainSeedRun<F: EnvFamily> {
     rng: Pcg64,
     algo: Box<dyn UedAlgorithm>,
     evaluator: Evaluator<F::Env>,
-    stu_apply: Rc<Executable>,
+    stu_apply: Arc<Executable>,
     run_dir: PathBuf,
     csv: CsvSink,
     watch: Stopwatch,
@@ -148,6 +321,7 @@ impl<F: EnvFamily> TrainSeedRun<F> {
                 "cycle", "env_steps", "loss", "value_loss", "entropy",
                 "train_solve_rate", "episodes", "buffer_fill", "mean_regret",
                 "eval_mean_solve", "eval_iqm_solve", "steps_per_sec",
+                "stage_ns", "forward_ns", "step_ns", "writeback_ns",
             ],
         )?;
         let total_cycles = cfg.num_cycles();
@@ -222,6 +396,10 @@ impl<F: EnvFamily> TrainSeedRun<F> {
             self.last_eval.0,
             self.last_eval.1,
             self.watch.steps_per_sec(),
+            m.timers.stage_ns as f64,
+            m.timers.forward_ns as f64,
+            m.timers.step_ns as f64,
+            m.timers.writeback_ns as f64,
         ])?;
         if !self.quiet && (cycle % 16 == 0) {
             log_stdout_tagged(
@@ -292,6 +470,10 @@ impl<F: EnvFamily> SeedUnit for TrainSeedRun<F> {
     fn last_eval(&self) -> (f64, f64) {
         self.last_eval
     }
+
+    fn flush_sinks(&mut self) -> Result<()> {
+        self.csv.flush()
+    }
 }
 
 /// Outcome of a full seed pack.
@@ -339,7 +521,12 @@ pub fn train_pack_family<F: EnvFamily>(
     family: F, rt: &Runtime, cfg: &TrainConfig, quiet: bool,
 ) -> Result<PackOutcome> {
     let seeds = cfg.seed_list();
+    let drivers = cfg.resolve_drivers(seeds.len());
     let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
+    // With more than one driver, engines switch to the fused schedule:
+    // device forwards run outside pool phases so one seed's forward
+    // overlaps other seeds' host sweeps (bit-identical either way).
+    pool.set_multi_driver(drivers > 1);
     let pack_dir = Path::new(&cfg.out_dir).join(cfg.pack_name());
 
     let mut units: Vec<TrainSeedRun<F>> = Vec::with_capacity(seeds.len());
@@ -359,7 +546,7 @@ pub fn train_pack_family<F: EnvFamily>(
         PACK_AGGREGATE_METRICS,
         seeds.len(),
     )?;
-    run_pack(&mut units, &mut aggregate)?;
+    run_pack(&mut units, &mut aggregate, drivers)?;
     aggregate.flush()?;
 
     let mut outcomes = Vec::with_capacity(units.len());

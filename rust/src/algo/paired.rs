@@ -39,8 +39,8 @@ pub struct PairedAlgo<F: EnvFamily> {
     adversary: PpoTrainer,
     protagonist: PpoTrainer,
     antagonist: PpoTrainer,
-    adv_apply: std::rc::Rc<crate::runtime::executor::Executable>,
-    stu_apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    adv_apply: Arc<crate::runtime::executor::Executable>,
+    stu_apply: Arc<crate::runtime::executor::Executable>,
     editor_engine: RolloutEngine,
     student_engine: RolloutEngine,
     editor_traj: Trajectory,
@@ -163,7 +163,7 @@ impl<F: EnvFamily> PairedAlgo<F> {
 
     fn student_rollout(
         engine: &mut RolloutEngine, env: &AutoReplayWrapper<F::Env>,
-        trainer: &PpoTrainer, apply: &std::rc::Rc<crate::runtime::executor::Executable>,
+        trainer: &PpoTrainer, apply: &Arc<crate::runtime::executor::Executable>,
         traj: &mut Trajectory, levels: &[F::Level], num_actions: usize, rng: &mut Pcg64,
     ) -> Result<()> {
         let mut states: Vec<_> = levels
@@ -226,6 +226,8 @@ impl<F: EnvFamily> UedAlgorithm for PairedAlgo<F> {
         );
         m.mean_regret = self.last_mean_regret;
         m.adversary_loss = adv_metrics.total_loss() as f64;
+        m.timers = self.editor_engine.take_timers();
+        m.timers.accumulate(self.student_engine.take_timers());
         Ok(m)
     }
 

@@ -46,7 +46,7 @@ pub struct PlrAlgo<F: EnvFamily> {
     traj: Trajectory,
     trainer: PpoTrainer,
     scorer: Scorer,
-    apply: std::rc::Rc<crate::runtime::executor::Executable>,
+    apply: Arc<crate::runtime::executor::Executable>,
     num_actions: usize,
     /// Slot indices of the most recent replay batch (mutation parents).
     last_replayed: Vec<usize>,
@@ -200,11 +200,13 @@ impl<F: EnvFamily> UedAlgorithm for PlrAlgo<F> {
 
     fn cycle(&mut self, rng: &mut Pcg64) -> Result<CycleMetrics> {
         let can_replay = self.sampler.can_replay() && self.sampler.len() >= 1;
-        match self.meta.next(can_replay, rng) {
+        let mut m = match self.meta.next(can_replay, rng) {
             Cycle::Dr => self.on_new_levels(rng),
             Cycle::Replay => self.on_replay_levels(rng),
             Cycle::Mutate => self.on_mutate_levels(rng),
-        }
+        }?;
+        m.timers = self.engine.take_timers();
+        Ok(m)
     }
 
     fn student_params(&self) -> &[xla::Literal] {

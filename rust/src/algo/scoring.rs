@@ -6,7 +6,7 @@
 //! level; that carry lives in the buffer's `level_extra` (paper §3.3) and
 //! is threaded through the artifact as `prev_max_return`.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -35,13 +35,13 @@ pub struct ScoreBatch {
 
 /// Wraps the `score_t{T}_b{B}` artifact.
 pub struct Scorer {
-    exe: Rc<Executable>,
+    exe: Arc<Executable>,
     pub score_fn: ScoreFn,
     b: usize,
 }
 
 impl Scorer {
-    pub fn new(exe: Rc<Executable>, score_fn: ScoreFn) -> Result<Scorer> {
+    pub fn new(exe: Arc<Executable>, score_fn: ScoreFn) -> Result<Scorer> {
         let b = exe.def.b.ok_or_else(|| anyhow::anyhow!("score artifact missing B"))?;
         if exe.def.outputs.len() != 4 {
             bail!("score artifact must have 4 outputs (pvl, maxmc, max_return, mean_value)");

@@ -175,6 +175,12 @@ pub struct TrainConfig {
     /// i.e. available parallelism). Per-column RNG streams make rollout
     /// results bit-identical at any setting.
     pub rollout_threads: usize,
+    /// Seed-pack driver threads (`--drivers`; 0 = auto, i.e. one per
+    /// seed up to available parallelism). Each driver steps a contiguous
+    /// chunk of the pack's seeds so one seed's device forward overlaps
+    /// the others' host work; results are bit-identical at any setting.
+    /// Ignored outside pack mode.
+    pub drivers: usize,
 
     // -- PLR family (Table 3) ------------------------------------------------
     /// Replay probability p (0.5 for PLR, 0.8 for ACCEL).
@@ -220,6 +226,7 @@ impl TrainConfig {
             max_hazards: 12,
             max_episode_steps: 250,
             rollout_threads: 0,
+            drivers: 0,
             replay_prob: if algo == Algo::Accel { 0.8 } else { 0.5 },
             buffer_size: 4000,
             score_fn: ScoreFn::MaxMc,
@@ -270,6 +277,7 @@ impl TrainConfig {
         c.max_hazards = args.get_usize("max-hazards", c.max_hazards);
         c.max_episode_steps = args.get_usize("max-episode-steps", c.max_episode_steps);
         c.rollout_threads = args.get_usize("rollout-threads", c.rollout_threads);
+        c.drivers = args.get_usize("drivers", c.drivers);
         c.replay_prob = args.get_f64("replay-prob", c.replay_prob);
         c.buffer_size = args.get_usize("buffer-size", c.buffer_size);
         c.score_fn = ScoreFn::parse(&args.get_str(
@@ -315,6 +323,20 @@ impl TrainConfig {
         } else {
             self.rollout_threads
         }
+    }
+
+    /// Concrete driver-thread count for a pack of `num_seeds` seeds:
+    /// `--drivers` clamped to the pack size, or — when left at 0/auto —
+    /// one driver per seed capped at the host's available parallelism.
+    /// Always at least 1.
+    pub fn resolve_drivers(&self, num_seeds: usize) -> usize {
+        let cap = num_seeds.max(1);
+        if self.drivers == 0 {
+            cap.min(crate::rollout::auto_threads())
+        } else {
+            self.drivers.min(cap)
+        }
+        .max(1)
     }
 
     /// The env-layer knobs handed to the selected [`EnvId`] family.
@@ -498,6 +520,25 @@ mod tests {
         let c = parse("--algo dr --rollout-threads 3");
         assert_eq!(c.rollout_threads, 3);
         assert_eq!(c.resolve_rollout_threads(), 3);
+    }
+
+    #[test]
+    fn drivers_flag() {
+        let c = parse("--algo dr");
+        assert_eq!(c.drivers, 0, "default is auto");
+        // auto: one driver per seed, capped by host parallelism
+        assert_eq!(c.resolve_drivers(1), 1);
+        assert!(c.resolve_drivers(4) >= 1);
+        assert!(c.resolve_drivers(4) <= 4);
+        let c = parse("--algo dr --drivers 2");
+        assert_eq!(c.drivers, 2);
+        assert_eq!(c.resolve_drivers(8), 2);
+        assert_eq!(c.resolve_drivers(1), 1, "clamped to the pack size");
+        // an explicit oversized request clamps instead of spawning idle
+        // threads, and a degenerate pack still gets one driver
+        let c = parse("--algo dr --drivers 64");
+        assert_eq!(c.resolve_drivers(3), 3);
+        assert_eq!(c.resolve_drivers(0), 1);
     }
 
     #[test]

@@ -66,14 +66,15 @@ pub struct StepResult {
 /// (the rollout engine owns the backing storage — observation writing is
 /// allocation-free).
 ///
-/// Envs are `Sync` and states are `Send` so the rollout engine can fan
-/// `observe()`/`step()` out across its worker pool: the env is shared
+/// Envs are `Sync + Send` and states are `Send` so the rollout engine can
+/// fan `observe()`/`step()` out across its worker pool (the env is shared
 /// read-only while each batch column's state is stepped by exactly one
-/// worker. Every implementation is plain data, so these bounds are
-/// auto-derived — they only become visible if an env tries to smuggle in
-/// un-shareable interior state (which would also break rollout
-/// determinism).
-pub trait UnderspecifiedEnv: Sync {
+/// worker) and so whole algorithm drivers — which own their env — can move
+/// onto seed-pack driver threads (`UedAlgorithm: Send`). Every
+/// implementation is plain data, so these bounds are auto-derived — they
+/// only become visible if an env tries to smuggle in un-shareable interior
+/// state (which would also break rollout determinism).
+pub trait UnderspecifiedEnv: Sync + Send {
     type State: Clone + Send;
     type Level: Clone + Send + Sync;
 
@@ -108,8 +109,9 @@ pub trait UnderspecifiedEnv: Sync {
 ///
 /// `Sync` because `AutoResetWrapper` embeds its generator inside an env
 /// that the rollout workers share (auto-reset draws happen on the
-/// stepping worker's own column stream).
-pub trait LevelGenerator: Sync {
+/// stepping worker's own column stream); `Send` because the algorithm
+/// drivers that own generators move onto seed-pack driver threads.
+pub trait LevelGenerator: Sync + Send {
     type Level: Clone;
 
     /// One draw from the base distribution.
@@ -123,7 +125,9 @@ pub trait LevelGenerator: Sync {
 
 /// The ACCEL edit operator: produce a slightly-perturbed child level.
 /// Mutation must preserve structural validity (`LevelMeta::is_valid`).
-pub trait LevelMutator {
+/// `Send` for the same reason as [`LevelGenerator`]: the owning driver
+/// may live on a seed-pack driver thread.
+pub trait LevelMutator: Send {
     type Level: Clone;
 
     /// Produce a mutated child of `parent`.
@@ -226,8 +230,10 @@ impl EnvGeometry {
 ///
 /// The `'static` bounds (including the env-state where-clause) let
 /// algorithm drivers built from a family live behind
-/// `Box<dyn UedAlgorithm>`.
-pub trait EnvFamily: Copy + Default + 'static
+/// `Box<dyn UedAlgorithm>`; `Send` lets those drivers (which may hold the
+/// family tag) move onto seed-pack driver threads. Implementations are
+/// zero-sized, so both are free.
+pub trait EnvFamily: Copy + Default + Send + 'static
 where
     <Self::Env as UnderspecifiedEnv>::State: 'static,
 {
@@ -275,7 +281,7 @@ impl<L, F: Fn(&mut Pcg64) -> L> FnLevelGen<L, F> {
     }
 }
 
-impl<L: Clone, F: Fn(&mut Pcg64) -> L + Sync> LevelGenerator for FnLevelGen<L, F> {
+impl<L: Clone, F: Fn(&mut Pcg64) -> L + Sync + Send> LevelGenerator for FnLevelGen<L, F> {
     type Level = L;
 
     fn sample_level(&self, rng: &mut Pcg64) -> L {

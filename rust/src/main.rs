@@ -90,10 +90,11 @@ fn cmd_train_pack(cfg: &TrainConfig) -> Result<()> {
     let seeds = cfg.seed_list();
     println!(
         "jaxued train pack: env={} algo={} seeds={:?} variant={} budget={} env steps \
-         ({} cycles) per seed, {} concurrent runs over one {}-thread pool",
+         ({} cycles) per seed, {} concurrent runs on {} driver threads over one \
+         {}-thread pool",
         cfg.env.name(), cfg.algo.name(), seeds, cfg.variant.name,
         cfg.env_steps_budget, cfg.num_cycles(), seeds.len(),
-        cfg.resolve_rollout_threads(),
+        cfg.resolve_drivers(seeds.len()), cfg.resolve_rollout_threads(),
     );
     let rt = Runtime::with_geometry(Path::new(&cfg.artifacts_dir), &cfg.env.geometry())?;
     let pack = train_pack(&rt, cfg, false)?;

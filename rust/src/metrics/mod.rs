@@ -212,6 +212,17 @@ impl Stopwatch {
         }
     }
 
+    /// Elapsed nanoseconds, saturating at `u64::MAX` (~584 years) — the
+    /// rollout engine's per-phase counters read the sanctioned clock
+    /// through this.
+    pub fn elapsed_ns(&self) -> u64 {
+        let d = match &self.clock {
+            Clock::Monotonic { start } => start.elapsed(),
+            Clock::Manual { elapsed } => *elapsed,
+        };
+        u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+    }
+
     /// Environment interactions per second so far.
     pub fn steps_per_sec(&self) -> f64 {
         let e = self.elapsed_secs();
@@ -356,6 +367,14 @@ mod tests {
         assert_eq!(w.env_steps, 1000);
         w.advance(std::time::Duration::from_millis(20));
         assert_eq!(w.steps_per_sec(), 25_000.0);
+    }
+
+    #[test]
+    fn stopwatch_elapsed_ns() {
+        let mut w = Stopwatch::manual();
+        assert_eq!(w.elapsed_ns(), 0);
+        w.advance(std::time::Duration::from_micros(1500));
+        assert_eq!(w.elapsed_ns(), 1_500_000);
     }
 
     #[test]

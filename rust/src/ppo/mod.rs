@@ -3,7 +3,7 @@
 //! DESIGN.md decision 1). This module owns parameter state and the
 //! learning-rate schedule (Table 3: linear anneal).
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -49,7 +49,7 @@ impl LrSchedule {
 /// PPO trainer for one network (student, antagonist, or adversary).
 pub struct PpoTrainer {
     pub params: ParamSet,
-    train_exe: Rc<Executable>,
+    train_exe: Arc<Executable>,
     metric_names: Vec<String>,
     /// Structured `[T, B, …]` observation shapes from the artifact ABI.
     obs_dims: Vec<Vec<usize>>,

@@ -31,6 +31,7 @@
 
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
@@ -366,6 +367,14 @@ pub struct WorkerPool {
     /// arrival order. Uncontended in a single driver (one phase at a
     /// time), but it makes the `&self` API sound.
     phase_guard: FifoLock,
+    /// Scheduling hint set by the pack orchestrator: when several seed
+    /// driver threads share this pool, engines must not hold the phase
+    /// lock across a device forward (it would serialize every other
+    /// driver's host sweep behind the device call) — they run the
+    /// forward outside any phase and fuse the writeback into the step
+    /// phase instead. Purely a scheduling mode: results are
+    /// bit-identical either way (pinned by `rollout_determinism`).
+    multi_driver: AtomicBool,
     threads: usize,
     handles: Vec<thread::JoinHandle<()>>,
 }
@@ -394,7 +403,13 @@ impl WorkerPool {
                 .expect("spawning rollout worker");
             handles.push(h);
         }
-        WorkerPool { shared, phase_guard: FifoLock::new(), threads, handles }
+        WorkerPool {
+            shared,
+            phase_guard: FifoLock::new(),
+            multi_driver: AtomicBool::new(false),
+            threads,
+            handles,
+        }
     }
 
     /// Pool sized to the host (`auto_threads()`).
@@ -404,6 +419,20 @@ impl WorkerPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Declare whether multiple driver threads share this pool (set once
+    /// by the pack orchestrator before training starts). Engines consult
+    /// this to pick the fused schedule that keeps device forwards
+    /// outside the phase lock.
+    pub fn set_multi_driver(&self, on: bool) {
+        self.multi_driver.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the multi-driver schedule is in effect
+    /// (see [`set_multi_driver`](WorkerPool::set_multi_driver)).
+    pub fn multi_driver(&self) -> bool {
+        self.multi_driver.load(Ordering::Relaxed)
     }
 
     /// Run `f(i)` for every `i in 0..n_items`, the calling thread working
@@ -792,6 +821,52 @@ mod tests {
             // prove partial slice overlaps are caught.
             let _b = unsafe { acc.slice_mut(2, 4) };
         });
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "overlapping claim")]
+    fn race_detector_catches_fused_phase_column_overlap() {
+        // Shape of the engine's fused writeback+step phase (multi-driver
+        // packs): each column writes an obs row *slice* plus a scalar
+        // through two access objects in one closure. A mis-partition
+        // that hands two threads the same column must trip on the row
+        // slice even when the scalar claims stay disjoint.
+        let comp = 4;
+        let mut obs = vec![0f32; 4 * comp];
+        let mut scalars = vec![0f32; 4];
+        let obs_acc = ColumnAccess::new(&mut obs[..]);
+        let sc_acc = ColumnAccess::new(&mut scalars[..]);
+        thread::scope(|s| {
+            s.spawn(|| {
+                // SAFETY: the seed claim — this thread alone owns column
+                // 1's obs row and scalar at this point.
+                unsafe {
+                    obs_acc.slice_mut(comp, comp)[0] = 1.0;
+                    *sc_acc.get_mut(1) = 1.0;
+                }
+            })
+            .join()
+            .unwrap();
+            // SAFETY: scalar 3 is genuinely disjoint — must not panic.
+            unsafe {
+                *sc_acc.get_mut(3) = 2.0;
+            }
+            // SAFETY: deliberately re-claims column 1's obs row from a
+            // second thread to prove the fused phase's slice writes are
+            // covered by the detector.
+            let _overlap = unsafe { obs_acc.slice_mut(comp, comp) };
+        });
+    }
+
+    #[test]
+    fn multi_driver_flag_round_trips() {
+        let pool = WorkerPool::new(1);
+        assert!(!pool.multi_driver(), "pools default to single-driver");
+        pool.set_multi_driver(true);
+        assert!(pool.multi_driver());
+        pool.set_multi_driver(false);
+        assert!(!pool.multi_driver());
     }
 
     #[test]

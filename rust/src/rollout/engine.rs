@@ -12,12 +12,23 @@
 //!    and `env.step()` it, again column-parallel, writing trajectory
 //!    scalars in place.
 //!
-//! Forward outputs land in engine-owned reusable buffers
-//! ([`PolicyModel::forward_into`]), so the per-step heap traffic is the
-//! PJRT literal staging alone. Per-column [`Pcg64`] streams make every
-//! result bit-identical at any thread count (see `rollout/actors.rs`).
+//! When several seed drivers share one pool
+//! ([`WorkerPool::multi_driver`]), phase 2 would hold the pool's phase
+//! lock across the device call and serialize every other driver behind
+//! it; the engine instead runs the forward *outside* any pool phase and
+//! fuses the writeback into phase 3, so one seed's device forward
+//! overlaps every other seed's host column sweep. Both schedules write
+//! the same bytes from the same per-column RNG draws, so results are
+//! bit-identical across modes (and at any thread count — see
+//! `rollout/actors.rs`).
+//!
+//! Forward staging is device-resident-style: a [`ForwardWorkspace`]
+//! keeps the parameter + observation literals alive between steps
+//! (write-into instead of realloc-and-upload), and outputs land in
+//! engine-owned reusable buffers ([`PolicyModel::forward_into`]).
+//! [`PhaseTimers`] counts per-phase wall time (via the sanctioned
+//! [`Stopwatch`]) so the overlap is observable in `metrics.csv`.
 
-use std::rc::Rc;
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Result};
@@ -26,9 +37,54 @@ use super::actors::{ColumnAccess, ColumnRngs, WorkerPool};
 use super::sampler;
 use super::storage::Trajectory;
 use crate::env::UnderspecifiedEnv;
+use crate::metrics::Stopwatch;
 use crate::runtime::executor::Executable;
 use crate::util::rng::Pcg64;
 use crate::util::tensor::TensorF32;
+
+/// Reusable staged-argument state for [`PolicyModel::forward_into`]: the
+/// parameter and observation literals stay alive between steps, so the
+/// hot path refills them in place (`Literal::copy_from` /
+/// `copy_from_literal`) instead of re-cloning the parameters and
+/// re-uploading fresh observation literals on every single forward call.
+/// With a real device binding these become resident device buffers; the
+/// vendored stub's in-place update API keeps the swap a drop-in.
+#[derive(Default)]
+pub struct ForwardWorkspace {
+    /// Staged call arguments: `[params.., obs..]` in artifact input order.
+    args: Vec<xla::Literal>,
+    /// How many leading `args` are parameters (the split point).
+    n_params: usize,
+}
+
+/// Cumulative per-phase wall times in nanoseconds — the observability
+/// needed to verify the forward/host overlap actually overlaps. Purely
+/// informational: read from the sanctioned [`Stopwatch`], and nothing in
+/// the training path depends on the values.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTimers {
+    /// Observe-staging phase.
+    pub stage_ns: u64,
+    /// Device forward calls.
+    pub forward_ns: u64,
+    /// Action-sampling + env-step phase. In multi-driver mode this is
+    /// the fused writeback+step phase, so the writeback cost lands here
+    /// and `writeback_ns` stays 0.
+    pub step_ns: u64,
+    /// Time the overlapped writeback phase ran *beyond* the forward call
+    /// it overlaps with (single-driver mode; 0 when fully hidden).
+    pub writeback_ns: u64,
+}
+
+impl PhaseTimers {
+    /// Fold another engine's counters in (PAIRED sums its engines).
+    pub fn accumulate(&mut self, o: PhaseTimers) {
+        self.stage_ns += o.stage_ns;
+        self.forward_ns += o.forward_ns;
+        self.step_ns += o.step_ns;
+        self.writeback_ns += o.writeback_ns;
+    }
+}
 
 /// A batched policy: anything that maps staged `[B, comp]` observation
 /// tensors to `logits [B*A]` / `values [B]`, writing into caller-owned
@@ -39,35 +95,60 @@ use crate::util::tensor::TensorF32;
 pub trait PolicyModel {
     fn num_actions(&self) -> usize;
 
-    /// Batched forward into reusable buffers (cleared and refilled).
+    /// Batched forward into reusable buffers (cleared and refilled),
+    /// staging arguments through the caller's [`ForwardWorkspace`] (kept
+    /// alive between steps; backends that don't stage literals ignore it).
     fn forward_into(
         &self,
         obs: &[TensorF32],
+        ws: &mut ForwardWorkspace,
         logits: &mut Vec<f32>,
         values: &mut Vec<f32>,
     ) -> Result<()>;
 }
 
 /// A policy backed by an `*_apply_b{B}` artifact plus its parameters.
+/// The executable is `Arc`-shared so pack driver threads can each hold
+/// the same compiled artifact.
 pub struct Policy<'p> {
-    pub apply: Rc<Executable>,
+    pub apply: Arc<Executable>,
     pub params: &'p [xla::Literal],
     pub num_actions: usize,
 }
 
 impl Policy<'_> {
     /// Allocation-per-call convenience wrapper over
-    /// [`forward_into`](PolicyModel::forward_into).
+    /// [`forward_into`](PolicyModel::forward_into) (cold workspace each
+    /// call — use an engine-held workspace on hot paths).
     pub fn forward(&self, obs: &[TensorF32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut ws = ForwardWorkspace::default();
         let mut logits = Vec::new();
         let mut values = Vec::new();
-        self.forward_buffers(obs, &mut logits, &mut values)?;
+        self.forward_buffers(obs, &mut ws, &mut logits, &mut values)?;
         Ok((logits, values))
+    }
+
+    /// Refill a matching workspace in place; `false` means a shape/dtype
+    /// drift (different policy geometry) and the caller must rebuild.
+    fn refresh_workspace(&self, obs: &[TensorF32], ws: &mut ForwardWorkspace) -> bool {
+        let p = self.params.len();
+        for (dst, src) in ws.args[..p].iter_mut().zip(self.params) {
+            if dst.copy_from_literal(src).is_err() {
+                return false;
+            }
+        }
+        for (dst, o) in ws.args[p..].iter_mut().zip(obs) {
+            if dst.copy_from(o.data()).is_err() {
+                return false;
+            }
+        }
+        true
     }
 
     fn forward_buffers(
         &self,
         obs: &[TensorF32],
+        ws: &mut ForwardWorkspace,
         logits: &mut Vec<f32>,
         values: &mut Vec<f32>,
     ) -> Result<()> {
@@ -79,19 +160,27 @@ impl Policy<'_> {
                 self.apply.def.name, n_in, p, obs.len()
             );
         }
-        let mut args: Vec<xla::Literal> = Vec::with_capacity(n_in);
-        args.extend(self.params.iter().cloned());
-        for (o, spec) in obs.iter().zip(&self.apply.def.inputs[p..]) {
-            args.push(o.to_literal_as(&spec.shape)?);
+        // Hot path: the workspace already stages literals of this exact
+        // geometry — overwrite them in place (no allocation, no clone).
+        // Any mismatch (first call, or a different policy geometry
+        // reusing the workspace) falls through to a full rebuild.
+        let hot =
+            ws.n_params == p && ws.args.len() == n_in && self.refresh_workspace(obs, ws);
+        if !hot {
+            ws.args.clear();
+            ws.args.reserve(n_in);
+            ws.args.extend(self.params.iter().cloned());
+            for (o, spec) in obs.iter().zip(&self.apply.def.inputs[p..]) {
+                ws.args.push(o.to_literal_as(&spec.shape)?);
+            }
+            ws.n_params = p;
         }
-        let out = self.apply.call(&args)?;
-        // `Literal::to_vec` must copy off the device, so the output fetch
-        // allocates once per call; move the fetched buffers into the
-        // caller's slots instead of copying a second time. (Removing the
-        // fetch allocation entirely needs device-resident buffers — see
-        // ROADMAP open items.)
-        *logits = out[0].to_vec::<f32>()?;
-        *values = out[1].to_vec::<f32>()?;
+        let out = self.apply.call(&ws.args)?;
+        // `to_vec_into` copies off the device into the caller's reusable
+        // buffers — no per-call output allocation once the buffers have
+        // grown to size.
+        out[0].to_vec_into(logits)?;
+        out[1].to_vec_into(values)?;
         Ok(())
     }
 }
@@ -104,10 +193,11 @@ impl PolicyModel for Policy<'_> {
     fn forward_into(
         &self,
         obs: &[TensorF32],
+        ws: &mut ForwardWorkspace,
         logits: &mut Vec<f32>,
         values: &mut Vec<f32>,
     ) -> Result<()> {
-        self.forward_buffers(obs, logits, values)
+        self.forward_buffers(obs, ws, logits, values)
     }
 }
 
@@ -140,10 +230,14 @@ pub struct RolloutEngine {
     /// Reusable forward-output buffers.
     logits_buf: Vec<f32>,
     values_buf: Vec<f32>,
+    /// Resident forward-argument staging, reused across steps.
+    ws: ForwardWorkspace,
     /// Per-column RNG streams, reseeded per rollout.
     rngs: ColumnRngs,
     pool: Arc<WorkerPool>,
     forward_passes: u64,
+    /// Per-phase wall-time counters since the last `take_timers`.
+    timers: PhaseTimers,
 }
 
 impl RolloutEngine {
@@ -168,9 +262,11 @@ impl RolloutEngine {
             obs_components,
             logits_buf: Vec::new(),
             values_buf: Vec::new(),
+            ws: ForwardWorkspace::default(),
             rngs: ColumnRngs::new(b),
             pool,
             forward_passes: 0,
+            timers: PhaseTimers::default(),
         }
     }
 
@@ -185,8 +281,16 @@ impl RolloutEngine {
         &self.pool
     }
 
+    /// Per-phase wall-time counters accumulated since the last call,
+    /// resetting them to zero (drivers drain these into `metrics.csv`
+    /// once per cycle).
+    pub fn take_timers(&mut self) -> PhaseTimers {
+        std::mem::take(&mut self.timers)
+    }
+
     /// Phase 1: observe all columns into the step staging tensors.
     fn stage_obs<E: UnderspecifiedEnv>(&mut self, env: &E, states: &mut [E::State]) {
+        let sw = Stopwatch::new();
         let b = self.b;
         debug_assert_eq!(states.len(), b);
         let comps: &[usize] = &self.obs_components;
@@ -214,10 +318,26 @@ impl RolloutEngine {
                 off += comp;
             }
         });
+        self.timers.stage_ns += sw.elapsed_ns();
     }
 
-    /// Phase 2: run the device forward on the calling thread while the
-    /// workers copy the staged observation row into trajectory row `t`.
+    /// One device forward outside any pool phase: the bootstrap value
+    /// pass, the episode runners, and the multi-driver collect schedule
+    /// (where holding the pool's phase lock across the device call would
+    /// stall every other driver).
+    fn forward_direct<P: PolicyModel>(&mut self, policy: &P) -> Result<()> {
+        let sw = Stopwatch::new();
+        policy.forward_into(
+            &self.obs_step, &mut self.ws, &mut self.logits_buf, &mut self.values_buf,
+        )?;
+        self.forward_passes += 1;
+        self.timers.forward_ns += sw.elapsed_ns();
+        Ok(())
+    }
+
+    /// Phase 2 (single-driver): run the device forward on the calling
+    /// thread while the workers copy the staged observation row into
+    /// trajectory row `t`.
     fn forward_with_writeback<P: PolicyModel>(
         &mut self, policy: &P, traj: &mut Trajectory, t: usize,
     ) -> Result<()> {
@@ -231,6 +351,9 @@ impl RolloutEngine {
             .collect();
         let logits = &mut self.logits_buf;
         let values = &mut self.values_buf;
+        let ws = &mut self.ws;
+        let mut fwd_ns = 0u64;
+        let phase = Stopwatch::new();
         let res = self.pool.run_overlapped(
             b,
             |bi| {
@@ -243,18 +366,28 @@ impl RolloutEngine {
                     dst.copy_from_slice(src);
                 }
             },
-            || policy.forward_into(obs_step, logits, values),
+            || {
+                let sw = Stopwatch::new();
+                let r = policy.forward_into(obs_step, ws, logits, values);
+                fwd_ns = sw.elapsed_ns();
+                r
+            },
         );
         self.forward_passes += 1;
+        self.timers.forward_ns += fwd_ns;
+        // The writeback sweep is hidden behind the forward; only the
+        // tail it ran beyond the device call is real wall time.
+        self.timers.writeback_ns += phase.elapsed_ns().saturating_sub(fwd_ns);
         res
     }
 
-    /// Phase 3: per-column action sampling + env step + trajectory
-    /// scalar writes.
+    /// Phase 3 (single-driver): per-column action sampling + env step +
+    /// trajectory scalar writes.
     fn step_into_traj<E: UnderspecifiedEnv>(
         &mut self, env: &E, states: &mut [E::State], traj: &mut Trajectory, t: usize,
         a: usize,
     ) {
+        let sw = Stopwatch::new();
         let b = self.b;
         let logits: &[f32] = &self.logits_buf;
         let values: &[f32] = &self.values_buf;
@@ -285,6 +418,70 @@ impl RolloutEngine {
                 *done_acc.get_mut(i) = if step.done { 1.0 } else { 0.0 };
             }
         });
+        self.timers.step_ns += sw.elapsed_ns();
+    }
+
+    /// Phases 2b+3 fused (multi-driver): the trajectory-obs writeback
+    /// folded into the act/step sweep as a single pool phase, run after
+    /// [`forward_direct`](Self::forward_direct) already produced the
+    /// logits outside the pool's phase lock. Writes exactly the bytes
+    /// the overlapped schedule writes — same disjoint per-column
+    /// locations, same per-column RNG draw order — so results stay
+    /// bit-identical across driver modes (pinned by
+    /// `rollout_determinism`).
+    fn fused_writeback_step<E: UnderspecifiedEnv>(
+        &mut self, env: &E, states: &mut [E::State], traj: &mut Trajectory, t: usize,
+        a: usize,
+    ) {
+        let sw = Stopwatch::new();
+        let b = self.b;
+        let comps: &[usize] = &self.obs_components;
+        let obs_step: &[TensorF32] = &self.obs_step;
+        let logits: &[f32] = &self.logits_buf;
+        let values: &[f32] = &self.values_buf;
+        let rng_acc = ColumnAccess::new(self.rngs.streams_mut());
+        let st_acc = ColumnAccess::new(states);
+        let traj_obs_acc: Vec<ColumnAccess<f32>> = traj
+            .obs
+            .iter_mut()
+            .map(|o| ColumnAccess::new(o.data_mut()))
+            .collect();
+        let act_acc = ColumnAccess::new(traj.actions.data_mut());
+        let logp_acc = ColumnAccess::new(traj.logp.data_mut());
+        let val_acc = ColumnAccess::new(traj.values.data_mut());
+        let rew_acc = ColumnAccess::new(traj.rewards.data_mut());
+        let done_acc = ColumnAccess::new(traj.dones.data_mut());
+        self.pool.run(b, |bi| {
+            for (k, &comp) in comps.iter().enumerate() {
+                let src = &obs_step[k].data()[bi * comp..(bi + 1) * comp];
+                // SAFETY: trajectory row `t`, column `bi` — disjoint
+                // ranges across columns (debug claim map checks), and
+                // `obs_step` is read-only within this phase.
+                let dst = unsafe { traj_obs_acc[k].slice_mut((t * b + bi) * comp, comp) };
+                dst.copy_from_slice(src);
+            }
+            // SAFETY: column `bi` is visited by exactly one shard per
+            // phase, so its RNG stream has no other user.
+            let rng = unsafe { rng_acc.get_mut(bi) };
+            // SAFETY: same per-column disjointness for the env state.
+            let state = unsafe { st_acc.get_mut(bi) };
+            let row = &logits[bi * a..(bi + 1) * a];
+            let (action, lp) = sampler::sample_action(row, rng);
+            let step = env.step(state, action, rng);
+            let i = t * b + bi;
+            // SAFETY: trajectory scalars at `[t, bi]` — index `i` is
+            // unique to this column within the phase.
+            unsafe {
+                *act_acc.get_mut(i) = action as i32;
+                *logp_acc.get_mut(i) = lp;
+                *val_acc.get_mut(i) = values[bi];
+                *rew_acc.get_mut(i) = step.reward;
+                *done_acc.get_mut(i) = if step.done { 1.0 } else { 0.0 };
+            }
+        });
+        // Fused mode folds the writeback into this phase, so its cost
+        // lands in `step_ns` and `writeback_ns` stays 0.
+        self.timers.step_ns += sw.elapsed_ns();
     }
 
     fn check_forward_shape(&self, a: usize) -> Result<()> {
@@ -300,7 +497,10 @@ impl RolloutEngine {
 
     /// Collect a fixed-length `[T, B]` rollout into `traj`, stepping the
     /// given states in place. `rng` only seeds the per-column streams (one
-    /// `next_u64` draw), so results are bit-identical at any pool size.
+    /// `next_u64` draw), so results are bit-identical at any pool size —
+    /// and across driver modes: with [`WorkerPool::multi_driver`] set the
+    /// forward runs outside the pool's phase lock and the writeback fuses
+    /// into the step phase, but the data written is identical.
     pub fn collect<E: UnderspecifiedEnv, P: PolicyModel>(
         &mut self, env: &E, states: &mut [E::State], policy: &P,
         traj: &mut Trajectory, rng: &mut Pcg64,
@@ -311,16 +511,22 @@ impl RolloutEngine {
         let a = policy.num_actions();
         self.rngs.reseed(rng.next_u64());
         self.forward_passes = 0;
+        let fused = self.pool.multi_driver();
         for t in 0..t_len {
             self.stage_obs(env, states);
-            self.forward_with_writeback(policy, traj, t)?;
-            self.check_forward_shape(a)?;
-            self.step_into_traj(env, states, traj, t, a);
+            if fused {
+                self.forward_direct(policy)?;
+                self.check_forward_shape(a)?;
+                self.fused_writeback_step(env, states, traj, t, a);
+            } else {
+                self.forward_with_writeback(policy, traj, t)?;
+                self.check_forward_shape(a)?;
+                self.step_into_traj(env, states, traj, t, a);
+            }
         }
         // Bootstrap values for the post-rollout states.
         self.stage_obs(env, states);
-        policy.forward_into(&self.obs_step, &mut self.logits_buf, &mut self.values_buf)?;
-        self.forward_passes += 1;
+        self.forward_direct(policy)?;
         self.check_forward_shape(a)?;
         traj.last_value.data_mut().copy_from_slice(&self.values_buf);
         Ok(())
@@ -350,8 +556,7 @@ impl RolloutEngine {
                 break;
             }
             self.stage_obs(env, states);
-            policy.forward_into(&self.obs_step, &mut self.logits_buf, &mut self.values_buf)?;
-            self.forward_passes += 1;
+            self.forward_direct(policy)?;
             self.check_forward_shape(a)?;
             self.step_episode_columns(env, states, rngs, &mut live, &mut outcomes, greedy, a);
         }
@@ -363,6 +568,7 @@ impl RolloutEngine {
         &mut self, env: &E, states: &mut [E::State], rngs: &mut [Pcg64],
         live: &mut [bool], outcomes: &mut [EpisodeOutcome], greedy: bool, a: usize,
     ) {
+        let sw = Stopwatch::new();
         let logits: &[f32] = &self.logits_buf;
         let rng_acc = ColumnAccess::new(rngs);
         let st_acc = ColumnAccess::new(states);
@@ -395,6 +601,7 @@ impl RolloutEngine {
                 *alive = false;
             }
         });
+        self.timers.step_ns += sw.elapsed_ns();
     }
 
     /// Work-queue episode runner: completes `n_episodes` episodes while
@@ -448,8 +655,7 @@ impl RolloutEngine {
 
         while meta.iter().any(|m| m.live) {
             self.stage_obs(env, &mut states);
-            policy.forward_into(&self.obs_step, &mut self.logits_buf, &mut self.values_buf)?;
-            self.forward_passes += 1;
+            self.forward_direct(policy)?;
             self.check_forward_shape(a)?;
             self.step_queue_columns(
                 env, &mut states, &mut rngs, &mut meta, &mut outcomes, greedy, a, max_steps,
@@ -480,6 +686,7 @@ impl RolloutEngine {
         meta: &mut [SlotMeta], outcomes: &mut [EpisodeOutcome], greedy: bool, a: usize,
         max_steps: usize,
     ) {
+        let sw = Stopwatch::new();
         let logits: &[f32] = &self.logits_buf;
         let rng_acc = ColumnAccess::new(rngs);
         let st_acc = ColumnAccess::new(states);
@@ -516,5 +723,6 @@ impl RolloutEngine {
                 m.live = false;
             }
         });
+        self.timers.step_ns += sw.elapsed_ns();
     }
 }

@@ -52,12 +52,24 @@
 //! determinism suite asserts they produce identical per-level results.
 //!
 //! All host-side staging is reused: observation staging tensors, the
-//! per-column flat buffers, and the logits/values buffers are owned by
-//! the engine; trajectory tensors are written in place. Per-step heap
-//! traffic is dominated by the PJRT boundary — literal staging in and the
-//! `to_vec` output fetch — which device-resident buffers would remove
-//! (ROADMAP open item); beyond that, each parallel phase builds a few
-//! element-sized accessor `Vec`s, noise next to the device call.
+//! per-column flat buffers, the logits/values buffers, *and* the staged
+//! forward-argument literals (a [`ForwardWorkspace`] per engine, refilled
+//! in place each step instead of realloc-and-upload) are owned by the
+//! engine; trajectory tensors are written in place. Beyond that, each
+//! parallel phase builds a few element-sized accessor `Vec`s, noise next
+//! to the device call.
+//!
+//! # Seed packs: multi-driver scheduling
+//!
+//! A seed pack gives every seed its own driver thread over one shared
+//! pool. Because a pool phase holds the FIFO phase lock, the overlapped
+//! phase-2 schedule would pin the lock across the device forward and
+//! stall every other driver; [`WorkerPool::set_multi_driver`] therefore
+//! switches engines to a fused schedule — forward outside any phase,
+//! writeback folded into the step phase — so one seed's device call
+//! overlaps every other seed's host sweep. Both schedules are
+//! bit-identical; [`PhaseTimers`] (surfaced as `metrics.csv` columns)
+//! makes the overlap observable.
 
 pub mod actors;
 pub mod engine;
@@ -66,6 +78,8 @@ pub mod storage;
 pub mod synthetic;
 
 pub use actors::{auto_threads, race_detector_enabled, ColumnRngs, WorkerPool};
-pub use engine::{EpisodeOutcome, Policy, PolicyModel, RolloutEngine};
+pub use engine::{
+    EpisodeOutcome, ForwardWorkspace, PhaseTimers, Policy, PolicyModel, RolloutEngine,
+};
 pub use storage::{EpisodeStats, Trajectory};
 pub use synthetic::SyntheticPolicy;

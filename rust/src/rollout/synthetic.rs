@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use super::engine::PolicyModel;
+use super::engine::{ForwardWorkspace, PolicyModel};
 use crate::util::tensor::TensorF32;
 
 /// Deterministic row-independent linear policy.
@@ -37,9 +37,11 @@ impl PolicyModel for SyntheticPolicy {
     fn forward_into(
         &self,
         obs: &[TensorF32],
+        _ws: &mut ForwardWorkspace,
         logits: &mut Vec<f32>,
         values: &mut Vec<f32>,
     ) -> Result<()> {
+        // No device boundary — nothing to stage in the workspace.
         let b = obs[0].shape()[0];
         logits.clear();
         values.clear();
@@ -78,8 +80,9 @@ mod tests {
             obs.set(&[1, i], 1.0 - i as f32 * 0.2);
             obs.set(&[3, i], 1.0 - i as f32 * 0.2);
         }
+        let mut ws = ForwardWorkspace::default();
         let (mut l1, mut v1) = (Vec::new(), Vec::new());
-        p.forward_into(&[obs.clone()], &mut l1, &mut v1).unwrap();
+        p.forward_into(&[obs.clone()], &mut ws, &mut l1, &mut v1).unwrap();
         assert_eq!(l1.len(), 12);
         assert_eq!(v1.len(), 4);
         assert_eq!(l1[0..3], l1[6..9], "identical rows must give identical logits");
@@ -87,7 +90,7 @@ mod tests {
         assert_ne!(l1[0..3], l1[3..6], "distinct rows should differ");
         // repeat call: bit-identical, buffers reused
         let (mut l2, mut v2) = (Vec::new(), Vec::new());
-        p.forward_into(&[obs], &mut l2, &mut v2).unwrap();
+        p.forward_into(&[obs], &mut ws, &mut l2, &mut v2).unwrap();
         assert_eq!(l1, l2);
         assert_eq!(v1, v2);
     }

@@ -13,7 +13,7 @@ pub mod params;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -26,7 +26,7 @@ pub use params::ParamSet;
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: RefCell<HashMap<String, Arc<Executable>>>,
 }
 
 impl Runtime {
@@ -77,17 +77,19 @@ impl Runtime {
     /// [`load`](Runtime::load) through [`resolve_name`](Runtime::resolve_name).
     pub fn load_scoped(
         &self, prefix: Option<&str>, base: &str,
-    ) -> Result<Rc<Executable>> {
+    ) -> Result<Arc<Executable>> {
         self.load(&self.resolve_name(prefix, base))
     }
 
     /// Fetch (compiling + caching on first use) an artifact by name.
-    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+    /// Executables are `Arc`-shared so seed-pack driver threads can each
+    /// hold the same compiled artifact (`TrainSeedRun` is `Send`).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
         if let Some(e) = self.cache.borrow().get(name) {
             return Ok(e.clone());
         }
         let def = self.manifest.artifact(name)?;
-        let exe = Rc::new(Executable::compile(&self.client, def, &self.manifest.dir)?);
+        let exe = Arc::new(Executable::compile(&self.client, def, &self.manifest.dir)?);
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }

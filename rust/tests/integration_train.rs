@@ -184,7 +184,8 @@ fn seed_pack_matches_solo_run() {
     assert_eq!(agg.trim().lines().count(), 6 + 1, "aggregate rows");
 
     // seed 3 inside the pack == seed 3 alone: final eval and every
-    // deterministic CSV column (steps_per_sec is wallclock, so stripped)
+    // deterministic CSV column (steps_per_sec and the four phase-timer
+    // ns columns are wallclock-derived, so stripped)
     let mut solo_cfg = cfg_for(Algo::Dr, 6, "pack_solo");
     solo_cfg.seed = 3;
     let solo = train(&rt, &solo_cfg, true).unwrap();
@@ -196,19 +197,23 @@ fn seed_pack_matches_solo_run() {
         solo.final_eval.iqm_solve_rate,
         pack.outcomes[2].final_eval.iqm_solve_rate
     );
-    let strip_sps = |p: &std::path::Path| -> String {
+    let strip_wallclock = |p: &std::path::Path| -> String {
         std::fs::read_to_string(p)
             .unwrap()
             .trim()
             .lines()
-            .map(|l| l.rsplit_once(',').unwrap().0.to_string())
+            .map(|l| {
+                let cols: Vec<&str> = l.split(',').collect();
+                assert!(cols.len() > 5, "metrics.csv narrower than expected");
+                cols[..cols.len() - 5].join(",")
+            })
             .collect::<Vec<_>>()
             .join("\n")
     };
     let pack_csv = std::path::Path::new(&cfg.out_dir).join("dr_s3").join("metrics.csv");
     let solo_csv =
         std::path::Path::new(&solo_cfg.out_dir).join("dr_s3").join("metrics.csv");
-    assert_eq!(strip_sps(&pack_csv), strip_sps(&solo_csv));
+    assert_eq!(strip_wallclock(&pack_csv), strip_wallclock(&solo_csv));
     // both checkpoints exist and are byte-identical
     let pack_ckpt =
         std::fs::read(std::path::Path::new(&cfg.out_dir).join("dr_s3").join("student.ckpt"))

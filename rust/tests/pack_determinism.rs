@@ -3,13 +3,18 @@
 //! fallback path without `make artifacts`.
 //!
 //! Pins the orchestrator's acceptance invariant: seed *s* trained inside
-//! a pack (`--seeds 0..N` semantics: N units interleaved cycle-by-cycle
-//! over ONE shared `WorkerPool`) is bit-identical to seed *s* trained
-//! alone — same per-cycle metrics, same final level-sampler contents — at
-//! any `--rollout-threads` count, on both registered env families. The
-//! units here run a PLR-shaped loop (generate/replay → rollout → score →
-//! buffer) through the real engine, sampler, and orchestrator core; only
-//! the PPO/PJRT layer is substituted.
+//! a pack (`--seeds 0..N` semantics: N units stepped over ONE shared
+//! `WorkerPool`) is bit-identical to seed *s* trained alone — same
+//! per-cycle metrics, same final level-sampler contents — at any
+//! `--rollout-threads` count *and any `--drivers` count* (multi-driver
+//! packs put the pool in fused multi-driver mode, exactly as
+//! `train_pack_family` does, so the fused engine schedule is exercised
+//! here too), on both registered env families. The units run a PLR-shaped
+//! loop (generate/replay → rollout → score → buffer) through the real
+//! engine, sampler, and orchestrator core; only the PPO/PJRT layer is
+//! substituted. Also pins the abort contract: a mid-pack `step_cycle`
+//! failure flushes every unit's sinks and leaves only complete aggregate
+//! rows behind.
 
 use std::sync::Arc;
 
@@ -176,12 +181,15 @@ fn run_solo<F: EnvFamily>(family: F, seed: u64, threads: usize) -> (Vec<Row>, Sa
 }
 
 /// Train a pack of seeds over one shared pool through the orchestrator
-/// core (including the cross-seed aggregate sink); returns per-seed
-/// bit-exact histories plus the aggregate CSV text.
+/// core (including the cross-seed aggregate sink), on `drivers` driver
+/// threads; returns per-seed bit-exact histories plus the aggregate CSV
+/// text. Mirrors `train_pack_family`: a multi-driver pack switches the
+/// pool to the fused engine schedule.
 fn run_packed<F: EnvFamily>(
-    family: F, seeds: &[u64], threads: usize, label: &str,
+    family: F, seeds: &[u64], threads: usize, drivers: usize, label: &str,
 ) -> (Vec<(Vec<Row>, SamplerDump)>, String) {
     let pool = Arc::new(WorkerPool::new(threads));
+    pool.set_multi_driver(drivers > 1);
     let mut units: Vec<SyntheticSeedRun<F>> = seeds
         .iter()
         .map(|&s| SyntheticSeedRun::new(family, s, pool.clone()))
@@ -191,7 +199,7 @@ fn run_packed<F: EnvFamily>(
     let csv_path = dir.join("aggregate.csv");
     let mut aggregate =
         CrossSeedSink::create(&csv_path, PACK_AGGREGATE_METRICS, seeds.len()).unwrap();
-    run_pack(&mut units, &mut aggregate).unwrap();
+    run_pack(&mut units, &mut aggregate, drivers).unwrap();
     aggregate.flush().unwrap();
     let histories = units
         .iter()
@@ -203,23 +211,30 @@ fn run_packed<F: EnvFamily>(
 fn check_pack_vs_solo<F: EnvFamily>(family: F) {
     let id = family.id();
     let seeds = [0u64, 1, 2, 3];
-    // pack at two thread counts, solo at two thread counts
-    let (pack1, csv1) = run_packed(family, &seeds, 1, &format!("{id}_t1"));
-    let (pack4, csv4) = run_packed(family, &seeds, 4, &format!("{id}_t4"));
+    // the full drivers × rollout-threads grid, every cell vs solo
+    let (base, csv_base) = run_packed(family, &seeds, 1, 1, &format!("{id}_t1_d1"));
+    for (threads, drivers) in [(4, 1), (1, 4), (4, 4), (4, 2)] {
+        let label = format!("{id}_t{threads}_d{drivers}");
+        let (pack, csv) = run_packed(family, &seeds, threads, drivers, &label);
+        assert_eq!(
+            pack, base,
+            "[{id}] pack not invariant at threads={threads} drivers={drivers}"
+        );
+        assert_eq!(
+            csv, csv_base,
+            "[{id}] aggregate CSV not invariant at threads={threads} drivers={drivers}"
+        );
+    }
     for (si, &seed) in seeds.iter().enumerate() {
         let solo1 = run_solo(family, seed, 1);
         let solo4 = run_solo(family, seed, 4);
         assert_eq!(
-            pack1[si].0, solo1.0,
+            base[si].0, solo1.0,
             "[{id}] seed {seed}: pack metrics != solo metrics"
         );
         assert_eq!(
-            pack1[si].1, solo1.1,
+            base[si].1, solo1.1,
             "[{id}] seed {seed}: pack sampler != solo sampler"
-        );
-        assert_eq!(
-            pack4[si], pack1[si],
-            "[{id}] seed {seed}: pack not thread-invariant"
         );
         assert_eq!(
             solo4, solo1,
@@ -228,10 +243,9 @@ fn check_pack_vs_solo<F: EnvFamily>(family: F) {
     }
     // distinct seeds must actually differ (the pack isn't training one
     // seed four times)
-    assert_ne!(pack1[0].1, pack1[3].1, "[{id}] seeds 0 and 3 identical");
-    // the aggregate CSV is deterministic too, and shaped as documented
-    assert_eq!(csv1, csv4, "[{id}] aggregate CSV not thread-invariant");
-    let lines: Vec<&str> = csv1.trim().lines().collect();
+    assert_ne!(base[0].1, base[3].1, "[{id}] seeds 0 and 3 identical");
+    // the aggregate CSV is shaped as documented
+    let lines: Vec<&str> = csv_base.trim().lines().collect();
     assert_eq!(lines.len(), CYCLES + 1, "[{id}] one aggregate row per cycle");
     let header_cols = lines[0].split(',').count();
     assert_eq!(header_cols, 2 + 3 * PACK_AGGREGATE_METRICS.len());
@@ -250,7 +264,70 @@ fn pack_is_bit_identical_to_solo_lava() {
 
 #[test]
 fn pack_of_one_matches_solo() {
-    let (pack, _) = run_packed(MazeFamily, &[5], 2, "maze_single");
+    // an oversized --drivers request clamps to the pack size
+    let (pack, _) = run_packed(MazeFamily, &[5], 2, 4, "maze_single");
     let solo = run_solo(MazeFamily, 5, 2);
     assert_eq!(pack[0], solo);
+}
+
+/// A unit that fails at a chosen cycle, recording whether the
+/// orchestrator flushed it on the abort path.
+struct FlakyUnit {
+    cycle: usize,
+    fail_at: Option<usize>,
+    flushed: bool,
+}
+
+impl SeedUnit for FlakyUnit {
+    fn seed(&self) -> u64 {
+        0
+    }
+
+    fn total_cycles(&self) -> usize {
+        CYCLES
+    }
+
+    fn env_steps(&self) -> u64 {
+        (self.cycle * 100) as u64
+    }
+
+    fn step_cycle(&mut self) -> Result<CycleMetrics> {
+        if self.fail_at == Some(self.cycle) {
+            anyhow::bail!("synthetic mid-pack failure");
+        }
+        self.cycle += 1;
+        Ok(CycleMetrics::default())
+    }
+
+    fn flush_sinks(&mut self) -> Result<()> {
+        self.flushed = true;
+        Ok(())
+    }
+}
+
+#[test]
+fn mid_pack_failure_flushes_sinks_and_keeps_complete_rows() {
+    const FAIL_AT: usize = 8;
+    let mut units = vec![
+        FlakyUnit { cycle: 0, fail_at: None, flushed: false },
+        FlakyUnit { cycle: 0, fail_at: None, flushed: false },
+        FlakyUnit { cycle: 0, fail_at: Some(FAIL_AT), flushed: false },
+        FlakyUnit { cycle: 0, fail_at: None, flushed: false },
+    ];
+    let dir = std::env::temp_dir().join("jaxued_pack_det_abort");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("aggregate.csv");
+    let mut aggregate =
+        CrossSeedSink::create(&csv_path, PACK_AGGREGATE_METRICS, units.len()).unwrap();
+    let err = run_pack(&mut units, &mut aggregate, 2).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("cycle 8"), "error names the failing cycle: {msg}");
+    assert!(msg.contains("synthetic mid-pack failure"), "root cause kept: {msg}");
+    // every unit's sinks were flushed despite the abort
+    assert!(units.iter().all(|u| u.flushed), "abort path must flush all units");
+    // the aggregate holds exactly the complete cycles (0..FAIL_AT), all
+    // flushed to disk
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    let lines: Vec<&str> = csv.trim().lines().collect();
+    assert_eq!(lines.len(), FAIL_AT + 1, "header + one row per complete cycle");
 }

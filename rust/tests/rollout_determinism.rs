@@ -6,7 +6,10 @@
 //!
 //! 1. `collect` produces bit-identical trajectories and episode stats at
 //!    `--rollout-threads 1` vs 4, on both registered env families;
-//! 2. the work-queue evaluator reproduces the legacy chunked evaluator's
+//! 2. the fused multi-driver collect schedule (forward outside pool
+//!    phases, writeback folded into the step phase) is bit-identical to
+//!    the default overlapped schedule;
+//! 3. the work-queue evaluator reproduces the legacy chunked evaluator's
 //!    per-level solve rates exactly under a fixed seed, at any thread
 //!    count, while issuing no more device forward passes.
 
@@ -21,7 +24,9 @@ use jaxued::util::rng::Pcg64;
 const B: usize = 8;
 const T: usize = 32;
 
-fn collect_rollout<F: EnvFamily>(family: F, threads: usize) -> (Trajectory, Vec<EpisodeStats>) {
+fn collect_rollout_scheduled<F: EnvFamily>(
+    family: F, threads: usize, multi_driver: bool,
+) -> (Trajectory, Vec<EpisodeStats>) {
     let params = EnvParams::default();
     let env = AutoReplayWrapper::new(family.make_env(&params));
     let gen = family.make_generator(&params);
@@ -32,6 +37,7 @@ fn collect_rollout<F: EnvFamily>(family: F, threads: usize) -> (Trajectory, Vec<
         .map(|l| env.reset_to_level(l, &mut rng))
         .collect();
     let pool = Arc::new(WorkerPool::new(threads));
+    pool.set_multi_driver(multi_driver);
     let mut engine = RolloutEngine::with_pool(&env, B, pool);
     let mut traj = Trajectory::new(T, B, &env.obs_components());
     let policy = SyntheticPolicy { num_actions: env.num_actions() };
@@ -40,6 +46,10 @@ fn collect_rollout<F: EnvFamily>(family: F, threads: usize) -> (Trajectory, Vec<
         .unwrap();
     let stats = traj.episode_stats();
     (traj, stats)
+}
+
+fn collect_rollout<F: EnvFamily>(family: F, threads: usize) -> (Trajectory, Vec<EpisodeStats>) {
+    collect_rollout_scheduled(family, threads, false)
 }
 
 fn assert_traj_equal(a: &Trajectory, b: &Trajectory, label: &str) {
@@ -77,6 +87,26 @@ fn collect_is_thread_invariant_maze() {
 #[test]
 fn collect_is_thread_invariant_lava() {
     check_collect_thread_invariant(LavaFamily);
+}
+
+fn check_fused_schedule_matches_overlapped<F: EnvFamily>(family: F) {
+    let id = family.id();
+    let (base, sbase) = collect_rollout_scheduled(family, 1, false);
+    for (threads, multi) in [(1, true), (4, true)] {
+        let (t, s) = collect_rollout_scheduled(family, threads, multi);
+        assert_traj_equal(&base, &t, &format!("{id} fused t{threads}"));
+        assert_eq!(sbase, s, "[{id}] fused episode stats differ at t{threads}");
+    }
+}
+
+#[test]
+fn fused_schedule_matches_overlapped_maze() {
+    check_fused_schedule_matches_overlapped(MazeFamily);
+}
+
+#[test]
+fn fused_schedule_matches_overlapped_lava() {
+    check_fused_schedule_matches_overlapped(LavaFamily);
 }
 
 fn eval_report<F: EnvFamily>(family: F, mode: EvalMode, threads: usize) -> EvalReport {

@@ -60,6 +60,8 @@ pub trait NativeType: Copy {
     fn wrap(v: Vec<Self>) -> Data;
     #[doc(hidden)]
     fn unwrap_slice(d: &Data) -> Option<&[Self]>;
+    #[doc(hidden)]
+    fn unwrap_slice_mut(d: &mut Data) -> Option<&mut [Self]>;
 }
 
 impl NativeType for f32 {
@@ -73,6 +75,13 @@ impl NativeType for f32 {
             _ => None,
         }
     }
+
+    fn unwrap_slice_mut(d: &mut Data) -> Option<&mut [f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
 }
 
 impl NativeType for i32 {
@@ -81,6 +90,13 @@ impl NativeType for i32 {
     }
 
     fn unwrap_slice(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn unwrap_slice_mut(d: &mut Data) -> Option<&mut [i32]> {
         match d {
             Data::I32(v) => Some(v),
             _ => None,
@@ -136,6 +152,59 @@ impl Literal {
         T::unwrap_slice(&self.data)
             .map(|s| s.to_vec())
             .ok_or_else(|| Error::new("literal dtype mismatch in to_vec"))
+    }
+
+    /// Copy the elements into a caller-owned reusable buffer (cleared
+    /// and refilled) — [`to_vec`](Literal::to_vec) without the per-call
+    /// allocation once the buffer has grown to size.
+    pub fn to_vec_into<T: NativeType>(&self, out: &mut Vec<T>) -> Result<()> {
+        let s = T::unwrap_slice(&self.data)
+            .ok_or_else(|| Error::new("literal dtype mismatch in to_vec_into"))?;
+        out.clear();
+        out.extend_from_slice(s);
+        Ok(())
+    }
+
+    /// Overwrite the elements in place (dtype- and length-checked,
+    /// dims unchanged). The resident-buffer staging path: a literal
+    /// uploaded once is refilled each step instead of reallocated — with
+    /// a real binding this becomes a device-buffer update, so the swap
+    /// stays a drop-in.
+    pub fn copy_from<T: NativeType>(&mut self, src: &[T]) -> Result<()> {
+        let dst = T::unwrap_slice_mut(&mut self.data)
+            .ok_or_else(|| Error::new("literal dtype mismatch in copy_from"))?;
+        if dst.len() != src.len() {
+            return Err(Error::new(format!(
+                "copy_from length mismatch: literal holds {} elements, source has {}",
+                dst.len(),
+                src.len()
+            )));
+        }
+        dst.copy_from_slice(src);
+        Ok(())
+    }
+
+    /// Overwrite this literal's elements from another literal of the
+    /// same dims and dtype (tuples rejected) — the in-place analogue of
+    /// cloning a parameter literal into a staged argument slot.
+    pub fn copy_from_literal(&mut self, src: &Literal) -> Result<()> {
+        if self.dims != src.dims {
+            return Err(Error::new(format!(
+                "copy_from_literal dims mismatch: {:?} vs {:?}",
+                self.dims, src.dims
+            )));
+        }
+        match (&mut self.data, &src.data) {
+            (Data::F32(d), Data::F32(s)) if d.len() == s.len() => {
+                d.copy_from_slice(s);
+                Ok(())
+            }
+            (Data::I32(d), Data::I32(s)) if d.len() == s.len() => {
+                d.copy_from_slice(s);
+                Ok(())
+            }
+            _ => Err(Error::new("copy_from_literal dtype/length mismatch")),
+        }
     }
 
     /// Destructure a tuple literal into its members.
@@ -258,6 +327,43 @@ mod tests {
         // vec1 -> reshape(&[]) is the checkpoint-reader scalar path
         let s2 = Literal::vec1(&[0.5f32]).reshape(&[]).unwrap();
         assert_eq!(s2.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn in_place_copy_from() {
+        let mut l = Literal::vec1(&[0.0f32; 4]).reshape(&[2, 2]).unwrap();
+        l.copy_from(&[1.0f32, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        // dims survive the in-place refill
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        // length and dtype mismatches are rejected, data untouched
+        assert!(l.copy_from(&[1.0f32; 3]).is_err());
+        assert!(l.copy_from(&[1i32; 4]).is_err());
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn in_place_copy_from_literal() {
+        let mut dst = Literal::vec1(&[0.0f32; 4]).reshape(&[2, 2]).unwrap();
+        let src = Literal::vec1(&[9.0f32, 8.0, 7.0, 6.0]).reshape(&[2, 2]).unwrap();
+        dst.copy_from_literal(&src).unwrap();
+        assert_eq!(dst.to_vec::<f32>().unwrap(), vec![9.0, 8.0, 7.0, 6.0]);
+        // dims mismatch rejected even at equal element count
+        let flat = Literal::vec1(&[1.0f32; 4]);
+        assert!(dst.copy_from_literal(&flat).is_err());
+        // dtype mismatch rejected
+        let ints = Literal::vec1(&[1i32; 4]).reshape(&[2, 2]).unwrap();
+        assert!(dst.copy_from_literal(&ints).is_err());
+    }
+
+    #[test]
+    fn to_vec_into_reuses_buffer() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        let mut buf = vec![9.0f32; 7];
+        l.to_vec_into(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 2.0]);
+        let mut wrong: Vec<i32> = Vec::new();
+        assert!(l.to_vec_into(&mut wrong).is_err());
     }
 
     #[test]
