@@ -28,11 +28,20 @@
 //!   (`as *const _ as usize`, `.as_ptr() … as usize`): addresses vary
 //!   per run, so address-derived values are nondeterministic.
 //!
+//! Service modules (`serve`) get a scoped profile: they are *not*
+//! deterministic modules (a server's wallclock use — timeouts, latency
+//! metrics — is legitimate, so the `wallclock` rule is exempt there),
+//! but `hash-collections` still applies: the batcher orders batch
+//! columns, and hasher-ordered iteration there would make which request
+//! lands in which column schedule-dependent. Request ordering must stay
+//! FIFO-deterministic, so serve code uses `Vec`/`BTreeMap` only.
+//!
 //! Crate-wide rules:
 //!
 //! * `wallclock` — `Instant::now` / `SystemTime::now`. Real time must
 //!   never feed results; the one sanctioned reader is the metrics
-//!   stopwatch (wallclock CSV column), which carries an allow.
+//!   stopwatch (wallclock CSV column), which carries an allow. Service
+//!   modules are exempt (see above).
 //! * `safety-comment` — every `unsafe` token (block, fn, or
 //!   `unsafe impl`) must carry a `SAFETY`-bearing comment: on the same
 //!   line, in the contiguous comment/attribute block directly above
@@ -61,6 +70,12 @@ use lexer::{Comment, Lexed, Tok, TokKind};
 
 /// Top-level source modules whose results must be bit-reproducible.
 pub const DETERMINISTIC_MODULES: [&str; 5] = ["rollout", "algo", "level_sampler", "ppo", "env"];
+
+/// Top-level source modules that are long-running services: wallclock use
+/// is legitimate there (timeouts, latency metrics), but batch-column
+/// ordering must stay FIFO-deterministic, so `hash-collections` still
+/// applies.
+pub const SERVICE_MODULES: [&str; 1] = ["serve"];
 
 /// Every rule `ued-lint` enforces.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -128,12 +143,21 @@ impl fmt::Display for Violation {
     }
 }
 
-/// Per-file lint configuration.
-#[derive(Clone, Copy, Debug)]
+/// Per-file lint configuration. `Default` is the plain crate-wide profile
+/// (no determinism rules, wallclock checked); construct scoped profiles
+/// with struct-update syntax so future fields don't break call sites.
+#[derive(Clone, Copy, Debug, Default)]
 pub struct LintConfig {
     /// Apply the determinism rules (`hash-collections`, `thread-rng`,
     /// `addr-hash`) in addition to the crate-wide ones.
     pub deterministic: bool,
+    /// Apply `hash-collections` on its own (service modules: batch
+    /// ordering must be FIFO-deterministic even though the module as a
+    /// whole is not). Implied by `deterministic`.
+    pub ordered_collections: bool,
+    /// Skip the `wallclock` rule (service modules: timeouts and latency
+    /// metrics legitimately read real time).
+    pub wallclock_exempt: bool,
     /// Require a `deny(unsafe_op_in_unsafe_fn)` attribute in this file
     /// (set for the crate root).
     pub expect_unsafe_op_deny: bool,
@@ -265,8 +289,11 @@ fn scan_tokens(file: &str, toks: &[Tok], cfg: &LintConfig, out: &mut Vec<Violati
         }
         let s = t.text.as_str();
 
-        // wallclock — crate-wide.
-        if (s == "Instant" || s == "SystemTime") && path_to(toks, i, &["now"]).is_some() {
+        // wallclock — crate-wide, except service modules.
+        if !cfg.wallclock_exempt
+            && (s == "Instant" || s == "SystemTime")
+            && path_to(toks, i, &["now"]).is_some()
+        {
             push(
                 out,
                 file,
@@ -279,8 +306,12 @@ fn scan_tokens(file: &str, toks: &[Tok], cfg: &LintConfig, out: &mut Vec<Violati
             );
         }
 
-        if cfg.deterministic {
-            // hash-collections: imports …
+        // hash-collections — deterministic modules (results must not
+        // depend on hasher order) and service modules (batch-column /
+        // request ordering must stay FIFO-deterministic).
+        if cfg.deterministic || cfg.ordered_collections {
+            let scope = if cfg.deterministic { "deterministic" } else { "order-sensitive" };
+            // imports …
             if s == "use" {
                 let mut j = i + 1;
                 while j < n && !punct_is(&toks[j], ";") {
@@ -293,7 +324,7 @@ fn scan_tokens(file: &str, toks: &[Tok], cfg: &LintConfig, out: &mut Vec<Violati
                             toks[j].line,
                             Rule::HashCollections,
                             format!(
-                                "`{}` imported in a deterministic module — hasher iteration \
+                                "`{}` imported in a {scope} module — hasher iteration \
                                  order is per-process; use BTreeMap/BTreeSet, or allow with \
                                  a lookup-only justification",
                                 toks[j].text
@@ -313,11 +344,13 @@ fn scan_tokens(file: &str, toks: &[Tok], cfg: &LintConfig, out: &mut Vec<Violati
                         file,
                         line,
                         Rule::HashCollections,
-                        format!("`collections::{name}` named in a deterministic module"),
+                        format!("`collections::{name}` named in a {scope} module"),
                     );
                 }
             }
+        }
 
+        if cfg.deterministic {
             // thread-rng.
             if matches!(s, "thread_rng" | "ThreadRng" | "OsRng" | "from_entropy") {
                 push(
@@ -514,14 +547,33 @@ fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> io::Resu
     Ok(())
 }
 
+fn first_component(rel: &Path) -> Option<String> {
+    let first = rel.components().next()?.as_os_str().to_string_lossy().into_owned();
+    Some(first.strip_suffix(".rs").unwrap_or(&first).to_string())
+}
+
 /// Whether a path (relative to `src/`) belongs to a deterministic module.
 pub fn is_deterministic_module(rel: &Path) -> bool {
-    let first = match rel.components().next() {
-        Some(c) => c.as_os_str().to_string_lossy().into_owned(),
-        None => return false,
-    };
-    let name = first.strip_suffix(".rs").unwrap_or(&first);
-    DETERMINISTIC_MODULES.contains(&name)
+    first_component(rel).is_some_and(|n| DETERMINISTIC_MODULES.contains(&n.as_str()))
+}
+
+/// Whether a path (relative to `src/`) belongs to a service module.
+pub fn is_service_module(rel: &Path) -> bool {
+    first_component(rel).is_some_and(|n| SERVICE_MODULES.contains(&n.as_str()))
+}
+
+/// The lint profile for a file at `rel` (relative to `src/`): deterministic
+/// modules get the full determinism rule set, service modules keep
+/// `hash-collections` but drop `wallclock`, and the crate root must deny
+/// `unsafe_op_in_unsafe_fn`.
+pub fn config_for(rel: &Path) -> LintConfig {
+    let service = is_service_module(rel);
+    LintConfig {
+        deterministic: is_deterministic_module(rel),
+        ordered_collections: service,
+        wallclock_exempt: service,
+        expect_unsafe_op_deny: rel.as_os_str() == "lib.rs",
+    }
 }
 
 /// Lint every `.rs` file under `src_root` (normally the crate's `src/`).
@@ -534,10 +586,7 @@ pub fn lint_crate(src_root: &Path) -> io::Result<CrateReport> {
     let mut violations = Vec::new();
     for rel in &files {
         let src = fs::read_to_string(src_root.join(rel))?;
-        let cfg = LintConfig {
-            deterministic: is_deterministic_module(rel),
-            expect_unsafe_op_deny: rel.as_os_str() == "lib.rs",
-        };
+        let cfg = config_for(rel);
         violations.extend(lint_source(&rel.display().to_string(), &src, &cfg));
     }
     Ok(CrateReport { files: files.len(), violations })
@@ -548,7 +597,11 @@ mod tests {
     use super::*;
 
     fn det() -> LintConfig {
-        LintConfig { deterministic: true, expect_unsafe_op_deny: false }
+        LintConfig { deterministic: true, ..LintConfig::default() }
+    }
+
+    fn service() -> LintConfig {
+        LintConfig { ordered_collections: true, wallclock_exempt: true, ..LintConfig::default() }
     }
 
     fn rules_of(v: &[Violation]) -> Vec<Rule> {
@@ -583,18 +636,34 @@ mod tests {
     }
 
     #[test]
-    fn hash_import_flagged_only_in_deterministic_modules() {
+    fn hash_import_flagged_only_in_scoped_modules() {
         let src = "use std::collections::HashMap;\n";
         assert_eq!(rules_of(&lint_source("x.rs", src, &det())), [Rule::HashCollections]);
-        let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: false };
-        assert!(lint_source("x.rs", src, &cfg).is_empty());
+        assert!(lint_source("x.rs", src, &LintConfig::default()).is_empty());
     }
 
     #[test]
     fn wallclock_is_crate_wide() {
         let src = "fn t() { let _ = Instant::now(); }\n";
-        let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: false };
-        assert_eq!(rules_of(&lint_source("x.rs", src, &cfg)), [Rule::Wallclock]);
+        assert_eq!(
+            rules_of(&lint_source("x.rs", src, &LintConfig::default())),
+            [Rule::Wallclock]
+        );
+    }
+
+    #[test]
+    fn service_profile_exempts_wallclock_but_keeps_hash_collections() {
+        // A service module legitimately reads wallclock (timeouts, latency
+        // metrics) …
+        let clock = "fn t() { let _ = Instant::now(); }\n";
+        assert!(lint_source("serve/http.rs", clock, &service()).is_empty());
+        // … but code that could order batch columns through a hasher is
+        // still flagged: request ordering must stay FIFO-deterministic.
+        let hash = "use std::collections::HashMap;\nfn t() { let _ = Instant::now(); }\n";
+        assert_eq!(
+            rules_of(&lint_source("serve/batcher.rs", hash, &service())),
+            [Rule::HashCollections]
+        );
     }
 
     #[test]
@@ -632,7 +701,7 @@ mod tests {
     #[test]
     fn unsafe_op_deny_detected() {
         let good = "#![deny(unsafe_op_in_unsafe_fn)]\nfn main() {}\n";
-        let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: true };
+        let cfg = LintConfig { expect_unsafe_op_deny: true, ..LintConfig::default() };
         assert!(lint_source("lib.rs", good, &cfg).is_empty());
         let bad = "fn main() {}\n";
         assert_eq!(rules_of(&lint_source("lib.rs", bad, &cfg)), [Rule::UnsafeOpLint]);
@@ -645,5 +714,23 @@ mod tests {
         assert!(!is_deterministic_module(Path::new("metrics/mod.rs")));
         assert!(!is_deterministic_module(Path::new("runtime/mod.rs")));
         assert!(!is_deterministic_module(Path::new("bin/ued_lint.rs")));
+        assert!(is_service_module(Path::new("serve/batcher.rs")));
+        assert!(is_service_module(Path::new("serve/mod.rs")));
+        assert!(!is_service_module(Path::new("bin/ued_serve.rs")));
+        assert!(!is_deterministic_module(Path::new("serve/batcher.rs")));
+    }
+
+    #[test]
+    fn config_for_maps_scopes() {
+        let serve = config_for(Path::new("serve/cache.rs"));
+        assert!(serve.ordered_collections && serve.wallclock_exempt && !serve.deterministic);
+        let roll = config_for(Path::new("rollout/engine.rs"));
+        assert!(roll.deterministic && !roll.wallclock_exempt);
+        let root = config_for(Path::new("lib.rs"));
+        assert!(root.expect_unsafe_op_deny && !root.deterministic);
+        // bin/ued_serve.rs is *not* a service module: the launcher gets the
+        // plain crate-wide profile, wallclock included.
+        let launcher = config_for(Path::new("bin/ued_serve.rs"));
+        assert!(!launcher.wallclock_exempt && !launcher.ordered_collections);
     }
 }

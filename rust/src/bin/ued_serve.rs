@@ -1,0 +1,95 @@
+//! `ued-serve` — the batched policy-zoo evaluation server.
+//!
+//! Usage:
+//! `cargo run --release --bin ued_serve -- [--serve-addr 127.0.0.1:8321]
+//!  [--env maze] [--zoo-dir runs] [--artifacts artifacts]
+//!  [--synthetic-zoo N] [--max-batch B] [--trials T] …`
+//!
+//! See `jaxued::config::ServeConfig` for every knob and
+//! `jaxued::serve` for the architecture. The process runs until SIGINT
+//! or SIGTERM, then drains in-flight batches and exits 0.
+
+use std::path::Path;
+use std::process::ExitCode;
+use std::time::Duration;
+
+use jaxued::config::ServeConfig;
+use jaxued::env::registry::{dispatch, EnvVisitor};
+use jaxued::env::EnvFamily;
+use jaxued::runtime::Runtime;
+use jaxued::serve;
+use jaxued::util::cli::Args;
+
+struct Launch {
+    cfg: ServeConfig,
+    runtime: Option<Runtime>,
+}
+
+impl EnvVisitor for Launch {
+    type Out = anyhow::Result<serve::ServerHandle>;
+
+    fn visit<F: EnvFamily>(self, family: F) -> Self::Out {
+        serve::serve(family, self.cfg, self.runtime)
+    }
+}
+
+fn main() -> ExitCode {
+    let args = Args::parse();
+    let cfg = match ServeConfig::from_args(&args) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("ued-serve: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    let unknown = args.unknown_flags();
+    if !unknown.is_empty() {
+        eprintln!("ued-serve: unknown flag(s): --{}", unknown.join(" --"));
+        return ExitCode::from(2);
+    }
+
+    serve::install_signal_handlers();
+
+    // Checkpoint-backed policies need compiled apply artifacts; without a
+    // manifest the zoo is synthetic-only.
+    let artifacts = Path::new(&cfg.artifacts_dir);
+    let runtime = if artifacts.join("manifest.json").exists() {
+        match Runtime::with_geometry(artifacts, &cfg.env.geometry()) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("ued-serve: failed to open artifacts at {artifacts:?}: {e:#}");
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        eprintln!(
+            "ued-serve: no artifact manifest at {:?}; serving without a runtime \
+             (synthetic policies only)",
+            artifacts.join("manifest.json")
+        );
+        None
+    };
+
+    let env = cfg.env;
+    let handle = match dispatch(env, Launch { cfg, runtime }) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("ued-serve: {e:#}");
+            return ExitCode::from(1);
+        }
+    };
+    println!(
+        "ued-serve: listening on http://{} (env {}, zoo of {})",
+        handle.addr,
+        env.name(),
+        handle.catalog.len()
+    );
+
+    while !serve::shutdown_requested() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    println!("ued-serve: signal received, draining…");
+    handle.shutdown_and_join();
+    println!("ued-serve: clean shutdown");
+    ExitCode::SUCCESS
+}

@@ -458,6 +458,117 @@ impl TrainConfig {
     }
 }
 
+/// Configuration for the `ued-serve` policy-zoo evaluation server.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`--serve-addr`; port 0 binds an ephemeral port —
+    /// the tests use this).
+    pub addr: String,
+    /// Which environment family the server evaluates in (`--env`).
+    pub env: EnvId,
+    /// Checkpoint zoo directory (`--zoo-dir`): scanned at startup for
+    /// `<id>.ckpt` files and `<id>/student.ckpt` run dirs.
+    pub zoo_dir: String,
+    /// Compiled-artifact directory (checkpoint-backed policies only).
+    pub artifacts_dir: String,
+    /// Batch columns B the batcher fills per forward — must match an
+    /// `apply_b{B}` artifact when serving checkpoint policies
+    /// (`--max-batch`).
+    pub max_batch: usize,
+    /// Result-cache capacity in per-(policy, level, trials, master)
+    /// entries (`--cache-cap`).
+    pub cache_cap: usize,
+    /// How many policies stay resident at once; least-recently-used
+    /// entries are evicted past this (`--zoo-cap`).
+    pub zoo_cap: usize,
+    /// Add N synthetic policies (`synthetic0..`) to the zoo — the
+    /// artifact-free backend CI smoke and the integration tests use
+    /// (`--synthetic-zoo`).
+    pub synthetic_zoo: usize,
+    /// Default trials per level when a request omits `"trials"`.
+    pub trials: usize,
+    /// Hard per-request trials ceiling.
+    pub max_trials: usize,
+    /// Hard per-request level-count ceiling.
+    pub max_levels: usize,
+    /// Episode step cap.
+    pub max_steps: usize,
+    /// Pending eval requests the batch queue holds before shedding load
+    /// with 503s (`--queue-cap`).
+    pub queue_cap: usize,
+    /// Rollout worker threads for the batcher's engine
+    /// (`--rollout-threads`; 0 = auto).
+    pub rollout_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:8321".into(),
+            env: EnvId::Maze,
+            zoo_dir: "runs".into(),
+            artifacts_dir: "artifacts".into(),
+            max_batch: 8,
+            cache_cap: 65_536,
+            zoo_cap: 8,
+            synthetic_zoo: 0,
+            trials: 10,
+            max_trials: 100,
+            max_levels: 512,
+            max_steps: 250,
+            queue_cap: 256,
+            rollout_threads: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve from CLI flags (unspecified flags keep the defaults).
+    pub fn from_args(args: &Args) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let c = ServeConfig {
+            addr: args.get_str("serve-addr", &d.addr),
+            env: EnvId::parse(&args.get_str("env", d.env.name()))?,
+            zoo_dir: args.get_str("zoo-dir", &d.zoo_dir),
+            artifacts_dir: args.get_str("artifacts", &d.artifacts_dir),
+            max_batch: args.get_usize("max-batch", d.max_batch),
+            cache_cap: args.get_usize("cache-cap", d.cache_cap),
+            zoo_cap: args.get_usize("zoo-cap", d.zoo_cap),
+            synthetic_zoo: args.get_usize("synthetic-zoo", d.synthetic_zoo),
+            trials: args.get_usize("trials", d.trials),
+            max_trials: args.get_usize("max-trials", d.max_trials),
+            max_levels: args.get_usize("max-levels", d.max_levels),
+            max_steps: args.get_usize("max-episode-steps", d.max_steps),
+            queue_cap: args.get_usize("queue-cap", d.queue_cap),
+            rollout_threads: args.get_usize("rollout-threads", d.rollout_threads),
+        };
+        if c.max_batch == 0 {
+            bail!("--max-batch must be positive");
+        }
+        if c.trials == 0 || c.trials > c.max_trials {
+            bail!("--trials must be in 1..=--max-trials ({})", c.max_trials);
+        }
+        if c.zoo_cap == 0 {
+            bail!("--zoo-cap must be positive");
+        }
+        if c.queue_cap == 0 {
+            bail!("--queue-cap must be positive");
+        }
+        Ok(c)
+    }
+
+    /// The apply artifact checkpoint-backed policies are served through.
+    pub fn student_apply_artifact(&self) -> String {
+        format!("student_apply_b{}", self.max_batch)
+    }
+
+    /// Env-layer knobs for the serving env (generation budgets keep the
+    /// family defaults).
+    pub fn env_params(&self) -> EnvParams {
+        EnvParams { max_episode_steps: self.max_steps, ..EnvParams::default() }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -634,5 +745,42 @@ mod tests {
                 .map(String::from),
         );
         assert!(TrainConfig::from_args(&args).is_err());
+    }
+
+    fn parse_serve(s: &str) -> Result<ServeConfig> {
+        ServeConfig::from_args(&Args::parse_from(s.split_whitespace().map(String::from)))
+    }
+
+    #[test]
+    fn serve_defaults_and_overrides() {
+        let c = parse_serve("").unwrap();
+        assert_eq!(c.env, EnvId::Maze);
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.trials, 10);
+        assert_eq!(c.student_apply_artifact(), "student_apply_b8");
+        assert_eq!(c.env_params().max_episode_steps, c.max_steps);
+
+        let c = parse_serve(
+            "--serve-addr 127.0.0.1:0 --env lava --max-batch 4 --synthetic-zoo 2 \
+             --trials 3 --queue-cap 16 --max-episode-steps 40",
+        )
+        .unwrap();
+        assert_eq!(c.addr, "127.0.0.1:0");
+        assert_eq!(c.env, EnvId::Lava);
+        assert_eq!(c.synthetic_zoo, 2);
+        assert_eq!(c.trials, 3);
+        assert_eq!(c.max_steps, 40);
+        assert_eq!(c.student_apply_artifact(), "student_apply_b4");
+    }
+
+    #[test]
+    fn serve_rejects_degenerate_knobs() {
+        assert!(parse_serve("--max-batch 0").is_err());
+        assert!(parse_serve("--trials 0").is_err());
+        assert!(parse_serve("--trials 200").is_err(), "trials above --max-trials");
+        assert!(parse_serve("--trials 200 --max-trials 200").is_ok());
+        assert!(parse_serve("--zoo-cap 0").is_err());
+        assert!(parse_serve("--queue-cap 0").is_err());
+        assert!(parse_serve("--env marioland").is_err());
     }
 }

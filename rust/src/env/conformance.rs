@@ -138,6 +138,65 @@ pub fn check_family_conformance<F: EnvFamily>(family: F, params: &EnvParams, cas
     }
 }
 
+/// Decode hardening sub-suite: `LevelMeta::decode` is a trust boundary (the
+/// serving layer feeds it raw network bytes), so it must never panic or
+/// index out of bounds on hostile input, and any `Ok` level must (a) be
+/// canonical — re-encoding reproduces the input bytes exactly — and (b) be
+/// safe to interrogate and, when structurally valid, to reset and observe.
+pub fn check_decode_hardening<F: EnvFamily>(family: F, params: &EnvParams, cases: usize) {
+    let id = family.id();
+    let env = family.make_env(params);
+    let gen = family.make_generator(params);
+    let mut rng = Pcg64::new(0xDEC0_DE00, 4);
+    let canon_len = gen.sample_level(&mut rng).encode().len();
+
+    let probe = |label: &str, case: usize, bytes: &[u8]| {
+        if let Ok(l) = <F::Level as LevelMeta>::decode(bytes) {
+            assert_eq!(
+                l.encode(),
+                bytes,
+                "[{id}] {label} case {case}: Ok decode is not canonical"
+            );
+            // Interrogating a decoded level must be safe regardless of
+            // validity; a valid one must additionally survive reset/observe
+            // (this is what a served eval request will do with it).
+            let _ = l.complexity();
+            let _ = l.fingerprint();
+            if l.is_valid() {
+                let _ = l.is_solvable();
+                let s = env.reset_to_level(&l, &mut Pcg64::seed_from_u64(case as u64));
+                let mut obs = vec![SENTINEL; env.obs_len()];
+                env.observe(&s, &mut obs);
+                assert!(
+                    obs.iter().all(|&v| v != SENTINEL && v.is_finite()),
+                    "[{id}] {label} case {case}: decoded level observes ill-formed"
+                );
+            }
+        }
+    };
+
+    for case in 0..cases {
+        // Arbitrary bytes at arbitrary lengths: must never panic.
+        let n = rng.gen_range(2 * canon_len + 2);
+        let junk: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        probe("junk", case, &junk);
+
+        // Single-bit corruptions of a genuine encoding: the nastiest
+        // near-valid inputs. Err or canonical-and-safe Ok, nothing else.
+        let mut enc = gen.sample_level(&mut rng).encode();
+        let bit = rng.gen_range(enc.len() * 8);
+        enc[bit / 8] ^= 1 << (bit % 8);
+        probe("bitflip", case, &enc);
+
+        // Truncations of a genuine encoding must always be rejected.
+        let keep = rng.gen_range(canon_len);
+        assert!(
+            <F::Level as LevelMeta>::decode(&enc[..keep]).is_err(),
+            "[{id}] case {case}: truncated encoding ({keep} bytes) decoded Ok"
+        );
+    }
+}
+
 /// Editor sub-suite: random full episodes must produce valid levels, and
 /// the editor's observation geometry must be internally consistent.
 pub fn check_editor_conformance<F: EnvFamily>(family: F, params: &EnvParams, episodes: usize) {

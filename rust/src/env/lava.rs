@@ -145,23 +145,25 @@ impl LavaLevel {
         out
     }
 
+    /// Decode the fixed 53-byte encoding. Like `Level::from_bytes` this is
+    /// a trust boundary: stray bits in either tile plane, out-of-bounds
+    /// positions, and direction bytes >= 4 are rejected (previously stray
+    /// bits were silently dropped, so `Ok` did not imply a canonical
+    /// round-trip). `Ok(l)` guarantees `l.to_bytes() == input`.
     pub fn from_bytes(b: &[u8]) -> Result<LavaLevel> {
         if b.len() != LAVA_LEVEL_BYTES {
             bail!("lava level encoding must be {LAVA_LEVEL_BYTES} bytes, got {}", b.len());
         }
         let word = |i: usize| u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
-        let mut walls = WallSet::empty();
-        let mut lava = WallSet::empty();
-        for y in 0..GRID_H {
-            for x in 0..GRID_W {
-                let i = y * GRID_W + x;
-                if (word(i / 64) >> (i % 64)) & 1 == 1 {
-                    walls.set(x, y, true);
-                }
-                if (word(3 + i / 64) >> (i % 64)) & 1 == 1 {
-                    lava.set(x, y, true);
-                }
+        let walls = WallSet::from_words([word(0), word(1), word(2)])?;
+        let lava = WallSet::from_words([word(3), word(4), word(5)])?;
+        for (what, x, y) in [("agent", b[48], b[49]), ("goal", b[51], b[52])] {
+            if x as usize >= GRID_W || y as usize >= GRID_H {
+                bail!("{what} position ({x},{y}) out of the {GRID_W}x{GRID_H} grid");
             }
+        }
+        if b[50] >= 4 {
+            bail!("direction byte {} out of range (expected 0..=3)", b[50]);
         }
         Ok(LavaLevel {
             walls,
@@ -729,6 +731,34 @@ mod tests {
             assert_eq!(l, l2);
         }
         assert!(LavaLevel::from_bytes(&[0u8; 29]).is_err());
+    }
+
+    #[test]
+    fn from_bytes_rejects_hostile_input() {
+        let good = LavaLevel::empty().to_bytes();
+        assert!(LavaLevel::from_bytes(&good[..52]).is_err(), "truncated");
+        let mut oob = good;
+        oob[48] = GRID_W as u8;
+        assert!(LavaLevel::from_bytes(&oob).is_err(), "agent x OOB");
+        let mut bad_dir = good;
+        bad_dir[50] = 7;
+        assert!(LavaLevel::from_bytes(&bad_dir).is_err(), "dir >= 4");
+        let mut stray_wall = good;
+        stray_wall[23] = 0x80; // bit 63 of wall word 2, past cell 168
+        assert!(LavaLevel::from_bytes(&stray_wall).is_err(), "stray wall bit");
+        let mut stray_lava = good;
+        stray_lava[47] = 0x80; // bit 63 of lava word 2
+        assert!(LavaLevel::from_bytes(&stray_lava).is_err(), "stray lava bit");
+    }
+
+    #[test]
+    fn from_bytes_ok_is_canonical() {
+        let g = LavaLevelGenerator::new(40, 12);
+        let mut r = rng();
+        for _ in 0..50 {
+            let b = g.generate(&mut r).to_bytes();
+            assert_eq!(LavaLevel::from_bytes(&b).unwrap().to_bytes(), b);
+        }
     }
 
     #[test]

@@ -100,6 +100,17 @@ impl WallSet {
     pub fn words(&self) -> [u64; 3] {
         self.bits
     }
+
+    /// Rebuild from three packed words, rejecting bits beyond cell
+    /// `GRID_CELLS - 1`. Decoders use this so an `Ok` wall set always has a
+    /// canonical encoding (stray padding bits would otherwise survive into
+    /// `words()` and break `decode(encode(l)) == l` byte equality).
+    pub fn from_words(words: [u64; 3]) -> Result<WallSet> {
+        if words[2] >> (GRID_CELLS - 128) != 0 {
+            bail!("wall words have stray bits beyond cell {GRID_CELLS}");
+        }
+        Ok(WallSet { bits: words })
+    }
 }
 
 /// A maze level θ: walls + agent start + goal.
@@ -179,22 +190,34 @@ impl Level {
         out
     }
 
+    /// Decode the fixed 29-byte encoding. This is a trust boundary (the
+    /// serving layer feeds it raw network bytes), so every field is
+    /// validated: stray wall bits, out-of-bounds positions, and direction
+    /// bytes >= 4 are all rejected rather than masked or silently dropped.
+    /// `Ok(l)` guarantees `l.to_bytes() == input` and that `l`'s positions
+    /// are safe to index with.
     pub fn from_bytes(b: &[u8]) -> Result<Level> {
         if b.len() != 29 {
             bail!("level encoding must be 29 bytes, got {}", b.len());
         }
-        let mut walls = WallSet::empty();
         let w0 = u64::from_le_bytes(b[0..8].try_into().unwrap());
         let w1 = u64::from_le_bytes(b[8..16].try_into().unwrap());
         let w2 = u64::from_le_bytes(b[16..24].try_into().unwrap());
-        walls.bits = [w0, w1, w2];
-        let lvl = Level {
+        let walls = WallSet::from_words([w0, w1, w2])?;
+        for (what, x, y) in [("agent", b[24], b[25]), ("goal", b[27], b[28])] {
+            if x as usize >= GRID_W || y as usize >= GRID_H {
+                bail!("{what} position ({x},{y}) out of the {GRID_W}x{GRID_H} grid");
+            }
+        }
+        if b[26] >= 4 {
+            bail!("direction byte {} out of range (expected 0..=3)", b[26]);
+        }
+        Ok(Level {
             walls,
             agent_pos: (b[24], b[25]),
             agent_dir: Dir::from_index(b[26] as usize),
             goal_pos: (b[27], b[28]),
-        };
-        Ok(lvl)
+        })
     }
 
     /// Parse from ASCII art: `#` wall, `.`/` ` empty, `G` goal, and the
@@ -358,6 +381,36 @@ mod tests {
         l.goal_pos = (6, 1);
         let l2 = Level::from_bytes(&l.to_bytes()).unwrap();
         assert_eq!(l, l2);
+    }
+
+    #[test]
+    fn from_bytes_rejects_hostile_input() {
+        let good = Level::empty().to_bytes();
+        assert!(Level::from_bytes(&good[..28]).is_err(), "truncated");
+        assert!(Level::from_bytes(&[0u8; 30]).is_err(), "oversized");
+        let mut oob_agent = good;
+        oob_agent[24] = GRID_W as u8; // x == 13, one past the edge
+        assert!(Level::from_bytes(&oob_agent).is_err(), "agent x OOB");
+        let mut oob_goal = good;
+        oob_goal[28] = 255;
+        assert!(Level::from_bytes(&oob_goal).is_err(), "goal y OOB");
+        let mut bad_dir = good;
+        bad_dir[26] = 4;
+        assert!(Level::from_bytes(&bad_dir).is_err(), "dir >= 4");
+        let mut stray = good;
+        stray[23] = 0x80; // bit 63 of word 2 == cell 191, past cell 168
+        assert!(Level::from_bytes(&stray).is_err(), "stray wall bits");
+    }
+
+    #[test]
+    fn from_bytes_ok_is_canonical() {
+        let mut l = Level::empty();
+        l.walls.set(12, 12, true); // the last valid cell (bit 40 of word 2)
+        l.goal_pos = (11, 12);
+        let b = l.to_bytes();
+        let back = Level::from_bytes(&b).unwrap();
+        assert_eq!(back.to_bytes(), b);
+        assert_eq!(back, l);
     }
 
     #[test]

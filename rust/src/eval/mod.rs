@@ -33,15 +33,47 @@ use anyhow::Result;
 
 use crate::config::TrainConfig;
 use crate::env::registry::{dispatch, EnvVisitor};
-use crate::env::{EnvFamily, UnderspecifiedEnv};
+use crate::env::{EnvFamily, LevelMeta, UnderspecifiedEnv};
 use crate::rollout::{EpisodeOutcome, PolicyModel, RolloutEngine, WorkerPool};
 use crate::runtime::{ParamSet, Runtime};
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
 /// Stream-id offset for per-episode eval streams (disjoint from the
 /// rollout column streams and the drivers' subsystem streams).
 const EPISODE_STREAM_BASE: u64 = 0xE7A1;
+
+/// Per-level master seed for ad-hoc (served) evaluation: FNV-1a over the
+/// request master and the level's canonical byte encoding. Keying the
+/// stream by *content* rather than by the level's position in a request is
+/// what makes per-level results cacheable across requests and batched
+/// evaluation bit-identical to solo [`evaluate_levels`] runs — a level's
+/// outcome cannot depend on what it was submitted alongside.
+pub fn level_master(master: u64, level_bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |b: u8| {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    };
+    for b in master.to_le_bytes() {
+        eat(b);
+    }
+    for &b in level_bytes {
+        eat(b);
+    }
+    h
+}
+
+/// The per-episode RNG stream for trial `trial` of the level encoded as
+/// `level_bytes` under request master `master`. The single derivation rule
+/// shared by the solo path ([`evaluate_levels`]) and the serving batcher.
+pub fn adhoc_episode_rng(master: u64, level_bytes: &[u8], trial: usize) -> Pcg64 {
+    Pcg64::new(
+        level_master(master, level_bytes),
+        EPISODE_STREAM_BASE + trial as u64,
+    )
+}
 
 /// How the evaluator schedules episodes onto batch columns.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -60,6 +92,55 @@ pub struct LevelResult {
     pub mean_steps: f64,
 }
 
+impl LevelResult {
+    /// Aggregate one level's trial outcomes. The single arithmetic path for
+    /// per-level numbers — the holdout evaluator, the solo ad-hoc path, and
+    /// the serving batcher all fold through here, which is what makes their
+    /// results bit-comparable.
+    pub fn from_outcomes(name: String, outcomes: &[EpisodeOutcome]) -> LevelResult {
+        let mut solves = 0u32;
+        let mut steps_sum = 0u64;
+        for o in outcomes {
+            steps_sum += o.steps as u64;
+            if o.solved {
+                solves += 1;
+            }
+        }
+        let runs = (outcomes.len() as u32).max(1);
+        LevelResult {
+            name,
+            solve_rate: solves as f64 / runs as f64,
+            mean_steps: steps_sum as f64 / runs as f64,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("name".to_string(), Json::from(self.name.as_str()));
+        m.insert("solve_rate".to_string(), Json::Num(self.solve_rate));
+        m.insert("mean_steps".to_string(), Json::Num(self.mean_steps));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<LevelResult> {
+        Ok(LevelResult {
+            name: j
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("level name must be a string"))?
+                .to_string(),
+            solve_rate: j
+                .req("solve_rate")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("solve_rate must be a number"))?,
+            mean_steps: j
+                .req("mean_steps")?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("mean_steps must be a number"))?,
+        })
+    }
+}
+
 /// Full evaluation report.
 #[derive(Clone, Debug)]
 pub struct EvalReport {
@@ -71,6 +152,61 @@ pub struct EvalReport {
     /// Device forward calls the evaluation issued (batch-utilization
     /// metric: the work-queue scheduler needs fewer than padded chunks).
     pub forward_passes: u64,
+}
+
+impl EvalReport {
+    /// Assemble a report from per-level results. Shared by the holdout
+    /// evaluator, the solo ad-hoc path, and the server's response builder
+    /// so the mean/IQM arithmetic is identical everywhere.
+    pub fn from_level_results(levels: Vec<LevelResult>, forward_passes: u64) -> EvalReport {
+        let rates: Vec<f64> = levels.iter().map(|l| l.solve_rate).collect();
+        EvalReport {
+            mean_solve_rate: stats::mean(&rates),
+            iqm_solve_rate: stats::iqm(&rates),
+            forward_passes,
+            levels,
+        }
+    }
+
+    /// JSON form shared by `ued-serve` responses and on-disk eval
+    /// artifacts. Round-trips through [`from_json`](EvalReport::from_json)
+    /// bit-exactly for finite values (the writer emits shortest-exact
+    /// float reprs).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "levels".to_string(),
+            Json::Arr(self.levels.iter().map(|l| l.to_json()).collect()),
+        );
+        m.insert("mean_solve_rate".to_string(), Json::Num(self.mean_solve_rate));
+        m.insert("iqm_solve_rate".to_string(), Json::Num(self.iqm_solve_rate));
+        m.insert(
+            "forward_passes".to_string(),
+            Json::Num(self.forward_passes as f64),
+        );
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<EvalReport> {
+        let levels = j
+            .req("levels")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("levels must be an array"))?
+            .iter()
+            .map(LevelResult::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let num = |key: &str| -> Result<f64> {
+            j.req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be a number"))
+        };
+        Ok(EvalReport {
+            levels,
+            mean_solve_rate: num("mean_solve_rate")?,
+            iqm_solve_rate: num("iqm_solve_rate")?,
+            forward_passes: num("forward_passes")? as u64,
+        })
+    }
 }
 
 /// The evaluation suite: an environment plus named holdout levels.
@@ -180,36 +316,47 @@ impl<E: UnderspecifiedEnv> Evaluator<E> {
             }
         };
 
-        let mut solves = vec![0u32; self.levels.len()];
-        let mut steps_sum = vec![0u64; self.levels.len()];
-        let mut runs = vec![0u32; self.levels.len()];
-        for (e, o) in outcomes.iter().enumerate() {
-            let i = e / self.trials;
-            runs[i] += 1;
-            steps_sum[i] += o.steps as u64;
-            if o.solved {
-                solves[i] += 1;
-            }
-        }
-
+        // Episode e belongs to level e / trials, so outcomes fall into
+        // contiguous per-level chunks of `trials`.
         let levels: Vec<LevelResult> = self
             .levels
             .iter()
-            .enumerate()
-            .map(|(i, (name, _))| LevelResult {
-                name: name.clone(),
-                solve_rate: solves[i] as f64 / runs[i].max(1) as f64,
-                mean_steps: steps_sum[i] as f64 / runs[i].max(1) as f64,
-            })
+            .zip(outcomes.chunks(self.trials))
+            .map(|((name, _), outs)| LevelResult::from_outcomes(name.clone(), outs))
             .collect();
-        let rates: Vec<f64> = levels.iter().map(|l| l.solve_rate).collect();
-        Ok(EvalReport {
-            mean_solve_rate: stats::mean(&rates),
-            iqm_solve_rate: stats::iqm(&rates),
-            forward_passes,
-            levels,
-        })
+        Ok(EvalReport::from_level_results(levels, forward_passes))
     }
+}
+
+/// Solo ad-hoc evaluation: run `policy` on an arbitrary named level list
+/// for `trials` episodes each, with **content-keyed** RNG streams
+/// ([`adhoc_episode_rng`]) instead of the holdout evaluator's position-keyed
+/// ones. This is the reference implementation the `ued-serve` batcher must
+/// match bit-for-bit: because each episode's stream depends only on
+/// (master, level bytes, trial), merging levels from many concurrent
+/// requests into one work-queue pass cannot change any level's result.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_levels<E: UnderspecifiedEnv, P: PolicyModel>(
+    env: &E, policy: &P, levels: &[(String, E::Level)], trials: usize,
+    max_steps: usize, b: usize, master: u64, pool: Arc<WorkerPool>,
+) -> Result<EvalReport> {
+    assert!(!levels.is_empty(), "empty level list");
+    assert!(trials > 0, "trials must be positive");
+    let encodings: Vec<Vec<u8>> = levels.iter().map(|(_, l)| l.encode()).collect();
+    let mut engine = RolloutEngine::with_pool(env, b, pool);
+    let n = levels.len() * trials;
+    let outcomes = engine.run_episode_queue(env, policy, n, max_steps, false, |e| {
+        let (li, trial) = (e / trials, e % trials);
+        let mut r = adhoc_episode_rng(master, &encodings[li], trial);
+        let s = env.reset_to_level(&levels[li].1, &mut r);
+        (s, r)
+    })?;
+    let results: Vec<LevelResult> = levels
+        .iter()
+        .zip(outcomes.chunks(trials))
+        .map(|((name, _), outs)| LevelResult::from_outcomes(name.clone(), outs))
+        .collect();
+    Ok(EvalReport::from_level_results(results, engine.forward_passes()))
 }
 
 /// A family's default suite: its named holdout levels + `n_procedural`
@@ -305,5 +452,73 @@ mod tests {
         let e = for_family(LavaFamily, &cfg, 2, 8);
         assert_eq!(e.levels.len(), 6 + 8);
         assert_eq!(e.num_actions(), 3);
+    }
+
+    #[test]
+    fn report_json_roundtrip_is_bit_exact() {
+        let report = EvalReport::from_level_results(
+            vec![
+                LevelResult { name: "a".into(), solve_rate: 1.0 / 3.0, mean_steps: 17.5 },
+                LevelResult { name: "b\"quoted\"".into(), solve_rate: 0.0, mean_steps: 250.0 },
+                LevelResult { name: "c".into(), solve_rate: 0.7, mean_steps: 0.1 + 0.2 },
+            ],
+            12345,
+        );
+        let text = report.to_json().to_string();
+        let back = EvalReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.levels.len(), report.levels.len());
+        for (l, r) in report.levels.iter().zip(&back.levels) {
+            assert_eq!(l.name, r.name);
+            assert_eq!(l.solve_rate.to_bits(), r.solve_rate.to_bits());
+            assert_eq!(l.mean_steps.to_bits(), r.mean_steps.to_bits());
+        }
+        assert_eq!(report.mean_solve_rate.to_bits(), back.mean_solve_rate.to_bits());
+        assert_eq!(report.iqm_solve_rate.to_bits(), back.iqm_solve_rate.to_bits());
+        assert_eq!(report.forward_passes, back.forward_passes);
+    }
+
+    #[test]
+    fn report_from_json_rejects_malformed() {
+        for bad in [
+            r#"{"levels":[],"mean_solve_rate":0}"#,
+            r#"{"levels":[{"name":1,"solve_rate":0,"mean_steps":0}],"mean_solve_rate":0,"iqm_solve_rate":0,"forward_passes":0}"#,
+            r#"{"levels":"x","mean_solve_rate":0,"iqm_solve_rate":0,"forward_passes":0}"#,
+        ] {
+            assert!(EvalReport::from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn adhoc_results_are_position_independent() {
+        // The content-keyed derivation: a level's result must not depend on
+        // where it sits in the submitted list or what it shares it with.
+        use crate::env::holdout;
+        use crate::env::maze::MazeEnv;
+        use crate::rollout::SyntheticPolicy;
+        let env = MazeEnv::new(40);
+        let policy = SyntheticPolicy { num_actions: env.num_actions() };
+        let named: Vec<_> = holdout::named_levels()
+            .into_iter()
+            .take(3)
+            .map(|n| (n.name.to_string(), n.level))
+            .collect();
+        let pool = Arc::new(WorkerPool::new(1));
+        let fwd = evaluate_levels(&env, &policy, &named, 3, 40, 4, 7, pool.clone()).unwrap();
+        let mut rev_levels = named.clone();
+        rev_levels.reverse();
+        let rev = evaluate_levels(&env, &policy, &rev_levels, 3, 40, 4, 7, pool).unwrap();
+        for l in &fwd.levels {
+            let r = rev.levels.iter().find(|r| r.name == l.name).unwrap();
+            assert_eq!(l.solve_rate.to_bits(), r.solve_rate.to_bits(), "{}", l.name);
+            assert_eq!(l.mean_steps.to_bits(), r.mean_steps.to_bits(), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn level_master_discriminates() {
+        let a = level_master(1, &[1, 2, 3]);
+        assert_ne!(a, level_master(2, &[1, 2, 3]), "master must matter");
+        assert_ne!(a, level_master(1, &[1, 2, 4]), "bytes must matter");
+        assert_eq!(a, level_master(1, &[1, 2, 3]), "must be a pure function");
     }
 }

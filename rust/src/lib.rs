@@ -23,6 +23,9 @@
 //!   generic over the env family.
 //! * [`analysis`] — `ued-lint`, the in-tree determinism/unsafety
 //!   static-analysis pass (run by the `ued_lint` binary and CI).
+//! * [`serve`] — `ued-serve`, the batched policy-zoo evaluation server
+//!   (dependency-free HTTP/1.1 + JSON; micro-batches concurrent `/eval`
+//!   requests into the work-queue rollout engine).
 //! * [`eval`], [`metrics`], [`config`], [`util`] — support systems.
 
 // Enforced by `ued-lint` (rule `unsafe-op-lint`): every unsafe operation
@@ -40,4 +43,5 @@ pub mod metrics;
 pub mod ppo;
 pub mod rollout;
 pub mod runtime;
+pub mod serve;
 pub mod util;

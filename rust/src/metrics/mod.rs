@@ -245,6 +245,91 @@ impl Stopwatch {
     }
 }
 
+/// Shared counters for the `ued-serve` evaluation server, exposed at
+/// `GET /metrics`. Every field is a relaxed atomic: the accept loop,
+/// connection handlers, and the batcher thread all bump them without a
+/// lock, and `/metrics` reads a best-effort snapshot (counters are
+/// monotonic, so a torn multi-field read can only be momentarily
+/// inconsistent, never wrong per field).
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    /// HTTP requests accepted (any endpoint, any outcome).
+    pub requests: std::sync::atomic::AtomicU64,
+    /// `POST /eval` requests admitted past validation.
+    pub eval_requests: std::sync::atomic::AtomicU64,
+    /// `POST /levels/generate` requests admitted past validation.
+    pub generate_requests: std::sync::atomic::AtomicU64,
+    /// Requests rejected with a 4xx.
+    pub bad_requests: std::sync::atomic::AtomicU64,
+    /// Per-level eval results served from the result cache.
+    pub cache_hits: std::sync::atomic::AtomicU64,
+    /// Per-level eval results that had to be computed.
+    pub cache_misses: std::sync::atomic::AtomicU64,
+    /// Device (or interpreter) forward passes issued by the batcher.
+    pub forward_passes: std::sync::atomic::AtomicU64,
+    /// Batched engine runs (one per policy group per drain cycle).
+    pub batches: std::sync::atomic::AtomicU64,
+    /// Episodes executed across all engine runs (occupancy numerator).
+    pub batched_episodes: std::sync::atomic::AtomicU64,
+    /// Eval requests shed with 503 because the queue was full.
+    pub shed_requests: std::sync::atomic::AtomicU64,
+    /// Rollout phase nanoseconds, folded in from the batcher's engine.
+    pub stage_ns: std::sync::atomic::AtomicU64,
+    pub forward_ns: std::sync::atomic::AtomicU64,
+    pub step_ns: std::sync::atomic::AtomicU64,
+    pub writeback_ns: std::sync::atomic::AtomicU64,
+}
+
+impl ServeMetrics {
+    /// Fold one engine run's per-phase timers in.
+    pub fn add_phase_timers(&self, t: &crate::rollout::PhaseTimers) {
+        use std::sync::atomic::Ordering::Relaxed;
+        self.stage_ns.fetch_add(t.stage_ns, Relaxed);
+        self.forward_ns.fetch_add(t.forward_ns, Relaxed);
+        self.step_ns.fetch_add(t.step_ns, Relaxed);
+        self.writeback_ns.fetch_add(t.writeback_ns, Relaxed);
+    }
+
+    /// Snapshot as `(name, value)` pairs — raw counters plus the two
+    /// derived gauges the ISSUE asks for: cache hit rate and mean batch
+    /// occupancy (episodes per drain cycle).
+    pub fn snapshot(&self) -> Vec<(&'static str, f64)> {
+        use std::sync::atomic::Ordering::Relaxed;
+        let hits = self.cache_hits.load(Relaxed);
+        let misses = self.cache_misses.load(Relaxed);
+        let batches = self.batches.load(Relaxed);
+        let episodes = self.batched_episodes.load(Relaxed);
+        let rate = if hits + misses > 0 {
+            hits as f64 / (hits + misses) as f64
+        } else {
+            0.0
+        };
+        let occupancy = if batches > 0 {
+            episodes as f64 / batches as f64
+        } else {
+            0.0
+        };
+        vec![
+            ("requests", self.requests.load(Relaxed) as f64),
+            ("eval_requests", self.eval_requests.load(Relaxed) as f64),
+            ("generate_requests", self.generate_requests.load(Relaxed) as f64),
+            ("bad_requests", self.bad_requests.load(Relaxed) as f64),
+            ("shed_requests", self.shed_requests.load(Relaxed) as f64),
+            ("cache_hits", hits as f64),
+            ("cache_misses", misses as f64),
+            ("cache_hit_rate", rate),
+            ("forward_passes", self.forward_passes.load(Relaxed) as f64),
+            ("batches", batches as f64),
+            ("batched_episodes", episodes as f64),
+            ("batch_occupancy", occupancy),
+            ("stage_ns", self.stage_ns.load(Relaxed) as f64),
+            ("forward_ns", self.forward_ns.load(Relaxed) as f64),
+            ("step_ns", self.step_ns.load(Relaxed) as f64),
+            ("writeback_ns", self.writeback_ns.load(Relaxed) as f64),
+        ]
+    }
+}
+
 /// Pretty-print a metric row to stdout.
 pub fn log_stdout(cycle: usize, env_steps: u64, pairs: &[(&str, f64)]) {
     log_stdout_tagged("", cycle, env_steps, pairs);
@@ -382,5 +467,41 @@ mod tests {
         let w = Stopwatch::manual();
         assert_eq!(w.steps_per_sec(), 0.0);
         assert!(w.extrapolate_hours(1).is_infinite());
+    }
+
+    #[test]
+    fn serve_metrics_derived_gauges() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = ServeMetrics::default();
+        let get = |m: &ServeMetrics, k: &str| {
+            m.snapshot().iter().find(|(n, _)| *n == k).map(|(_, v)| *v).unwrap()
+        };
+        // fresh server: derived gauges are 0, not NaN
+        assert_eq!(get(&m, "cache_hit_rate"), 0.0);
+        assert_eq!(get(&m, "batch_occupancy"), 0.0);
+
+        m.cache_hits.fetch_add(3, Relaxed);
+        m.cache_misses.fetch_add(1, Relaxed);
+        m.batches.fetch_add(2, Relaxed);
+        m.batched_episodes.fetch_add(12, Relaxed);
+        m.forward_passes.fetch_add(7, Relaxed);
+        assert_eq!(get(&m, "cache_hit_rate"), 0.75);
+        assert_eq!(get(&m, "batch_occupancy"), 6.0);
+        assert_eq!(get(&m, "forward_passes"), 7.0);
+
+        m.add_phase_timers(&crate::rollout::PhaseTimers {
+            stage_ns: 10,
+            forward_ns: 20,
+            step_ns: 30,
+            writeback_ns: 40,
+        });
+        m.add_phase_timers(&crate::rollout::PhaseTimers {
+            stage_ns: 1,
+            forward_ns: 2,
+            step_ns: 3,
+            writeback_ns: 4,
+        });
+        assert_eq!(get(&m, "stage_ns"), 11.0);
+        assert_eq!(get(&m, "writeback_ns"), 44.0);
     }
 }

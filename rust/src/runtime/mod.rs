@@ -102,3 +102,75 @@ impl Runtime {
         ParamSet::from_init_outputs(network, net, outputs)
     }
 }
+
+/// Scan a policy-zoo directory for trained checkpoints. Two layouts are
+/// recognized, so both a curated zoo of exported files and a raw `runs/`
+/// training directory serve as-is:
+///
+/// - `<dir>/<id>.ckpt`            → policy id `<id>`
+/// - `<dir>/<id>/student.ckpt`    → policy id `<id>` (run-dir layout)
+///
+/// Returns `(policy_id, checkpoint_path)` pairs sorted by id — the zoo
+/// listing is deterministic regardless of readdir order. A missing zoo
+/// directory is an empty zoo, not an error (servers routinely start with
+/// a synthetic-only zoo).
+pub fn discover_checkpoints(dir: &Path) -> Result<Vec<(String, std::path::PathBuf)>> {
+    let mut found = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(found),
+        Err(e) => return Err(e).context(format!("scanning zoo dir {}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry.context("reading zoo dir entry")?;
+        let path = entry.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if path.is_file() {
+            if let Some(id) = name.strip_suffix(".ckpt") {
+                if !id.is_empty() {
+                    found.push((id.to_string(), path.clone()));
+                }
+            }
+        } else if path.is_dir() {
+            let ckpt = path.join("student.ckpt");
+            if ckpt.is_file() {
+                found.push((name.to_string(), ckpt));
+            }
+        }
+    }
+    found.sort();
+    Ok(found)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_discovery_layouts_and_ordering() {
+        let dir = std::env::temp_dir().join("jaxued_zoo_discovery_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("run_b")).unwrap();
+        std::fs::create_dir_all(dir.join("not_a_run")).unwrap();
+        std::fs::write(dir.join("zeta.ckpt"), b"z").unwrap();
+        std::fs::write(dir.join("alpha.ckpt"), b"a").unwrap();
+        std::fs::write(dir.join("run_b").join("student.ckpt"), b"b").unwrap();
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        std::fs::write(dir.join(".ckpt"), b"empty id is ignored").unwrap();
+
+        let zoo = discover_checkpoints(&dir).unwrap();
+        let ids: Vec<&str> = zoo.iter().map(|(id, _)| id.as_str()).collect();
+        assert_eq!(ids, ["alpha", "run_b", "zeta"], "sorted by id");
+        let by_id = |want: &str| {
+            zoo.iter().find(|(id, _)| id == want).map(|(_, p)| p.clone()).unwrap()
+        };
+        assert_eq!(by_id("alpha"), dir.join("alpha.ckpt"));
+        assert_eq!(by_id("run_b"), dir.join("run_b").join("student.ckpt"));
+
+        // a missing directory is an empty zoo, not an error
+        assert!(discover_checkpoints(&dir.join("missing")).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

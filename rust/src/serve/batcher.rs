@@ -1,0 +1,393 @@
+//! The micro-batcher: drains concurrent `/eval` requests into the
+//! fixed-shape work-queue evaluator so the `apply_b{B}` batch stays full.
+//!
+//! Connection handlers park [`EvalWork`] items on a bounded
+//! [`BatchQueue`]; the single batcher thread drains everything queued,
+//! groups it FIFO by policy ([`plan_batches`]), and runs each group as
+//! one `run_episode_queue` pass — episodes from unrelated requests share
+//! batch columns. Because every episode's RNG stream is content-keyed
+//! ([`adhoc_episode_rng`]: a function of (master, level bytes, trial)
+//! only), sharing a batch cannot change any level's result: batched
+//! output is bit-identical to the solo
+//! [`evaluate_levels`](crate::eval::evaluate_levels) reference path.
+//!
+//! Ordering is FIFO-deterministic end to end: the queue preserves arrival
+//! order, `plan_batches` groups by first appearance, and episodes are
+//! flattened work-by-work, level-by-level, trial-by-trial. No step
+//! consults a hash map (`serve/` is lint-scoped order-sensitive), so the
+//! batch assembly for a given arrival order is reproducible — and thanks
+//! to the content-keyed streams, even a *different* arrival order changes
+//! only scheduling, never results.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Condvar, Mutex};
+
+use crate::env::{LevelMeta, UnderspecifiedEnv};
+use crate::eval::{adhoc_episode_rng, LevelResult};
+use crate::metrics::ServeMetrics;
+use crate::rollout::RolloutEngine;
+
+use super::cache::{cache_key, ResultCache};
+use super::zoo::{DynPolicy, PolicyStore};
+
+/// One level awaiting evaluation: its position in the originating
+/// request, its canonical bytes (the RNG/cache key), and the decoded
+/// level.
+pub struct PendingLevel<L> {
+    pub idx: usize,
+    pub bytes: Vec<u8>,
+    pub level: L,
+}
+
+/// One `/eval` request's cache-miss remainder, queued for the batcher.
+pub struct EvalWork<L> {
+    pub policy: String,
+    pub trials: usize,
+    pub master: u64,
+    pub levels: Vec<PendingLevel<L>>,
+    /// Where the batcher delivers this request's results.
+    pub respond: mpsc::Sender<BatchOutcome>,
+}
+
+/// What the batcher sends back per request.
+pub struct BatchOutcome {
+    /// `(request level index, result)` pairs, request order.
+    pub results: Vec<(usize, LevelResult)>,
+    /// Forward passes of the engine run that computed these results.
+    /// Shared across every request in the same policy group — the whole
+    /// point of micro-batching is that one pass serves many requests.
+    pub forward_passes: u64,
+    /// Set when the group failed (policy load or engine error); the
+    /// router maps it to a 500.
+    pub error: Option<String>,
+}
+
+struct QueueInner<L> {
+    works: VecDeque<EvalWork<L>>,
+    shutdown: bool,
+}
+
+/// Bounded MPSC hand-off between connection handlers and the batcher.
+pub struct BatchQueue<L> {
+    inner: Mutex<QueueInner<L>>,
+    cv: Condvar,
+    cap: usize,
+}
+
+impl<L> BatchQueue<L> {
+    pub fn new(cap: usize) -> BatchQueue<L> {
+        BatchQueue {
+            inner: Mutex::new(QueueInner { works: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue; `false` means the queue is full (shed with 503) or the
+    /// server is shutting down.
+    pub fn push(&self, work: EvalWork<L>) -> bool {
+        let mut inner = self.inner.lock().expect("batch queue poisoned");
+        if inner.shutdown || inner.works.len() >= self.cap {
+            return false;
+        }
+        inner.works.push_back(work);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Block until work arrives, then drain *everything* queued (the
+    /// batcher wants the widest batch available). Returns `None` only
+    /// once shut down *and* empty, so in-flight requests still complete
+    /// during shutdown.
+    pub fn drain_blocking(&self) -> Option<Vec<EvalWork<L>>> {
+        let mut inner = self.inner.lock().expect("batch queue poisoned");
+        loop {
+            if !inner.works.is_empty() {
+                return Some(inner.works.drain(..).collect());
+            }
+            if inner.shutdown {
+                return None;
+            }
+            inner = self.cv.wait(inner).expect("batch queue poisoned");
+        }
+    }
+
+    pub fn shutdown(&self) {
+        self.inner.lock().expect("batch queue poisoned").shutdown = true;
+        self.cv.notify_all();
+    }
+
+    /// Currently queued works (metrics).
+    pub fn depth(&self) -> usize {
+        self.inner.lock().expect("batch queue poisoned").works.len()
+    }
+}
+
+/// Group a drained batch by policy, preserving FIFO order: groups appear
+/// in order of each policy's first appearance, and indices within a group
+/// keep arrival order. Pure and hash-free, so the plan for a given
+/// arrival order is always the same — the pinned-ordering contract the
+/// lint fixture (`tests/lint_fixtures/serve_batcher.rs`) documents.
+pub fn plan_batches<L>(works: &[EvalWork<L>]) -> Vec<(String, Vec<usize>)> {
+    let mut plan: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, w) in works.iter().enumerate() {
+        match plan.iter_mut().find(|(p, _)| *p == w.policy) {
+            Some((_, idxs)) => idxs.push(i),
+            None => plan.push((w.policy.clone(), vec![i])),
+        }
+    }
+    plan
+}
+
+/// Run one drained batch: one engine pass per policy group, results
+/// cached and delivered per request. Send failures are ignored — a
+/// client that hung up simply doesn't collect its results.
+pub fn run_batches<E: UnderspecifiedEnv>(
+    env: &E, engine: &mut RolloutEngine, store: &mut PolicyStore, cache: &ResultCache,
+    metrics: &ServeMetrics, max_steps: usize, works: Vec<EvalWork<E::Level>>,
+) {
+    for (policy_id, work_idxs) in plan_batches(&works) {
+        // Flatten FIFO: work-by-work, level-by-level, trial-by-trial.
+        // `slots[s]` is the s-th (work, level) pair; episode e maps to
+        // (slot, trial) via `ep_map`, keeping each slot's trials in one
+        // contiguous outcome run.
+        let mut slots: Vec<(usize, usize)> = Vec::new();
+        let mut ep_map: Vec<(usize, usize)> = Vec::new();
+        for &wi in &work_idxs {
+            let w = &works[wi];
+            for li in 0..w.levels.len() {
+                let s = slots.len();
+                slots.push((wi, li));
+                for t in 0..w.trials {
+                    ep_map.push((s, t));
+                }
+            }
+        }
+        let n = ep_map.len();
+        if n == 0 {
+            for &wi in &work_idxs {
+                let _ = works[wi].respond.send(BatchOutcome {
+                    results: Vec::new(),
+                    forward_passes: 0,
+                    error: None,
+                });
+            }
+            continue;
+        }
+
+        let run = store.with_model(&policy_id, |model| {
+            let policy = DynPolicy(model);
+            engine.run_episode_queue(env, &policy, n, max_steps, false, |e| {
+                let (s, trial) = ep_map[e];
+                let (wi, li) = slots[s];
+                let w = &works[wi];
+                let pl = &w.levels[li];
+                let mut r = adhoc_episode_rng(w.master, &pl.bytes, trial);
+                let state = env.reset_to_level(&pl.level, &mut r);
+                (state, r)
+            })
+        });
+
+        match run {
+            Ok(outcomes) => {
+                let forward_passes = engine.forward_passes();
+                metrics.forward_passes.fetch_add(forward_passes, Relaxed);
+                metrics.batches.fetch_add(1, Relaxed);
+                metrics.batched_episodes.fetch_add(n as u64, Relaxed);
+                metrics.add_phase_timers(&engine.take_timers());
+
+                let mut per_work: BTreeMap<usize, Vec<(usize, LevelResult)>> =
+                    BTreeMap::new();
+                let mut off = 0usize;
+                for &(wi, li) in &slots {
+                    let w = &works[wi];
+                    let outs = &outcomes[off..off + w.trials];
+                    off += w.trials;
+                    let pl = &w.levels[li];
+                    // Content-derived name: stable across requests, so a
+                    // cached result carries the same name a fresh one would.
+                    let name = format!("{:016x}", pl.level.fingerprint());
+                    let lr = LevelResult::from_outcomes(name, outs);
+                    cache.insert(
+                        cache_key(&w.policy, w.trials, w.master, &pl.bytes),
+                        lr.clone(),
+                    );
+                    per_work.entry(wi).or_default().push((pl.idx, lr));
+                }
+                for &wi in &work_idxs {
+                    let _ = works[wi].respond.send(BatchOutcome {
+                        results: per_work.remove(&wi).unwrap_or_default(),
+                        forward_passes,
+                        error: None,
+                    });
+                }
+            }
+            Err(e) => {
+                for &wi in &work_idxs {
+                    let _ = works[wi].respond.send(BatchOutcome {
+                        results: Vec::new(),
+                        forward_passes: 0,
+                        error: Some(format!("{e:#}")),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::env::maze::MazeEnv;
+    use crate::env::{holdout, UnderspecifiedEnv};
+    use crate::eval::evaluate_levels;
+    use crate::rollout::WorkerPool;
+    use crate::serve::zoo::{ZooCatalog, ZooSource};
+
+    fn work(policy: &str) -> (EvalWork<crate::env::level::Level>, mpsc::Receiver<BatchOutcome>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            EvalWork {
+                policy: policy.to_string(),
+                trials: 1,
+                master: 0,
+                levels: Vec::new(),
+                respond: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn plan_is_fifo_by_first_appearance() {
+        // policies [b, a, b, c] → groups [(b, [0, 2]), (a, [1]), (c, [3])]
+        let (w0, _r0) = work("b");
+        let (w1, _r1) = work("a");
+        let (w2, _r2) = work("b");
+        let (w3, _r3) = work("c");
+        let plan = plan_batches(&[w0, w1, w2, w3]);
+        assert_eq!(
+            plan,
+            vec![
+                ("b".to_string(), vec![0, 2]),
+                ("a".to_string(), vec![1]),
+                ("c".to_string(), vec![3]),
+            ]
+        );
+    }
+
+    #[test]
+    fn queue_sheds_when_full_and_drains_fifo() {
+        let q: BatchQueue<crate::env::level::Level> = BatchQueue::new(2);
+        let (w0, _r0) = work("a");
+        let (w1, _r1) = work("b");
+        let (w2, _r2) = work("c");
+        assert!(q.push(w0));
+        assert!(q.push(w1));
+        assert!(!q.push(w2), "over cap must shed");
+        assert_eq!(q.depth(), 2);
+        let drained = q.drain_blocking().unwrap();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(drained[0].policy, "a");
+        assert_eq!(drained[1].policy, "b");
+        assert_eq!(q.depth(), 0);
+        q.shutdown();
+        assert!(q.drain_blocking().is_none(), "shutdown + empty ends the loop");
+        let (w3, _r3) = work("d");
+        assert!(!q.push(w3), "no new work after shutdown");
+    }
+
+    #[test]
+    fn batched_results_match_the_solo_reference_bit_for_bit() {
+        let env = MazeEnv::new(40);
+        let b = 4;
+        let trials = 3;
+        let master = 7u64;
+        let named: Vec<(String, crate::env::level::Level)> = holdout::named_levels()
+            .into_iter()
+            .take(4)
+            .map(|n| (n.name.to_string(), n.level))
+            .collect();
+
+        // Solo reference: each half of the level list evaluated alone.
+        let pool = Arc::new(WorkerPool::new(1));
+        let policy =
+            crate::rollout::SyntheticPolicy { num_actions: env.num_actions() };
+        let solo_a = evaluate_levels(
+            &env, &policy, &named[..2], trials, 40, b, master, pool.clone(),
+        )
+        .unwrap();
+        let solo_b = evaluate_levels(
+            &env, &policy, &named[2..], trials, 40, b, master, pool.clone(),
+        )
+        .unwrap();
+
+        // Batched: the same halves as two concurrent works in one drain.
+        let catalog = Arc::new(ZooCatalog::new(vec![(
+            "synthetic0".to_string(),
+            ZooSource::Synthetic { num_actions: env.num_actions() },
+        )]));
+        let mut store =
+            PolicyStore::new(None, None, "student_apply_b4".into(), 4, 2, catalog);
+        let cache = ResultCache::new(64);
+        let metrics = ServeMetrics::default();
+        let mut engine = RolloutEngine::with_pool(&env, b, pool);
+        let make_work = |levels: &[(String, crate::env::level::Level)]| {
+            let (tx, rx) = mpsc::channel();
+            (
+                EvalWork {
+                    policy: "synthetic0".to_string(),
+                    trials,
+                    master,
+                    levels: levels
+                        .iter()
+                        .enumerate()
+                        .map(|(i, (_, l))| PendingLevel {
+                            idx: i,
+                            bytes: l.encode(),
+                            level: l.clone(),
+                        })
+                        .collect(),
+                    respond: tx,
+                },
+                rx,
+            )
+        };
+        let (wa, ra) = make_work(&named[..2]);
+        let (wb, rb) = make_work(&named[2..]);
+        run_batches(&env, &mut engine, &mut store, &cache, &metrics, 40, vec![wa, wb]);
+
+        let out_a = ra.recv().unwrap();
+        let out_b = rb.recv().unwrap();
+        assert!(out_a.error.is_none() && out_b.error.is_none());
+        for (solo, out, levels) in
+            [(&solo_a, &out_a, &named[..2]), (&solo_b, &out_b, &named[2..])]
+        {
+            assert_eq!(out.results.len(), levels.len());
+            for (i, (_, level)) in levels.iter().enumerate() {
+                let (idx, got) = &out.results[i];
+                assert_eq!(*idx, i);
+                let want = &solo.levels[i];
+                assert_eq!(
+                    got.solve_rate.to_bits(),
+                    want.solve_rate.to_bits(),
+                    "level {i}: batched vs solo solve rate"
+                );
+                assert_eq!(got.mean_steps.to_bits(), want.mean_steps.to_bits());
+                // and the cache now holds the same bits
+                let cached = cache
+                    .get(&cache_key("synthetic0", trials, master, &level.encode()))
+                    .expect("computed result must be cached");
+                assert_eq!(cached.solve_rate.to_bits(), got.solve_rate.to_bits());
+            }
+        }
+        // one policy → one batched engine pass over both works
+        assert_eq!(metrics.batches.load(Relaxed), 1);
+        assert_eq!(metrics.batched_episodes.load(Relaxed), (4 * trials) as u64);
+        assert!(metrics.forward_passes.load(Relaxed) > 0);
+        assert_eq!(out_a.forward_passes, out_b.forward_passes);
+    }
+}

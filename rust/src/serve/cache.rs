@@ -1,0 +1,157 @@
+//! Sharded, byte-keyed result cache for served evaluations.
+//!
+//! Key = `(policy id, trials, master seed, level bytes)` — exactly the
+//! inputs the content-keyed RNG derivation
+//! ([`adhoc_episode_rng`](crate::eval::adhoc_episode_rng)) makes a
+//! per-level result a pure function of. A hit therefore returns a value
+//! bit-identical to what re-running the episodes would produce, with zero
+//! forward passes (the integration suite asserts this through the
+//! `/metrics` forward-pass counter).
+//!
+//! Sharded FIFO: N independent mutex-guarded shards, each an ordered map
+//! plus an insertion queue, evicting oldest-first past its per-shard cap.
+//! `BTreeMap` rather than a hash map — `serve/` is lint-scoped
+//! order-sensitive (batch assembly must stay FIFO-deterministic), and the
+//! key-derived shard index below is a fixed function, not a per-process
+//! hasher.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use crate::eval::LevelResult;
+
+/// Shard count: enough to keep concurrent handler threads from
+/// serializing on one lock, small enough that tiny caches still shard.
+const SHARDS: usize = 16;
+
+struct Shard {
+    map: BTreeMap<Vec<u8>, LevelResult>,
+    order: VecDeque<Vec<u8>>,
+}
+
+/// The server-wide per-level result cache.
+pub struct ResultCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+}
+
+/// Build the canonical cache key. Length-prefix free: the fixed-width
+/// trials/master fields sit between the policy id and the level bytes, and
+/// the `0xFF` separator cannot appear in a policy id (ids are UTF-8 and
+/// checked printable at catalog build).
+pub fn cache_key(policy: &str, trials: usize, master: u64, level_bytes: &[u8]) -> Vec<u8> {
+    let mut k = Vec::with_capacity(policy.len() + 1 + 16 + level_bytes.len());
+    k.extend_from_slice(policy.as_bytes());
+    k.push(0xFF);
+    k.extend_from_slice(&(trials as u64).to_le_bytes());
+    k.extend_from_slice(&master.to_le_bytes());
+    k.extend_from_slice(level_bytes);
+    k
+}
+
+/// Deterministic shard index: FNV-1a over the key. A fixed function of
+/// the bytes (unlike `RandomState`), so shard residency is reproducible
+/// run to run.
+fn shard_of(key: &[u8]) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in key {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    (h % SHARDS as u64) as usize
+}
+
+impl ResultCache {
+    /// Cache bounded at ~`cap` entries total (rounded up per shard).
+    pub fn new(cap: usize) -> ResultCache {
+        let per_shard_cap = cap.div_ceil(SHARDS).max(1);
+        ResultCache {
+            shards: (0..SHARDS)
+                .map(|_| {
+                    Mutex::new(Shard { map: BTreeMap::new(), order: VecDeque::new() })
+                })
+                .collect(),
+            per_shard_cap,
+        }
+    }
+
+    pub fn get(&self, key: &[u8]) -> Option<LevelResult> {
+        let shard = self.shards[shard_of(key)].lock().expect("cache shard poisoned");
+        shard.map.get(key).cloned()
+    }
+
+    /// Insert, evicting the shard's oldest entry past the cap. Re-inserting
+    /// an existing key overwrites in place (results are pure functions of
+    /// the key, so the value cannot actually differ).
+    pub fn insert(&self, key: Vec<u8>, result: LevelResult) {
+        let mut shard = self.shards[shard_of(&key)].lock().expect("cache shard poisoned");
+        if shard.map.insert(key.clone(), result).is_none() {
+            shard.order.push_back(key);
+            while shard.order.len() > self.per_shard_cap {
+                if let Some(old) = shard.order.pop_front() {
+                    shard.map.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// Total resident entries (metrics).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("cache shard poisoned").map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(name: &str, rate: f64) -> LevelResult {
+        LevelResult { name: name.into(), solve_rate: rate, mean_steps: 1.0 }
+    }
+
+    #[test]
+    fn key_discriminates_every_field() {
+        let base = cache_key("p", 3, 7, &[1, 2]);
+        assert_eq!(base, cache_key("p", 3, 7, &[1, 2]), "pure function");
+        assert_ne!(base, cache_key("q", 3, 7, &[1, 2]));
+        assert_ne!(base, cache_key("p", 4, 7, &[1, 2]));
+        assert_ne!(base, cache_key("p", 3, 8, &[1, 2]));
+        assert_ne!(base, cache_key("p", 3, 7, &[1, 3]));
+    }
+
+    #[test]
+    fn hit_miss_and_overwrite() {
+        let c = ResultCache::new(64);
+        let k = cache_key("p", 1, 0, &[9]);
+        assert!(c.get(&k).is_none());
+        c.insert(k.clone(), result("a", 0.5));
+        assert_eq!(c.get(&k).unwrap().solve_rate, 0.5);
+        assert_eq!(c.len(), 1);
+        // overwrite does not duplicate the FIFO entry
+        c.insert(k.clone(), result("a", 0.5));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn eviction_is_bounded_and_oldest_first() {
+        // cap 16 → 1 entry per shard: the second insert landing in a shard
+        // evicts that shard's first.
+        let c = ResultCache::new(16);
+        let keys: Vec<Vec<u8>> =
+            (0..200u32).map(|i| cache_key("p", 1, 0, &i.to_le_bytes())).collect();
+        for k in &keys {
+            c.insert(k.clone(), result("x", 0.0));
+        }
+        assert!(c.len() <= SHARDS, "cap 16 → at most one entry per shard, got {}", c.len());
+        assert!(!c.is_empty());
+        // the newest key in some shard must still be resident
+        assert!(keys.iter().any(|k| c.get(k).is_some()));
+    }
+}

@@ -1,0 +1,232 @@
+//! Minimal HTTP/1.1 framing for `ued-serve` — request parsing and
+//! response writing over any `Read`/`Write`, no TCP assumptions (tests
+//! drive it with in-memory cursors).
+//!
+//! Deliberately small: one request per connection (`Connection: close`),
+//! no chunked transfer, no keep-alive, header section capped at
+//! [`MAX_HEAD_BYTES`] and bodies at [`MAX_BODY_BYTES`] so a hostile peer
+//! cannot balloon memory before the JSON layer's own guards
+//! (`MAX_PARSE_BYTES`) even see the payload.
+
+use std::io::{Read, Write};
+
+/// Cap on the request line + headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Cap on request bodies (well under the JSON parser's own input cap).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed request: method, path (query strings are not split off —
+/// the router matches exact targets), raw body bytes.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be read.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Peer closed before a full request arrived.
+    Closed,
+    /// Head or body exceeded its cap (maps to 413).
+    TooLarge(&'static str),
+    /// Unparseable framing (maps to 400).
+    Malformed(String),
+    /// Transport error (connection is dropped without a response).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Closed => write!(f, "connection closed mid-request"),
+            HttpError::TooLarge(what) => write!(f, "{what} too large"),
+            HttpError::Malformed(m) => write!(f, "malformed request: {m}"),
+            HttpError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> HttpError {
+        HttpError::Io(e)
+    }
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|i| i + 4)
+}
+
+/// Read and parse one request. Blocks until the head (and, when a
+/// `Content-Length` is present, the full body) has arrived; the caller
+/// is expected to have armed a read timeout on the transport.
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request, HttpError> {
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let mut chunk = [0u8; 2048];
+    let head_end = loop {
+        if let Some(end) = find_head_end(&buf) {
+            break end;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::TooLarge("request head"));
+        }
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Err(HttpError::Closed);
+            }
+            return Err(HttpError::Malformed("eof before end of headers".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::Malformed("non-utf8 head".into()))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| HttpError::Malformed("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| HttpError::Malformed("request line has no target".into()))?
+        .to_string();
+    match parts.next() {
+        Some(v) if v.starts_with("HTTP/1.") => {}
+        _ => return Err(HttpError::Malformed("not an HTTP/1.x request".into())),
+    }
+
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = value
+                .trim()
+                .parse()
+                .map_err(|_| HttpError::Malformed("bad content-length".into()))?;
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError::TooLarge("request body"));
+    }
+
+    let mut body: Vec<u8> = buf[head_end..].to_vec();
+    if body.len() > content_length {
+        return Err(HttpError::Malformed("body longer than content-length".into()));
+    }
+    while body.len() < content_length {
+        let n = r.read(&mut chunk)?;
+        if n == 0 {
+            return Err(HttpError::Malformed("eof before end of body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+        if body.len() > content_length {
+            return Err(HttpError::Malformed("body longer than content-length".into()));
+        }
+    }
+
+    Ok(Request { method, path, body })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one JSON response and flush. Always `Connection: close` — the
+/// server's unit of work is one request.
+pub fn write_response<W: Write>(w: &mut W, status: u16, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        reason(status),
+        body.len(),
+        body
+    )?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &str) -> Result<Request, HttpError> {
+        read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let r = req("GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.body.is_empty());
+
+        let r = req(
+            "POST /eval HTTP/1.1\r\nContent-Type: application/json\r\nContent-Length: 7\r\n\r\n{\"a\":1}",
+        )
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.body, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn content_length_is_case_insensitive() {
+        let r = req("POST /x HTTP/1.1\r\ncOnTeNt-LeNgTh: 2\r\n\r\nhi").unwrap();
+        assert_eq!(r.body, b"hi");
+    }
+
+    #[test]
+    fn rejects_malformed_framing() {
+        assert!(matches!(req(""), Err(HttpError::Closed)));
+        assert!(matches!(req("GET /x\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(req("GARBAGE\r\n\r\n"), Err(HttpError::Malformed(_))));
+        assert!(matches!(
+            req("POST /x HTTP/1.1\r\nContent-Length: zzz\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        // truncated body: peer closed before content-length bytes arrived
+        assert!(matches!(
+            req("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nhi"),
+            Err(HttpError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn enforces_size_caps() {
+        let huge_head = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        assert!(matches!(req(&huge_head), Err(HttpError::TooLarge(_))));
+        let huge_body =
+            format!("POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(req(&huge_body), Err(HttpError::TooLarge(_))));
+    }
+
+    #[test]
+    fn response_framing() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "{\"ok\":true}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+        let mut out = Vec::new();
+        write_response(&mut out, 503, "{}").unwrap();
+        assert!(String::from_utf8(out).unwrap().starts_with("HTTP/1.1 503 Service Unavailable"));
+    }
+}

@@ -1,0 +1,336 @@
+//! `ued-serve` — a batched policy-zoo evaluation server.
+//!
+//! A long-running, dependency-free HTTP/1.1 + JSON server that exposes
+//! the fixed-shape work-queue evaluator as a service:
+//!
+//! * **Zoo** — trained checkpoints discovered under `--zoo-dir` at
+//!   startup (plus `--synthetic-zoo N` runtime-free policies), loaded
+//!   lazily on first request and LRU-bounded at `--zoo-cap` resident.
+//! * **Micro-batching** — connection handlers validate, probe the cache,
+//!   and enqueue; one batcher thread drains all in-flight requests per
+//!   cycle and packs their episodes into `run_episode_queue` columns so
+//!   the `apply_b{B}` batch stays full across requests.
+//! * **Caching** — per-`(policy, trials, seed, level-bytes)` results.
+//!   The content-keyed episode RNG makes a level's result independent of
+//!   its batch position, so cached replies are bit-identical to
+//!   re-evaluation and cost zero forward passes.
+//!
+//! ```text
+//!                    ┌────────────────────────────────────────────┐
+//!  TCP clients ──►── │ accept loop ──► per-conn threads           │
+//!                    │   http::read_request → router::handle      │
+//!                    │     ├─ cache hit ──────────────► respond   │
+//!                    │     └─ miss → EvalWork ─┐                  │
+//!                    │                         ▼                  │
+//!                    │            BatchQueue (bounded, FIFO)      │
+//!                    │                         │ drain_blocking   │
+//!                    │                         ▼                  │
+//!                    │   batcher thread: plan_batches by policy   │
+//!                    │     PolicyStore (lazy zoo, LRU)            │
+//!                    │     RolloutEngine::run_episode_queue       │
+//!                    │     results → cache → mpsc reply per work  │
+//!                    └────────────────────────────────────────────┘
+//! ```
+//!
+//! Endpoints: `GET /healthz`, `GET /zoo`, `GET /metrics`,
+//! `POST /eval`, `POST /levels/generate` (see [`router`]).
+
+pub mod batcher;
+pub mod cache;
+pub mod http;
+pub mod router;
+pub mod zoo;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ServeConfig;
+use crate::env::EnvFamily;
+use crate::metrics::ServeMetrics;
+use crate::rollout::{RolloutEngine, WorkerPool};
+use crate::runtime::{discover_checkpoints, Runtime};
+
+use batcher::BatchQueue;
+use cache::ResultCache;
+use router::ServeContext;
+use zoo::{PolicyStore, ZooCatalog, ZooSource};
+
+/// A running server: bound address plus handles for observation and
+/// shutdown. Dropping it does NOT stop the server — call
+/// [`ServerHandle::shutdown_and_join`].
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    pub metrics: Arc<ServeMetrics>,
+    pub catalog: Arc<ZooCatalog>,
+    shutdown: Arc<AtomicBool>,
+    accept: JoinHandle<()>,
+    batcher: JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// Stop accepting, drain the batcher, join both threads.
+    pub fn shutdown_and_join(self) {
+        self.shutdown.store(true, Relaxed);
+        let _ = self.accept.join();
+        let _ = self.batcher.join();
+    }
+}
+
+/// Build the zoo catalog: synthetic entries first (ids `synthetic0..N`),
+/// then discovered checkpoints. Checkpoints require a runtime to serve;
+/// without one they are left out of the catalog (with a notice) so
+/// `GET /zoo` never advertises a policy every request against would 500.
+fn build_catalog(
+    cfg: &ServeConfig, num_actions: usize, have_runtime: bool,
+) -> Result<Vec<(String, ZooSource)>> {
+    let mut entries: Vec<(String, ZooSource)> = (0..cfg.synthetic_zoo)
+        .map(|i| (format!("synthetic{i}"), ZooSource::Synthetic { num_actions }))
+        .collect();
+    let found = discover_checkpoints(Path::new(&cfg.zoo_dir))
+        .with_context(|| format!("scanning zoo dir {:?}", cfg.zoo_dir))?;
+    if !have_runtime && !found.is_empty() {
+        eprintln!(
+            "ued-serve: ignoring {} checkpoint(s) under {:?}: no artifact runtime \
+             (start with --artifacts pointing at a compiled artifact set)",
+            found.len(),
+            cfg.zoo_dir
+        );
+    } else {
+        for (id, path) in found {
+            if entries.iter().any(|(e, _)| *e == id) {
+                eprintln!("ued-serve: skipping duplicate zoo id {id:?}");
+                continue;
+            }
+            entries.push((id, ZooSource::Checkpoint { path }));
+        }
+    }
+    Ok(entries)
+}
+
+/// Start the server: bind, spawn the batcher and accept threads, return
+/// immediately. `runtime` is `None` when no compiled artifacts are
+/// available (synthetic-only zoo).
+pub fn serve<F: EnvFamily>(
+    family: F, cfg: ServeConfig, runtime: Option<Runtime>,
+) -> Result<ServerHandle> {
+    let params = cfg.env_params();
+    let env = family.make_env(&params);
+    let num_actions = crate::env::UnderspecifiedEnv::num_actions(&env);
+    let entries = build_catalog(&cfg, num_actions, runtime.is_some())?;
+    anyhow::ensure!(
+        !entries.is_empty(),
+        "zoo is empty: no checkpoints under {:?} and --synthetic-zoo 0",
+        cfg.zoo_dir
+    );
+
+    let catalog = Arc::new(ZooCatalog::new(entries));
+    let cache = Arc::new(ResultCache::new(cfg.cache_cap));
+    let metrics = Arc::new(ServeMetrics::default());
+    let queue: Arc<BatchQueue<F::Level>> = Arc::new(BatchQueue::new(cfg.queue_cap));
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding {:?}", cfg.addr))?;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let addr = listener.local_addr().context("local addr")?;
+
+    // The batcher owns everything that is Send-but-not-Sync: the runtime
+    // (artifact cache is a RefCell) and the engine/policy store.
+    let batcher = {
+        let queue = queue.clone();
+        let cache = cache.clone();
+        let metrics = metrics.clone();
+        let catalog = catalog.clone();
+        let prefix = cfg.env.artifact_prefix();
+        let apply_name = cfg.student_apply_artifact();
+        let (max_batch, zoo_cap, max_steps) = (cfg.max_batch, cfg.zoo_cap, cfg.max_steps);
+        let threads = cfg.rollout_threads.max(1);
+        std::thread::Builder::new()
+            .name("ued-serve-batcher".to_string())
+            .spawn(move || {
+                let family = F::default();
+                let env = family.make_env(&params);
+                let pool = Arc::new(WorkerPool::new(threads));
+                let mut engine = RolloutEngine::with_pool(&env, max_batch, pool);
+                let mut store = PolicyStore::new(
+                    runtime,
+                    prefix,
+                    apply_name,
+                    crate::env::UnderspecifiedEnv::num_actions(&env),
+                    zoo_cap,
+                    catalog,
+                );
+                while let Some(works) = queue.drain_blocking() {
+                    batcher::run_batches(
+                        &env, &mut engine, &mut store, &cache, &metrics, max_steps, works,
+                    );
+                }
+            })
+            .context("spawning batcher thread")?
+    };
+
+    let ctx = Arc::new(ServeContext::<F> {
+        cfg,
+        params,
+        catalog: catalog.clone(),
+        cache,
+        metrics: metrics.clone(),
+        queue: queue.clone(),
+    });
+
+    let accept = {
+        let shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("ued-serve-accept".to_string())
+            .spawn(move || {
+                // Detached connection threads can outlive the accept loop
+                // by a response write; that is fine — they hold only Arcs.
+                while !shutdown.load(Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            let ctx = ctx.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("ued-serve-conn".to_string())
+                                .spawn(move || handle_connection(stream, &ctx));
+                        }
+                        // Nonblocking listener: sleep through idle and
+                        // transient errors, re-check the shutdown flag.
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+                queue.shutdown();
+            })
+            .context("spawning accept thread")?
+    };
+
+    Ok(ServerHandle { addr, metrics, catalog, shutdown, accept, batcher })
+}
+
+/// Serve one request on one connection, then close.
+fn handle_connection<F: EnvFamily>(mut stream: TcpStream, ctx: &ServeContext<F>) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    ctx.metrics.requests.fetch_add(1, Relaxed);
+    match http::read_request(&mut stream) {
+        Ok(req) => {
+            let (status, body) = router::handle(ctx, &req);
+            let _ = http::write_response(&mut stream, status, &body.to_string());
+        }
+        Err(http::HttpError::Closed) | Err(http::HttpError::Io(_)) => {}
+        Err(e @ http::HttpError::TooLarge(_)) => {
+            ctx.metrics.bad_requests.fetch_add(1, Relaxed);
+            let body = format!("{{\"error\":{}}}", crate::util::json::Json::from(e.to_string().as_str()).to_string());
+            let _ = http::write_response(&mut stream, 413, &body);
+        }
+        Err(e @ http::HttpError::Malformed(_)) => {
+            ctx.metrics.bad_requests.fetch_add(1, Relaxed);
+            let body = format!("{{\"error\":{}}}", crate::util::json::Json::from(e.to_string().as_str()).to_string());
+            let _ = http::write_response(&mut stream, 400, &body);
+        }
+    }
+}
+
+/// Set when SIGINT/SIGTERM arrives; polled by the binary's main loop.
+static SHUTDOWN_SIGNAL: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+type SigHandler = extern "C" fn(i32);
+
+#[cfg(unix)]
+extern "C" {
+    /// libc `signal(2)`. Used directly because the vendor set has no
+    /// `libc`/`signal-hook` crate; returns the previous handler.
+    fn signal(signum: i32, handler: SigHandler) -> usize;
+}
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    // SAFETY-adjacent: a relaxed atomic store is async-signal-safe.
+    SHUTDOWN_SIGNAL.store(true, Relaxed);
+}
+
+/// Install SIGINT/SIGTERM handlers that flip [`shutdown_requested`], so
+/// the binary can drain and exit 0 instead of being killed mid-batch.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    // SAFETY: `on_signal` only performs a relaxed atomic store, which is
+    // async-signal-safe; `signal` is called before any threads handle
+    // requests. 2 = SIGINT, 15 = SIGTERM on every Unix we target.
+    unsafe {
+        signal(2, on_signal);
+        signal(15, on_signal);
+    }
+}
+
+/// Whether a termination signal has been observed.
+pub fn shutdown_requested() -> bool {
+    SHUTDOWN_SIGNAL.load(Relaxed)
+}
+
+/// Serialize servers within one test process: signal state is global and
+/// ports are plentiful, but metrics assertions want isolation.
+#[cfg(test)]
+static TEST_SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::MazeFamily;
+    use crate::util::cli::Args;
+    use std::io::Read;
+
+    fn serve_cfg(extra: &[&str]) -> ServeConfig {
+        let mut argv = vec![
+            "--serve-addr".to_string(),
+            "127.0.0.1:0".to_string(),
+            "--synthetic-zoo".to_string(),
+            "2".to_string(),
+        ];
+        argv.extend(extra.iter().map(|s| s.to_string()));
+        ServeConfig::from_args(&Args::parse_from(argv)).unwrap()
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        use std::io::Write;
+        write!(s, "GET {path} HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        s.read_to_string(&mut raw).unwrap();
+        let status: u16 = raw.split(' ').nth(1).unwrap().parse().unwrap();
+        let body = raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, body)
+    }
+
+    #[test]
+    fn startup_healthz_and_clean_shutdown() {
+        let _serial = TEST_SERIAL.lock().unwrap();
+        let handle = serve(MazeFamily, serve_cfg(&[]), None).unwrap();
+        let (status, body) = get(handle.addr, "/healthz");
+        assert_eq!((status, body.as_str()), (200, "{\"ok\":true}"));
+        let (status, _) = get(handle.addr, "/zoo");
+        assert_eq!(status, 200);
+        handle.shutdown_and_join();
+    }
+
+    #[test]
+    fn empty_zoo_refuses_to_start() {
+        let _serial = TEST_SERIAL.lock().unwrap();
+        let cfg = serve_cfg(&["--synthetic-zoo", "0", "--zoo-dir", "/nonexistent-zoo"]);
+        let err = serve(MazeFamily, cfg, None).unwrap_err();
+        assert!(err.to_string().contains("zoo is empty"), "{err}");
+    }
+
+    #[test]
+    fn signal_flag_roundtrip() {
+        // Handler installation is idempotent and the flag is observable.
+        install_signal_handlers();
+        assert!(!shutdown_requested() || SHUTDOWN_SIGNAL.load(Relaxed));
+    }
+}

@@ -1,0 +1,474 @@
+//! Request routing and endpoint handlers.
+//!
+//! | Endpoint                | Method | Body                                              |
+//! |-------------------------|--------|---------------------------------------------------|
+//! | `/healthz`              | GET    | —                                                 |
+//! | `/zoo`                  | GET    | —                                                 |
+//! | `/metrics`              | GET    | —                                                 |
+//! | `/eval`                 | POST   | `{"policy", "levels": [hex…], "trials"?, "seed"?}`|
+//! | `/levels/generate`      | POST   | `{"seed"?, "mutations"?}`                         |
+//!
+//! Handlers are pure functions from (shared context, request) to
+//! (status, JSON body) — no transport types — so the whole routing layer
+//! is unit-testable without sockets.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{mpsc, Arc};
+
+use crate::config::ServeConfig;
+use crate::env::{EnvFamily, EnvParams, LevelGenerator, LevelMeta, LevelMutator};
+use crate::eval::{EvalReport, LevelResult};
+use crate::metrics::ServeMetrics;
+use crate::util::json::Json;
+
+use super::batcher::{BatchQueue, EvalWork, PendingLevel};
+use super::cache::{cache_key, ResultCache};
+use super::http::Request;
+use super::zoo::ZooCatalog;
+
+/// Stream id for `/levels/generate` draws (disjoint from training and
+/// eval streams; generation for a given seed is fully deterministic).
+const GENERATE_STREAM: u64 = 0x5EED;
+
+/// Ceiling on `/levels/generate` mutation counts.
+const MAX_MUTATIONS: usize = 10_000;
+
+/// Everything a connection handler needs, shared behind one `Arc`.
+pub struct ServeContext<F: EnvFamily> {
+    pub cfg: ServeConfig,
+    pub params: EnvParams,
+    pub catalog: Arc<ZooCatalog>,
+    pub cache: Arc<ResultCache>,
+    pub metrics: Arc<ServeMetrics>,
+    pub queue: Arc<BatchQueue<F::Level>>,
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    let mut m = BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    Json::Obj(m)
+}
+
+fn err(msg: &str) -> Json {
+    obj(vec![("error", Json::from(msg))])
+}
+
+/// Route one request. 4xx outcomes bump the bad-request counter here so
+/// every transport shares the accounting.
+pub fn handle<F: EnvFamily>(ctx: &ServeContext<F>, req: &Request) -> (u16, Json) {
+    let (status, body) = route(ctx, req);
+    if (400..500).contains(&status) {
+        ctx.metrics.bad_requests.fetch_add(1, Relaxed);
+    }
+    (status, body)
+}
+
+fn route<F: EnvFamily>(ctx: &ServeContext<F>, req: &Request) -> (u16, Json) {
+    const ENDPOINTS: [&str; 5] = ["/healthz", "/zoo", "/metrics", "/eval", "/levels/generate"];
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/zoo") => zoo(ctx),
+        ("GET", "/metrics") => metrics(ctx),
+        ("POST", "/eval") => eval(ctx, &req.body),
+        ("POST", "/levels/generate") => generate(ctx, &req.body),
+        (_, path) if ENDPOINTS.contains(&path) => {
+            (405, err(&format!("method {} not allowed on {path}", req.method)))
+        }
+        (_, path) => (404, err(&format!("no such endpoint: {path}"))),
+    }
+}
+
+fn zoo<F: EnvFamily>(ctx: &ServeContext<F>) -> (u16, Json) {
+    let policies: Vec<Json> = ctx
+        .catalog
+        .rows()
+        .into_iter()
+        .map(|(id, loaded, synthetic)| {
+            obj(vec![
+                ("id", Json::from(id.as_str())),
+                ("loaded", Json::Bool(loaded)),
+                ("synthetic", Json::Bool(synthetic)),
+            ])
+        })
+        .collect();
+    (
+        200,
+        obj(vec![
+            ("policies", Json::Arr(policies)),
+            ("capacity", Json::from(ctx.cfg.zoo_cap)),
+        ]),
+    )
+}
+
+fn metrics<F: EnvFamily>(ctx: &ServeContext<F>) -> (u16, Json) {
+    let mut pairs: Vec<(&str, Json)> = ctx
+        .metrics
+        .snapshot()
+        .into_iter()
+        .map(|(k, v)| (k, Json::Num(v)))
+        .collect();
+    pairs.push(("zoo_size", Json::from(ctx.catalog.len())));
+    pairs.push(("zoo_loaded", Json::from(ctx.catalog.loaded_count())));
+    pairs.push(("queue_depth", Json::from(ctx.queue.depth())));
+    pairs.push(("cache_entries", Json::from(ctx.cache.len())));
+    (200, obj(pairs))
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, String> {
+    if body.is_empty() {
+        return Ok(Json::Obj(BTreeMap::new()));
+    }
+    let text = std::str::from_utf8(body).map_err(|_| "body is not utf-8".to_string())?;
+    Json::parse(text).map_err(|e| format!("bad json: {e}"))
+}
+
+fn eval<F: EnvFamily>(ctx: &ServeContext<F>, body: &[u8]) -> (u16, Json) {
+    let j = match parse_body(body) {
+        Ok(j) => j,
+        Err(e) => return (400, err(&e)),
+    };
+    let Some(policy) = j.get("policy").and_then(Json::as_str) else {
+        return (400, err("missing string field \"policy\""));
+    };
+    if !ctx.catalog.contains(policy) {
+        return (404, err(&format!("unknown policy {policy:?} (see GET /zoo)")));
+    }
+    let trials = j.get("trials").and_then(Json::as_usize).unwrap_or(ctx.cfg.trials);
+    if trials == 0 || trials > ctx.cfg.max_trials {
+        return (
+            400,
+            err(&format!("trials must be in 1..={}", ctx.cfg.max_trials)),
+        );
+    }
+    let master = j.get("seed").and_then(Json::as_f64).map(|x| x as u64).unwrap_or(0);
+    let Some(level_hexes) = j.get("levels").and_then(Json::as_arr) else {
+        return (400, err("missing array field \"levels\" (hex-encoded level bytes)"));
+    };
+    if level_hexes.is_empty() {
+        return (400, err("\"levels\" must not be empty"));
+    }
+    if level_hexes.len() > ctx.cfg.max_levels {
+        return (
+            400,
+            err(&format!("at most {} levels per request", ctx.cfg.max_levels)),
+        );
+    }
+
+    let mut decoded: Vec<(Vec<u8>, F::Level)> = Vec::with_capacity(level_hexes.len());
+    for (i, lj) in level_hexes.iter().enumerate() {
+        let Some(hex) = lj.as_str() else {
+            return (400, err(&format!("level {i}: not a hex string")));
+        };
+        let bytes = match hex_decode(hex) {
+            Ok(b) => b,
+            Err(e) => return (400, err(&format!("level {i}: {e}"))),
+        };
+        let level = match F::Level::decode(&bytes) {
+            Ok(l) => l,
+            Err(e) => return (400, err(&format!("level {i}: {e}"))),
+        };
+        if !level.is_valid() {
+            return (400, err(&format!("level {i}: decodes but is not a valid level")));
+        }
+        decoded.push((bytes, level));
+    }
+
+    ctx.metrics.eval_requests.fetch_add(1, Relaxed);
+
+    // Cache pass: serve hits immediately, queue only the misses.
+    let n = decoded.len();
+    let mut resolved: Vec<Option<LevelResult>> = Vec::with_capacity(n);
+    let mut misses: Vec<PendingLevel<F::Level>> = Vec::new();
+    for (i, (bytes, level)) in decoded.into_iter().enumerate() {
+        match ctx.cache.get(&cache_key(policy, trials, master, &bytes)) {
+            Some(hit) => {
+                ctx.metrics.cache_hits.fetch_add(1, Relaxed);
+                resolved.push(Some(hit));
+            }
+            None => {
+                ctx.metrics.cache_misses.fetch_add(1, Relaxed);
+                resolved.push(None);
+                misses.push(PendingLevel { idx: i, bytes, level });
+            }
+        }
+    }
+    let cached_levels = n - misses.len();
+
+    let mut forward_passes = 0u64;
+    if !misses.is_empty() {
+        let (tx, rx) = mpsc::channel();
+        let work = EvalWork {
+            policy: policy.to_string(),
+            trials,
+            master,
+            levels: misses,
+            respond: tx,
+        };
+        if !ctx.queue.push(work) {
+            ctx.metrics.shed_requests.fetch_add(1, Relaxed);
+            return (503, err("eval queue is full, retry later"));
+        }
+        let outcome = match rx.recv() {
+            Ok(o) => o,
+            Err(_) => return (500, err("batcher dropped the request")),
+        };
+        if let Some(e) = outcome.error {
+            return (500, err(&e));
+        }
+        forward_passes = outcome.forward_passes;
+        for (idx, r) in outcome.results {
+            if idx < resolved.len() {
+                resolved[idx] = Some(r);
+            }
+        }
+    }
+
+    let mut levels = Vec::with_capacity(n);
+    for slot in resolved {
+        match slot {
+            Some(r) => levels.push(r),
+            None => return (500, err("batcher returned an incomplete result set")),
+        }
+    }
+    let report = EvalReport::from_level_results(levels, forward_passes);
+    (
+        200,
+        obj(vec![
+            ("policy", Json::from(policy)),
+            ("trials", Json::from(trials)),
+            ("seed", Json::Num(master as f64)),
+            ("cached_levels", Json::from(cached_levels)),
+            ("report", report.to_json()),
+        ]),
+    )
+}
+
+fn generate<F: EnvFamily>(ctx: &ServeContext<F>, body: &[u8]) -> (u16, Json) {
+    let j = match parse_body(body) {
+        Ok(j) => j,
+        Err(e) => return (400, err(&e)),
+    };
+    let seed = j.get("seed").and_then(Json::as_f64).map(|x| x as u64).unwrap_or(0);
+    let mutations = j.get("mutations").and_then(Json::as_usize).unwrap_or(0);
+    if mutations > MAX_MUTATIONS {
+        return (400, err(&format!("at most {MAX_MUTATIONS} mutations")));
+    }
+    ctx.metrics.generate_requests.fetch_add(1, Relaxed);
+
+    let family = F::default();
+    let mut rng = crate::util::rng::Pcg64::new(seed, GENERATE_STREAM);
+    let generator = family.make_generator(&ctx.params);
+    let mut level = generator.sample_level(&mut rng);
+    if mutations > 0 {
+        let mutator = family.make_mutator(&ctx.params);
+        for _ in 0..mutations {
+            level = mutator.mutate_level(&level, &mut rng);
+        }
+    }
+    (
+        200,
+        obj(vec![
+            ("bytes", Json::from(hex_encode(&level.encode()).as_str())),
+            ("valid", Json::Bool(level.is_valid())),
+            ("solvable", Json::Bool(level.is_solvable())),
+            ("complexity", Json::Num(level.complexity())),
+            (
+                "fingerprint",
+                Json::from(format!("{:016x}", level.fingerprint()).as_str()),
+            ),
+            ("seed", Json::Num(seed as f64)),
+            ("mutations", Json::from(mutations)),
+        ]),
+    )
+}
+
+/// Lowercase hex encoding of level bytes (the wire format for levels).
+pub fn hex_encode(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// Inverse of [`hex_encode`]; accepts upper- or lowercase.
+pub fn hex_decode(s: &str) -> Result<Vec<u8>, String> {
+    if s.len() % 2 != 0 {
+        return Err("hex string has odd length".to_string());
+    }
+    let digits = s.as_bytes();
+    let nibble = |c: u8| -> Result<u8, String> {
+        match c {
+            b'0'..=b'9' => Ok(c - b'0'),
+            b'a'..=b'f' => Ok(c - b'a' + 10),
+            b'A'..=b'F' => Ok(c - b'A' + 10),
+            _ => Err(format!("invalid hex digit {:?}", c as char)),
+        }
+    };
+    let mut out = Vec::with_capacity(s.len() / 2);
+    for pair in digits.chunks_exact(2) {
+        out.push((nibble(pair[0])? << 4) | nibble(pair[1])?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::env::holdout::named_levels;
+    use crate::env::MazeFamily;
+    use crate::util::cli::Args;
+
+    fn ctx() -> ServeContext<MazeFamily> {
+        let cfg = ServeConfig::from_args(&Args::parse_from(
+            ["--synthetic-zoo", "1", "--queue-cap", "1", "--trials", "2"]
+                .iter()
+                .map(|s| s.to_string()),
+        ))
+        .unwrap();
+        let params = cfg.env_params();
+        ServeContext {
+            catalog: Arc::new(ZooCatalog::new(vec![(
+                "synthetic0".to_string(),
+                super::super::zoo::ZooSource::Synthetic { num_actions: 4 },
+            )])),
+            cache: Arc::new(ResultCache::new(16)),
+            metrics: Arc::new(ServeMetrics::default()),
+            queue: Arc::new(BatchQueue::new(cfg.queue_cap)),
+            params,
+            cfg,
+        }
+    }
+
+    fn request(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.to_string(),
+            path: path.to_string(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    #[test]
+    fn hex_roundtrip_and_rejection() {
+        let bytes: Vec<u8> = (0..=255).collect();
+        assert_eq!(hex_decode(&hex_encode(&bytes)).unwrap(), bytes);
+        assert_eq!(hex_decode("00FFa5").unwrap(), vec![0, 255, 0xA5]);
+        assert!(hex_decode("abc").is_err(), "odd length");
+        assert!(hex_decode("zz").is_err(), "bad digit");
+    }
+
+    #[test]
+    fn health_zoo_metrics_and_unknown_routes() {
+        let c = ctx();
+        let (s, b) = handle(&c, &request("GET", "/healthz", ""));
+        assert_eq!((s, b.to_string().as_str()), (200, "{\"ok\":true}"));
+
+        let (s, b) = handle(&c, &request("GET", "/zoo", ""));
+        assert_eq!(s, 200);
+        let rows = b.get("policies").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("id").unwrap().as_str(), Some("synthetic0"));
+        assert_eq!(rows[0].get("loaded").unwrap().as_bool(), Some(false));
+
+        let (s, b) = handle(&c, &request("GET", "/metrics", ""));
+        assert_eq!(s, 200);
+        assert_eq!(b.get("forward_passes").unwrap().as_f64(), Some(0.0));
+        assert_eq!(b.get("zoo_size").unwrap().as_usize(), Some(1));
+
+        let (s, _) = handle(&c, &request("GET", "/nope", ""));
+        assert_eq!(s, 404);
+        let (s, _) = handle(&c, &request("DELETE", "/eval", ""));
+        assert_eq!(s, 405);
+        // the 404 and 405 above were counted
+        assert_eq!(c.metrics.bad_requests.load(Relaxed), 2);
+    }
+
+    #[test]
+    fn eval_validation_rejects_before_queueing() {
+        let c = ctx();
+        let level_hex = hex_encode(&named_levels()[0].level.encode());
+        let cases: &[(&str, u16)] = &[
+            ("not json", 400),
+            ("{}", 400),
+            (r#"{"policy":"ghost","levels":["00"]}"#, 404),
+            (r#"{"policy":"synthetic0"}"#, 400),
+            (r#"{"policy":"synthetic0","levels":[]}"#, 400),
+            (r#"{"policy":"synthetic0","levels":["zz"]}"#, 400),
+            (r#"{"policy":"synthetic0","levels":["0011"]}"#, 400),
+            (r#"{"policy":"synthetic0","levels":[7]}"#, 400),
+        ];
+        for (body, want) in cases {
+            let (s, b) = handle(&c, &request("POST", "/eval", body));
+            assert_eq!(s, *want, "{body} → {}", b.to_string());
+        }
+        // over-cap trials rejected even with a fine level
+        let body = format!(
+            r#"{{"policy":"synthetic0","levels":["{level_hex}"],"trials":1000}}"#
+        );
+        let (s, _) = handle(&c, &request("POST", "/eval", &body));
+        assert_eq!(s, 400);
+        // nothing ever reached the queue
+        assert_eq!(c.queue.depth(), 0);
+        assert_eq!(
+            c.metrics.eval_requests.load(Relaxed),
+            0,
+            "every request was rejected before admission"
+        );
+    }
+
+    #[test]
+    fn eval_sheds_with_503_when_the_queue_is_full() {
+        let c = ctx(); // queue cap 1
+        // stuff the queue so the next push fails
+        let (tx, _rx) = mpsc::channel();
+        assert!(c.queue.push(EvalWork {
+            policy: "synthetic0".to_string(),
+            trials: 1,
+            master: 0,
+            levels: Vec::new(),
+            respond: tx,
+        }));
+        let level_hex = hex_encode(&named_levels()[0].level.encode());
+        let body =
+            format!(r#"{{"policy":"synthetic0","levels":["{level_hex}"]}}"#);
+        let (s, _) = handle(&c, &request("POST", "/eval", &body));
+        assert_eq!(s, 503);
+        assert_eq!(c.metrics.shed_requests.load(Relaxed), 1);
+    }
+
+    #[test]
+    fn generate_is_deterministic_per_seed() {
+        let c = ctx();
+        let body = r#"{"seed": 42, "mutations": 3}"#;
+        let (s1, b1) = handle(&c, &request("POST", "/levels/generate", body));
+        let (s2, b2) = handle(&c, &request("POST", "/levels/generate", body));
+        assert_eq!((s1, s2), (200, 200));
+        assert_eq!(b1.to_string(), b2.to_string(), "same seed → same level");
+        let (s3, b3) =
+            handle(&c, &request("POST", "/levels/generate", r#"{"seed": 43}"#));
+        assert_eq!(s3, 200);
+        assert_ne!(
+            b1.get("bytes").unwrap().as_str(),
+            b3.get("bytes").unwrap().as_str(),
+            "different seed → different level"
+        );
+        // generated bytes round-trip through the eval decode path
+        let hex = b1.get("bytes").unwrap().as_str().unwrap();
+        let decoded =
+            <MazeFamily as EnvFamily>::Level::decode(&hex_decode(hex).unwrap()).unwrap();
+        assert!(decoded.is_valid());
+        // an empty body uses defaults
+        let (s, b) = handle(&c, &request("POST", "/levels/generate", ""));
+        assert_eq!(s, 200);
+        assert_eq!(b.get("seed").unwrap().as_f64(), Some(0.0));
+        // mutation cap enforced
+        let (s, _) = handle(
+            &c,
+            &request("POST", "/levels/generate", r#"{"mutations": 99999}"#),
+        );
+        assert_eq!(s, 400);
+    }
+}

@@ -1,0 +1,266 @@
+//! The policy zoo: which policies exist, which are resident, and how the
+//! batcher gets a [`PolicyModel`] for one.
+//!
+//! Split in two because the runtime is not `Sync`:
+//!
+//! * [`ZooCatalog`] — the shared, immutable id list plus a residency set,
+//!   read by connection handlers (`GET /zoo`, 404 checks) and updated by
+//!   the batcher as it loads/evicts.
+//! * [`PolicyStore`] — owned exclusively by the batcher thread; holds the
+//!   `Runtime` and the LRU-bounded set of loaded policies. Checkpoints
+//!   are discovered at startup ([`discover_checkpoints`]) but loaded
+//!   lazily on the first request naming them.
+//!
+//! [`discover_checkpoints`]: crate::runtime::discover_checkpoints
+
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::rollout::{
+    ForwardWorkspace, Policy, PolicyModel, SyntheticPolicy,
+};
+use crate::runtime::{Executable, ParamSet, Runtime};
+use crate::util::tensor::TensorF32;
+
+/// Where a zoo entry's weights come from.
+#[derive(Clone, Debug)]
+pub enum ZooSource {
+    /// Deterministic logits from observation bytes — no runtime needed
+    /// (CI smoke and the integration tests run synthetic-only zoos).
+    Synthetic { num_actions: usize },
+    /// A trained `student` checkpoint on disk.
+    Checkpoint { path: PathBuf },
+}
+
+/// The shared zoo listing: every known policy id plus which are resident.
+pub struct ZooCatalog {
+    entries: Vec<(String, ZooSource)>,
+    loaded: Mutex<BTreeSet<String>>,
+}
+
+impl ZooCatalog {
+    pub fn new(entries: Vec<(String, ZooSource)>) -> ZooCatalog {
+        ZooCatalog { entries, loaded: Mutex::new(BTreeSet::new()) }
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.iter().any(|(e, _)| e == id)
+    }
+
+    pub fn source(&self, id: &str) -> Option<&ZooSource> {
+        self.entries.iter().find(|(e, _)| e == id).map(|(_, s)| s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.loaded.lock().expect("catalog poisoned").len()
+    }
+
+    /// `(id, loaded, synthetic)` rows for `GET /zoo`, in catalog order.
+    pub fn rows(&self) -> Vec<(String, bool, bool)> {
+        let loaded = self.loaded.lock().expect("catalog poisoned");
+        self.entries
+            .iter()
+            .map(|(id, src)| {
+                (
+                    id.clone(),
+                    loaded.contains(id),
+                    matches!(src, ZooSource::Synthetic { .. }),
+                )
+            })
+            .collect()
+    }
+
+    fn mark_loaded(&self, id: &str) {
+        self.loaded.lock().expect("catalog poisoned").insert(id.to_string());
+    }
+
+    fn mark_evicted(&self, id: &str) {
+        self.loaded.lock().expect("catalog poisoned").remove(id);
+    }
+}
+
+/// A resident policy the batcher can evaluate with.
+enum LoadedPolicy {
+    Synthetic(SyntheticPolicy),
+    Checkpoint { apply: Arc<Executable>, params: ParamSet },
+}
+
+/// Batcher-owned policy residency: lazy loads, LRU eviction past `cap`,
+/// catalog residency flags kept in sync.
+pub struct PolicyStore {
+    runtime: Option<Runtime>,
+    /// Artifact-name scope of the serving family
+    /// (`EnvId::artifact_prefix`).
+    prefix: Option<&'static str>,
+    /// Apply artifact to serve checkpoints through (`student_apply_b{B}`).
+    apply_name: String,
+    num_actions: usize,
+    cap: usize,
+    catalog: Arc<ZooCatalog>,
+    /// Most-recently-used at the back.
+    loaded: Vec<(String, LoadedPolicy)>,
+}
+
+impl PolicyStore {
+    pub fn new(
+        runtime: Option<Runtime>, prefix: Option<&'static str>, apply_name: String,
+        num_actions: usize, cap: usize, catalog: Arc<ZooCatalog>,
+    ) -> PolicyStore {
+        PolicyStore {
+            runtime,
+            prefix,
+            apply_name,
+            num_actions,
+            cap: cap.max(1),
+            catalog,
+            loaded: Vec::new(),
+        }
+    }
+
+    /// Run `f` with policy `id`'s model, loading (and possibly evicting)
+    /// first. The model is borrowed for the duration of the call only —
+    /// eviction can't invalidate a model mid-evaluation.
+    pub fn with_model<R>(
+        &mut self, id: &str, f: impl FnOnce(&dyn PolicyModel) -> Result<R>,
+    ) -> Result<R> {
+        if let Some(pos) = self.loaded.iter().position(|(l, _)| l == id) {
+            // LRU touch: move to the back.
+            let entry = self.loaded.remove(pos);
+            self.loaded.push(entry);
+        } else {
+            let policy = self.load(id)?;
+            self.loaded.push((id.to_string(), policy));
+            self.catalog.mark_loaded(id);
+            while self.loaded.len() > self.cap {
+                let (evicted, _) = self.loaded.remove(0);
+                self.catalog.mark_evicted(&evicted);
+            }
+        }
+        let (_, model) = self.loaded.last().expect("just pushed");
+        match model {
+            LoadedPolicy::Synthetic(s) => f(s),
+            LoadedPolicy::Checkpoint { apply, params } => {
+                let policy = Policy {
+                    apply: apply.clone(),
+                    params: &params.params,
+                    num_actions: self.num_actions,
+                };
+                f(&policy)
+            }
+        }
+    }
+
+    fn load(&self, id: &str) -> Result<LoadedPolicy> {
+        let Some(source) = self.catalog.source(id) else {
+            bail!("policy {id:?} is not in the zoo");
+        };
+        Ok(match source {
+            ZooSource::Synthetic { num_actions } => {
+                LoadedPolicy::Synthetic(SyntheticPolicy { num_actions: *num_actions })
+            }
+            ZooSource::Checkpoint { path } => {
+                let Some(rt) = self.runtime.as_ref() else {
+                    bail!(
+                        "policy {id:?} is checkpoint-backed but the server has no \
+                         artifact runtime (start with --artifacts pointing at a \
+                         compiled artifact set)"
+                    );
+                };
+                let params = ParamSet::load(path, "student")
+                    .with_context(|| format!("loading checkpoint for {id:?}"))?;
+                let apply = rt
+                    .load_scoped(self.prefix, &self.apply_name)
+                    .with_context(|| format!("compiling {} for {id:?}", self.apply_name))?;
+                LoadedPolicy::Checkpoint { apply, params }
+            }
+        })
+    }
+}
+
+/// Borrow-erased [`PolicyModel`]: the engine's entry points are generic
+/// over `P: PolicyModel`, and [`PolicyStore::with_model`] hands out
+/// `&dyn PolicyModel` — this adapter bridges the two.
+pub struct DynPolicy<'a>(pub &'a dyn PolicyModel);
+
+impl PolicyModel for DynPolicy<'_> {
+    fn num_actions(&self) -> usize {
+        self.0.num_actions()
+    }
+
+    fn forward_into(
+        &self, obs: &[TensorF32], ws: &mut ForwardWorkspace, logits: &mut Vec<f32>,
+        values: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.0.forward_into(obs, ws, logits, values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_catalog(n: usize) -> Arc<ZooCatalog> {
+        Arc::new(ZooCatalog::new(
+            (0..n)
+                .map(|i| {
+                    (format!("synthetic{i}"), ZooSource::Synthetic { num_actions: 4 })
+                })
+                .collect(),
+        ))
+    }
+
+    #[test]
+    fn catalog_rows_and_lookup() {
+        let c = synthetic_catalog(2);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains("synthetic1"));
+        assert!(!c.contains("nope"));
+        let rows = c.rows();
+        assert_eq!(rows[0], ("synthetic0".to_string(), false, true));
+        assert_eq!(c.loaded_count(), 0);
+    }
+
+    #[test]
+    fn store_loads_lazily_and_evicts_lru() {
+        let catalog = synthetic_catalog(3);
+        let mut store = PolicyStore::new(None, None, "student_apply_b8".into(), 4, 2, catalog.clone());
+        let actions = |store: &mut PolicyStore, id: &str| {
+            store.with_model(id, |m| Ok(m.num_actions())).unwrap()
+        };
+        assert_eq!(actions(&mut store, "synthetic0"), 4);
+        assert_eq!(actions(&mut store, "synthetic1"), 4);
+        assert_eq!(catalog.loaded_count(), 2);
+        // touch 0 (now MRU), then load 2: the LRU (1) is evicted
+        assert_eq!(actions(&mut store, "synthetic0"), 4);
+        assert_eq!(actions(&mut store, "synthetic2"), 4);
+        assert_eq!(catalog.loaded_count(), 2);
+        let rows = catalog.rows();
+        let loaded = |id: &str| rows.iter().find(|(i, _, _)| i == id).unwrap().1;
+        assert!(loaded("synthetic0"));
+        assert!(!loaded("synthetic1"), "LRU entry must be evicted");
+        assert!(loaded("synthetic2"));
+    }
+
+    #[test]
+    fn unknown_and_runtimeless_policies_error() {
+        let catalog = Arc::new(ZooCatalog::new(vec![(
+            "trained".to_string(),
+            ZooSource::Checkpoint { path: PathBuf::from("/nonexistent.ckpt") },
+        )]));
+        let mut store = PolicyStore::new(None, None, "student_apply_b8".into(), 4, 2, catalog);
+        assert!(store.with_model("missing", |_| Ok(())).is_err());
+        let err = store.with_model("trained", |_| Ok(())).unwrap_err();
+        assert!(err.to_string().contains("no artifact runtime"), "{err}");
+    }
+}

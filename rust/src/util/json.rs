@@ -3,11 +3,27 @@
 //! `serde` is not in the offline vendor set, so the library carries a small
 //! recursive-descent JSON implementation. It is used off the hot path only:
 //! reading `artifacts/manifest.json`, training configs, and writing metric
-//! summaries. Supports the full JSON grammar except `\u` surrogate pairs
-//! beyond the BMP (not needed by any of our producers).
+//! summaries — and, since the `ued-serve` layer, parsing request bodies
+//! that arrive off the network. Supports the full JSON grammar except `\u`
+//! surrogate pairs beyond the BMP (not needed by any of our producers).
+//!
+//! Untrusted-input guards: inputs larger than [`MAX_PARSE_BYTES`] and
+//! nesting deeper than [`MAX_PARSE_DEPTH`] are parse errors, never stack
+//! overflows (the parser is recursive-descent, so unbounded `[[[[…` would
+//! otherwise recurse once per bracket).
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum input size `Json::parse` accepts. Generous — real manifests are
+/// a few hundred KB and HTTP bodies are capped far below this — but finite,
+/// so a hostile payload can't commit us to unbounded tree allocation.
+pub const MAX_PARSE_BYTES: usize = 16 * 1024 * 1024;
+
+/// Maximum container nesting depth. Every legitimate producer in this repo
+/// nests < 10 deep; 128 leaves headroom while keeping worst-case parser
+/// recursion far inside the default thread stack.
+pub const MAX_PARSE_DEPTH: usize = 128;
 
 /// A JSON value. Object keys are ordered (BTreeMap) so output is stable.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +52,13 @@ impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        if s.len() > MAX_PARSE_BYTES {
+            return Err(JsonError {
+                msg: format!("input of {} bytes exceeds MAX_PARSE_BYTES", s.len()),
+                pos: 0,
+            });
+        }
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -187,11 +209,22 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.i }
+    }
+
+    /// Bump the container depth on `[`/`{`; errors abort the whole parse so
+    /// only the `Ok` paths of `array`/`object` unwind it.
+    fn enter(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_PARSE_DEPTH {
+            return Err(self.err("nesting exceeds MAX_PARSE_DEPTH"));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -307,10 +340,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -321,6 +356,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b']') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(v));
                 }
                 _ => return Err(self.err("expected , or ]")),
@@ -330,10 +366,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.i += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -349,6 +387,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.i += 1,
                 Some(b'}') => {
                     self.i += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected , or }")),
@@ -403,6 +442,41 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn deep_nesting_is_an_error_not_an_overflow() {
+        // Far deeper than any stack could take via naive recursion: the
+        // depth guard must kick in after MAX_PARSE_DEPTH containers.
+        let deep = "[".repeat(200_000);
+        assert!(Json::parse(&deep).is_err());
+        let deep_obj = r#"{"a":"#.repeat(200_000);
+        assert!(Json::parse(&deep_obj).is_err());
+        // Mixed nesting just past the limit also errors...
+        let over = format!(
+            "{}1{}",
+            "[".repeat(MAX_PARSE_DEPTH + 1),
+            "]".repeat(MAX_PARSE_DEPTH + 1)
+        );
+        assert!(Json::parse(&over).is_err());
+        // ...while nesting at the limit still parses.
+        let at = format!("{}1{}", "[".repeat(MAX_PARSE_DEPTH), "]".repeat(MAX_PARSE_DEPTH));
+        assert!(Json::parse(&at).is_ok());
+    }
+
+    #[test]
+    fn depth_is_per_branch_not_cumulative() {
+        // Thousands of sibling containers at shallow depth must stay fine:
+        // the guard tracks nesting, not total container count.
+        let wide = format!("[{}{{}}]", "{},".repeat(5_000));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn oversized_input_is_rejected_up_front() {
+        let big = " ".repeat(MAX_PARSE_BYTES + 1);
+        let err = Json::parse(&big).unwrap_err();
+        assert!(err.msg.contains("MAX_PARSE_BYTES"), "{err}");
     }
 
     #[test]

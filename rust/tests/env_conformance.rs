@@ -3,7 +3,9 @@
 //! registry-level invariants. Needs no compiled artifacts — this is pure
 //! env-layer behaviour.
 
-use jaxued::env::conformance::{check_editor_conformance, check_family_conformance};
+use jaxued::env::conformance::{
+    check_decode_hardening, check_editor_conformance, check_family_conformance,
+};
 use jaxued::env::registry::{dispatch, EnvVisitor};
 use jaxued::env::{
     EnvFamily, EnvId, EnvParams, LavaFamily, LevelGenerator, LevelMeta, MazeFamily,
@@ -18,6 +20,30 @@ fn maze_family_conforms() {
 #[test]
 fn lava_family_conforms() {
     check_family_conformance(LavaFamily, &EnvParams::default(), 200);
+}
+
+#[test]
+fn maze_decode_survives_hostile_bytes() {
+    check_decode_hardening(MazeFamily, &EnvParams::default(), 500);
+}
+
+#[test]
+fn lava_decode_survives_hostile_bytes() {
+    check_decode_hardening(LavaFamily, &EnvParams::default(), 500);
+}
+
+#[test]
+fn every_registered_env_decode_hardened_via_dispatch() {
+    struct Check;
+    impl EnvVisitor for Check {
+        type Out = ();
+        fn visit<F: EnvFamily>(self, family: F) {
+            check_decode_hardening(family, &EnvParams::default(), 100);
+        }
+    }
+    for id in EnvId::ALL {
+        dispatch(id, Check);
+    }
 }
 
 #[test]

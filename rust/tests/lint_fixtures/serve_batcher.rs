@@ -1,0 +1,31 @@
+//! Service-profile fixture: models `serve/` batcher code. Under the
+//! service profile (`ordered_collections` + `wallclock_exempt`) the
+//! wallclock reads below are legitimate (request timeouts, latency
+//! accounting) and must NOT be flagged — but grouping queued requests
+//! through a `HashMap` MUST be: hasher iteration order is per-process,
+//! so draining groups from it would assign requests to batch columns in
+//! a schedule-dependent order. Batcher request ordering is pinned
+//! FIFO-deterministic; serve code sticks to `Vec`/`BTreeMap`.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+pub struct Queued {
+    pub policy: u64,
+    pub episodes: usize,
+}
+
+/// Wallclock use a server legitimately needs: deadline bookkeeping.
+pub fn deadline_expired(started: Instant, budget: Duration) -> bool {
+    Instant::now().duration_since(started) > budget
+}
+
+/// The violation: batch columns filled by iterating a hash map. Which
+/// request lands in which column now depends on the hasher seed.
+pub fn column_order(works: &[Queued]) -> Vec<u64> {
+    let mut groups: HashMap<u64, usize> = HashMap::new();
+    for w in works {
+        *groups.entry(w.policy).or_insert(0) += w.episodes;
+    }
+    groups.into_keys().collect()
+}

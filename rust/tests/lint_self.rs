@@ -20,7 +20,12 @@ fn fixture(name: &str) -> String {
 
 /// Fixtures model code in deterministic modules (all rules active).
 fn det() -> LintConfig {
-    LintConfig { deterministic: true, expect_unsafe_op_deny: false }
+    LintConfig { deterministic: true, ..LintConfig::default() }
+}
+
+/// The `serve/` profile: wallclock exempt, hash-collections still active.
+fn service() -> LintConfig {
+    LintConfig { ordered_collections: true, wallclock_exempt: true, ..LintConfig::default() }
 }
 
 fn render(violations: &[Violation]) -> String {
@@ -102,8 +107,33 @@ fn allow_comment_is_required_for_suppression() {
 }
 
 #[test]
+fn serve_fixture_pins_the_service_profile() {
+    // serve_batcher.rs models batcher code: its wallclock reads are fine
+    // under the service profile, but the HashMap ordering batch columns is
+    // exactly what the profile must keep flagging — request ordering is
+    // FIFO-deterministic only while serve code sticks to ordered
+    // containers.
+    let src = fixture("serve_batcher.rs");
+    let v = lint_source("serve/batcher.rs", &src, &service());
+    assert_eq!(
+        v.iter().map(|x| x.rule).collect::<Vec<_>>(),
+        [Rule::HashCollections],
+        "service profile must flag the hash map and nothing else:\n{}",
+        render(&v)
+    );
+    // The same file under the plain crate-wide profile also flags its
+    // wallclock reads — the exemption is what the service profile adds.
+    let plain = lint_source("serve/batcher.rs", &src, &LintConfig::default());
+    assert!(
+        plain.iter().any(|x| x.rule == Rule::Wallclock),
+        "without the exemption the wallclock reads must surface:\n{}",
+        render(&plain)
+    );
+}
+
+#[test]
 fn nondeterministic_modules_skip_determinism_rules_but_not_the_audit() {
-    let cfg = LintConfig { deterministic: false, expect_unsafe_op_deny: false };
+    let cfg = LintConfig::default();
     // Determinism rules are scoped to deterministic modules …
     let rng = lint_source("thread_rng.rs", &fixture("thread_rng.rs"), &cfg);
     assert!(rng.is_empty(), "thread-rng must not fire outside deterministic modules:\n{}", render(&rng));

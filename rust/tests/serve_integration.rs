@@ -1,0 +1,272 @@
+//! End-to-end tests for `ued-serve` over real loopback sockets.
+//!
+//! The acceptance properties for the serving subsystem:
+//!
+//! * **Batched == solo, bit-for-bit** — N concurrent `/eval` requests,
+//!   micro-batched together by the server, produce per-level numbers
+//!   identical (`f64::to_bits`) to a solo `evaluate_levels` run with the
+//!   same master seed, because episode RNG streams are content-keyed.
+//! * **Cache serves repeats with zero forward passes** — an identical
+//!   repeat request leaves the `/metrics` forward-pass counter untouched.
+//!
+//! The zoo is synthetic (no compiled artifacts in CI), which exercises
+//! every layer except the XLA executable itself — the engine, batcher,
+//! cache, zoo LRU, router, and HTTP stack all run for real.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use jaxued::config::ServeConfig;
+use jaxued::env::holdout::named_levels;
+use jaxued::env::{EnvFamily, LevelMeta, MazeFamily, UnderspecifiedEnv};
+use jaxued::eval::evaluate_levels;
+use jaxued::rollout::{SyntheticPolicy, WorkerPool};
+use jaxued::serve::router::hex_encode;
+use jaxued::serve::{serve, ServerHandle};
+use jaxued::util::cli::Args;
+use jaxued::util::json::Json;
+
+const MAX_STEPS: usize = 40;
+const TRIALS: usize = 3;
+const MASTER: u64 = 7;
+
+fn start_server(extra: &[&str]) -> ServerHandle {
+    let mut argv = vec![
+        "--serve-addr".to_string(),
+        "127.0.0.1:0".to_string(),
+        "--synthetic-zoo".to_string(),
+        "2".to_string(),
+        "--max-batch".to_string(),
+        "4".to_string(),
+        "--trials".to_string(),
+        TRIALS.to_string(),
+        "--max-episode-steps".to_string(),
+        MAX_STEPS.to_string(),
+    ];
+    argv.extend(extra.iter().map(|s| s.to_string()));
+    let cfg = ServeConfig::from_args(&Args::parse_from(argv)).unwrap();
+    serve(MazeFamily, cfg, None).unwrap()
+}
+
+/// One raw HTTP exchange; returns (status, parsed JSON body).
+fn exchange(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split(' ')
+        .nth(1)
+        .unwrap_or_else(|| panic!("no status line in {raw:?}"))
+        .parse()
+        .unwrap();
+    let payload = raw.split("\r\n\r\n").nth(1).unwrap_or("");
+    (status, Json::parse(payload).unwrap())
+}
+
+fn eval_body(policy: &str, level_hexes: &[String], seed: u64) -> String {
+    let levels: Vec<String> =
+        level_hexes.iter().map(|h| format!("\"{h}\"")).collect();
+    format!(
+        "{{\"policy\":\"{policy}\",\"levels\":[{}],\"trials\":{TRIALS},\"seed\":{seed}}}",
+        levels.join(",")
+    )
+}
+
+/// The solo reference: `evaluate_levels` on the same levels with the
+/// same master seed, levels named by fingerprint like the server does.
+fn solo_reference(levels: &[(String, jaxued::env::level::Level)]) -> Vec<(String, u64, u64)> {
+    let family = MazeFamily;
+    let params = jaxued::env::EnvParams {
+        max_episode_steps: MAX_STEPS,
+        ..jaxued::env::EnvParams::default()
+    };
+    let env = family.make_env(&params);
+    let policy = SyntheticPolicy { num_actions: env.num_actions() };
+    let pool = Arc::new(WorkerPool::new(1));
+    let report = evaluate_levels(
+        &env, &policy, levels, TRIALS, MAX_STEPS, 4, MASTER, pool,
+    )
+    .unwrap();
+    report
+        .levels
+        .iter()
+        .map(|l| (l.name.clone(), l.solve_rate.to_bits(), l.mean_steps.to_bits()))
+        .collect()
+}
+
+#[test]
+fn concurrent_eval_is_bit_identical_to_solo() {
+    let handle = start_server(&[]);
+    let addr = handle.addr;
+
+    let named: Vec<(String, jaxued::env::level::Level)> = named_levels()
+        .into_iter()
+        .take(4)
+        .map(|n| (format!("{:016x}", n.level.fingerprint()), n.level))
+        .collect();
+    let hexes: Vec<String> =
+        named.iter().map(|(_, l)| hex_encode(&l.encode())).collect();
+    let reference = solo_reference(&named);
+
+    // Six concurrent clients, alternating policies, rotating level order
+    // so micro-batches mix requests — results must not depend on any of
+    // that.
+    let clients: Vec<std::thread::JoinHandle<(usize, Json)>> = (0..6)
+        .map(|i| {
+            let hexes = hexes.clone();
+            std::thread::spawn(move || {
+                let mut order: Vec<usize> = (0..hexes.len()).collect();
+                order.rotate_left(i % hexes.len());
+                let picked: Vec<String> =
+                    order.iter().map(|&j| hexes[j].clone()).collect();
+                let policy = format!("synthetic{}", i % 2);
+                let (status, body) =
+                    exchange(addr, "POST", "/eval", &eval_body(&policy, &picked, MASTER));
+                assert_eq!(status, 200, "{body:?}");
+                (i, body)
+            })
+        })
+        .collect();
+
+    for client in clients {
+        let (i, body) = client.join().unwrap();
+        let report = body.get("report").unwrap();
+        let rows = report.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 4);
+        for (slot, row) in rows.iter().enumerate() {
+            // Undo this client's rotation to find the reference row.
+            let j = (slot + (i % 4)) % 4;
+            let (ref_name, ref_rate, ref_steps) = &reference[j];
+            assert_eq!(row.get("name").unwrap().as_str(), Some(ref_name.as_str()));
+            assert_eq!(
+                row.get("solve_rate").unwrap().as_f64().unwrap().to_bits(),
+                *ref_rate,
+                "client {i} level {j}: batched solve_rate diverged from solo"
+            );
+            assert_eq!(
+                row.get("mean_steps").unwrap().as_f64().unwrap().to_bits(),
+                *ref_steps,
+                "client {i} level {j}: batched mean_steps diverged from solo"
+            );
+        }
+    }
+
+    // All 6 clients × 4 levels × 3 trials ran (some from cache).
+    let (status, m) = exchange(addr, "GET", "/metrics", "");
+    assert_eq!(status, 200);
+    assert_eq!(m.get("eval_requests").unwrap().as_usize(), Some(6));
+    assert!(m.get("forward_passes").unwrap().as_f64().unwrap() > 0.0);
+
+    handle.shutdown_and_join();
+}
+
+#[test]
+fn repeat_requests_hit_the_cache_with_zero_forward_passes() {
+    let handle = start_server(&[]);
+    let addr = handle.addr;
+    let hexes: Vec<String> = named_levels()
+        .into_iter()
+        .take(3)
+        .map(|n| hex_encode(&n.level.encode()))
+        .collect();
+    let body = eval_body("synthetic0", &hexes, 5);
+
+    let (status, first) = exchange(addr, "POST", "/eval", &body);
+    assert_eq!(status, 200);
+    assert_eq!(first.get("cached_levels").unwrap().as_usize(), Some(0));
+    let (_, m1) = exchange(addr, "GET", "/metrics", "");
+    let fp1 = m1.get("forward_passes").unwrap().as_f64().unwrap();
+    assert!(fp1 > 0.0, "first request must run episodes");
+
+    let (status, second) = exchange(addr, "POST", "/eval", &body);
+    assert_eq!(status, 200);
+    assert_eq!(second.get("cached_levels").unwrap().as_usize(), Some(3));
+    assert_eq!(
+        second.get("report").unwrap().get("forward_passes").unwrap().as_f64(),
+        Some(0.0),
+        "fully cached reply costs no forward passes"
+    );
+    // The report payloads are bit-identical.
+    assert_eq!(
+        first.get("report").unwrap().to_string(),
+        second.get("report").unwrap().to_string()
+    );
+    // The acceptance criterion: the server-wide forward-pass counter did
+    // not move for the repeat request.
+    let (_, m2) = exchange(addr, "GET", "/metrics", "");
+    assert_eq!(m2.get("forward_passes").unwrap().as_f64().unwrap(), fp1);
+    assert!(m2.get("cache_hits").unwrap().as_f64().unwrap() >= 3.0);
+
+    // A different seed is a different cache key: misses again.
+    let (status, third) =
+        exchange(addr, "POST", "/eval", &eval_body("synthetic0", &hexes, 6));
+    assert_eq!(status, 200);
+    assert_eq!(third.get("cached_levels").unwrap().as_usize(), Some(0));
+
+    handle.shutdown_and_join();
+}
+
+#[test]
+fn endpoints_and_validation_over_loopback() {
+    let handle = start_server(&[]);
+    let addr = handle.addr;
+
+    let (status, body) = exchange(addr, "GET", "/healthz", "");
+    assert_eq!((status, body.to_string().as_str()), (200, "{\"ok\":true}"));
+
+    let (status, body) = exchange(addr, "GET", "/zoo", "");
+    assert_eq!(status, 200);
+    let rows = body.get("policies").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(rows[0].get("synthetic").unwrap().as_bool(), Some(true));
+
+    let hex = hex_encode(&named_levels()[0].level.encode());
+    let (status, _) =
+        exchange(addr, "POST", "/eval", &eval_body("ghost", &[hex], 0));
+    assert_eq!(status, 404, "unknown policy");
+
+    let (status, _) = exchange(
+        addr,
+        "POST",
+        "/eval",
+        "{\"policy\":\"synthetic0\",\"levels\":[\"zz\"]}",
+    );
+    assert_eq!(status, 400, "invalid hex");
+
+    let (status, _) = exchange(addr, "GET", "/nope", "");
+    assert_eq!(status, 404);
+
+    handle.shutdown_and_join();
+}
+
+#[test]
+fn generate_endpoint_is_deterministic_and_evaluable() {
+    let handle = start_server(&[]);
+    let addr = handle.addr;
+
+    let body = "{\"seed\": 11, \"mutations\": 5}";
+    let (s1, g1) = exchange(addr, "POST", "/levels/generate", body);
+    let (s2, g2) = exchange(addr, "POST", "/levels/generate", body);
+    assert_eq!((s1, s2), (200, 200));
+    assert_eq!(g1.to_string(), g2.to_string(), "same seed → same level");
+    assert_eq!(g1.get("valid").unwrap().as_bool(), Some(true));
+
+    // The generated level feeds straight back into /eval.
+    let hex = g1.get("bytes").unwrap().as_str().unwrap().to_string();
+    let (status, body) =
+        exchange(addr, "POST", "/eval", &eval_body("synthetic1", &[hex], 1));
+    assert_eq!(status, 200, "{body:?}");
+    assert_eq!(
+        body.get("report").unwrap().get("levels").unwrap().as_arr().unwrap().len(),
+        1
+    );
+
+    handle.shutdown_and_join();
+}
