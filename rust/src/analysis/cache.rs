@@ -1,0 +1,406 @@
+//! Incremental lint cache: per-file front-end results keyed by
+//! (mtime, content hash).
+//!
+//! The expensive part of a lint run is the per-file front-end — lexing,
+//! item parsing, body scans, per-file rules. Those depend only on the
+//! file's bytes and its (path-derived) profile, so they are cached in a
+//! single JSON file keyed by modification time *and* an FNV-1a content
+//! hash: mtime alone races with editors that preserve timestamps, a
+//! hash alone would still pay for reading — we read anyway, so checking
+//! both is free. The global analyses (call graph, taint, panic, lock
+//! order) are cross-file and cheap; they always re-run over the cached
+//! function summaries, so a one-file edit re-parses one file but still
+//! re-checks the whole graph.
+//!
+//! Cache corruption of any kind — unreadable file, version skew,
+//! malformed entries — degrades to a cold run, never an error.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+use std::time::UNIX_EPOCH;
+
+use crate::util::json::Json;
+
+use super::parser::{Call, FnInfo, LockEdge, LockSite, Site};
+use super::{Allow, FileRecord, Rule, Violation};
+
+/// Bump whenever the serialized shape or the per-file pass changes
+/// meaning; old caches are then ignored wholesale.
+pub const CACHE_VERSION: usize = 1;
+
+/// 64-bit FNV-1a. Not cryptographic — it only needs to catch edits that
+/// preserve mtime, and it must not pull in a hash dependency.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The file's mtime in nanoseconds since the epoch, as a string (JSON
+/// numbers are f64 and would lose nanosecond precision). Unreadable
+/// metadata becomes `"0"`, which simply never matches a stored entry.
+pub fn mtime_ns(path: &Path) -> String {
+    fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| t.duration_since(UNIX_EPOCH).ok())
+        .map(|d| d.as_nanos().to_string())
+        .unwrap_or_else(|| String::from("0"))
+}
+
+/// The on-disk cache: entries stay as parsed JSON and deserialize only
+/// on a key match, so a stale cache costs nothing.
+#[derive(Default)]
+pub struct Cache {
+    entries: BTreeMap<String, Json>,
+}
+
+impl Cache {
+    /// Load from `path`; any failure yields an empty cache.
+    pub fn load(path: &Path) -> Cache {
+        let Ok(text) = fs::read_to_string(path) else {
+            return Cache::default();
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return Cache::default();
+        };
+        if root.get("version").and_then(Json::as_usize) != Some(CACHE_VERSION) {
+            return Cache::default();
+        }
+        let Some(files) = root.get("files").and_then(Json::as_obj) else {
+            return Cache::default();
+        };
+        Cache { entries: files.clone().into_iter().collect() }
+    }
+
+    /// The cached record for `rel`, if its key still matches.
+    pub fn get(&self, rel: &str, mtime: &str, hash: &str) -> Option<FileRecord> {
+        let e = self.entries.get(rel)?;
+        if e.get("mtime_ns").and_then(Json::as_str) != Some(mtime)
+            || e.get("hash").and_then(Json::as_str) != Some(hash)
+        {
+            return None;
+        }
+        record_from_json(e.get("record")?)
+    }
+
+    pub fn put(&mut self, rel: &str, mtime: &str, hash: &str, record: &FileRecord) {
+        let mut e = BTreeMap::new();
+        e.insert(String::from("mtime_ns"), Json::Str(mtime.to_string()));
+        e.insert(String::from("hash"), Json::Str(hash.to_string()));
+        e.insert(String::from("record"), record_to_json(record));
+        self.entries.insert(rel.to_string(), Json::Obj(e));
+    }
+
+    /// Persist to `path`. Best-effort: a read-only location loses the
+    /// cache, not the lint run.
+    pub fn save(&self, path: &Path) {
+        let mut root = BTreeMap::new();
+        root.insert(String::from("version"), Json::from(CACHE_VERSION));
+        root.insert(String::from("files"), Json::Obj(self.entries.clone()));
+        let _ = fs::write(path, Json::Obj(root).to_string());
+    }
+}
+
+fn num(n: usize) -> Json {
+    Json::from(n)
+}
+
+fn opt_str(s: &Option<String>) -> Json {
+    match s {
+        Some(s) => Json::Str(s.clone()),
+        None => Json::Null,
+    }
+}
+
+fn site_to_json(s: &Site) -> Json {
+    Json::Arr(vec![Json::Str(s.kind.clone()), Json::Str(s.detail.clone()), num(s.line)])
+}
+
+fn site_from_json(j: &Json) -> Option<Site> {
+    let a = j.as_arr()?;
+    Some(Site {
+        kind: a.first()?.as_str()?.to_string(),
+        detail: a.get(1)?.as_str()?.to_string(),
+        line: a.get(2)?.as_usize()?,
+    })
+}
+
+fn fn_to_json(f: &FnInfo) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(String::from("file"), Json::Str(f.file.clone()));
+    m.insert(
+        String::from("module"),
+        Json::Arr(f.module.iter().map(|s| Json::Str(s.clone())).collect()),
+    );
+    m.insert(String::from("impl"), opt_str(&f.impl_type));
+    m.insert(String::from("name"), Json::Str(f.name.clone()));
+    m.insert(String::from("start"), num(f.start_line));
+    m.insert(String::from("end"), num(f.end_line));
+    m.insert(String::from("attr"), num(f.attr_line));
+    m.insert(String::from("rr"), Json::Bool(f.returns_result));
+    m.insert(
+        String::from("calls"),
+        Json::Arr(
+            f.calls
+                .iter()
+                .map(|c| {
+                    Json::Arr(vec![
+                        Json::Str(c.name.clone()),
+                        opt_str(&c.qual),
+                        Json::Bool(c.is_method),
+                        num(c.line),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    m.insert(String::from("sources"), Json::Arr(f.sources.iter().map(site_to_json).collect()));
+    m.insert(String::from("panics"), Json::Arr(f.panics.iter().map(site_to_json).collect()));
+    m.insert(String::from("indexes"), Json::Arr(f.indexes.iter().map(|&l| num(l)).collect()));
+    m.insert(
+        String::from("locks"),
+        Json::Arr(
+            f.locks
+                .iter()
+                .map(|l| Json::Arr(vec![Json::Str(l.class.clone()), num(l.line), Json::Bool(l.held)]))
+                .collect(),
+        ),
+    );
+    m.insert(
+        String::from("edges"),
+        Json::Arr(
+            f.lock_edges
+                .iter()
+                .map(|e| {
+                    Json::Arr(vec![Json::Str(e.from.clone()), Json::Str(e.to.clone()), num(e.line)])
+                })
+                .collect(),
+        ),
+    );
+    m.insert(
+        String::from("held"),
+        Json::Arr(
+            f.held_calls
+                .iter()
+                .map(|(classes, idx)| {
+                    Json::Arr(vec![
+                        Json::Arr(classes.iter().map(|c| Json::Str(c.clone())).collect()),
+                        num(*idx),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    Json::Obj(m)
+}
+
+fn fn_from_json(j: &Json) -> Option<FnInfo> {
+    let mut f = FnInfo {
+        file: j.get("file")?.as_str()?.to_string(),
+        module: j
+            .get("module")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_str().map(String::from))
+            .collect::<Option<Vec<_>>>()?,
+        impl_type: match j.get("impl")? {
+            Json::Null => None,
+            other => Some(other.as_str()?.to_string()),
+        },
+        name: j.get("name")?.as_str()?.to_string(),
+        start_line: j.get("start")?.as_usize()?,
+        end_line: j.get("end")?.as_usize()?,
+        attr_line: j.get("attr")?.as_usize()?,
+        returns_result: j.get("rr")?.as_bool()?,
+        calls: Vec::new(),
+        sources: Vec::new(),
+        panics: Vec::new(),
+        indexes: Vec::new(),
+        locks: Vec::new(),
+        lock_edges: Vec::new(),
+        held_calls: Vec::new(),
+    };
+    for c in j.get("calls")?.as_arr()? {
+        let a = c.as_arr()?;
+        f.calls.push(Call {
+            name: a.first()?.as_str()?.to_string(),
+            qual: match a.get(1)? {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            },
+            is_method: a.get(2)?.as_bool()?,
+            line: a.get(3)?.as_usize()?,
+        });
+    }
+    for s in j.get("sources")?.as_arr()? {
+        f.sources.push(site_from_json(s)?);
+    }
+    for p in j.get("panics")?.as_arr()? {
+        f.panics.push(site_from_json(p)?);
+    }
+    for l in j.get("indexes")?.as_arr()? {
+        f.indexes.push(l.as_usize()?);
+    }
+    for l in j.get("locks")?.as_arr()? {
+        let a = l.as_arr()?;
+        f.locks.push(LockSite {
+            class: a.first()?.as_str()?.to_string(),
+            line: a.get(1)?.as_usize()?,
+            held: a.get(2)?.as_bool()?,
+        });
+    }
+    for e in j.get("edges")?.as_arr()? {
+        let a = e.as_arr()?;
+        f.lock_edges.push(LockEdge {
+            from: a.first()?.as_str()?.to_string(),
+            to: a.get(1)?.as_str()?.to_string(),
+            line: a.get(2)?.as_usize()?,
+        });
+    }
+    for h in j.get("held")?.as_arr()? {
+        let a = h.as_arr()?;
+        let classes = a
+            .first()?
+            .as_arr()?
+            .iter()
+            .map(|c| c.as_str().map(String::from))
+            .collect::<Option<Vec<_>>>()?;
+        f.held_calls.push((classes, a.get(1)?.as_usize()?));
+    }
+    Some(f)
+}
+
+fn record_to_json(r: &FileRecord) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        String::from("violations"),
+        Json::Arr(
+            r.violations
+                .iter()
+                .map(|v| {
+                    Json::Arr(vec![
+                        Json::Str(v.rule.name().to_string()),
+                        num(v.line),
+                        Json::Str(v.message.clone()),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+    m.insert(
+        String::from("allows"),
+        Json::Arr(
+            r.allows
+                .iter()
+                .map(|a| {
+                    Json::Arr(vec![Json::Str(a.rule.name().to_string()), num(a.line), num(a.line_end)])
+                })
+                .collect(),
+        ),
+    );
+    m.insert(String::from("fns"), Json::Arr(r.fns.iter().map(fn_to_json).collect()));
+    Json::Obj(m)
+}
+
+fn record_from_json(j: &Json) -> Option<FileRecord> {
+    let mut r = FileRecord::default();
+    for v in j.get("violations")?.as_arr()? {
+        let a = v.as_arr()?;
+        let rule = Rule::from_name_any(a.first()?.as_str()?)?;
+        r.violations.push(Violation {
+            file: String::new(), // refilled by the caller from the cache key
+            line: a.get(1)?.as_usize()?,
+            rule,
+            message: a.get(2)?.as_str()?.to_string(),
+        });
+    }
+    for v in j.get("allows")?.as_arr()? {
+        let a = v.as_arr()?;
+        r.allows.push(Allow {
+            rule: Rule::from_name_any(a.first()?.as_str()?)?,
+            line: a.get(1)?.as_usize()?,
+            line_end: a.get(2)?.as_usize()?,
+        });
+    }
+    for f in j.get("fns")?.as_arr()? {
+        r.fns.push(fn_from_json(f)?);
+    }
+    Some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_is_stable_and_content_sensitive() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_ne!(fnv1a(b"fn main() {}"), fnv1a(b"fn main() { }"));
+        assert_eq!(fnv1a(b"abc"), fnv1a(b"abc"));
+    }
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let rec = FileRecord {
+            violations: vec![Violation {
+                file: String::new(),
+                line: 3,
+                rule: Rule::Wallclock,
+                message: String::from("m"),
+            }],
+            allows: vec![Allow { rule: Rule::DetTaint, line: 5, line_end: 9 }],
+            fns: vec![FnInfo {
+                file: String::from("a/b.rs"),
+                module: vec![String::from("m")],
+                impl_type: Some(String::from("T")),
+                name: String::from("f"),
+                start_line: 1,
+                end_line: 9,
+                attr_line: 1,
+                returns_result: true,
+                calls: vec![Call {
+                    name: String::from("g"),
+                    qual: None,
+                    is_method: true,
+                    line: 2,
+                }],
+                sources: vec![Site {
+                    kind: String::from("wallclock"),
+                    detail: String::from("Instant::now"),
+                    line: 3,
+                }],
+                panics: vec![],
+                indexes: vec![4, 5],
+                locks: vec![LockSite { class: String::from("T::s"), line: 6, held: true }],
+                lock_edges: vec![LockEdge {
+                    from: String::from("T::s"),
+                    to: String::from("T::t"),
+                    line: 7,
+                }],
+                held_calls: vec![(vec![String::from("T::s")], 0)],
+            }],
+        };
+        let j = record_to_json(&rec);
+        let back = record_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.violations.len(), 1);
+        assert_eq!(back.violations[0].rule, Rule::Wallclock);
+        assert_eq!(back.allows[0].line_end, 9);
+        let f = &back.fns[0];
+        assert_eq!(f.qual_name(), "m::T::f");
+        assert!(f.returns_result);
+        assert_eq!(f.calls[0].name, "g");
+        assert_eq!(f.indexes, vec![4, 5]);
+        assert_eq!(f.held_calls[0].0, vec![String::from("T::s")]);
+    }
+
+    #[test]
+    fn malformed_entries_degrade_to_a_miss() {
+        let j = Json::parse(r#"{"violations":[["not-a-rule",1,"m"]],"allows":[],"fns":[]}"#).unwrap();
+        assert!(record_from_json(&j).is_none());
+    }
+}

@@ -1,0 +1,256 @@
+//! Module-aware symbol table and intra-crate call graph over the
+//! [`super::parser`] output.
+//!
+//! Resolution is deliberately conservative in *both* directions:
+//!
+//! * A qualified call (`Qual::f(…)`) resolves only to functions whose
+//!   impl type, inline module, or file-derived module matches `Qual`;
+//!   an unknown qualifier means an external crate/type and resolves to
+//!   nothing (no false edges through `std`).
+//! * A bare method call (`recv.f(…)`) can land on any impl fn named `f`
+//!   — receiver types are unknown — *except* when `f` is on the
+//!   [`STD_SHADOW`] list of ubiquitous std method names, which would
+//!   otherwise connect every `.push(…)` to every `push` method in the
+//!   crate. A bare free call resolves only to free fns.
+//!
+//! The over-approximation (same-name methods conflate) can produce
+//! spurious reachability, never missed *local* facts; the taint and
+//! panic analyses accept that trade and offer per-site allows.
+
+use std::collections::BTreeMap;
+
+use super::parser::{Call, FnInfo};
+
+/// Method names so common in std that a bare `.name(…)` call says
+/// nothing about which crate fn (if any) it lands on. Bare method calls
+/// with these names resolve to no crate function; a qualified call
+/// (`Type::name(…)`) still resolves exactly.
+pub const STD_SHADOW: &[&str] = &[
+    "new", "default", "clone", "len", "is_empty", "get", "get_mut", "insert", "remove", "push",
+    "pop", "push_back", "pop_front", "front", "back", "contains", "contains_key", "iter",
+    "iter_mut", "into_iter", "keys", "values", "into_keys", "into_values", "next", "entry",
+    "or_insert", "or_default", "or_insert_with", "drain", "extend", "extend_from_slice", "sort",
+    "sort_by", "sort_by_key", "sort_unstable", "retain", "clear", "last", "first", "split",
+    "split_once", "split_at", "join", "concat", "send", "recv", "try_recv", "lock", "try_lock",
+    "read", "write", "wait", "notify_one", "notify_all", "load", "store", "fetch_add",
+    "fetch_sub", "compare_exchange", "swap", "take", "replace", "min", "max", "clamp", "abs",
+    "floor", "ceil", "round", "to_string", "to_vec", "to_owned", "as_str", "as_bytes", "as_ref",
+    "as_mut", "as_slice", "parse", "find", "rfind", "position", "rposition", "any", "all", "map",
+    "map_err", "and_then", "or_else", "filter", "filter_map", "fold", "rev", "zip", "enumerate",
+    "skip", "chain", "flat_map", "flatten", "collect", "count", "sum", "product", "starts_with",
+    "ends_with", "trim", "trim_start", "trim_end", "chars", "bytes", "lines", "windows",
+    "chunks", "chunks_exact", "unwrap_or", "unwrap_or_else", "unwrap_or_default", "ok", "err",
+    "ok_or", "ok_or_else", "is_some", "is_none", "is_ok", "is_err", "cloned", "copied",
+    "resize", "truncate", "reserve", "with_capacity", "from", "into", "try_into", "try_from",
+    "eq", "ne", "cmp", "partial_cmp", "hash", "fmt", "flush", "name", "spawn", "abs_diff",
+    "wrapping_add", "wrapping_sub", "saturating_add", "saturating_sub", "checked_add",
+    "checked_sub", "checked_mul", "checked_div", "to_le_bytes", "to_be_bytes", "from_le_bytes",
+    "from_be_bytes",
+];
+
+/// The first path component of a fn's file — its top-level module
+/// (`rollout/actors.rs` → `rollout`, `lib.rs` → `lib`).
+pub fn module_head(f: &FnInfo) -> String {
+    let head = f.file.split('/').next().unwrap_or(&f.file);
+    head.trim_end_matches(".rs").to_string()
+}
+
+/// The module path a file contributes: `util/mod.rs` → `["util"]`,
+/// `env/holdout.rs` → `["env", "holdout"]`, `lib.rs` → `[]`.
+pub fn file_mods(file: &str) -> Vec<String> {
+    let comps: Vec<&str> = file.split('/').collect();
+    let last = comps.last().map_or("", |l| l.trim_end_matches(".rs"));
+    let mut mods: Vec<String> =
+        comps[..comps.len().saturating_sub(1)].iter().map(|s| s.to_string()).collect();
+    if last != "mod" && last != "lib" {
+        mods.push(last.to_string());
+    }
+    mods
+}
+
+/// The intra-crate call graph: `edges[i]` lists `(callee index, call
+/// line)` pairs, deduplicated per callee with the first call line kept.
+pub struct CallGraph {
+    pub edges: Vec<Vec<(usize, usize)>>,
+    by_name: BTreeMap<String, Vec<usize>>,
+}
+
+impl CallGraph {
+    pub fn build(fns: &[FnInfo]) -> CallGraph {
+        let mut by_name: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        for (idx, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(idx);
+        }
+        let mut g = CallGraph { edges: vec![Vec::new(); fns.len()], by_name };
+        for (idx, f) in fns.iter().enumerate() {
+            let mut seen: Vec<usize> = Vec::new();
+            for call in &f.calls {
+                for c in g.resolve(fns, call, f) {
+                    if !seen.contains(&c) {
+                        seen.push(c);
+                        g.edges[idx].push((c, call.line));
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Candidate callee indices for one call site.
+    pub fn resolve(&self, fns: &[FnInfo], call: &Call, caller: &FnInfo) -> Vec<usize> {
+        let Some(cands) = self.by_name.get(&call.name) else {
+            return Vec::new();
+        };
+        let qual: Option<&str> = match call.qual.as_deref() {
+            Some("Self") => match caller.impl_type.as_deref() {
+                Some(t) => Some(t),
+                None => return Vec::new(),
+            },
+            q => q,
+        };
+        if let Some(q) = qual {
+            let exact: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&c| {
+                    fns[c].impl_type.as_deref() == Some(q)
+                        || fns[c].module.last().map(String::as_str) == Some(q)
+                })
+                .collect();
+            if !exact.is_empty() {
+                return exact;
+            }
+            // The qualifier may be a file-level module (`util` for
+            // util/mod.rs, `batcher` for serve/batcher.rs, …).
+            return cands
+                .iter()
+                .copied()
+                .filter(|&c| file_mods(&fns[c].file).last().map(String::as_str) == Some(q))
+                .collect();
+            // Anything else is an external type/module: unresolved.
+        }
+        if call.is_method {
+            if STD_SHADOW.contains(&call.name.as_str()) {
+                return Vec::new();
+            }
+            return cands.iter().copied().filter(|&c| fns[c].impl_type.is_some()).collect();
+        }
+        cands.iter().copied().filter(|&c| fns[c].impl_type.is_none()).collect()
+    }
+
+    /// Depth-first reachability from `roots`; the returned map holds a
+    /// BFS/DFS parent per reached fn (`None` for roots) so reports can
+    /// print a witness path.
+    pub fn reach(&self, roots: &[usize]) -> BTreeMap<usize, Option<usize>> {
+        let mut parent: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+        for &r in roots {
+            parent.insert(r, None);
+        }
+        let mut stack: Vec<usize> = roots.to_vec();
+        while let Some(u) = stack.pop() {
+            for &(v, _) in &self.edges[u] {
+                if let std::collections::btree_map::Entry::Vacant(e) = parent.entry(v) {
+                    e.insert(Some(u));
+                    stack.push(v);
+                }
+            }
+        }
+        parent
+    }
+}
+
+/// Render the witness path `root <- … <- v` for a reached fn.
+pub fn path_string(fns: &[FnInfo], parent: &BTreeMap<usize, Option<usize>>, v: usize) -> String {
+    let mut chain: Vec<String> = Vec::new();
+    let mut cur = Some(v);
+    while let Some(u) = cur {
+        chain.push(fns[u].qual_name());
+        cur = parent.get(&u).copied().flatten();
+    }
+    chain.join(" <- ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::super::parser::parse_file;
+    use super::*;
+
+    fn graph_of(files: &[(&str, &str)]) -> (Vec<FnInfo>, CallGraph) {
+        let mut fns = Vec::new();
+        for (file, src) in files {
+            fns.extend(parse_file(file, &lex(src)).fns);
+        }
+        let g = CallGraph::build(&fns);
+        (fns, g)
+    }
+
+    fn edge(fns: &[FnInfo], g: &CallGraph, from: &str, to: &str) -> bool {
+        let fi = fns.iter().position(|f| f.name == from).unwrap();
+        g.edges[fi].iter().any(|&(v, _)| fns[v].name == to)
+    }
+
+    #[test]
+    fn qualified_calls_resolve_through_file_modules() {
+        let (fns, g) = graph_of(&[
+            ("rollout/mod.rs", "pub fn step() { crate::util::helper(); }\n"),
+            ("util/mod.rs", "pub fn helper() {}\n"),
+        ]);
+        assert!(edge(&fns, &g, "step", "helper"));
+    }
+
+    #[test]
+    fn unknown_qualifiers_resolve_to_nothing() {
+        // `Duration::new` must not link to the crate's own `new` methods.
+        let (fns, g) = graph_of(&[
+            ("a.rs", "struct W; impl W { pub fn new() -> W { W } }\nfn f() { let _ = Duration::new(); }\n"),
+        ]);
+        assert!(!edge(&fns, &g, "f", "new"));
+    }
+
+    #[test]
+    fn std_shadow_blocks_bare_method_names() {
+        let src = "struct Q; impl Q {\n  pub fn push(&self) { helper(); }\n  pub fn custom_step(&self) {}\n}\nfn helper() {}\nfn f(q: &Q) { q.push(); q.custom_step(); }\n";
+        let (fns, g) = graph_of(&[("a.rs", src)]);
+        // `.push(` is on the shadow list → no edge even though Q::push exists …
+        assert!(!edge(&fns, &g, "f", "push"));
+        // … but an uncommon method name still resolves.
+        assert!(edge(&fns, &g, "f", "custom_step"));
+        // and a *qualified* `Q::push()` would resolve exactly:
+        let (fns2, g2) = graph_of(&[(
+            "a.rs",
+            "struct Q; impl Q { pub fn push(&self) {} }\nfn f() { Q::push(); }\n",
+        )]);
+        assert!(edge(&fns2, &g2, "f", "push"));
+    }
+
+    #[test]
+    fn free_and_method_namespaces_do_not_cross() {
+        let src = "struct S; impl S { pub fn dispatch(&self) {} }\nfn dispatch_all(s: &S) { s.dispatch(); }\nfn visit() { run(); }\nfn run() {}\n";
+        let (fns, g) = graph_of(&[("a.rs", src)]);
+        // bare free call `run()` only lands on the free fn
+        assert!(edge(&fns, &g, "visit", "run"));
+        // bare method `.dispatch()` only lands on impl fns
+        assert!(edge(&fns, &g, "dispatch_all", "dispatch"));
+    }
+
+    #[test]
+    fn reach_produces_witness_paths() {
+        let (fns, g) = graph_of(&[(
+            "a.rs",
+            "fn root() { middle(); }\nfn middle() { leaf(); }\nfn leaf() {}\n",
+        )]);
+        let root = fns.iter().position(|f| f.name == "root").unwrap();
+        let leaf = fns.iter().position(|f| f.name == "leaf").unwrap();
+        let parent = g.reach(&[root]);
+        assert!(parent.contains_key(&leaf));
+        assert_eq!(path_string(&fns, &parent, leaf), "leaf <- middle <- root");
+    }
+
+    #[test]
+    fn file_mods_shapes() {
+        assert_eq!(file_mods("util/mod.rs"), vec!["util".to_string()]);
+        assert_eq!(file_mods("env/holdout.rs"), vec!["env".to_string(), "holdout".to_string()]);
+        assert!(file_mods("lib.rs").is_empty());
+    }
+}

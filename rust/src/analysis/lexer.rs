@@ -118,6 +118,12 @@ pub fn lex(src: &str) -> Lexed {
             i += 1;
             while i < n {
                 if b[i] == '\\' {
+                    // A `\<newline>` line continuation still ends a line:
+                    // losing it would shift every later token's line number
+                    // (and with it allow-directive matching) by one.
+                    if i + 1 < n && b[i + 1] == '\n' {
+                        line += 1;
+                    }
                     i += 2;
                 } else if b[i] == '"' {
                     i += 1;
@@ -176,6 +182,9 @@ pub fn lex(src: &str) -> Lexed {
                     // Byte string: ordinary escape rules.
                     while i < n {
                         if b[i] == '\\' {
+                            if i + 1 < n && b[i + 1] == '\n' {
+                                line += 1;
+                            }
                             i += 2;
                         } else if b[i] == '"' {
                             i += 1;
@@ -195,9 +204,32 @@ pub fn lex(src: &str) -> Lexed {
                 });
                 continue;
             }
+            // Raw identifier: `r#ident` lexes as a plain identifier token,
+            // so rules see `r#type` and `type` identically.
+            if c == 'r' && i + 1 < n && b[i + 1] == '#' && i + 2 < n && is_ident_start(b[i + 2]) {
+                let start = i + 2;
+                i = start;
+                while i < n && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: b[start..i].iter().collect(),
+                    line,
+                });
+                continue;
+            }
+            // Byte-char literal `b'x'` / `b'\n'`: drop the `b` and let the
+            // char-literal arm below consume the quote (previously this
+            // lexed as ident `b` + char literal — harmless — but `b'` at
+            // end of input could desync the lifetime heuristic).
+            if c == 'b' && i + 1 < n && b[i + 1] == '\'' {
+                i += 1;
+            }
             // Fall through: it was an ordinary identifier starting with r/b.
         }
         // Char literal vs. lifetime.
+        let c = b[i];
         if c == '\'' {
             if i + 1 < n && b[i + 1] == '\\' {
                 // Escaped char literal: skip the escape head, then scan to
@@ -345,5 +377,44 @@ mod tests {
             .find(|t| t.text == "unsafe")
             .expect("unsafe token");
         assert_eq!(uns.line, 4);
+    }
+
+    #[test]
+    fn backslash_newline_continuation_counts_the_line() {
+        // `\<newline>` inside a string is an escape pair, but the newline
+        // still ends a source line; the token after the string must land
+        // on line 4, not line 3.
+        let src = "let s = \"one \\\n    two \\\n    three\";\nunsafe {}\n";
+        let lx = lex(src);
+        let uns = lx
+            .toks
+            .iter()
+            .find(|t| t.text == "unsafe")
+            .expect("unsafe token");
+        assert_eq!(uns.line, 4);
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_plain_identifiers() {
+        let src = "let r#type = r#match + other;";
+        let lx = lex(src);
+        assert!(idents(&lx).contains(&"type"));
+        assert!(idents(&lx).contains(&"match"));
+        assert!(idents(&lx).contains(&"other"));
+        // no stray `r` identifier and no `#` desync
+        assert!(!idents(&lx).contains(&"r"));
+    }
+
+    #[test]
+    fn byte_char_literals_are_single_literals() {
+        let src = "let x = b'a'; let y = b'\\n'; let z = b\"s\";";
+        let lx = lex(src);
+        // the `b` prefix is consumed by the literal, not emitted as an ident
+        assert!(!idents(&lx).contains(&"b"));
+        assert!(idents(&lx).contains(&"x"));
+        assert!(idents(&lx).contains(&"y"));
+        assert!(idents(&lx).contains(&"z"));
+        // and nothing after a byte-char lexes as a lifetime
+        assert!(lx.toks.iter().all(|t| t.kind != TokKind::Lifetime));
     }
 }

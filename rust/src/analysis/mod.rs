@@ -51,22 +51,57 @@
 //!   crate-wide, so every unsafe operation sits in an explicit (and
 //!   therefore SAFETY-commented) `unsafe` block even inside unsafe fns.
 //!
+//! # Semantic rules
+//!
+//! On top of the per-file rules, the pass builds an item-level AST
+//! ([`parser`]), a module-aware symbol table and intra-crate call graph
+//! ([`callgraph`]), and runs three interprocedural analyses ([`taint`]):
+//!
+//! * `det-taint` — a nondeterminism source (wallclock, ambient RNG,
+//!   hash-ordered collections) in *any* fn transitively reachable from
+//!   the deterministic module trees. This is the cross-module closure
+//!   of the per-file rules: a helper in `util/` that reads the clock is
+//!   invisible to the per-file pass but still taints every rollout that
+//!   calls it.
+//! * `serve-panic` — `unwrap`/`expect`/`panic!`-family macros,
+//!   unchecked arithmetic, and slice indexing reachable from the serve
+//!   router handlers or the batcher drain loop. Fns returning `Result`
+//!   are exempt from the indexing heuristic (they have an error path);
+//!   unwraps there stay flagged.
+//! * `lock-order` — per-function lock acquisition orders, propagated
+//!   through the call graph (calls made under a held guard inherit the
+//!   callee's transitive lockset); any cycle in the resulting order
+//!   graph is a potential deadlock.
+//!
+//! The per-file front-end (lex + parse + scan) is cached keyed by
+//! mtime + content hash ([`cache`]); reports can render as SARIF 2.1.0
+//! ([`sarif`]) for code-scanning upload.
+//!
 //! # Escape hatch
 //!
-//! A violation is suppressed by a directive comment on the same line or
-//! the line directly above, of the exact form (the reason is
-//! mandatory): `ued-lint: allow(<rule>) — <reason>` written after the
-//! usual comment marker. A malformed directive — unknown rule, missing
-//! reason — is itself reported (`bad-allow`) and suppresses nothing.
+//! A violation is suppressed by a directive comment of the exact form
+//! (the reason is mandatory): `ued-lint: allow(<rule>[, <rule>…]) —
+//! <reason>` written after the usual comment marker. It covers its own
+//! line(s) and the line directly below — and when that next line starts
+//! an item (its attribute run included), the whole item. A malformed
+//! directive — unknown rule, missing reason — is itself reported
+//! (`bad-allow`) and suppresses nothing.
 
+pub mod callgraph;
+pub mod cache;
 pub mod lexer;
+pub mod parser;
+pub mod sarif;
+pub mod taint;
 
+use std::collections::BTreeMap;
 use std::fmt;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
 
 use lexer::{Comment, Lexed, Tok, TokKind};
+use parser::FnInfo;
 
 /// Top-level source modules whose results must be bit-reproducible.
 pub const DETERMINISTIC_MODULES: [&str; 5] = ["rollout", "algo", "level_sampler", "ppo", "env"];
@@ -86,6 +121,12 @@ pub enum Rule {
     AddrHash,
     SafetyComment,
     UnsafeOpLint,
+    /// Semantic: nondeterminism source reachable from deterministic code.
+    DetTaint,
+    /// Semantic: panic site reachable on the serving path.
+    ServePanic,
+    /// Semantic: inconsistent lock acquisition order through the graph.
+    LockOrder,
     /// A malformed `ued-lint: allow(...)` directive (not allowable).
     BadAllow,
 }
@@ -99,6 +140,9 @@ impl Rule {
             Rule::AddrHash => "addr-hash",
             Rule::SafetyComment => "safety-comment",
             Rule::UnsafeOpLint => "unsafe-op-lint",
+            Rule::DetTaint => "det-taint",
+            Rule::ServePanic => "serve-panic",
+            Rule::LockOrder => "lock-order",
             Rule::BadAllow => "bad-allow",
         }
     }
@@ -111,7 +155,21 @@ impl Rule {
             "addr-hash" => Some(Rule::AddrHash),
             "safety-comment" => Some(Rule::SafetyComment),
             "unsafe-op-lint" => Some(Rule::UnsafeOpLint),
+            "det-taint" => Some(Rule::DetTaint),
+            "serve-panic" => Some(Rule::ServePanic),
+            "lock-order" => Some(Rule::LockOrder),
             _ => None,
+        }
+    }
+
+    /// Like [`Rule::from_name`] but also maps `bad-allow` — cache
+    /// deserialization must round-trip every reportable rule, while
+    /// directives must keep rejecting `allow(bad-allow)`.
+    pub(crate) fn from_name_any(name: &str) -> Option<Rule> {
+        if name == "bad-allow" {
+            Some(Rule::BadAllow)
+        } else {
+            Rule::from_name(name)
         }
     }
 
@@ -124,6 +182,9 @@ impl Rule {
             Rule::AddrHash,
             Rule::SafetyComment,
             Rule::UnsafeOpLint,
+            Rule::DetTaint,
+            Rule::ServePanic,
+            Rule::LockOrder,
         ]
     }
 }
@@ -168,21 +229,37 @@ pub struct LintConfig {
 pub struct CrateReport {
     /// Number of `.rs` files visited.
     pub files: usize,
+    /// Files whose per-file front-end came from the incremental cache.
+    pub cache_hits: usize,
     /// All violations, ordered by (file, line, rule).
     pub violations: Vec<Violation>,
 }
 
-/// A parsed, well-formed allow directive.
-struct Allow {
-    rule: Rule,
-    line: usize,
-    line_end: usize,
+/// A parsed, well-formed allow directive for one rule. A comma list in
+/// the source (`allow(a, b)`) becomes one `Allow` per rule. `line_end`
+/// is extended to the item's last line when the directive sits directly
+/// above an item.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    pub rule: Rule,
+    pub line: usize,
+    pub line_end: usize,
+}
+
+/// The cached per-file front-end result: per-file violations (already
+/// allow-filtered), parsed function summaries, and the (item-extended)
+/// allow table the semantic analyses consult.
+#[derive(Debug, Default)]
+pub struct FileRecord {
+    pub violations: Vec<Violation>,
+    pub fns: Vec<FnInfo>,
+    pub allows: Vec<Allow>,
 }
 
 enum Directive {
     /// The comment is not a `ued-lint:` directive at all.
     None,
-    Valid(Rule),
+    Valid(Vec<Rule>),
     Malformed(String),
 }
 
@@ -207,17 +284,27 @@ fn parse_directive(comment: &str) -> Directive {
         Some(p) => p,
         None => return Directive::Malformed(String::from("unclosed `allow(` directive")),
     };
-    let rule_name = inner[..close].trim();
-    let rule = match Rule::from_name(rule_name) {
-        Some(r) => r,
-        None => {
-            let known: Vec<&str> = Rule::allowable().iter().map(|r| r.name()).collect();
-            return Directive::Malformed(format!(
-                "allow names unknown rule `{rule_name}` (known: {})",
-                known.join(", ")
-            ));
+    // One or more comma-separated rule names; every one must be known.
+    let mut rules: Vec<Rule> = Vec::new();
+    for rule_name in inner[..close].split(',') {
+        let rule_name = rule_name.trim();
+        if rule_name.is_empty() {
+            continue;
         }
-    };
+        match Rule::from_name(rule_name) {
+            Some(r) => rules.push(r),
+            None => {
+                let known: Vec<&str> = Rule::allowable().iter().map(|r| r.name()).collect();
+                return Directive::Malformed(format!(
+                    "allow names unknown rule `{rule_name}` (known: {})",
+                    known.join(", ")
+                ));
+            }
+        }
+    }
+    if rules.is_empty() {
+        return Directive::Malformed(String::from("allow() names no rule"));
+    }
     // The reason is mandatory: a dash separator followed by prose.
     let after = inner[close + 1..].trim_start();
     let reason = after
@@ -229,13 +316,13 @@ fn parse_directive(comment: &str) -> Directive {
         None => false,
     };
     if !reason_ok {
+        let names: Vec<&str> = rules.iter().map(|r| r.name()).collect();
+        let names = names.join(", ");
         return Directive::Malformed(format!(
-            "allow({}) has no reason — write `ued-lint: allow({}) — <why this is sound>`",
-            rule.name(),
-            rule.name()
+            "allow({names}) has no reason — write `ued-lint: allow({names}) — <why this is sound>`"
         ));
     }
-    Directive::Valid(rule)
+    Directive::Valid(rules)
 }
 
 fn ident_is(t: &Tok, s: &str) -> bool {
@@ -497,8 +584,10 @@ fn check_unsafe_op_deny(file: &str, toks: &[Tok], out: &mut Vec<Violation>) {
     );
 }
 
-/// Lint one source file. `file` is a display label only.
-pub fn lint_source(file: &str, src: &str, cfg: &LintConfig) -> Vec<Violation> {
+/// The per-file front-end: lex, parse directives and items, run the
+/// per-file rules, and filter through the (item-extended) allow table.
+/// This is the unit the incremental cache stores.
+pub fn analyze_file(file: &str, src: &str, cfg: &LintConfig) -> FileRecord {
     let lexed = lexer::lex(src);
     let lines: Vec<&str> = src.lines().collect();
 
@@ -507,10 +596,23 @@ pub fn lint_source(file: &str, src: &str, cfg: &LintConfig) -> Vec<Violation> {
     for c in &lexed.comments {
         match parse_directive(&c.text) {
             Directive::None => {}
-            Directive::Valid(rule) => {
-                allows.push(Allow { rule, line: c.line, line_end: c.line_end })
+            Directive::Valid(rules) => {
+                for rule in rules {
+                    allows.push(Allow { rule, line: c.line, line_end: c.line_end });
+                }
             }
             Directive::Malformed(msg) => push(&mut raw, file, c.line, Rule::BadAllow, msg),
+        }
+    }
+
+    let parsed = parser::parse_file(file, &lexed);
+    // Item extension: an allow ending on the line directly above an
+    // item's attribute run covers the whole item.
+    for a in &mut allows {
+        for it in &parsed.items {
+            if a.line_end + 1 == it.attr_line {
+                a.line_end = a.line_end.max(it.end_line);
+            }
         }
     }
 
@@ -523,14 +625,22 @@ pub fn lint_source(file: &str, src: &str, cfg: &LintConfig) -> Vec<Violation> {
     raw.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
     raw.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
     // An allow suppresses matching violations on its own line(s) and the
-    // line directly below. `bad-allow` itself is never suppressible.
+    // line directly below (or through the covered item). `bad-allow`
+    // itself is never suppressible.
     raw.retain(|v| {
         v.rule == Rule::BadAllow
             || !allows
                 .iter()
                 .any(|a| a.rule == v.rule && v.line >= a.line && v.line <= a.line_end + 1)
     });
-    raw
+    FileRecord { violations: raw, fns: parsed.fns, allows }
+}
+
+/// Lint one source file with the per-file rules. `file` is a display
+/// label only. (The semantic rules need the whole tree — see
+/// [`lint_crate`].)
+pub fn lint_source(file: &str, src: &str, cfg: &LintConfig) -> Vec<Violation> {
+    analyze_file(file, src, cfg).violations
 }
 
 fn collect_rs_files(root: &Path, dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
@@ -576,20 +686,85 @@ pub fn config_for(rel: &Path) -> LintConfig {
     }
 }
 
+/// Options for [`lint_crate_with`].
+#[derive(Clone, Debug)]
+pub struct LintOptions {
+    /// Run the interprocedural analyses (`det-taint`, `serve-panic`,
+    /// `lock-order`) on top of the per-file rules.
+    pub semantic: bool,
+    /// Persist/reuse the per-file front-end via this cache file.
+    pub cache_path: Option<PathBuf>,
+}
+
+impl Default for LintOptions {
+    fn default() -> LintOptions {
+        LintOptions { semantic: true, cache_path: None }
+    }
+}
+
 /// Lint every `.rs` file under `src_root` (normally the crate's `src/`).
-/// Files are visited in sorted order, so the report itself is
-/// deterministic.
-pub fn lint_crate(src_root: &Path) -> io::Result<CrateReport> {
+/// Files are visited in sorted order and the final report is re-sorted
+/// by (file, line, rule), so the report itself is deterministic.
+pub fn lint_crate_with(src_root: &Path, opts: &LintOptions) -> io::Result<CrateReport> {
     let mut files: Vec<PathBuf> = Vec::new();
     collect_rs_files(src_root, src_root, &mut files)?;
     files.sort();
-    let mut violations = Vec::new();
+
+    let mut store = match &opts.cache_path {
+        Some(p) => cache::Cache::load(p),
+        None => cache::Cache::default(),
+    };
+    let mut cache_hits = 0usize;
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut all_fns: Vec<FnInfo> = Vec::new();
+    let mut allows_by_file: BTreeMap<String, Vec<Allow>> = BTreeMap::new();
     for rel in &files {
-        let src = fs::read_to_string(src_root.join(rel))?;
-        let cfg = config_for(rel);
-        violations.extend(lint_source(&rel.display().to_string(), &src, &cfg));
+        let path = src_root.join(rel);
+        let src = fs::read_to_string(&path)?;
+        // `/`-separated even on Windows so reports and caches are portable.
+        let rel_str = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let mtime = cache::mtime_ns(&path);
+        let hash = format!("{:016x}", cache::fnv1a(src.as_bytes()));
+        let record = match store.get(&rel_str, &mtime, &hash) {
+            Some(mut rec) => {
+                cache_hits += 1;
+                for v in &mut rec.violations {
+                    v.file = rel_str.clone();
+                }
+                rec
+            }
+            None => {
+                let rec = analyze_file(&rel_str, &src, &config_for(rel));
+                store.put(&rel_str, &mtime, &hash, &rec);
+                rec
+            }
+        };
+        violations.extend(record.violations);
+        all_fns.extend(record.fns);
+        allows_by_file.insert(rel_str, record.allows);
     }
-    Ok(CrateReport { files: files.len(), violations })
+
+    if opts.semantic {
+        let graph = callgraph::CallGraph::build(&all_fns);
+        violations.extend(taint::analyze(&all_fns, &graph, &allows_by_file));
+    }
+
+    violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    if let Some(p) = &opts.cache_path {
+        store.save(p);
+    }
+    Ok(CrateReport { files: files.len(), cache_hits, violations })
+}
+
+/// [`lint_crate_with`] with the default options: semantic analyses on,
+/// no cache.
+pub fn lint_crate(src_root: &Path) -> io::Result<CrateReport> {
+    lint_crate_with(src_root, &LintOptions::default())
 }
 
 #[cfg(test)]
@@ -622,7 +797,7 @@ mod tests {
     #[test]
     fn allow_requires_reason_and_known_rule() {
         match parse_directive("// ued-lint: allow(wallclock) — stopwatch is sanctioned") {
-            Directive::Valid(Rule::Wallclock) => {}
+            Directive::Valid(rules) => assert_eq!(rules, [Rule::Wallclock]),
             _ => panic!("well-formed allow must parse"),
         }
         assert!(matches!(
@@ -633,6 +808,62 @@ mod tests {
             parse_directive("// ued-lint: allow(no-such-rule) — reason"),
             Directive::Malformed(_)
         ));
+        // `bad-allow` is reportable but not allowable
+        assert!(matches!(
+            parse_directive("// ued-lint: allow(bad-allow) — nice try"),
+            Directive::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn comma_separated_allow_names_each_rule() {
+        match parse_directive("// ued-lint: allow(wallclock, det-taint) — sanctioned stopwatch") {
+            Directive::Valid(rules) => assert_eq!(rules, [Rule::Wallclock, Rule::DetTaint]),
+            _ => panic!("comma list must parse"),
+        }
+        // one unknown name poisons the whole directive
+        assert!(matches!(
+            parse_directive("// ued-lint: allow(wallclock, nope) — reason"),
+            Directive::Malformed(_)
+        ));
+        assert!(matches!(parse_directive("// ued-lint: allow() — reason"), Directive::Malformed(_)));
+    }
+
+    #[test]
+    fn item_allow_covers_the_whole_item_but_not_the_next() {
+        // The allow sits directly above `fn f`, whose body reads the
+        // clock three lines further down: without item extension the
+        // violation would escape the directive's two-line window.
+        let src = "\
+// ued-lint: allow(wallclock) — benchmark helper, results unused
+fn f() {
+    let _pad = 1;
+    let _t = Instant::now();
+}
+
+fn g() {
+    let _t = Instant::now();
+}
+";
+        let v = lint_source("x.rs", src, &LintConfig::default());
+        // f's read is allowed; g's is not — the allow must not leak past
+        // the item it annotates.
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, Rule::Wallclock);
+        assert_eq!(v[0].line, 8);
+    }
+
+    #[test]
+    fn item_allow_anchors_on_the_attribute_run() {
+        let src = "\
+// ued-lint: allow(wallclock) — timing shim for tests
+#[inline]
+pub fn f() {
+    let _a = 0;
+    let _t = Instant::now();
+}
+";
+        assert!(lint_source("x.rs", src, &LintConfig::default()).is_empty());
     }
 
     #[test]

@@ -1,0 +1,784 @@
+//! Item-level recursive-descent parser over the [`super::lexer`] token
+//! stream.
+//!
+//! This is deliberately *not* a Rust parser: it recognizes exactly the
+//! item structure the semantic lint pass needs — `fn` / `impl` / `mod`
+//! nesting, attribute runs, and per-function body facts (calls, panic
+//! sites, lock acquisitions, determinism taint sources) — by bracket
+//! matching, never by grammar. `#[cfg(test)]` items and modules are
+//! skipped wholesale so test scaffolding can unwrap freely.
+//!
+//! Known limits (also documented in the README rule catalog):
+//!
+//! * Trait *default method* bodies are not parsed — the item scanner
+//!   skips a `trait { … }` block as one span. Default bodies in this
+//!   crate are trivial accessors, so nothing is lost today.
+//! * `Drop::drop` is not modeled: a guard is considered released when
+//!   the enclosing brace depth unwinds or an explicit `drop(guard)`
+//!   names its binding.
+//! * Lock classes are named `{impl type or file stem}::{receiver field}`,
+//!   so the same mutex reached through two wrapper types forms two
+//!   classes. This fragments (never merges) classes — it can miss an
+//!   order cycle, not invent one.
+
+use super::lexer::{Lexed, Tok, TokKind};
+
+/// Rust keywords (plus `macro_rules`): never treated as call names.
+pub fn is_keyword(s: &str) -> bool {
+    matches!(
+        s,
+        "if" | "while"
+            | "for"
+            | "match"
+            | "return"
+            | "loop"
+            | "as"
+            | "in"
+            | "let"
+            | "fn"
+            | "impl"
+            | "mod"
+            | "use"
+            | "pub"
+            | "unsafe"
+            | "move"
+            | "ref"
+            | "mut"
+            | "where"
+            | "dyn"
+            | "box"
+            | "break"
+            | "continue"
+            | "else"
+            | "enum"
+            | "struct"
+            | "trait"
+            | "type"
+            | "const"
+            | "static"
+            | "crate"
+            | "super"
+            | "self"
+            | "Self"
+            | "true"
+            | "false"
+            | "async"
+            | "await"
+            | "extern"
+            | "macro_rules"
+            | "union"
+    )
+}
+
+/// A determinism-taint or panic site inside a function body.
+#[derive(Clone, Debug)]
+pub struct Site {
+    /// Source class (`wallclock`, `ambient-rng`, `hash-order`) or panic
+    /// class (`unwrap`, `expect`, `panic-macro`, `unchecked-arith`).
+    pub kind: String,
+    /// The concrete token(s) seen, for the report message.
+    pub detail: String,
+    pub line: usize,
+}
+
+/// One call site: `name(..)`, `recv.name(..)`, or `Qual::name(..)`.
+#[derive(Clone, Debug)]
+pub struct Call {
+    pub name: String,
+    /// The path qualifier directly before `::name(`, if any.
+    pub qual: Option<String>,
+    /// True for `.name(` receivers with no qualifier.
+    pub is_method: bool,
+    pub line: usize,
+}
+
+/// One `.lock()` acquisition.
+#[derive(Clone, Debug)]
+pub struct LockSite {
+    /// Lock class: `{impl type or file stem}::{receiver tail}`.
+    pub class: String,
+    pub line: usize,
+    /// Bound by a `let` (the guard is held past the statement).
+    pub held: bool,
+}
+
+/// A direct held→acquired ordering edge inside one body.
+#[derive(Clone, Debug)]
+pub struct LockEdge {
+    pub from: String,
+    pub to: String,
+    pub line: usize,
+}
+
+/// Everything the semantic analyses need to know about one function.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    /// File path relative to the lint root (`/`-separated).
+    pub file: String,
+    /// Inline `mod` nesting inside the file.
+    pub module: Vec<String>,
+    /// `impl` block type, if the fn is a method.
+    pub impl_type: Option<String>,
+    pub name: String,
+    pub start_line: usize,
+    pub end_line: usize,
+    /// First line of the attribute/visibility run introducing the item
+    /// (== `start_line` when there is none) — allow directives anchor here.
+    pub attr_line: usize,
+    /// `Result` appears in the return-type tokens.
+    pub returns_result: bool,
+    pub calls: Vec<Call>,
+    pub sources: Vec<Site>,
+    pub panics: Vec<Site>,
+    /// Lines with `expr[..]` slice/array indexing.
+    pub indexes: Vec<usize>,
+    pub locks: Vec<LockSite>,
+    pub lock_edges: Vec<LockEdge>,
+    /// Calls made while guards are held: (held classes, index into `calls`).
+    pub held_calls: Vec<(Vec<String>, usize)>,
+}
+
+impl FnInfo {
+    /// Human-readable qualified name for report messages.
+    pub fn qual_name(&self) -> String {
+        let ty = match &self.impl_type {
+            Some(t) => format!("{t}::"),
+            None => String::new(),
+        };
+        if self.module.is_empty() {
+            format!("{ty}{}", self.name)
+        } else {
+            format!("{}::{ty}{}", self.module.join("::"), self.name)
+        }
+    }
+}
+
+/// The line span of one item (fn, struct, enum, …) including its
+/// attribute run: an allow directive ending on `attr_line - 1` extends
+/// over the whole item.
+#[derive(Clone, Copy, Debug)]
+pub struct ItemSpan {
+    pub attr_line: usize,
+    pub end_line: usize,
+}
+
+/// Parse result for one file.
+#[derive(Debug, Default)]
+pub struct ParsedFile {
+    pub fns: Vec<FnInfo>,
+    pub items: Vec<ItemSpan>,
+}
+
+/// Index of the token matching the `open` bracket at `i` (falls back to
+/// the last token on unbalanced input, so parsing always terminates).
+pub fn match_close(toks: &[Tok], mut i: usize, open: &str, close: &str) -> usize {
+    let mut depth = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct && t.text == open {
+            depth += 1;
+        } else if t.kind == TokKind::Punct && t.text == close {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn tok_is(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.text == text)
+}
+
+fn ident_at(toks: &[Tok], i: usize) -> Option<&str> {
+    toks.get(i).and_then(|t| (t.kind == TokKind::Ident).then_some(t.text.as_str()))
+}
+
+enum Ctx {
+    Mod(String, usize),
+    Impl(String, usize),
+}
+
+impl Ctx {
+    fn close(&self) -> usize {
+        match self {
+            Ctx::Mod(_, c) | Ctx::Impl(_, c) => *c,
+        }
+    }
+}
+
+/// Parse `lexed` into functions + item spans. `file` is the path
+/// relative to the lint root and becomes `FnInfo::file` verbatim.
+pub fn parse_file(file: &str, lexed: &Lexed) -> ParsedFile {
+    let toks = &lexed.toks;
+    let n = toks.len();
+    let mut out = ParsedFile::default();
+    let mut ctx: Vec<Ctx> = Vec::new();
+    let mut i = 0usize;
+    // The contiguous attribute/visibility run introducing the next item.
+    let mut attr_line: Option<usize> = None;
+    let mut attr_is_cfg_test = false;
+
+    while i < n {
+        while ctx.last().is_some_and(|c| i > c.close()) {
+            ctx.pop();
+        }
+        let t = &toks[i];
+        let ln = t.line;
+
+        if t.kind == TokKind::Punct && t.text == "#" {
+            // `#[...]` / `#![...]` attribute.
+            let mut j = i + 1;
+            if tok_is(toks, j, "!") {
+                j += 1;
+            }
+            if tok_is(toks, j, "[") {
+                let close = match_close(toks, j, "[", "]");
+                attr_line.get_or_insert(ln);
+                let mut saw_cfg = false;
+                let mut saw_test = false;
+                for a in &toks[j..close] {
+                    if a.kind == TokKind::Ident {
+                        saw_cfg |= a.text == "cfg";
+                        saw_test |= a.text == "test";
+                    }
+                }
+                if saw_cfg && saw_test {
+                    attr_is_cfg_test = true;
+                }
+                i = close + 1;
+                continue;
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            // Punctuation other than attribute/bracket glue breaks the
+            // attribute run.
+            if t.kind == TokKind::Punct && !matches!(t.text.as_str(), "#" | "[" | "]") {
+                attr_line = None;
+            }
+            i += 1;
+            continue;
+        }
+
+        match t.text.as_str() {
+            "pub" => {
+                // `pub` / `pub(crate)` — transparent, keep the attr run.
+                if tok_is(toks, i + 1, "(") {
+                    i = match_close(toks, i + 1, "(", ")") + 1;
+                } else {
+                    i += 1;
+                }
+            }
+            "unsafe" | "async" | "extern" => {
+                // fn/impl modifiers — transparent.
+                i += 1;
+            }
+            "const" if ident_at(toks, i + 1) == Some("fn") => {
+                // `const fn` — let the fn arm take it.
+                i += 1;
+            }
+            "mod" => {
+                let name = ident_at(toks, i + 1).unwrap_or("?").to_string();
+                let j = i + 2;
+                if tok_is(toks, j, "{") {
+                    let close = match_close(toks, j, "{", "}");
+                    if attr_is_cfg_test {
+                        i = close + 1; // skip #[cfg(test)] modules wholesale
+                    } else {
+                        ctx.push(Ctx::Mod(name, close));
+                        i = j + 1;
+                    }
+                } else {
+                    i = j + 1; // `mod name;`
+                }
+                attr_line = None;
+                attr_is_cfg_test = false;
+            }
+            "impl" => {
+                // impl [<…>] Type [for Type2] [where …] { … }
+                let mut j = i + 1;
+                if tok_is(toks, j, "<") {
+                    j = match_close(toks, j, "<", ">") + 1;
+                }
+                let mut ty: Option<String> = None;
+                while j < n && !tok_is(toks, j, "{") {
+                    let tj = &toks[j];
+                    if tj.kind == TokKind::Ident && tj.text == "for" {
+                        ty = None; // the *trait* was named first; restart
+                    } else if tj.kind == TokKind::Ident && tj.text != "where" && ty.is_none() {
+                        ty = Some(tj.text.clone());
+                    } else if tj.kind == TokKind::Ident
+                        && ty.is_some()
+                        && j >= 2
+                        && tok_is(toks, j - 1, ":")
+                        && tok_is(toks, j - 2, ":")
+                    {
+                        ty = Some(tj.text.clone()); // path: keep the last segment
+                    }
+                    if tj.text == "where" {
+                        break;
+                    }
+                    j += 1;
+                }
+                while j < n && !tok_is(toks, j, "{") {
+                    j += 1;
+                }
+                if j >= n {
+                    break;
+                }
+                let close = match_close(toks, j, "{", "}");
+                if attr_is_cfg_test {
+                    i = close + 1;
+                } else {
+                    ctx.push(Ctx::Impl(ty.unwrap_or_else(|| String::from("?")), close));
+                    i = j + 1;
+                }
+                attr_line = None;
+                attr_is_cfg_test = false;
+            }
+            "fn" => {
+                let name = ident_at(toks, i + 1).unwrap_or("?").to_string();
+                let start_line = ln;
+                let mut j = i + 2;
+                if tok_is(toks, j, "<") {
+                    j = match_close(toks, j, "<", ">") + 1;
+                }
+                if tok_is(toks, j, "(") {
+                    j = match_close(toks, j, "(", ")") + 1;
+                }
+                let params_end = j;
+                // Return type / where clause: scan to `{` or `;`.
+                let mut body_open: Option<usize> = None;
+                while j < n {
+                    if tok_is(toks, j, ";") {
+                        break;
+                    }
+                    if tok_is(toks, j, "{") {
+                        body_open = Some(j);
+                        break;
+                    }
+                    if tok_is(toks, j, "<") {
+                        j = match_close(toks, j, "<", ">") + 1;
+                        continue;
+                    }
+                    j += 1;
+                }
+                let Some(body_open) = body_open else {
+                    // Bodiless declaration (trait method, extern).
+                    attr_line = None;
+                    attr_is_cfg_test = false;
+                    i = j + 1;
+                    continue;
+                };
+                let close = match_close(toks, body_open, "{", "}");
+                if attr_is_cfg_test {
+                    attr_line = None;
+                    attr_is_cfg_test = false;
+                    i = close + 1;
+                    continue;
+                }
+                let end_line = toks[close].line;
+                let module: Vec<String> = ctx
+                    .iter()
+                    .filter_map(|c| match c {
+                        Ctx::Mod(m, _) => Some(m.clone()),
+                        Ctx::Impl(..) => None,
+                    })
+                    .collect();
+                let impl_type = ctx.iter().rev().find_map(|c| match c {
+                    Ctx::Impl(t, _) => Some(t.clone()),
+                    Ctx::Mod(..) => None,
+                });
+                let mut f = FnInfo {
+                    file: file.to_string(),
+                    module,
+                    impl_type,
+                    name,
+                    start_line,
+                    end_line,
+                    attr_line: attr_line.unwrap_or(start_line),
+                    returns_result: toks[params_end..body_open]
+                        .iter()
+                        .any(|x| x.kind == TokKind::Ident && x.text == "Result"),
+                    calls: Vec::new(),
+                    sources: Vec::new(),
+                    panics: Vec::new(),
+                    indexes: Vec::new(),
+                    locks: Vec::new(),
+                    lock_edges: Vec::new(),
+                    held_calls: Vec::new(),
+                };
+                scan_body(&mut f, toks, body_open, close);
+                out.items.push(ItemSpan { attr_line: f.attr_line, end_line });
+                out.fns.push(f);
+                attr_line = None;
+                attr_is_cfg_test = false;
+                i = close + 1;
+            }
+            "struct" | "enum" | "trait" | "union" | "type" | "static" | "const" | "use" => {
+                let is_use = t.text == "use";
+                let a_line = attr_line.unwrap_or(ln);
+                let mut j = i + 1;
+                let mut end_line = ln;
+                while j < n {
+                    if tok_is(toks, j, ";") {
+                        end_line = toks[j].line;
+                        j += 1;
+                        break;
+                    }
+                    if tok_is(toks, j, "{") {
+                        let close = match_close(toks, j, "{", "}");
+                        end_line = toks[close].line;
+                        j = close + 1;
+                        break;
+                    }
+                    if tok_is(toks, j, "<") {
+                        j = match_close(toks, j, "<", ">") + 1;
+                        continue;
+                    }
+                    j += 1;
+                }
+                if !is_use {
+                    out.items.push(ItemSpan { attr_line: a_line, end_line });
+                }
+                attr_line = None;
+                attr_is_cfg_test = false;
+                i = j;
+            }
+            _ => {
+                attr_line = None;
+                attr_is_cfg_test = false;
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Scan a function body (`toks[open_i..close_i]`) for the facts the
+/// interprocedural analyses consume.
+fn scan_body(f: &mut FnInfo, toks: &[Tok], open_i: usize, close_i: usize) {
+    let stem = f
+        .file
+        .rsplit('/')
+        .next()
+        .unwrap_or(&f.file)
+        .trim_end_matches(".rs")
+        .to_string();
+    // Guards currently held: (let binding, lock class, brace depth).
+    let mut held: Vec<(Option<String>, String, usize)> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_has_let = false;
+    let mut let_var: Option<String> = None;
+    let mut i = open_i;
+    while i < close_i {
+        let t = &toks[i];
+        let ln = t.line;
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    held.retain(|(_, _, d)| *d <= depth);
+                    stmt_has_let = false;
+                    let_var = None;
+                }
+                ";" => {
+                    stmt_has_let = false;
+                    let_var = None;
+                }
+                "[" => {
+                    // `expr[..]`: an index iff the previous token ends an
+                    // expression (ident, `]`, or `)`).
+                    if i > 0 {
+                        let prev = &toks[i - 1];
+                        let indexes = (prev.kind == TokKind::Ident && !is_keyword(&prev.text))
+                            || (prev.kind == TokKind::Punct
+                                && matches!(prev.text.as_str(), "]" | ")"));
+                        if indexes {
+                            f.indexes.push(ln);
+                        }
+                    }
+                }
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let s = t.text.as_str();
+        if s == "let" {
+            stmt_has_let = true;
+            let mut j = i + 1;
+            while ident_at(toks, j) == Some("mut") {
+                j += 1;
+            }
+            let_var = (j < close_i).then(|| ident_at(toks, j)).flatten().map(String::from);
+            i += 1;
+            continue;
+        }
+
+        let nxt_is = |text: &str| tok_is(toks, i + 1, text);
+        let is_method = i > 0 && tok_is(toks, i - 1, ".") && toks[i - 1].kind == TokKind::Punct;
+        let qualified = i > 1 && tok_is(toks, i - 1, ":") && tok_is(toks, i - 2, ":");
+
+        // Determinism taint sources.
+        if matches!(s, "Instant" | "SystemTime")
+            && tok_is(toks, i + 1, ":")
+            && tok_is(toks, i + 2, ":")
+            && ident_at(toks, i + 3) == Some("now")
+        {
+            f.sources.push(Site {
+                kind: String::from("wallclock"),
+                detail: format!("{s}::now"),
+                line: ln,
+            });
+        }
+        if matches!(s, "thread_rng" | "ThreadRng" | "OsRng" | "from_entropy") {
+            f.sources.push(Site {
+                kind: String::from("ambient-rng"),
+                detail: s.to_string(),
+                line: ln,
+            });
+        }
+        if s == "rand"
+            && tok_is(toks, i + 1, ":")
+            && tok_is(toks, i + 2, ":")
+            && ident_at(toks, i + 3) == Some("random")
+        {
+            f.sources.push(Site {
+                kind: String::from("ambient-rng"),
+                detail: String::from("rand::random"),
+                line: ln,
+            });
+        }
+        if matches!(s, "HashMap" | "HashSet") {
+            f.sources.push(Site {
+                kind: String::from("hash-order"),
+                detail: s.to_string(),
+                line: ln,
+            });
+        }
+
+        // Panic sites.
+        if is_method && matches!(s, "unwrap" | "expect") && nxt_is("(") {
+            f.panics.push(Site { kind: s.to_string(), detail: s.to_string(), line: ln });
+            i += 1;
+            continue;
+        }
+        if is_method
+            && matches!(s, "unchecked_add" | "unchecked_sub" | "unchecked_mul")
+            && nxt_is("(")
+        {
+            f.panics.push(Site {
+                kind: String::from("unchecked-arith"),
+                detail: s.to_string(),
+                line: ln,
+            });
+            i += 1;
+            continue;
+        }
+        if matches!(s, "panic" | "unreachable" | "todo" | "unimplemented") && nxt_is("!") {
+            f.panics.push(Site {
+                kind: String::from("panic-macro"),
+                detail: format!("{s}!"),
+                line: ln,
+            });
+            i += 1;
+            continue;
+        }
+
+        // Lock acquisition: `recv.lock(`.
+        if is_method && s == "lock" && nxt_is("(") {
+            // Receiver tail: the field/binding closest to `.lock()`,
+            // walking back over `.`/ident/`[..]` chains; `self.lock()`
+            // (or an unrecognized receiver) gets no tail.
+            let mut j = i as isize - 2;
+            let mut tail: Option<String> = None;
+            while j >= 0 {
+                let tj = &toks[j as usize];
+                if tj.kind == TokKind::Punct && tj.text == "]" {
+                    let mut d = 0isize;
+                    while j >= 0 {
+                        let b = &toks[j as usize];
+                        if b.text == "]" {
+                            d += 1;
+                        } else if b.text == "[" {
+                            d -= 1;
+                            if d == 0 {
+                                break;
+                            }
+                        }
+                        j -= 1;
+                    }
+                    j -= 1;
+                    continue;
+                }
+                if tj.kind == TokKind::Ident {
+                    if tj.text != "self" {
+                        tail = Some(tj.text.clone());
+                    }
+                    break;
+                }
+                if tj.kind == TokKind::Punct && tj.text == "." {
+                    j -= 1;
+                    continue;
+                }
+                break;
+            }
+            let owner = f.impl_type.clone().unwrap_or_else(|| stem.clone());
+            let class = format!("{owner}::{}", tail.as_deref().unwrap_or("?"));
+            let is_held = stmt_has_let;
+            f.locks.push(LockSite { class: class.clone(), line: ln, held: is_held });
+            for (_, h, _) in &held {
+                if *h != class {
+                    f.lock_edges.push(LockEdge { from: h.clone(), to: class.clone(), line: ln });
+                }
+            }
+            if is_held {
+                held.push((let_var.clone(), class, depth));
+            }
+            i += 2;
+            continue;
+        }
+
+        // Explicit early release: `drop(guard)` is `std::mem::drop` —
+        // never a crate call (`Drop::drop` cannot be invoked explicitly).
+        if s == "drop" && !is_method && !qualified && nxt_is("(") {
+            if let Some(var) = ident_at(toks, i + 2) {
+                held.retain(|(v, _, _)| v.as_deref() != Some(var));
+            }
+            i += 2;
+            continue;
+        }
+
+        // Call sites.
+        if nxt_is("(") && !is_keyword(s) {
+            if i > 0 && ident_at(toks, i - 1) == Some("fn") {
+                i += 1;
+                continue;
+            }
+            let mut qual: Option<String> = None;
+            if qualified {
+                if i >= 3 {
+                    qual = ident_at(toks, i - 3).map(String::from);
+                }
+            }
+            f.calls.push(Call {
+                name: s.to_string(),
+                qual: qual.clone(),
+                is_method: is_method && qual.is_none(),
+                line: ln,
+            });
+            if !held.is_empty() {
+                let classes: Vec<String> = held.iter().map(|(_, c, _)| c.clone()).collect();
+                f.held_calls.push((classes, f.calls.len() - 1));
+            }
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn parse(src: &str) -> ParsedFile {
+        parse_file("x.rs", &lex(src))
+    }
+
+    #[test]
+    fn fns_get_module_and_impl_context() {
+        let src = "mod inner {\n  struct S;\n  impl S {\n    pub fn m(&self) -> u32 { 1 }\n  }\n  fn free() {}\n}\nfn top() {}\n";
+        let p = parse(src);
+        let names: Vec<(String, Option<String>, Vec<String>)> = p
+            .fns
+            .iter()
+            .map(|f| (f.name.clone(), f.impl_type.clone(), f.module.clone()))
+            .collect();
+        assert_eq!(names[0], ("m".into(), Some("S".into()), vec!["inner".into()]));
+        assert_eq!(names[1], ("free".into(), None, vec!["inner".into()]));
+        assert_eq!(names[2], ("top".into(), None, vec![]));
+    }
+
+    #[test]
+    fn trait_impls_take_the_self_type_not_the_trait() {
+        let src = "impl fmt::Display for Thing {\n  fn fmt(&self) -> u32 { 0 }\n}\n";
+        let p = parse(src);
+        assert_eq!(p.fns[0].impl_type.as_deref(), Some("Thing"));
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "#[cfg(test)]\nmod tests {\n  fn helper() { x.unwrap(); }\n}\nfn real() {}\n";
+        let p = parse(src);
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].name, "real");
+    }
+
+    #[test]
+    fn body_facts_are_recorded() {
+        let src = "fn f(v: &[u8]) {\n  let t = Instant::now();\n  let x = v.first().unwrap();\n  let y = v[0];\n  helper(x, y);\n  other.run();\n}\n";
+        let p = parse(src);
+        let f = &p.fns[0];
+        assert_eq!(f.sources.len(), 1);
+        assert_eq!(f.sources[0].detail, "Instant::now");
+        assert_eq!(f.panics.len(), 1);
+        assert_eq!(f.indexes, vec![4]);
+        let call_names: Vec<&str> = f.calls.iter().map(|c| c.name.as_str()).collect();
+        // `.first()` and `.run()` are method calls; `helper` is free.
+        assert!(call_names.contains(&"helper"));
+        assert!(call_names.contains(&"run"));
+        let helper = f.calls.iter().find(|c| c.name == "helper").unwrap();
+        assert!(!helper.is_method && helper.qual.is_none());
+    }
+
+    #[test]
+    fn returns_result_scans_the_return_type_only() {
+        let p = parse("fn ok() -> Result<u32, String> { Ok(1) }\n");
+        assert!(p.fns[0].returns_result);
+        // a Result *parameter* does not make the fn Result-returning
+        let p = parse("fn take(r: Result<u32, String>) -> u32 { 0 }\n");
+        assert!(!p.fns[0].returns_result);
+    }
+
+    #[test]
+    fn lock_edges_and_drop_release() {
+        let src = "impl P {\n  fn f(&self) {\n    let a = self.alpha.lock().unwrap();\n    let b = self.beta.lock().unwrap();\n    drop(a);\n    let c = self.gamma.lock().unwrap();\n  }\n}\n";
+        let p = parse(src);
+        let f = &p.fns[0];
+        let edges: Vec<(String, String)> =
+            f.lock_edges.iter().map(|e| (e.from.clone(), e.to.clone())).collect();
+        // alpha held when beta acquired; after drop(a) only beta is held.
+        assert!(edges.contains(&("P::alpha".into(), "P::beta".into())));
+        assert!(edges.contains(&("P::beta".into(), "P::gamma".into())));
+        assert!(!edges.contains(&("P::alpha".into(), "P::gamma".into())));
+    }
+
+    #[test]
+    fn allow_anchor_is_the_attribute_line() {
+        let src = "#[inline]\n#[must_use]\npub fn f() -> u32 { 1 }\n";
+        let p = parse(src);
+        assert_eq!(p.fns[0].attr_line, 1);
+        assert_eq!(p.fns[0].start_line, 3);
+        assert_eq!(p.items[0].attr_line, 1);
+    }
+
+    #[test]
+    fn qualified_calls_keep_their_qualifier() {
+        let src = "fn f() { crate::util::helper(); Widget::build(); }\n";
+        let p = parse(src);
+        let quals: Vec<(String, Option<String>)> =
+            p.fns[0].calls.iter().map(|c| (c.name.clone(), c.qual.clone())).collect();
+        assert!(quals.contains(&("helper".into(), Some("util".into()))));
+        assert!(quals.contains(&("build".into(), Some("Widget".into()))));
+    }
+}

@@ -1,0 +1,165 @@
+//! SARIF 2.1.0 output for `ued-lint`, consumable by GitHub code
+//! scanning (`upload-sarif`) and most editor SARIF viewers.
+//!
+//! One run, one tool (`ued-lint`), one result per violation. File URIs
+//! are emitted relative to the repository root via the caller-supplied
+//! prefix (the binary passes `rust/src/` for the default tree), since
+//! the lint itself works with src-relative paths.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::{CrateReport, Rule};
+
+const ALL_RULES: [Rule; 10] = [
+    Rule::HashCollections,
+    Rule::ThreadRng,
+    Rule::Wallclock,
+    Rule::AddrHash,
+    Rule::SafetyComment,
+    Rule::UnsafeOpLint,
+    Rule::DetTaint,
+    Rule::ServePanic,
+    Rule::LockOrder,
+    Rule::BadAllow,
+];
+
+fn short_desc(rule: Rule) -> &'static str {
+    match rule {
+        Rule::HashCollections => "HashMap/HashSet in an order-sensitive module",
+        Rule::ThreadRng => "ambient RNG in a deterministic module",
+        Rule::Wallclock => "wallclock read outside the sanctioned stopwatch",
+        Rule::AddrHash => "pointer address cast to an integer",
+        Rule::SafetyComment => "unsafe without a SAFETY comment",
+        Rule::UnsafeOpLint => "crate root missing deny(unsafe_op_in_unsafe_fn)",
+        Rule::DetTaint => "nondeterminism source reachable from deterministic code",
+        Rule::ServePanic => "panic site reachable on the serving path",
+        Rule::LockOrder => "inconsistent lock acquisition order (potential deadlock)",
+        Rule::BadAllow => "malformed ued-lint allow directive",
+    }
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Serialize `report` as a SARIF 2.1.0 log. `uri_prefix` is prepended to
+/// every (src-relative) file path to make URIs repo-relative.
+pub fn to_sarif(report: &CrateReport, uri_prefix: &str) -> String {
+    let rules: Vec<Json> = ALL_RULES
+        .iter()
+        .map(|&r| {
+            obj(vec![
+                ("id", Json::from(r.name())),
+                ("shortDescription", obj(vec![("text", Json::from(short_desc(r)))])),
+            ])
+        })
+        .collect();
+    let results: Vec<Json> = report
+        .violations
+        .iter()
+        .map(|v| {
+            obj(vec![
+                ("ruleId", Json::from(v.rule.name())),
+                ("level", Json::from("error")),
+                ("message", obj(vec![("text", Json::from(v.message.as_str()))])),
+                (
+                    "locations",
+                    Json::Arr(vec![obj(vec![(
+                        "physicalLocation",
+                        obj(vec![
+                            (
+                                "artifactLocation",
+                                obj(vec![(
+                                    "uri",
+                                    Json::Str(format!("{uri_prefix}{}", v.file)),
+                                )]),
+                            ),
+                            ("region", obj(vec![("startLine", Json::from(v.line.max(1)))])),
+                        ]),
+                    )])]),
+                ),
+            ])
+        })
+        .collect();
+    let driver = obj(vec![
+        ("name", Json::from("ued-lint")),
+        ("informationUri", Json::from("https://github.com/")),
+        ("version", Json::from("1.0.0")),
+        ("rules", Json::Arr(rules)),
+    ]);
+    let run = obj(vec![
+        ("tool", obj(vec![("driver", driver)])),
+        ("results", Json::Arr(results)),
+    ]);
+    obj(vec![
+        (
+            "$schema",
+            Json::from(
+                "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/Schemata/sarif-schema-2.1.0.json",
+            ),
+        ),
+        ("version", Json::from("2.1.0")),
+        ("runs", Json::Arr(vec![run])),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Violation;
+    use super::*;
+
+    #[test]
+    fn sarif_shape_is_valid_and_prefixed() {
+        let report = CrateReport {
+            files: 2,
+            cache_hits: 0,
+            violations: vec![Violation {
+                file: String::from("serve/router.rs"),
+                line: 7,
+                rule: Rule::ServePanic,
+                message: String::from("unwrap in serve fn handle"),
+            }],
+        };
+        let text = to_sarif(&report, "rust/src/");
+        let j = Json::parse(&text).expect("sarif must be valid json");
+        assert_eq!(j.get("version").and_then(Json::as_str), Some("2.1.0"));
+        let runs = j.get("runs").unwrap().as_arr().unwrap();
+        let driver = runs[0].get("tool").unwrap().get("driver").unwrap();
+        assert_eq!(driver.get("name").and_then(Json::as_str), Some("ued-lint"));
+        // every enforced rule is declared
+        assert_eq!(driver.get("rules").unwrap().as_arr().unwrap().len(), ALL_RULES.len());
+        let res = &runs[0].get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(res.get("ruleId").and_then(Json::as_str), Some("serve-panic"));
+        let uri = res.get("locations").unwrap().as_arr().unwrap()[0]
+            .get("physicalLocation")
+            .unwrap()
+            .get("artifactLocation")
+            .unwrap()
+            .get("uri")
+            .unwrap()
+            .as_str()
+            .unwrap();
+        assert_eq!(uri, "rust/src/serve/router.rs");
+        let line = res.get("locations").unwrap().as_arr().unwrap()[0]
+            .get("physicalLocation")
+            .unwrap()
+            .get("region")
+            .unwrap()
+            .get("startLine")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert_eq!(line, 7);
+    }
+
+    #[test]
+    fn empty_report_still_serializes() {
+        let report = CrateReport { files: 0, cache_hits: 0, violations: vec![] };
+        let j = Json::parse(&to_sarif(&report, "")).unwrap();
+        let runs = j.get("runs").unwrap().as_arr().unwrap();
+        assert!(runs[0].get("results").unwrap().as_arr().unwrap().is_empty());
+    }
+}

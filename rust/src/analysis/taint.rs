@@ -1,0 +1,243 @@
+//! The three interprocedural analyses over the call graph:
+//! determinism taint (`det-taint`), serve-path panic freedom
+//! (`serve-panic`), and lock-order consistency (`lock-order`).
+//!
+//! All three consume the same inputs — parsed [`FnInfo`]s, the
+//! [`CallGraph`], and the per-file allow tables — and report through the
+//! ordinary [`Violation`] channel, so the binary, SARIF writer, and
+//! `lint_self` test treat semantic findings exactly like lexical ones.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::callgraph::{module_head, path_string, CallGraph};
+use super::parser::FnInfo;
+use super::{Allow, Rule, Violation, DETERMINISTIC_MODULES};
+
+/// Files whose top-level fns are serve-path roots: every request either
+/// enters through the router's handlers or the batcher's drain loop.
+const SERVE_ROOT_FILES: [&str; 2] = ["serve/router.rs", "serve/batcher.rs"];
+
+type Allows = BTreeMap<String, Vec<Allow>>;
+
+/// Whether `rule` at `file:line` is covered by an allow directive (same
+/// line span, or the line directly below — item-extended allows already
+/// carry the item's end line).
+fn is_allowed(allows: &Allows, file: &str, rule: Rule, line: usize) -> bool {
+    allows.get(file).is_some_and(|v| {
+        v.iter().any(|a| a.rule == rule && a.line <= line && line <= a.line_end + 1)
+    })
+}
+
+fn push(out: &mut Vec<Violation>, file: &str, line: usize, rule: Rule, message: String) {
+    out.push(Violation { file: file.to_string(), line, rule, message });
+}
+
+/// Run all three semantic analyses. Returns unsorted violations; the
+/// caller merges them with the per-file findings and sorts globally.
+pub fn analyze(fns: &[FnInfo], graph: &CallGraph, allows: &Allows) -> Vec<Violation> {
+    let mut out = Vec::new();
+    det_taint(fns, graph, allows, &mut out);
+    serve_panic(fns, graph, allows, &mut out);
+    lock_order(fns, graph, allows, &mut out);
+    out
+}
+
+/// `det-taint`: any fn transitively reachable from the deterministic
+/// module trees must not touch a nondeterminism source (wallclock,
+/// ambient RNG, hash-ordered collections) without a sanctioned allow.
+/// Sources *inside* the deterministic modules are already covered by the
+/// per-file rules; this pass catches the leak through helpers elsewhere.
+fn det_taint(fns: &[FnInfo], graph: &CallGraph, allows: &Allows, out: &mut Vec<Violation>) {
+    let roots: Vec<usize> = (0..fns.len())
+        .filter(|&i| DETERMINISTIC_MODULES.contains(&module_head(&fns[i]).as_str()))
+        .collect();
+    let parent = graph.reach(&roots);
+    for (&i, _) in &parent {
+        let f = &fns[i];
+        let head = module_head(f);
+        if DETERMINISTIC_MODULES.contains(&head.as_str()) {
+            continue;
+        }
+        // The linter's own rule tables (and its binary) necessarily name
+        // the banned symbols; they are vocabulary, not uses.
+        if head == "analysis" || head == "bin" {
+            continue;
+        }
+        for s in &f.sources {
+            if is_allowed(allows, &f.file, Rule::DetTaint, s.line) {
+                continue;
+            }
+            push(
+                out,
+                &f.file,
+                s.line,
+                Rule::DetTaint,
+                format!(
+                    "{} ({}) in {} reachable from deterministic code via {}",
+                    s.detail,
+                    s.kind,
+                    f.qual_name(),
+                    path_string(fns, &parent, i)
+                ),
+            );
+        }
+    }
+}
+
+/// `serve-panic`: the serving path must not panic on untrusted input.
+/// Every fn in `serve/` is audited directly (panic sites always; index
+/// sites only in fns without a `Result` error path), and panic sites in
+/// fns transitively reachable from the router/batcher roots are flagged
+/// wherever they live.
+fn serve_panic(fns: &[FnInfo], graph: &CallGraph, allows: &Allows, out: &mut Vec<Violation>) {
+    let roots: Vec<usize> = (0..fns.len())
+        .filter(|&i| SERVE_ROOT_FILES.contains(&fns[i].file.as_str()))
+        .collect();
+    let parent = graph.reach(&roots);
+    for (i, f) in fns.iter().enumerate() {
+        if f.file.starts_with("serve/") {
+            for p in &f.panics {
+                if is_allowed(allows, &f.file, Rule::ServePanic, p.line) {
+                    continue;
+                }
+                push(
+                    out,
+                    &f.file,
+                    p.line,
+                    Rule::ServePanic,
+                    format!("{} in serve fn {}", p.detail, f.qual_name()),
+                );
+            }
+            // A Result-returning fn has an error path; its index sites
+            // are assumed routed through validation. unwrap/expect in
+            // such fns stay flagged — they bypass that very path.
+            if !f.returns_result {
+                for &line in &f.indexes {
+                    if is_allowed(allows, &f.file, Rule::ServePanic, line) {
+                        continue;
+                    }
+                    push(
+                        out,
+                        &f.file,
+                        line,
+                        Rule::ServePanic,
+                        format!("slice/array index in serve fn {}", f.qual_name()),
+                    );
+                }
+            }
+        } else if parent.contains_key(&i) {
+            for p in &f.panics {
+                if is_allowed(allows, &f.file, Rule::ServePanic, p.line) {
+                    continue;
+                }
+                push(
+                    out,
+                    &f.file,
+                    p.line,
+                    Rule::ServePanic,
+                    format!(
+                        "{} in {} reachable from serve via {}",
+                        p.detail,
+                        f.qual_name(),
+                        path_string(fns, &parent, i)
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `lock-order`: collect held→acquired edges per fn (direct, plus calls
+/// made under a held guard into each callee's transitive lockset) and
+/// report any cycle in the resulting order graph.
+fn lock_order(fns: &[FnInfo], graph: &CallGraph, allows: &Allows, out: &mut Vec<Violation>) {
+    // Transitive lockset per fn, to fixpoint.
+    let mut locksets: Vec<BTreeSet<String>> =
+        fns.iter().map(|f| f.locks.iter().map(|l| l.class.clone()).collect()).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for i in 0..fns.len() {
+            for k in 0..graph.edges[i].len() {
+                let (v, _) = graph.edges[i][k];
+                if v == i {
+                    continue;
+                }
+                let add: Vec<String> =
+                    locksets[v].iter().filter(|c| !locksets[i].contains(*c)).cloned().collect();
+                if !add.is_empty() {
+                    locksets[i].extend(add);
+                    changed = true;
+                }
+            }
+        }
+    }
+
+    // Order graph: (from, to) -> first witnessing (file, line).
+    let mut order: BTreeMap<(String, String), (String, usize)> = BTreeMap::new();
+    for (i, f) in fns.iter().enumerate() {
+        for e in &f.lock_edges {
+            if is_allowed(allows, &f.file, Rule::LockOrder, e.line) {
+                continue;
+            }
+            order
+                .entry((e.from.clone(), e.to.clone()))
+                .or_insert_with(|| (f.file.clone(), e.line));
+        }
+        for (held_classes, call_idx) in &f.held_calls {
+            let call = &f.calls[*call_idx];
+            if is_allowed(allows, &f.file, Rule::LockOrder, call.line) {
+                continue;
+            }
+            let mut target: BTreeSet<String> = BTreeSet::new();
+            for c in graph.resolve(fns, call, f) {
+                target.extend(locksets[c].iter().cloned());
+            }
+            for h in held_classes {
+                for c in &target {
+                    if c != h {
+                        order
+                            .entry((h.clone(), c.clone()))
+                            .or_insert_with(|| (f.file.clone(), call.line));
+                    }
+                }
+            }
+        }
+    }
+
+    // Cycle detection: DFS from each node, deduplicating cycles by their
+    // (unordered) node set so each is reported once, at the closing edge.
+    let mut adj: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for (a, b) in order.keys() {
+        adj.entry(a.as_str()).or_default().push(b.as_str());
+    }
+    let mut seen_cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    let starts: Vec<&str> = adj.keys().copied().collect();
+    for start in starts {
+        let mut stack: Vec<(&str, Vec<&str>)> = vec![(start, vec![start])];
+        while let Some((u, path)) = stack.pop() {
+            for &v in adj.get(u).map(Vec::as_slice).unwrap_or(&[]) {
+                if v == start {
+                    let mut key: Vec<String> = path.iter().map(|s| s.to_string()).collect();
+                    key.sort();
+                    if seen_cycles.insert(key) {
+                        let (file, line) = &order[&(u.to_string(), start.to_string())];
+                        let mut cycle: Vec<&str> = path.clone();
+                        cycle.push(start);
+                        push(
+                            out,
+                            file,
+                            *line,
+                            Rule::LockOrder,
+                            format!("lock-order cycle: {}", cycle.join(" -> ")),
+                        );
+                    }
+                } else if !path.contains(&v) {
+                    let mut next = path.clone();
+                    next.push(v);
+                    stack.push((v, next));
+                }
+            }
+        }
+    }
+}

@@ -1,40 +1,84 @@
 //! `ued-lint` — run the in-repo determinism/unsafety analysis pass over
 //! the crate source and fail (exit 1) on any violation.
 //!
-//! Usage: `cargo run --release --bin ued_lint [-- <src-dir>]`
+//! Usage: `cargo run --release --bin ued_lint [-- <src-dir>] [options]`
 //!
-//! With no argument it lints `src/` relative to the working directory
-//! (falling back to the crate's own `src/` when invoked from elsewhere,
-//! e.g. the repository root). See `jaxued::analysis` for the rule set,
-//! the deterministic-module list, and the allow-comment escape hatch;
-//! the README's "Determinism invariants" section is the human-facing
-//! summary. CI runs this as a required job.
+//! Options:
+//! * `--format human|sarif` — report format (default `human`; `sarif`
+//!   emits a SARIF 2.1.0 log on stdout for code-scanning upload).
+//! * `--no-semantic` — per-file rules only, skip the call-graph
+//!   analyses (`det-taint`, `serve-panic`, `lock-order`).
+//! * `--no-cache` — ignore and don't write the incremental cache.
+//! * `--cache-path <file>` — cache location (default
+//!   `target/ued-lint-cache.json` next to the linted `src/`).
+//!
+//! With no directory argument it lints `src/` relative to the working
+//! directory (falling back to the crate's own `src/` when invoked from
+//! elsewhere, e.g. the repository root). See `jaxued::analysis` for the
+//! rule set, the deterministic-module list, and the allow-comment
+//! escape hatch; the README's "Determinism invariants" section is the
+//! human-facing summary. CI runs this as a required job and uploads the
+//! SARIF to code scanning.
+//!
+//! Timing and cache statistics go to stderr so they never corrupt the
+//! SARIF stream on stdout.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use jaxued::analysis::{lint_crate, DETERMINISTIC_MODULES};
+use jaxued::analysis::{lint_crate_with, sarif, LintOptions, DETERMINISTIC_MODULES};
+use jaxued::metrics::Stopwatch;
 
 fn usage() {
-    eprintln!("usage: ued_lint [<src-dir>]");
+    eprintln!(
+        "usage: ued_lint [<src-dir>] [--format human|sarif] [--no-semantic] \
+         [--no-cache] [--cache-path <file>]"
+    );
     eprintln!("lints every .rs file under <src-dir> (default: src/)");
 }
 
 fn main() -> ExitCode {
     let mut root: Option<PathBuf> = None;
-    for arg in std::env::args().skip(1) {
-        if arg == "-h" || arg == "--help" {
-            usage();
-            return ExitCode::SUCCESS;
-        }
-        if root.is_none() {
-            root = Some(PathBuf::from(arg));
-        } else {
-            eprintln!("ued-lint: unexpected argument `{arg}`");
-            usage();
-            return ExitCode::from(2);
+    let mut format_sarif = false;
+    let mut semantic = true;
+    let mut use_cache = true;
+    let mut cache_path: Option<PathBuf> = None;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "-h" | "--help" => {
+                usage();
+                return ExitCode::SUCCESS;
+            }
+            "--format" => match args.next().as_deref() {
+                Some("human") => format_sarif = false,
+                Some("sarif") => format_sarif = true,
+                other => {
+                    eprintln!("ued-lint: --format takes `human` or `sarif`, got {other:?}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--no-semantic" => semantic = false,
+            "--no-cache" => use_cache = false,
+            "--cache-path" => match args.next() {
+                Some(p) => cache_path = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("ued-lint: --cache-path needs a file argument");
+                    return ExitCode::from(2);
+                }
+            },
+            other if root.is_none() && !other.starts_with('-') => {
+                root = Some(PathBuf::from(other));
+            }
+            other => {
+                eprintln!("ued-lint: unexpected argument `{other}`");
+                usage();
+                return ExitCode::from(2);
+            }
         }
     }
+
     let root = root.unwrap_or_else(|| {
         let cwd_src = PathBuf::from("src");
         if cwd_src.is_dir() {
@@ -48,31 +92,69 @@ fn main() -> ExitCode {
         return ExitCode::from(2);
     }
 
-    match lint_crate(&root) {
+    let cache_path = if use_cache {
+        cache_path.or_else(|| {
+            // Default next to the linted tree, inside target/ (ignored by
+            // git); a missing target/ just means a cold run every time.
+            root.parent().map(|p| p.join("target").join("ued-lint-cache.json"))
+        })
+    } else {
+        None
+    };
+    let opts = LintOptions { semantic, cache_path };
+
+    // SARIF URIs should be repository-relative. When the linted tree is
+    // the crate's own src/, that prefix is `rust/src/`; otherwise fall
+    // back to the path as given.
+    let uri_prefix = {
+        let canon = root.canonicalize().unwrap_or_else(|_| root.clone());
+        if canon.ends_with("rust/src") {
+            String::from("rust/src/")
+        } else {
+            format!("{}/", root.display())
+        }
+    };
+
+    let watch = Stopwatch::new();
+    match lint_crate_with(&root, &opts) {
         Err(e) => {
             eprintln!("ued-lint: i/o error walking `{}`: {e}", root.display());
             ExitCode::from(2)
         }
-        Ok(report) if report.violations.is_empty() => {
-            println!(
-                "ued-lint: clean — {} files under `{}` ({} deterministic modules: {})",
-                report.files,
-                root.display(),
-                DETERMINISTIC_MODULES.len(),
-                DETERMINISTIC_MODULES.join(", ")
-            );
-            ExitCode::SUCCESS
-        }
         Ok(report) => {
-            for v in &report.violations {
-                println!("{v}");
+            let ok = report.violations.is_empty();
+            if format_sarif {
+                println!("{}", sarif::to_sarif(&report, &uri_prefix));
+            } else if ok {
+                println!(
+                    "ued-lint: clean — {} files under `{}` ({} deterministic modules: {})",
+                    report.files,
+                    root.display(),
+                    DETERMINISTIC_MODULES.len(),
+                    DETERMINISTIC_MODULES.join(", ")
+                );
+            } else {
+                for v in &report.violations {
+                    println!("{v}");
+                }
+                println!(
+                    "ued-lint: {} violation(s) in {} files",
+                    report.violations.len(),
+                    report.files
+                );
             }
-            println!(
-                "ued-lint: {} violation(s) in {} files",
-                report.violations.len(),
-                report.files
+            eprintln!(
+                "ued-lint: {} files in {:.3}s ({} cache hit(s), semantic {})",
+                report.files,
+                watch.elapsed_secs(),
+                report.cache_hits,
+                if semantic { "on" } else { "off" },
             );
-            ExitCode::FAILURE
+            if ok {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
         }
     }
 }

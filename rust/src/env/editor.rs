@@ -130,6 +130,7 @@ impl UnderspecifiedEnv for EditorEnv {
         }
     }
 
+    // ued-lint: allow(serve-panic) — the t=0/t=1 arms place agent and goal before any t>=2 step can read them; the expects encode that phase invariant
     fn step(&self, s: &mut EditorState, action: usize, rng: &mut Pcg64) -> StepResult {
         let pos = cell_xy(action);
         match s.t {

@@ -296,6 +296,7 @@ impl UnderspecifiedEnv for LavaEnv {
                     s.pos = (nx as u8, ny as u8);
                 }
             }
+            // ued-lint: allow(serve-panic) — actions come from policy argmax over num_actions; an out-of-range action is engine corruption, not client input
             a => panic!("invalid lava-grid action {a}"),
         }
         if s.in_lava() {

@@ -196,6 +196,7 @@ impl Level {
     /// bytes >= 4 are all rejected rather than masked or silently dropped.
     /// `Ok(l)` guarantees `l.to_bytes() == input` and that `l`'s positions
     /// are safe to index with.
+    // ued-lint: allow(serve-panic) — the length gate above each use makes the 8-byte try_intos infallible
     pub fn from_bytes(b: &[u8]) -> Result<Level> {
         if b.len() != 29 {
             bail!("level encoding must be 29 bytes, got {}", b.len());

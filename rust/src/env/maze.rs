@@ -108,6 +108,7 @@ impl UnderspecifiedEnv for MazeEnv {
                     s.pos = (nx as u8, ny as u8);
                 }
             }
+            // ued-lint: allow(serve-panic) — actions come from policy argmax over num_actions; an out-of-range action is engine corruption, not client input
             a => panic!("invalid maze action {a}"),
         }
         if s.at_goal() {

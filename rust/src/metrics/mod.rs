@@ -178,7 +178,7 @@ impl Default for Stopwatch {
 impl Stopwatch {
     /// Real-time stopwatch (starts now).
     pub fn new() -> Stopwatch {
-        // ued-lint: allow(wallclock) — the sanctioned Table-1 stopwatch; results never depend on it
+        // ued-lint: allow(wallclock, det-taint) — the sanctioned Table-1 stopwatch; results never depend on it
         Stopwatch { clock: Clock::Monotonic { start: Instant::now() }, env_steps: 0 }
     }
 

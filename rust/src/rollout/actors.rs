@@ -140,6 +140,7 @@ mod claims {
             {
                 if owner != me {
                     let cur = std::thread::current();
+                    // ued-lint: allow(serve-panic) — deliberate debug-build race detector; a tripped claim IS the bug being reported
                     panic!(
                         "ColumnAccess race: overlapping claim on element {i} via {via}: \
                          thread {me} ({name:?}) vs owning thread {owner} — two threads \
@@ -497,6 +498,7 @@ impl WorkerPool {
         // this epoch (and the job slot is cleared) before returning — the
         // phase barrier `erase_phase_closure`'s contract requires.
         let f_static = unsafe { erase_phase_closure(f) };
+        // ued-lint: allow(serve-panic) — pool-state mutex is poisoned only after a worker panic, which wait_done re-raises anyway
         let mut st = self.shared.state.lock().unwrap();
         st.epoch = st.epoch.wrapping_add(1);
         st.job = Some(Job { f: f_static, n_items, total_shards, main_participates });
@@ -506,6 +508,7 @@ impl WorkerPool {
         total_shards
     }
 
+    // ued-lint: allow(serve-panic) — lock/wait unwraps fire only on a poisoned pool, and the panic! deliberately re-raises a worker's panic on the caller
     fn wait_done(&self) {
         let mut st = self.shared.state.lock().unwrap();
         while st.running > 0 {

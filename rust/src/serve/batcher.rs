@@ -87,6 +87,7 @@ impl<L> BatchQueue<L> {
     /// Enqueue; `false` means the queue is full (shed with 503) or the
     /// server is shutting down.
     pub fn push(&self, work: EvalWork<L>) -> bool {
+        // ued-lint: allow(serve-panic) — poisoned queue mutex means a batcher thread already panicked; propagating is crash-consistent
         let mut inner = self.inner.lock().expect("batch queue poisoned");
         if inner.shutdown || inner.works.len() >= self.cap {
             return false;
@@ -100,6 +101,7 @@ impl<L> BatchQueue<L> {
     /// batcher wants the widest batch available). Returns `None` only
     /// once shut down *and* empty, so in-flight requests still complete
     /// during shutdown.
+    // ued-lint: allow(serve-panic) — both expects fire only on a poisoned mutex, i.e. after another thread's panic
     pub fn drain_blocking(&self) -> Option<Vec<EvalWork<L>>> {
         let mut inner = self.inner.lock().expect("batch queue poisoned");
         loop {
@@ -114,12 +116,14 @@ impl<L> BatchQueue<L> {
     }
 
     pub fn shutdown(&self) {
+        // ued-lint: allow(serve-panic) — poisoned-mutex expect; see push
         self.inner.lock().expect("batch queue poisoned").shutdown = true;
         self.cv.notify_all();
     }
 
     /// Currently queued works (metrics).
     pub fn depth(&self) -> usize {
+        // ued-lint: allow(serve-panic) — poisoned-mutex expect; see push
         self.inner.lock().expect("batch queue poisoned").works.len()
     }
 }
@@ -143,6 +147,7 @@ pub fn plan_batches<L>(works: &[EvalWork<L>]) -> Vec<(String, Vec<usize>)> {
 /// Run one drained batch: one engine pass per policy group, results
 /// cached and delivered per request. Send failures are ignored — a
 /// client that hung up simply doesn't collect its results.
+// ued-lint: allow(serve-panic) — every index below reads `works`/`slots`/`ep_map` through indices minted from those same vectors a few lines up; in-bounds by construction
 pub fn run_batches<E: UnderspecifiedEnv>(
     env: &E, engine: &mut RolloutEngine, store: &mut PolicyStore, cache: &ResultCache,
     metrics: &ServeMetrics, max_steps: usize, works: Vec<EvalWork<E::Level>>,

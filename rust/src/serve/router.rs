@@ -221,6 +221,7 @@ fn eval<F: EnvFamily>(ctx: &ServeContext<F>, body: &[u8]) -> (u16, Json) {
         forward_passes = outcome.forward_passes;
         for (idx, r) in outcome.results {
             if idx < resolved.len() {
+                // ued-lint: allow(serve-panic) — index guarded by the line above
                 resolved[idx] = Some(r);
             }
         }

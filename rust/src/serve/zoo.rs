@@ -63,11 +63,13 @@ impl ZooCatalog {
     }
 
     pub fn loaded_count(&self) -> usize {
+        // ued-lint: allow(serve-panic) — poisoned catalog mutex means a batcher thread already panicked
         self.loaded.lock().expect("catalog poisoned").len()
     }
 
     /// `(id, loaded, synthetic)` rows for `GET /zoo`, in catalog order.
     pub fn rows(&self) -> Vec<(String, bool, bool)> {
+        // ued-lint: allow(serve-panic) — poisoned-catalog expect; see loaded_count
         let loaded = self.loaded.lock().expect("catalog poisoned");
         self.entries
             .iter()
@@ -82,10 +84,12 @@ impl ZooCatalog {
     }
 
     fn mark_loaded(&self, id: &str) {
+        // ued-lint: allow(serve-panic) — poisoned-catalog expect; see loaded_count
         self.loaded.lock().expect("catalog poisoned").insert(id.to_string());
     }
 
     fn mark_evicted(&self, id: &str) {
+        // ued-lint: allow(serve-panic) — poisoned-catalog expect; see loaded_count
         self.loaded.lock().expect("catalog poisoned").remove(id);
     }
 }
@@ -147,6 +151,7 @@ impl PolicyStore {
                 self.catalog.mark_evicted(&evicted);
             }
         }
+        // ued-lint: allow(serve-panic) — both branches above leave the entry at the back of `loaded`
         let (_, model) = self.loaded.last().expect("just pushed");
         match model {
             LoadedPolicy::Synthetic(s) => f(s),

@@ -332,6 +332,7 @@ impl<'a> Parser<'a> {
         {
             self.i += 1;
         }
+        // ued-lint: allow(serve-panic) — the scanned range is all ASCII digit/sign/dot bytes, so from_utf8 cannot fail
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         s.parse::<f64>()
             .map(Json::Num)

@@ -61,6 +61,7 @@ pub fn iqm(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let mut s = xs.to_vec();
+    // ued-lint: allow(serve-panic) — inputs are episode returns, finite by construction (no NaN source in the reward path)
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = s.len() as f64;
     let trim = n * 0.25;

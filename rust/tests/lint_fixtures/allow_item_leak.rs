@@ -1,0 +1,13 @@
+//! An item-scoped allow ends with its item: `first` is covered, the
+//! structurally identical `second` is not. Exactly one violation.
+
+// ued-lint: allow(wallclock) — covers `first` only; `second` must still flag
+pub fn first() -> u128 {
+    let t = Instant::now();
+    t.elapsed().as_nanos()
+}
+
+pub fn second() -> u128 {
+    let t = Instant::now();
+    t.elapsed().as_nanos()
+}

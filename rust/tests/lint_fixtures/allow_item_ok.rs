@@ -1,0 +1,11 @@
+//! Item-scoped allow: a directive on the line directly above an item
+//! (attribute run included) covers the item's whole span, so the
+//! wallclock read three lines into the body is suppressed.
+
+// ued-lint: allow(wallclock) — benchmark shim; the timing never reaches results
+#[inline]
+pub fn bench_probe() -> u128 {
+    let pad = 1u128;
+    let t = Instant::now();
+    t.elapsed().as_nanos() + pad
+}

@@ -1,0 +1,26 @@
+//! Lexer-hardening torture: raw strings (with embedded quotes and rule
+//! trigger words), nested block comments, lifetime-vs-char ambiguity,
+//! raw identifiers, byte/byte-string literals, and backslash-newline
+//! string continuations. The only real violation is the wallclock read
+//! in `timing_probe` — if the lexer miscounts a line anywhere above,
+//! the test pinning that violation's line number goes red.
+
+pub fn torture<'a>(r#type: &'a str) -> usize {
+    let raw = r#"not // a comment, not "done" yet: Instant::now() thread_rng()"#;
+    /* nested /* inner block */ still one comment */
+    let s = "continued \
+        across \
+        three lines";
+    let c = 'x';
+    let nl = '\n';
+    let byte = b'q';
+    let bytes = b"escaped \
+        tail";
+    let _lt: &'static str = "static";
+    raw.len() + s.len() + r#type.len() + (c as usize) + (nl as usize) + (byte as usize) + bytes.len()
+}
+
+pub fn timing_probe() -> bool {
+    let t = Instant::now();
+    t.elapsed().as_nanos() > 0
+}

@@ -1,0 +1,27 @@
+//! Clean counterpart of `lock_cycle_bad`: both public entry points
+//! acquire `a` before `b`, so the propagated order graph is acyclic.
+
+use std::sync::Mutex;
+
+pub struct Pair {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn fwd(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let v = self.bump_b();
+        *ga + v
+    }
+
+    pub fn fwd_again(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *ga + *gb
+    }
+
+    fn bump_b(&self) -> u32 {
+        *self.b.lock().unwrap()
+    }
+}

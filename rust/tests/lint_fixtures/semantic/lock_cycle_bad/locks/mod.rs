@@ -1,0 +1,33 @@
+//! Two lock classes acquired in opposite orders *through the call
+//! graph*: `fwd` holds `a` and calls a helper that takes `b`; `rev`
+//! holds `b` and calls a helper that takes `a`. Neither function is
+//! suspicious on its own — only lock-order propagation sees the cycle.
+
+use std::sync::Mutex;
+
+pub struct Pair {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+}
+
+impl Pair {
+    pub fn fwd(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let v = self.bump_b();
+        *ga + v
+    }
+
+    fn bump_b(&self) -> u32 {
+        *self.b.lock().unwrap()
+    }
+
+    pub fn rev(&self) -> u32 {
+        let gb = self.b.lock().unwrap();
+        let v = self.bump_a();
+        *gb + v
+    }
+
+    fn bump_a(&self) -> u32 {
+        *self.a.lock().unwrap()
+    }
+}

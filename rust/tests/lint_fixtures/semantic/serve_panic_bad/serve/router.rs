@@ -1,0 +1,11 @@
+//! A request handler with panic paths a malformed request can reach:
+//! one direct unwrap, one unchecked slice index (the handler does not
+//! return `Result`, so the index is audited), and a transitive unwrap
+//! in a helper outside `serve/`. Three `serve-panic` violations.
+
+pub fn handle(body: &[u8]) -> Vec<u8> {
+    let first = body.first().copied().unwrap();
+    let tail = body[1];
+    let n = crate::util::must_parse("12");
+    vec![first, tail, n as u8]
+}

@@ -1,0 +1,10 @@
+//! Clean counterpart of `serve_panic_bad`: the handler returns `Result`
+//! and propagates errors with `?` (so its index sites are exempt), and
+//! the helper's unwrap is replaced by error propagation.
+
+pub fn handle(body: &[u8]) -> Result<Vec<u8>, String> {
+    let first = body.first().copied().ok_or("empty body")?;
+    let tail = body.get(1).copied().ok_or("one-byte body")?;
+    let n = crate::util::must_parse("12")?;
+    Ok(vec![first, tail, n as u8])
+}

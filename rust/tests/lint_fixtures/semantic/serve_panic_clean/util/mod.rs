@@ -1,0 +1,5 @@
+//! Panic-free helper: parse failures travel back as errors.
+
+pub fn must_parse(s: &str) -> Result<u64, String> {
+    s.parse().map_err(|_| format!("bad number {s:?}"))
+}

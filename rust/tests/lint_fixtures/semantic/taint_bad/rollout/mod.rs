@@ -1,0 +1,7 @@
+//! Deterministic module that transitively reaches the wallclock helper.
+
+/// Mixing a timestamp into a rollout seed: invisible to per-file rules
+/// (the wallclock read lives in `util/`), caught by determinism taint.
+pub fn rollout_step(seed: u64) -> u64 {
+    seed ^ crate::util::coarse_timestamp()
+}

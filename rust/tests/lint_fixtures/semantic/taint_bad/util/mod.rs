@@ -1,0 +1,11 @@
+//! The seeded taint bug (ISSUE 9 acceptance criterion): a wallclock
+//! helper whose per-file violation is silenced by an `allow(wallclock)`,
+//! so the old per-file rules report nothing — but it is called from
+//! `rollout/`, so the call-graph determinism-taint pass must flag it.
+
+/// "Coarse timestamp" helper a well-meaning contributor might add.
+pub fn coarse_timestamp() -> u64 {
+    // ued-lint: allow(wallclock) — timing is local to this helper (per-file pass is green; the taint pass must still object)
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}

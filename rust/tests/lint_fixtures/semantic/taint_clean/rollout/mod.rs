@@ -1,0 +1,6 @@
+//! Same deterministic caller as `taint_bad` — clean because the helper's
+//! wallclock read carries an explicit `det-taint` allow.
+
+pub fn rollout_step(seed: u64) -> u64 {
+    seed ^ crate::util::coarse_timestamp()
+}

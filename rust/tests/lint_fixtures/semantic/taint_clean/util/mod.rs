@@ -1,0 +1,9 @@
+//! Clean counterpart of `taint_bad`: the helper carries a sanctioned
+//! `det-taint` allow as well, so both the per-file pass and the
+//! call-graph taint pass accept it.
+
+pub fn coarse_timestamp() -> u64 {
+    // ued-lint: allow(wallclock, det-taint) — sanctioned diagnostic clock; callers never let it feed results
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}

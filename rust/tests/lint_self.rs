@@ -1,21 +1,36 @@
 //! `ued-lint` integration suite: the fixture corpus under
 //! `tests/lint_fixtures/` (one clean file, one file per violation
-//! class), plus the lint's most important property — the real crate's
-//! own `src/` tree is lint-clean. CI runs this alongside the `ued_lint`
-//! binary; if you add an `unsafe` site without a SAFETY comment, or an
-//! ambient RNG / hash map / wallclock read to a deterministic module,
+//! class, and one source *tree* per semantic analysis under
+//! `semantic/`), plus the lint's most important property — the real
+//! crate's own `src/` tree is lint-clean, semantic analyses included.
+//! CI runs this alongside the `ued_lint` binary; if you add an `unsafe`
+//! site without a SAFETY comment, an ambient RNG / hash map / wallclock
+//! read to a deterministic module, or a helper that leaks
+//! nondeterminism or panics into the rollout / serving paths,
 //! `real_crate_is_lint_clean` is the test that goes red.
 
 use std::fs;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use jaxued::analysis::{lint_crate, lint_source, LintConfig, Rule, Violation};
+use jaxued::analysis::{
+    lint_crate, lint_crate_with, lint_source, CrateReport, LintConfig, LintOptions, Rule,
+    Violation,
+};
 
 fn fixture(name: &str) -> String {
     let p = Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("tests/lint_fixtures")
         .join(name);
     fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+fn semantic_dir(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures/semantic").join(name)
+}
+
+/// Full lint (per-file + semantic) over one fixture tree.
+fn lint_tree(name: &str) -> CrateReport {
+    lint_crate(&semantic_dir(name)).unwrap_or_else(|e| panic!("linting {name}: {e}"))
 }
 
 /// Fixtures model code in deterministic modules (all rules active).
@@ -146,7 +161,153 @@ fn nondeterministic_modules_skip_determinism_rules_but_not_the_audit() {
 }
 
 #[test]
+fn lexer_torture_keeps_line_numbers_exact() {
+    // Raw strings, nested comments, byte literals, raw identifiers, and
+    // backslash-newline continuations all precede the one real wallclock
+    // read; a single miscounted line above it moves the violation.
+    let v = lint_source("lexer_torture.rs", &fixture("lexer_torture.rs"), &det());
+    assert_eq!(
+        v.iter().map(|x| (x.rule, x.line)).collect::<Vec<_>>(),
+        [(Rule::Wallclock, 24)],
+        "torture fixture must yield exactly the line-24 wallclock read:\n{}",
+        render(&v)
+    );
+}
+
+#[test]
+fn item_allow_covers_the_item_and_only_the_item() {
+    // Pass side: the directive above the fn covers a violation deep in
+    // its body (the old two-line window would miss it).
+    let ok = lint_source("allow_item_ok.rs", &fixture("allow_item_ok.rs"), &det());
+    assert!(ok.is_empty(), "item-scoped allow must cover the whole fn:\n{}", render(&ok));
+    // Fail side: the allow ends with its item, so the identical read in
+    // the *next* fn still flags — exactly one violation, in `second`.
+    let leak = lint_source("allow_item_leak.rs", &fixture("allow_item_leak.rs"), &det());
+    assert_eq!(
+        leak.iter().map(|x| (x.rule, x.line)).collect::<Vec<_>>(),
+        [(Rule::Wallclock, 11)],
+        "the allow must not leak past its item:\n{}",
+        render(&leak)
+    );
+}
+
+#[test]
+fn seeded_taint_bug_is_invisible_to_per_file_rules_but_caught_by_taint_pass() {
+    // The ISSUE-9 acceptance criterion: a wallclock helper in util/
+    // carrying allow(wallclock), called from rollout/. Per-file rules:
+    // green. Semantic det-taint: exactly one violation, naming the
+    // witness path from the deterministic root.
+    let per_file =
+        lint_crate_with(&semantic_dir("taint_bad"), &LintOptions { semantic: false, cache_path: None })
+            .expect("per-file lint");
+    assert!(
+        per_file.violations.is_empty(),
+        "old per-file rules must NOT see the seeded taint bug:\n{}",
+        render(&per_file.violations)
+    );
+    let full = lint_tree("taint_bad");
+    assert_eq!(
+        full.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect::<Vec<_>>(),
+        [(Rule::DetTaint, "util/mod.rs", 9)],
+        "semantic pass must report exactly the seeded taint:\n{}",
+        render(&full.violations)
+    );
+    let msg = &full.violations[0].message;
+    assert!(msg.contains("Instant::now"), "message names the source: {msg}");
+    assert!(msg.contains("rollout_step"), "message shows the witness path: {msg}");
+}
+
+#[test]
+fn det_taint_allow_must_name_det_taint() {
+    // Same tree, but the helper's allow also names det-taint: clean.
+    let report = lint_tree("taint_clean");
+    assert!(
+        report.violations.is_empty(),
+        "allow(wallclock, det-taint) must satisfy both passes:\n{}",
+        render(&report.violations)
+    );
+}
+
+#[test]
+fn serve_path_panics_flagged_at_exact_sites() {
+    let report = lint_tree("serve_panic_bad");
+    let got: Vec<(Rule, &str, usize)> =
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect();
+    assert_eq!(
+        got,
+        [
+            (Rule::ServePanic, "serve/router.rs", 7), // direct unwrap
+            (Rule::ServePanic, "serve/router.rs", 8), // slice index, non-Result fn
+            (Rule::ServePanic, "util/mod.rs", 5),     // transitive unwrap via call graph
+        ],
+        "expected the three seeded serve-panic sites:\n{}",
+        render(&report.violations)
+    );
+    assert!(
+        report.violations[2].message.contains("handle"),
+        "the transitive finding shows its serve-side witness path: {}",
+        report.violations[2].message
+    );
+}
+
+#[test]
+fn result_returning_handlers_are_panic_free() {
+    let report = lint_tree("serve_panic_clean");
+    assert!(
+        report.violations.is_empty(),
+        "Result-returning handler + error-propagating helper must be clean:\n{}",
+        render(&report.violations)
+    );
+}
+
+#[test]
+fn lock_order_cycle_detected_through_the_call_graph() {
+    let report = lint_tree("lock_cycle_bad");
+    assert_eq!(
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect::<Vec<_>>(),
+        [(Rule::LockOrder, "locks/mod.rs", 26)],
+        "expected exactly the propagated a->b / b->a cycle:\n{}",
+        render(&report.violations)
+    );
+    let msg = &report.violations[0].message;
+    assert!(msg.contains("Pair::a") && msg.contains("Pair::b"), "cycle names both classes: {msg}");
+}
+
+#[test]
+fn consistent_lock_order_is_clean() {
+    let report = lint_tree("lock_clean");
+    assert!(
+        report.violations.is_empty(),
+        "consistent a-before-b ordering must be clean:\n{}",
+        render(&report.violations)
+    );
+}
+
+#[test]
+fn cache_roundtrip_preserves_the_report() {
+    // Two runs over the same tree through one cache file: the second is
+    // all hits and reports the identical violations (including the
+    // semantic ones, which are recomputed from cached fn summaries).
+    let cache = std::env::temp_dir().join(format!("ued-lint-cache-test-{}.json", std::process::id()));
+    let _ = fs::remove_file(&cache);
+    let opts = LintOptions { semantic: true, cache_path: Some(cache.clone()) };
+    let cold = lint_crate_with(&semantic_dir("serve_panic_bad"), &opts).expect("cold run");
+    assert_eq!(cold.cache_hits, 0, "first run must be cold");
+    let warm = lint_crate_with(&semantic_dir("serve_panic_bad"), &opts).expect("warm run");
+    assert_eq!(warm.cache_hits, warm.files, "second run must be all cache hits");
+    assert_eq!(warm.files, cold.files);
+    assert_eq!(
+        render(&warm.violations),
+        render(&cold.violations),
+        "cached and cold reports must be identical"
+    );
+    let _ = fs::remove_file(&cache);
+}
+
+#[test]
 fn real_crate_is_lint_clean() {
+    // The full pass — per-file rules AND the three semantic analyses
+    // (det-taint, serve-panic, lock-order) — over the crate's own src/.
     let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
     let report = lint_crate(&src).expect("walking src/");
     assert!(report.files > 10, "expected to visit the whole crate, saw {} files", report.files);
