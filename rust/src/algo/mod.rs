@@ -191,10 +191,16 @@ pub fn train(rt: &Runtime, cfg: &TrainConfig, quiet: bool) -> Result<TrainOutcom
 pub fn train_family<F: EnvFamily>(
     family: F, rt: &Runtime, cfg: &TrainConfig, quiet: bool,
 ) -> Result<TrainOutcome> {
+    use orchestrator::SeedUnit as _;
     let pool = Arc::new(WorkerPool::new(cfg.resolve_rollout_threads()));
     let mut run = orchestrator::TrainSeedRun::new(family, rt, cfg, quiet, "", pool)?;
     while !run.done() {
-        run.step_cycle()?;
+        if let Err(e) = run.step_cycle() {
+            // A mid-run failure still owes its buffered rows to disk:
+            // flush before propagating so the abort loses nothing.
+            let _ = run.flush_sinks();
+            return Err(e);
+        }
     }
     run.finish()
 }

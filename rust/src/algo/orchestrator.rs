@@ -182,6 +182,7 @@ pub fn run_pack<U: SeedUnit + Send>(
                             if abort.load(Ordering::Relaxed) {
                                 return Ok(());
                             }
+                            // ued-lint: allow(flush-on-error) — the Err return only aborts this driver thread; run_pack flushes every unit's sinks after the scope joins
                             match u.step_cycle() {
                                 Ok(m) => {
                                     let (eval_mean, eval_iqm) = u.last_eval();

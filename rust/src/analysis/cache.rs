@@ -22,12 +22,14 @@ use std::time::UNIX_EPOCH;
 
 use crate::util::json::Json;
 
-use super::parser::{Call, FnInfo, LockEdge, LockSite, Site};
+use super::parser::{Call, FnInfo, HeldCall, LockEdge, LockSite, Site};
 use super::{Allow, FileRecord, Rule, Violation};
 
 /// Bump whenever the serialized shape or the per-file pass changes
 /// meaning; old caches are then ignored wholesale.
-pub const CACHE_VERSION: usize = 1;
+/// v2: per-function CFG/dataflow summaries (`held_may_calls`) and the
+/// flow-sensitive per-file findings they feed.
+pub const CACHE_VERSION: usize = 2;
 
 /// 64-bit FNV-1a. Not cryptographic — it only needs to catch edits that
 /// preserve mtime, and it must not pull in a hash dependency.
@@ -196,6 +198,23 @@ fn fn_to_json(f: &FnInfo) -> Json {
                 .collect(),
         ),
     );
+    m.insert(
+        String::from("held_may"),
+        Json::Arr(
+            f.held_may_calls
+                .iter()
+                .map(|h| {
+                    Json::Arr(vec![
+                        Json::Arr(h.classes.iter().map(|c| Json::Str(c.clone())).collect()),
+                        Json::Str(h.name.clone()),
+                        opt_str(&h.qual),
+                        Json::Bool(h.is_method),
+                        num(h.line),
+                    ])
+                })
+                .collect(),
+        ),
+    );
     Json::Obj(m)
 }
 
@@ -224,6 +243,7 @@ fn fn_from_json(j: &Json) -> Option<FnInfo> {
         locks: Vec::new(),
         lock_edges: Vec::new(),
         held_calls: Vec::new(),
+        held_may_calls: Vec::new(),
     };
     for c in j.get("calls")?.as_arr()? {
         let a = c.as_arr()?;
@@ -271,6 +291,25 @@ fn fn_from_json(j: &Json) -> Option<FnInfo> {
             .map(|c| c.as_str().map(String::from))
             .collect::<Option<Vec<_>>>()?;
         f.held_calls.push((classes, a.get(1)?.as_usize()?));
+    }
+    for h in j.get("held_may")?.as_arr()? {
+        let a = h.as_arr()?;
+        let classes = a
+            .first()?
+            .as_arr()?
+            .iter()
+            .map(|c| c.as_str().map(String::from))
+            .collect::<Option<Vec<_>>>()?;
+        f.held_may_calls.push(HeldCall {
+            classes,
+            name: a.get(1)?.as_str()?.to_string(),
+            qual: match a.get(2)? {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            },
+            is_method: a.get(3)?.as_bool()?,
+            line: a.get(4)?.as_usize()?,
+        });
     }
     Some(f)
 }
@@ -383,6 +422,13 @@ mod tests {
                     line: 7,
                 }],
                 held_calls: vec![(vec![String::from("T::s")], 0)],
+                held_may_calls: vec![HeldCall {
+                    classes: vec![String::from("T::s")],
+                    name: String::from("forward_direct"),
+                    qual: Some(String::from("Engine")),
+                    is_method: false,
+                    line: 8,
+                }],
             }],
         };
         let j = record_to_json(&rec);
@@ -396,6 +442,12 @@ mod tests {
         assert_eq!(f.calls[0].name, "g");
         assert_eq!(f.indexes, vec![4, 5]);
         assert_eq!(f.held_calls[0].0, vec![String::from("T::s")]);
+        let h = &f.held_may_calls[0];
+        assert_eq!(h.classes, vec![String::from("T::s")]);
+        assert_eq!(h.name, "forward_direct");
+        assert_eq!(h.qual.as_deref(), Some("Engine"));
+        assert!(!h.is_method);
+        assert_eq!(h.line, 8);
     }
 
     #[test]

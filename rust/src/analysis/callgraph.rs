@@ -138,6 +138,34 @@ impl CallGraph {
         cands.iter().copied().filter(|&c| fns[c].impl_type.is_none()).collect()
     }
 
+    /// Reverse reachability: BFS from `targets` over *incoming* edges
+    /// (callee → caller). The returned map covers every fn whose calls
+    /// can reach a target; the value is the next hop *toward* the
+    /// target (`None` at targets themselves), so a report can walk the
+    /// chain down to the blocking leaf.
+    pub fn reach_rev(&self, targets: &[usize]) -> BTreeMap<usize, Option<usize>> {
+        let mut callers: Vec<Vec<usize>> = vec![Vec::new(); self.edges.len()];
+        for (u, outs) in self.edges.iter().enumerate() {
+            for &(v, _) in outs {
+                callers[v].push(u);
+            }
+        }
+        let mut next: BTreeMap<usize, Option<usize>> = BTreeMap::new();
+        for &t in targets {
+            next.insert(t, None);
+        }
+        let mut queue: std::collections::VecDeque<usize> = targets.to_vec().into();
+        while let Some(v) = queue.pop_front() {
+            for &u in &callers[v] {
+                if let std::collections::btree_map::Entry::Vacant(e) = next.entry(u) {
+                    e.insert(Some(v));
+                    queue.push_back(u);
+                }
+            }
+        }
+        next
+    }
+
     /// Depth-first reachability from `roots`; the returned map holds a
     /// BFS/DFS parent per reached fn (`None` for roots) so reports can
     /// print a witness path.

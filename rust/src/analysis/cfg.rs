@@ -1,0 +1,591 @@
+//! Per-function control-flow graph over the [`super::lexer`] token
+//! stream.
+//!
+//! Built by structural recursion over a function's body token range
+//! (the same bracket-matching discipline as [`super::parser`], never a
+//! grammar): `if`/`else if`/`else` chains, `match` arms, `while`/`for`/
+//! `loop` back-edges, early `return` (with `return Err(..)` routed to
+//! the error exit), `break`/`continue`, `?` error-propagation edges,
+//! and `bail!`/`ensure!` error exits. Closures and anonymous blocks are
+//! walked *inline* — the CFG is path-insensitive across closure
+//! boundaries, which over-approximates reachability (may false-positive,
+//! never false-negative for the "exists a path" analyses built on top).
+//!
+//! Nodes carry token sub-ranges of the original stream, so the flow
+//! analyses ([`super::flow`]) re-scan node spans for their own facts;
+//! the graph itself is never cached — it is rebuilt whenever the
+//! per-file front-end runs (cache misses only), and only the reduced
+//! per-function summaries persist (see [`super::cache`]).
+
+use super::lexer::{Tok, TokKind};
+use super::parser::match_close;
+
+/// Edge kinds, for reporting and the golden shape tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Straight-line fall-through (also `break` to its loop's join).
+    Seq,
+    /// One arm of an `if`/`match`/loop condition.
+    Branch,
+    /// A loop back-edge (`while`/`for`/`loop` body end, `continue`).
+    Back,
+    /// Error propagation: `?`, `return Err(..)`, `bail!`, `ensure!`.
+    Err,
+}
+
+/// One CFG node: a token sub-range `[lo, hi)` of the function body.
+/// Ranges of structural nodes (joins, loop headers) may be empty.
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+/// The per-function CFG. Node 0 is the entry, node [`Cfg::EXIT`] the
+/// normal exit, node [`Cfg::ERR_EXIT`] the error exit (`?` targets,
+/// `return Err`, `bail!`); both exits have empty spans and no
+/// successors.
+#[derive(Debug, Default)]
+pub struct Cfg {
+    pub nodes: Vec<Node>,
+    /// `succs[i]` lists `(node, kind)` edges out of node `i`, in
+    /// deterministic construction order.
+    pub succs: Vec<Vec<(usize, EdgeKind)>>,
+}
+
+impl Cfg {
+    pub const ENTRY: usize = 0;
+    pub const EXIT: usize = 1;
+    pub const ERR_EXIT: usize = 2;
+
+    pub fn edge_count(&self) -> usize {
+        self.succs.iter().map(Vec::len).sum()
+    }
+
+    pub fn err_edge_count(&self) -> usize {
+        self.succs.iter().flatten().filter(|(_, k)| *k == EdgeKind::Err).count()
+    }
+
+    /// Predecessor lists, for the backward analyses.
+    pub fn preds(&self) -> Vec<Vec<usize>> {
+        let mut p = vec![Vec::new(); self.nodes.len()];
+        for (u, outs) in self.succs.iter().enumerate() {
+            for &(v, _) in outs {
+                p[v].push(u);
+            }
+        }
+        p
+    }
+}
+
+struct Builder<'a> {
+    toks: &'a [Tok],
+    cfg: Cfg,
+    /// Innermost-last `(header, join)` loop context for break/continue.
+    loops: Vec<(usize, usize)>,
+}
+
+/// Build the CFG for a body delimited by `toks[open_i]` (`{`) and
+/// `toks[close_i]` (`}`).
+pub fn build(toks: &[Tok], open_i: usize, close_i: usize) -> Cfg {
+    let mut b = Builder { toks, cfg: Cfg::default(), loops: Vec::new() };
+    b.new_node(open_i + 1); // ENTRY
+    b.new_node(close_i); // EXIT
+    b.new_node(close_i); // ERR_EXIT
+    let first = b.new_node(open_i + 1);
+    b.edge(Cfg::ENTRY, first, EdgeKind::Seq);
+    if let Some(last) = b.walk(open_i + 1, close_i, first) {
+        b.extend(last, close_i);
+        b.edge(last, Cfg::EXIT, EdgeKind::Seq);
+    }
+    b.cfg
+}
+
+impl Builder<'_> {
+    fn new_node(&mut self, lo: usize) -> usize {
+        self.cfg.nodes.push(Node { lo, hi: lo });
+        self.cfg.succs.push(Vec::new());
+        self.cfg.nodes.len() - 1
+    }
+
+    fn edge(&mut self, from: usize, to: usize, kind: EdgeKind) {
+        self.cfg.succs[from].push((to, kind));
+    }
+
+    fn extend(&mut self, node: usize, hi: usize) {
+        let n = &mut self.cfg.nodes[node];
+        n.hi = n.hi.max(hi);
+    }
+
+    fn tok_is(&self, i: usize, text: &str) -> bool {
+        self.toks.get(i).is_some_and(|t| t.text == text)
+    }
+
+    fn ident_at(&self, i: usize) -> Option<&str> {
+        self.toks.get(i).and_then(|t| (t.kind == TokKind::Ident).then_some(t.text.as_str()))
+    }
+
+    /// First `{` at bracket depth 0 in `[i, end)` — the body opener of
+    /// an `if`/`match`/`while`/`for` whose condition may contain nested
+    /// `(..)`/`[..]` groups (never braces: Rust conditions require
+    /// parens around struct literals).
+    fn find_open_brace(&self, mut i: usize, end: usize) -> usize {
+        while i < end {
+            match self.toks[i].text.as_str() {
+                "{" if self.toks[i].kind == TokKind::Punct => return i,
+                "(" => i = match_close(self.toks, i, "(", ")") + 1,
+                "[" => i = match_close(self.toks, i, "[", "]") + 1,
+                _ => i += 1,
+            }
+        }
+        end
+    }
+
+    /// Index of the terminating `sep` at bracket depth 0, or `end`.
+    fn scan_to(&self, mut i: usize, end: usize, sep: &str) -> usize {
+        while i < end {
+            let t = &self.toks[i];
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    s if s == sep => return i,
+                    "(" => {
+                        i = match_close(self.toks, i, "(", ")") + 1;
+                        continue;
+                    }
+                    "[" => {
+                        i = match_close(self.toks, i, "[", "]") + 1;
+                        continue;
+                    }
+                    "{" => {
+                        i = match_close(self.toks, i, "{", "}") + 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        end
+    }
+
+    /// After a diverging statement (`return`/`break`/`continue`/`bail!`):
+    /// any trailing tokens are dead code, parked in a fresh unreachable
+    /// node so spans stay covered; `None` ends the block.
+    fn diverge(&mut self, i: usize, end: usize) -> Option<usize> {
+        (i < end).then(|| self.new_node(i))
+    }
+
+    /// Walk `[i, end)` accumulating into `cur`; returns the node control
+    /// falls out of, or `None` if every path diverged.
+    fn walk(&mut self, mut i: usize, end: usize, mut cur: usize) -> Option<usize> {
+        while i < end {
+            let t = &self.toks[i];
+            if t.kind == TokKind::Ident {
+                match t.text.as_str() {
+                    "if" => {
+                        let (ni, nc) = self.handle_if(i, end, cur);
+                        i = ni;
+                        cur = nc;
+                        continue;
+                    }
+                    "match" => {
+                        let (ni, nc) = self.handle_match(i, end, cur);
+                        i = ni;
+                        cur = nc;
+                        continue;
+                    }
+                    "while" | "for" => {
+                        let (ni, nc) = self.handle_loop(i, end, cur, false);
+                        i = ni;
+                        cur = nc;
+                        continue;
+                    }
+                    "loop" if self.tok_is(i + 1, "{") => {
+                        let (ni, nc) = self.handle_loop(i, end, cur, true);
+                        i = ni;
+                        cur = nc;
+                        continue;
+                    }
+                    "return" => {
+                        let j = self.scan_to(i + 1, end, ";");
+                        self.extend(cur, j);
+                        let is_err = self
+                            .toks
+                            .get(i + 1)
+                            .is_some_and(|t| t.kind == TokKind::Ident && t.text == "Err");
+                        if is_err {
+                            self.edge(cur, Cfg::ERR_EXIT, EdgeKind::Err);
+                        } else {
+                            self.edge(cur, Cfg::EXIT, EdgeKind::Seq);
+                        }
+                        i = if j < end { j + 1 } else { end };
+                        match self.diverge(i, end) {
+                            Some(n) => cur = n,
+                            None => return None,
+                        }
+                        continue;
+                    }
+                    "break" | "continue" => {
+                        let is_break = t.text == "break";
+                        let j = self.scan_to(i + 1, end, ";");
+                        self.extend(cur, j);
+                        match self.loops.last().copied() {
+                            Some((header, join)) => {
+                                if is_break {
+                                    self.edge(cur, join, EdgeKind::Seq);
+                                } else {
+                                    self.edge(cur, header, EdgeKind::Back);
+                                }
+                            }
+                            // `break` in a match used as a loop-less
+                            // labelled block: treat as normal exit.
+                            None => self.edge(cur, Cfg::EXIT, EdgeKind::Seq),
+                        }
+                        i = if j < end { j + 1 } else { end };
+                        match self.diverge(i, end) {
+                            Some(n) => cur = n,
+                            None => return None,
+                        }
+                        continue;
+                    }
+                    "bail" if self.tok_is(i + 1, "!") => {
+                        let j = self.scan_to(i + 2, end, ";");
+                        self.extend(cur, j);
+                        self.edge(cur, Cfg::ERR_EXIT, EdgeKind::Err);
+                        i = if j < end { j + 1 } else { end };
+                        match self.diverge(i, end) {
+                            Some(n) => cur = n,
+                            None => return None,
+                        }
+                        continue;
+                    }
+                    "ensure" if self.tok_is(i + 1, "!") => {
+                        // Conditional error exit: may propagate, may
+                        // fall through.
+                        self.edge(cur, Cfg::ERR_EXIT, EdgeKind::Err);
+                        i += 2;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            if t.kind == TokKind::Punct {
+                match t.text.as_str() {
+                    "{" => {
+                        // Anonymous / `unsafe` / closure block (or a
+                        // struct literal): walked inline.
+                        let close = match_close(self.toks, i, "{", "}");
+                        self.extend(cur, i);
+                        match self.walk(i + 1, close.min(end), cur) {
+                            Some(sub) => {
+                                cur = sub;
+                                self.extend(cur, close);
+                                i = close + 1;
+                            }
+                            None => {
+                                i = close + 1;
+                                match self.diverge(i, end) {
+                                    Some(n) => cur = n,
+                                    None => return None,
+                                }
+                            }
+                        }
+                        continue;
+                    }
+                    "?" => {
+                        // `?` propagation — but not the `?Sized` bound.
+                        if self.ident_at(i + 1) != Some("Sized") {
+                            self.extend(cur, i + 1);
+                            self.edge(cur, Cfg::ERR_EXIT, EdgeKind::Err);
+                        }
+                        i += 1;
+                        continue;
+                    }
+                    _ => {}
+                }
+            }
+            self.extend(cur, i + 1);
+            i += 1;
+        }
+        self.extend(cur, end);
+        Some(cur)
+    }
+
+    /// An `if` / `else if` / `else` chain starting at the `if` token.
+    /// Returns (index after the chain, join node).
+    fn handle_if(&mut self, mut i: usize, end: usize, mut cur: usize) -> (usize, usize) {
+        let join = self.new_node(i);
+        loop {
+            // toks[i] == "if"; the condition tokens stay in `cur`.
+            let open = self.find_open_brace(i + 1, end);
+            self.extend(cur, open);
+            if open >= end {
+                self.edge(cur, join, EdgeKind::Branch);
+                i = end;
+                break;
+            }
+            let close = match_close(self.toks, open, "{", "}");
+            let arm = self.new_node(open + 1);
+            self.edge(cur, arm, EdgeKind::Branch);
+            if let Some(a_end) = self.walk(open + 1, close.min(end), arm) {
+                self.extend(a_end, close);
+                self.edge(a_end, join, EdgeKind::Seq);
+            }
+            i = close + 1;
+            if self.ident_at(i) == Some("else") {
+                if self.ident_at(i + 1) == Some("if") {
+                    // Next condition runs only when this one was false.
+                    let c = self.new_node(i + 1);
+                    self.edge(cur, c, EdgeKind::Branch);
+                    cur = c;
+                    i += 1;
+                    continue;
+                }
+                if self.tok_is(i + 1, "{") {
+                    let e_open = i + 1;
+                    let e_close = match_close(self.toks, e_open, "{", "}");
+                    let arm = self.new_node(e_open + 1);
+                    self.edge(cur, arm, EdgeKind::Branch);
+                    if let Some(a_end) = self.walk(e_open + 1, e_close.min(end), arm) {
+                        self.extend(a_end, e_close);
+                        self.edge(a_end, join, EdgeKind::Seq);
+                    }
+                    i = e_close + 1;
+                    break;
+                }
+            }
+            // No else: the false path falls straight to the join.
+            self.edge(cur, join, EdgeKind::Branch);
+            break;
+        }
+        let n = &mut self.cfg.nodes[join];
+        n.lo = i.min(end);
+        n.hi = i.min(end);
+        (i, join)
+    }
+
+    /// A `match` starting at the `match` token: one node per arm body.
+    fn handle_match(&mut self, i: usize, end: usize, cur: usize) -> (usize, usize) {
+        let open = self.find_open_brace(i + 1, end);
+        self.extend(cur, open);
+        if open >= end {
+            return (end, cur);
+        }
+        let close = match_close(self.toks, open, "{", "}");
+        let join = self.new_node(close + 1);
+        let mut arms = 0usize;
+        let mut k = open + 1;
+        while k < close {
+            // Find `=>` (lexed as `=` `>`) at bracket depth 0.
+            let mut a = k;
+            let mut found = false;
+            while a < close {
+                let t = &self.toks[a];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "=" if self.tok_is(a + 1, ">") => {
+                            found = true;
+                            break;
+                        }
+                        "(" => {
+                            a = match_close(self.toks, a, "(", ")") + 1;
+                            continue;
+                        }
+                        "[" => {
+                            a = match_close(self.toks, a, "[", "]") + 1;
+                            continue;
+                        }
+                        "{" => {
+                            a = match_close(self.toks, a, "{", "}") + 1;
+                            continue;
+                        }
+                        _ => {}
+                    }
+                }
+                a += 1;
+            }
+            if !found {
+                break;
+            }
+            // Arm body: a block, or an expression up to the depth-0 `,`.
+            let (b_lo, b_hi, next) = if self.tok_is(a + 2, "{") {
+                let b_close = match_close(self.toks, a + 2, "{", "}");
+                let mut nx = b_close + 1;
+                if self.tok_is(nx, ",") {
+                    nx += 1;
+                }
+                (a + 3, b_close, nx)
+            } else {
+                let e = self.scan_to(a + 2, close, ",");
+                (a + 2, e, if e < close { e + 1 } else { close })
+            };
+            let arm = self.new_node(b_lo);
+            self.edge(cur, arm, EdgeKind::Branch);
+            arms += 1;
+            if let Some(a_end) = self.walk(b_lo, b_hi.min(end), arm) {
+                self.extend(a_end, b_hi);
+                self.edge(a_end, join, EdgeKind::Seq);
+            }
+            k = next;
+        }
+        if arms == 0 {
+            self.edge(cur, join, EdgeKind::Seq);
+        }
+        (close + 1, join)
+    }
+
+    /// `while`/`for` (condition header, body, back-edge, loop-exit
+    /// branch) or `loop` (no exit branch: only `break` reaches the join).
+    fn handle_loop(&mut self, i: usize, end: usize, cur: usize, is_loop: bool) -> (usize, usize) {
+        let open = if is_loop { i + 1 } else { self.find_open_brace(i + 1, end) };
+        self.extend(cur, i);
+        if open >= end || !self.tok_is(open, "{") {
+            return (end, cur);
+        }
+        let close = match_close(self.toks, open, "{", "}");
+        let header = self.new_node(i);
+        self.extend(header, open);
+        self.edge(cur, header, EdgeKind::Seq);
+        let body = self.new_node(open + 1);
+        let join = self.new_node(close + 1);
+        if is_loop {
+            self.edge(header, body, EdgeKind::Seq);
+        } else {
+            self.edge(header, body, EdgeKind::Branch);
+            self.edge(header, join, EdgeKind::Branch);
+        }
+        self.loops.push((header, join));
+        let b_end = self.walk(open + 1, close.min(end), body);
+        self.loops.pop();
+        if let Some(b) = b_end {
+            self.extend(b, close);
+            self.edge(b, header, EdgeKind::Back);
+        }
+        (close + 1, join)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    /// Build the CFG of the first fn body in `src`.
+    fn cfg_of(src: &str) -> Cfg {
+        let lexed = lex(src);
+        let open = lexed
+            .toks
+            .iter()
+            .position(|t| t.kind == TokKind::Punct && t.text == "{")
+            .expect("fn body");
+        let close = match_close(&lexed.toks, open, "{", "}");
+        build(&lexed.toks, open, close)
+    }
+
+    #[test]
+    fn straight_line_shape() {
+        // entry, exit, err_exit, one statement node; entry->stmt->exit.
+        let c = cfg_of("fn f() { let a = 1; g(a); }");
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.edge_count(), 2);
+        assert_eq!(c.err_edge_count(), 0);
+    }
+
+    #[test]
+    fn if_else_shape() {
+        // nodes: 3 fixed + cond/first + then + else + join = 7.
+        // edges: entry->cond, cond->then, cond->else, then->join,
+        // else->join, join->exit = 6.
+        let c = cfg_of("fn f(x: u32) -> u32 { if x > 0 { a(); } else { b(); } c() }");
+        assert_eq!(c.nodes.len(), 7);
+        assert_eq!(c.edge_count(), 6);
+        assert_eq!(c.err_edge_count(), 0);
+    }
+
+    #[test]
+    fn if_without_else_falls_to_join() {
+        // nodes: 3 fixed + cond + then + join = 6; edges: entry->cond,
+        // cond->then, cond->join, then->join, join->exit = 5.
+        let c = cfg_of("fn f(x: u32) { if x > 0 { a(); } b(); }");
+        assert_eq!(c.nodes.len(), 6);
+        assert_eq!(c.edge_count(), 5);
+    }
+
+    #[test]
+    fn question_mark_adds_err_edge() {
+        // One `?`: a single Err edge to the error exit, flow falls on.
+        let c = cfg_of("fn f() -> Result<u32, E> { let v = g()?; Ok(v) }");
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.err_edge_count(), 1);
+        assert_eq!(c.edge_count(), 3); // entry->stmt, stmt->err, stmt->exit
+        // `?Sized` in a bound is not an error edge.
+        let c2 = cfg_of("fn f() { let b: Box<dyn A + ?Sized> = mk(); }");
+        assert_eq!(c2.err_edge_count(), 0);
+    }
+
+    #[test]
+    fn match_arms_shape() {
+        // 3 fixed + scrutinee/first + 2 block arms + join = 7 nodes;
+        // edges: entry->s, s->arm0, s->arm1, arm0->join, arm1->join,
+        // join->exit = 6.
+        let c = cfg_of("fn f(x: O) -> u32 { match x { O::A => { a() } O::B(v) => { b(v) } } }");
+        assert_eq!(c.nodes.len(), 7);
+        assert_eq!(c.edge_count(), 6);
+    }
+
+    #[test]
+    fn match_expr_arms_and_guards() {
+        // Expression arms (with a guard on the first) still produce one
+        // node per arm.
+        let c = cfg_of("fn f(x: u32) -> u32 { match x { v if v > 2 => big(v), _ => small(x), } }");
+        assert_eq!(c.nodes.len(), 7);
+        assert_eq!(c.edge_count(), 6);
+    }
+
+    #[test]
+    fn while_loop_has_back_edge() {
+        // nodes: 3 fixed + first + header + body + join = 7; edges:
+        // entry->first, first->header, header->body, header->join,
+        // body->header(Back), join->exit = 6.
+        let c = cfg_of("fn f(mut n: u32) { while n > 0 { n -= 1; } done(); }");
+        assert_eq!(c.nodes.len(), 7);
+        assert_eq!(c.edge_count(), 6);
+        let backs =
+            c.succs.iter().flatten().filter(|(_, k)| *k == EdgeKind::Back).count();
+        assert_eq!(backs, 1);
+    }
+
+    #[test]
+    fn loop_join_reached_only_by_break() {
+        let c = cfg_of("fn f() { loop { if done() { break; } step(); } after(); }");
+        // The loop's join has exactly one incoming edge: the break.
+        let backs =
+            c.succs.iter().flatten().filter(|(_, k)| *k == EdgeKind::Back).count();
+        assert_eq!(backs, 1, "loop body falls back to the header");
+        // and `after()` is reachable: join -> exit edge exists.
+        assert!(c.succs.iter().flatten().any(|&(v, _)| v == Cfg::EXIT));
+    }
+
+    #[test]
+    fn return_err_routes_to_error_exit() {
+        let c = cfg_of("fn f(x: bool) -> Result<(), E> { if x { return Err(E); } Ok(()) }");
+        assert_eq!(c.err_edge_count(), 1);
+        // the then-arm ends at ERR_EXIT, not the join
+        let c2 = cfg_of("fn g(x: bool) -> u32 { if x { return 1; } 2 }");
+        assert_eq!(c2.err_edge_count(), 0);
+    }
+
+    #[test]
+    fn bail_and_ensure_are_error_exits() {
+        let c = cfg_of("fn f(x: u32) -> Result<u32, E> { ensure!(x > 0, \"positive\"); if x > 9 { bail!(\"too big\"); } Ok(x) }");
+        assert_eq!(c.err_edge_count(), 2);
+    }
+
+    #[test]
+    fn nested_and_anonymous_blocks_walk_inline() {
+        let c = cfg_of("fn f() { { let a = 1; } unsafe { g(); } }");
+        // anonymous + unsafe blocks add no nodes of their own
+        assert_eq!(c.nodes.len(), 4);
+        assert_eq!(c.edge_count(), 2);
+    }
+}

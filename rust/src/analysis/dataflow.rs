@@ -1,0 +1,219 @@
+//! Generic worklist dataflow solver over a [`super::cfg::Cfg`].
+//!
+//! An analysis implements [`Analysis`]: a join-semilattice of facts
+//! (`bottom` + `join`) and a per-node `transfer` function. The solver
+//! iterates to a fixpoint in either direction; facts must form a finite
+//! (or at least ascending-chain-bounded) lattice for termination, which
+//! every client here satisfies — the facts are sets over program points
+//! of one function, or small `Option`s, so the chain height is bounded
+//! by the function size.
+//!
+//! The solver is deliberately simple: a FIFO worklist seeded in node
+//! order, re-queueing successors (or predecessors, backward) whenever a
+//! node's out-fact changes, with a large safety cap that turns a
+//! non-converging lattice into a loud panic instead of a hang. The
+//! convergence test in this module exercises a loop back-edge, the one
+//! shape that actually requires iteration.
+
+use super::cfg::Cfg;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Backward,
+}
+
+/// A dataflow problem over one CFG.
+pub trait Analysis {
+    /// The lattice element attached to node entries/exits.
+    type Fact: Clone + PartialEq;
+
+    fn direction(&self) -> Direction;
+
+    /// The lattice bottom (initial value everywhere).
+    fn bottom(&self) -> Self::Fact;
+
+    /// Least upper bound of two facts (set union for may-analyses).
+    fn join(&self, a: &Self::Fact, b: &Self::Fact) -> Self::Fact;
+
+    /// Apply node `n`'s effect to the incoming fact.
+    fn transfer(&self, n: usize, input: &Self::Fact) -> Self::Fact;
+}
+
+/// The fixpoint: for each node, the fact *entering* it (in the chosen
+/// direction — the in-fact for forward analyses, the fact flowing back
+/// from successors for backward ones).
+pub struct Solution<F> {
+    pub input: Vec<F>,
+}
+
+/// Run `analysis` to fixpoint over `cfg`.
+pub fn solve<A: Analysis>(cfg: &Cfg, analysis: &A) -> Solution<A::Fact> {
+    let n = cfg.nodes.len();
+    let preds = cfg.preds();
+    // flow[i]: the fact entering node i (direction-relative).
+    let mut input: Vec<A::Fact> = vec![analysis.bottom(); n];
+    let mut output: Vec<A::Fact> = vec![analysis.bottom(); n];
+    let mut queue: std::collections::VecDeque<usize> = (0..n).collect();
+    let mut queued = vec![true; n];
+    // Chain height is bounded by function size; this cap only trips on
+    // a lattice whose join/transfer violates monotonicity.
+    let mut budget = 64usize.saturating_mul(n.max(1)).saturating_add(4096);
+    while let Some(i) = queue.pop_front() {
+        queued[i] = false;
+        budget = budget.checked_sub(1).expect("dataflow solver failed to converge");
+        // Join over direction-relative predecessors.
+        let mut inp = analysis.bottom();
+        let sources: Vec<usize> = match analysis.direction() {
+            Direction::Forward => preds[i].clone(),
+            Direction::Backward => cfg.succs[i].iter().map(|&(v, _)| v).collect(),
+        };
+        for s in sources {
+            inp = analysis.join(&inp, &output[s]);
+        }
+        let out = analysis.transfer(i, &inp);
+        input[i] = inp;
+        if out != output[i] {
+            output[i] = out;
+            let dependents: Vec<usize> = match analysis.direction() {
+                Direction::Forward => cfg.succs[i].iter().map(|&(v, _)| v).collect(),
+                Direction::Backward => preds[i].clone(),
+            };
+            for d in dependents {
+                if !queued[d] {
+                    queued[d] = true;
+                    queue.push_back(d);
+                }
+            }
+        }
+    }
+    Solution { input }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cfg::{self, Cfg};
+    use super::super::lexer::{lex, TokKind};
+    use super::super::parser::match_close;
+    use super::*;
+
+    fn cfg_of(src: &str) -> (Cfg, Vec<super::super::lexer::Tok>) {
+        let lexed = lex(src);
+        let open = lexed
+            .toks
+            .iter()
+            .position(|t| t.kind == TokKind::Punct && t.text == "{")
+            .expect("fn body");
+        let close = match_close(&lexed.toks, open, "{", "}");
+        (cfg::build(&lexed.toks, open, close), lexed.toks)
+    }
+
+    /// Forward may-analysis: "set of `mark(..)` call-site token indexes
+    /// seen on some path so far". Gen-only, so the loop back-edge forces
+    /// a second visit of the header before the fixpoint.
+    struct ReachingMarks<'a> {
+        toks: &'a [super::super::lexer::Tok],
+        cfg: &'a Cfg,
+    }
+
+    impl Analysis for ReachingMarks<'_> {
+        type Fact = Vec<usize>;
+        fn direction(&self) -> Direction {
+            Direction::Forward
+        }
+        fn bottom(&self) -> Vec<usize> {
+            Vec::new()
+        }
+        fn join(&self, a: &Vec<usize>, b: &Vec<usize>) -> Vec<usize> {
+            let mut out = a.clone();
+            for x in b {
+                if !out.contains(x) {
+                    out.push(*x);
+                }
+            }
+            out.sort_unstable();
+            out
+        }
+        fn transfer(&self, n: usize, input: &Vec<usize>) -> Vec<usize> {
+            let node = self.cfg.nodes[n];
+            let mut out = input.clone();
+            for i in node.lo..node.hi.min(self.toks.len()) {
+                if self.toks[i].kind == TokKind::Ident
+                    && self.toks[i].text == "mark"
+                    && !out.contains(&i)
+                {
+                    out.push(i);
+                }
+            }
+            out.sort_unstable();
+            out
+        }
+    }
+
+    #[test]
+    fn converges_over_a_loop_back_edge() {
+        // The mark inside the loop body must flow around the back-edge
+        // into the header's input fact, which requires iteration.
+        let (cfg, toks) = cfg_of(
+            "fn f(mut n: u32) { while n > 0 { mark(n); n -= 1; } done(); }",
+        );
+        let analysis = ReachingMarks { toks: &toks, cfg: &cfg };
+        let sol = solve(&cfg, &analysis);
+        // Find the loop header: the node with an incoming Back edge.
+        let mut header = None;
+        for (u, outs) in cfg.succs.iter().enumerate() {
+            for &(v, k) in outs {
+                if k == cfg::EdgeKind::Back {
+                    header = Some((u, v));
+                }
+            }
+        }
+        let (body_end, header) = header.expect("loop back-edge");
+        assert!(
+            !sol.input[header].is_empty(),
+            "mark must flow around the back-edge into the header"
+        );
+        assert!(!sol.input[body_end].is_empty());
+        // And the node before the loop has no mark reaching it.
+        assert!(sol.input[Cfg::ENTRY].is_empty());
+    }
+
+    /// Backward analysis: "an `emit` call is reachable ahead".
+    struct EmitsAhead<'a> {
+        toks: &'a [super::super::lexer::Tok],
+        cfg: &'a Cfg,
+    }
+
+    impl Analysis for EmitsAhead<'_> {
+        type Fact = bool;
+        fn direction(&self) -> Direction {
+            Direction::Backward
+        }
+        fn bottom(&self) -> bool {
+            false
+        }
+        fn join(&self, a: &bool, b: &bool) -> bool {
+            *a || *b
+        }
+        fn transfer(&self, n: usize, input: &bool) -> bool {
+            let node = self.cfg.nodes[n];
+            *input
+                || (node.lo..node.hi.min(self.toks.len())).any(|i| {
+                    self.toks[i].kind == TokKind::Ident && self.toks[i].text == "emit"
+                })
+        }
+    }
+
+    #[test]
+    fn backward_reachability_stops_at_the_call() {
+        let (cfg, toks) = cfg_of("fn f() { a(); emit(); b(); }");
+        let analysis = EmitsAhead { toks: &toks, cfg: &cfg };
+        let sol = solve(&cfg, &analysis);
+        // From the entry, an emit lies ahead; from the exit, none does.
+        assert!(sol.input[Cfg::ENTRY]);
+        assert!(!sol.input[Cfg::EXIT]);
+        // the straight-line statement node contains the emit
+        let stmt = 3;
+        assert!(analysis.transfer(stmt, &false));
+    }
+}

@@ -1,0 +1,713 @@
+//! The per-function flow-sensitive analyses built on [`super::cfg`] +
+//! [`super::dataflow`]: the branch-aware *may-held* guard tracking that
+//! feeds `lock-across-forward`, the `rng-lineage` stream-aliasing check,
+//! and the `flush-on-error` buffered-rows check.
+//!
+//! All three run inside the per-file front-end (`analyze_file`), so
+//! their findings are cached, allow-filtered, and rendered exactly like
+//! the lexical rules. Over-approximation direction (documented per rule
+//! in the README catalog): path-insensitive across closures and
+//! `match`-guard conditions — the analyses may report a path the program
+//! never takes (false positive, silenced with a reasoned allow), never
+//! the reverse.
+
+use super::cfg::Cfg;
+use super::dataflow::{solve, Analysis, Direction};
+use super::lexer::{Tok, TokKind};
+use super::parser::{is_keyword, match_close, receiver_tail, FnInfo, HeldCall};
+use super::{Rule, Violation};
+
+fn tok_is(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.text == text)
+}
+
+fn ident_at(toks: &[Tok], i: usize) -> Option<&str> {
+    toks.get(i).and_then(|t| (t.kind == TokKind::Ident).then_some(t.text.as_str()))
+}
+
+fn is_method_call(toks: &[Tok], i: usize) -> bool {
+    i > 0 && toks[i - 1].kind == TokKind::Punct && toks[i - 1].text == "."
+}
+
+fn is_qualified(toks: &[Tok], i: usize) -> bool {
+    i > 1 && tok_is(toks, i - 1, ":") && tok_is(toks, i - 2, ":")
+}
+
+// ---------------------------------------------------------------------
+// Guard prescan + may-held dataflow (feeds `lock-across-forward`)
+// ---------------------------------------------------------------------
+
+/// One `let`-bound `.lock()` guard in a function body, with its lexical
+/// scope bounds. The dataflow tracks these by index.
+#[derive(Clone, Debug)]
+pub struct Guard {
+    /// Token index of the `lock` ident.
+    pub tok: usize,
+    pub line: usize,
+    /// Lock class, same naming as the linear scan:
+    /// `{impl type or file stem}::{receiver tail}`.
+    pub class: String,
+    /// The `let` binding, when recognizable (kills via `drop(var)`).
+    pub var: Option<String>,
+    /// First token index at which the binding's brace scope has closed
+    /// (`Drop`-at-scope-end) — a sound lexical bound on liveness.
+    pub scope_end_tok: usize,
+}
+
+/// Linear prescan for `let`-bound guards with their scope extents.
+pub fn guards(f: &FnInfo, toks: &[Tok], open_i: usize, close_i: usize) -> Vec<Guard> {
+    let stem =
+        f.file.rsplit('/').next().unwrap_or(&f.file).trim_end_matches(".rs").to_string();
+    let mut out: Vec<Guard> = Vec::new();
+    // Guards whose scope is still open: (index into `out`, acq depth).
+    let mut open_guards: Vec<(usize, usize)> = Vec::new();
+    let mut depth = 0usize;
+    let mut stmt_has_let = false;
+    let mut let_var: Option<String> = None;
+    let mut i = open_i;
+    while i < close_i {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    open_guards.retain(|&(g, d)| {
+                        if d > depth {
+                            out[g].scope_end_tok = i;
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    stmt_has_let = false;
+                    let_var = None;
+                }
+                ";" => {
+                    stmt_has_let = false;
+                    let_var = None;
+                }
+                _ => {}
+            }
+            i += 1;
+            continue;
+        }
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let s = t.text.as_str();
+        if s == "let" {
+            stmt_has_let = true;
+            let mut j = i + 1;
+            while ident_at(toks, j) == Some("mut") {
+                j += 1;
+            }
+            let_var = ident_at(toks, j).map(String::from);
+            i += 1;
+            continue;
+        }
+        if is_method_call(toks, i) && s == "lock" && tok_is(toks, i + 1, "(") && stmt_has_let {
+            let owner = f.impl_type.clone().unwrap_or_else(|| stem.clone());
+            let class =
+                format!("{owner}::{}", receiver_tail(toks, i).as_deref().unwrap_or("?"));
+            out.push(Guard {
+                tok: i,
+                line: t.line,
+                class,
+                var: let_var.clone(),
+                scope_end_tok: close_i,
+            });
+            open_guards.push((out.len() - 1, depth));
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Apply the guard acquire/release effect of token `i` to a may-held
+/// state (sorted guard indexes). Scope-end release is *not* an event —
+/// it is enforced by the `scope_end_tok` bound at use sites, which keeps
+/// the transfer monotone across loop back-edges.
+fn guard_event(toks: &[Tok], guards: &[Guard], i: usize, state: &mut Vec<usize>) {
+    if let Some(g) = guards.iter().position(|g| g.tok == i) {
+        if !state.contains(&g) {
+            state.push(g);
+            state.sort_unstable();
+        }
+        return;
+    }
+    let t = &toks[i];
+    if t.kind == TokKind::Ident && t.text == "drop" && tok_is(toks, i + 1, "(") {
+        let qualified = is_qualified(toks, i);
+        let qual_is_mem = qualified && i >= 3 && ident_at(toks, i - 3) == Some("mem");
+        if !is_method_call(toks, i) && (!qualified || qual_is_mem) {
+            if let Some(var) = ident_at(toks, i + 2) {
+                state.retain(|&g| guards[g].var.as_deref() != Some(var));
+            }
+        }
+    }
+}
+
+struct MayHeld<'a> {
+    toks: &'a [Tok],
+    cfg: &'a Cfg,
+    guards: &'a [Guard],
+}
+
+impl Analysis for MayHeld<'_> {
+    type Fact = Vec<usize>;
+    fn direction(&self) -> Direction {
+        Direction::Forward
+    }
+    fn bottom(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    fn join(&self, a: &Vec<usize>, b: &Vec<usize>) -> Vec<usize> {
+        let mut out = a.clone();
+        for x in b {
+            if !out.contains(x) {
+                out.push(*x);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+    fn transfer(&self, n: usize, input: &Vec<usize>) -> Vec<usize> {
+        let node = self.cfg.nodes[n];
+        let mut st = input.clone();
+        for i in node.lo..node.hi.min(self.toks.len()) {
+            guard_event(self.toks, self.guards, i, &mut st);
+        }
+        st
+    }
+}
+
+/// Whether the ident at `i` (followed by `(`) is a call site by the same
+/// rules as the linear body scan — skipping `fn name(` headers, lock
+/// acquisitions, drop releases, and the panic-method family (which the
+/// scan treats as panic sites, not calls).
+fn is_call_site(toks: &[Tok], i: usize) -> bool {
+    let t = &toks[i];
+    if t.kind != TokKind::Ident || !tok_is(toks, i + 1, "(") || is_keyword(&t.text) {
+        return false;
+    }
+    if i > 0 && ident_at(toks, i - 1) == Some("fn") {
+        return false;
+    }
+    let s = t.text.as_str();
+    let method = is_method_call(toks, i);
+    if method
+        && matches!(
+            s,
+            "lock" | "unwrap" | "expect" | "unchecked_add" | "unchecked_sub" | "unchecked_mul"
+        )
+    {
+        return false;
+    }
+    let qualified = is_qualified(toks, i);
+    let qual_is_mem = qualified && i >= 3 && ident_at(toks, i - 3) == Some("mem");
+    if s == "drop" && !method && (!qualified || qual_is_mem) {
+        return false;
+    }
+    true
+}
+
+/// The branch-sensitive replacement for the linear held-call scan: calls
+/// where a guard *may* still be live on some path (e.g. dropped on only
+/// one arm of an `if`), bounded by each guard's lexical scope.
+pub fn held_may_calls(toks: &[Tok], cfg: &Cfg, guards: &[Guard]) -> Vec<HeldCall> {
+    if guards.is_empty() {
+        return Vec::new();
+    }
+    let sol = solve(cfg, &MayHeld { toks, cfg, guards });
+    let mut found: Vec<(usize, HeldCall)> = Vec::new();
+    for (n, node) in cfg.nodes.iter().enumerate() {
+        let mut st = sol.input[n].clone();
+        for i in node.lo..node.hi.min(toks.len()) {
+            if is_call_site(toks, i) {
+                let live: Vec<&Guard> = st
+                    .iter()
+                    .map(|&g| &guards[g])
+                    .filter(|g| g.tok <= i && i <= g.scope_end_tok)
+                    .collect();
+                if !live.is_empty() {
+                    let mut classes: Vec<String> =
+                        live.iter().map(|g| g.class.clone()).collect();
+                    classes.dedup();
+                    let qualified = is_qualified(toks, i);
+                    let qual = if qualified {
+                        ident_at(toks, i.wrapping_sub(3)).map(String::from)
+                    } else {
+                        None
+                    };
+                    found.push((
+                        i,
+                        HeldCall {
+                            classes,
+                            name: toks[i].text.clone(),
+                            qual: qual.clone(),
+                            is_method: is_method_call(toks, i) && qual.is_none(),
+                            line: toks[i].line,
+                        },
+                    ));
+                }
+            }
+            guard_event(toks, guards, i, &mut st);
+        }
+    }
+    found.sort_by_key(|&(i, _)| i);
+    found.dedup_by_key(|&mut (i, _)| i);
+    found.into_iter().map(|(_, h)| h).collect()
+}
+
+// ---------------------------------------------------------------------
+// rng-lineage
+// ---------------------------------------------------------------------
+
+/// One RNG-stream construction site.
+#[derive(Clone, Debug)]
+struct RngSite {
+    /// Token index of the leading ident.
+    tok: usize,
+    line: usize,
+    /// `ctor(normalized args)` — the (seed, index) key as written.
+    key: String,
+}
+
+/// Normalize the argument tokens of a construction call: top-level
+/// commas split, token texts joined with single spaces. Textual keying
+/// over-approximates *sameness* only when two spellings are identical —
+/// distinct expressions that alias at runtime are not caught (that
+/// direction is unsound for a lint and is left to the runtime sweeps).
+fn normalize_args(toks: &[Tok], lo: usize, close: usize) -> String {
+    let mut args: Vec<String> = Vec::new();
+    let mut cur: Vec<&str> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = lo;
+    while i < close {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                "," if depth == 0 => {
+                    args.push(cur.join(" "));
+                    cur.clear();
+                    i += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        cur.push(t.text.as_str());
+        i += 1;
+    }
+    if !cur.is_empty() {
+        args.push(cur.join(" "));
+    }
+    args.join("; ")
+}
+
+/// Find every RNG construction site in `[open_i, close_i)`:
+/// `Pcg64::…(…)`, `ColumnRngs::…(…)`, and `adhoc_episode_rng(…)`.
+fn rng_sites(toks: &[Tok], open_i: usize, close_i: usize) -> Vec<RngSite> {
+    let mut out = Vec::new();
+    let mut i = open_i;
+    while i < close_i {
+        let Some(s) = ident_at(toks, i) else {
+            i += 1;
+            continue;
+        };
+        if matches!(s, "Pcg64" | "ColumnRngs")
+            && tok_is(toks, i + 1, ":")
+            && tok_is(toks, i + 2, ":")
+            && ident_at(toks, i + 3).is_some()
+            && tok_is(toks, i + 4, "(")
+        {
+            let ctor = format!("{s}::{}", toks[i + 3].text);
+            let close = match_close(toks, i + 4, "(", ")");
+            out.push(RngSite {
+                tok: i,
+                line: toks[i].line,
+                key: format!("{ctor}({})", normalize_args(toks, i + 5, close)),
+            });
+            i += 5;
+            continue;
+        }
+        if s == "adhoc_episode_rng"
+            && tok_is(toks, i + 1, "(")
+            && !(i > 0 && ident_at(toks, i - 1) == Some("fn"))
+        {
+            let close = match_close(toks, i + 1, "(", ")");
+            out.push(RngSite {
+                tok: i,
+                line: toks[i].line,
+                key: format!("adhoc_episode_rng({})", normalize_args(toks, i + 2, close)),
+            });
+            i += 2;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+struct ReachingRng<'a> {
+    toks: &'a [Tok],
+    cfg: &'a Cfg,
+    sites: &'a [RngSite],
+}
+
+impl Analysis for ReachingRng<'_> {
+    type Fact = Vec<usize>;
+    fn direction(&self) -> Direction {
+        Direction::Forward
+    }
+    fn bottom(&self) -> Vec<usize> {
+        Vec::new()
+    }
+    fn join(&self, a: &Vec<usize>, b: &Vec<usize>) -> Vec<usize> {
+        let mut out = a.clone();
+        for x in b {
+            if !out.contains(x) {
+                out.push(*x);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+    fn transfer(&self, n: usize, input: &Vec<usize>) -> Vec<usize> {
+        let node = self.cfg.nodes[n];
+        let mut st = input.clone();
+        for (idx, s) in self.sites.iter().enumerate() {
+            if s.tok >= node.lo && s.tok < node.hi.min(self.toks.len()) && !st.contains(&idx) {
+                st.push(idx);
+            }
+        }
+        st.sort_unstable();
+        st
+    }
+}
+
+/// `rng-lineage`: flag a second RNG stream built from a (seed, index)
+/// key that an earlier stream *on the same path* already used, plus an
+/// RNG binding forked with `.clone()`. Branch-exclusive duplicates
+/// (match arms, `if`/`else`) are clean — that is the point of running
+/// this on the CFG instead of linearly.
+pub fn rng_lineage(f: &FnInfo, toks: &[Tok], cfg: &Cfg, open_i: usize, close_i: usize) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let sites = rng_sites(toks, open_i, close_i);
+    if sites.len() > 1 {
+        let sol = solve(cfg, &ReachingRng { toks, cfg, sites: &sites });
+        for (n, node) in cfg.nodes.iter().enumerate() {
+            let mut st = sol.input[n].clone();
+            for (idx, s) in sites.iter().enumerate() {
+                if s.tok < node.lo || s.tok >= node.hi.min(toks.len()) {
+                    continue;
+                }
+                let dup = st
+                    .iter()
+                    .filter(|&&r| r != idx && sites[r].key == s.key)
+                    .map(|&r| sites[r].line)
+                    .min();
+                if let Some(first) = dup {
+                    out.push(Violation {
+                        file: f.file.clone(),
+                        line: s.line,
+                        rule: Rule::RngLineage,
+                        message: format!(
+                            "second RNG stream from key `{}` in {} — an identical stream \
+                             was already constructed on this path at line {first}; aliased \
+                             (seed, index) keys replay the same sequence",
+                            s.key,
+                            f.qual_name()
+                        ),
+                    });
+                }
+                if !st.contains(&idx) {
+                    st.push(idx);
+                    st.sort_unstable();
+                }
+            }
+        }
+    }
+
+    // Clone-fork: a binding holding a fresh stream later `.clone()`d.
+    let site_toks: Vec<usize> = sites.iter().map(|s| s.tok).collect();
+    let mut rng_vars: Vec<String> = Vec::new();
+    let mut let_var: Option<String> = None;
+    let mut i = open_i;
+    while i < close_i {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct && matches!(t.text.as_str(), ";" | "}") {
+            let_var = None;
+            i += 1;
+            continue;
+        }
+        if t.kind == TokKind::Ident && t.text == "let" {
+            let mut j = i + 1;
+            while ident_at(toks, j) == Some("mut") {
+                j += 1;
+            }
+            let_var = ident_at(toks, j).map(String::from);
+            i += 1;
+            continue;
+        }
+        if site_toks.contains(&i) {
+            if let Some(v) = &let_var {
+                if !rng_vars.contains(v) {
+                    rng_vars.push(v.clone());
+                }
+            }
+        }
+        i += 1;
+    }
+    let mut i = open_i;
+    while i < close_i {
+        if let Some(v) = ident_at(toks, i) {
+            if rng_vars.iter().any(|r| r == v)
+                && tok_is(toks, i + 1, ".")
+                && ident_at(toks, i + 2) == Some("clone")
+                && tok_is(toks, i + 3, "(")
+            {
+                out.push(Violation {
+                    file: f.file.clone(),
+                    line: toks[i].line,
+                    rule: Rule::RngLineage,
+                    message: format!(
+                        "RNG stream `{v}` forked with `.clone()` in {} — a cloned \
+                         generator replays the same sequence into a second consumer; \
+                         derive a fresh stream from a distinct (seed, index) key instead",
+                        f.qual_name()
+                    ),
+                });
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// flush-on-error
+// ---------------------------------------------------------------------
+
+const FLUSH_NAMES: [&str; 2] = ["flush_sinks", "flush"];
+
+/// Backward fact: the line of the nearest error-propagation point
+/// (`?`, `return Err(…)`, `bail!`, `ensure!`) reachable ahead with *no*
+/// flush call in between — `None` when every path ahead flushes first
+/// (or never errors). This is the complement of the must-flush property,
+/// evaluated where it matters: at `step_cycle` call sites.
+struct BareErrAhead<'a> {
+    toks: &'a [Tok],
+    cfg: &'a Cfg,
+}
+
+/// Reverse-scan one token's effect: flushes clear the fact, error points
+/// set it to their own line (they are the *nearest* err ahead).
+fn err_event(toks: &[Tok], i: usize, st: &mut Option<usize>) {
+    let t = &toks[i];
+    if t.kind == TokKind::Ident
+        && FLUSH_NAMES.contains(&t.text.as_str())
+        && tok_is(toks, i + 1, "(")
+    {
+        *st = None;
+        return;
+    }
+    let is_err_point = (t.kind == TokKind::Punct
+        && t.text == "?"
+        && ident_at(toks, i + 1) != Some("Sized"))
+        || (t.kind == TokKind::Ident
+            && t.text == "return"
+            && ident_at(toks, i + 1) == Some("Err"))
+        || (t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "bail" | "ensure")
+            && tok_is(toks, i + 1, "!"));
+    if is_err_point {
+        *st = Some(t.line);
+    }
+}
+
+impl Analysis for BareErrAhead<'_> {
+    type Fact = Option<usize>;
+    fn direction(&self) -> Direction {
+        Direction::Backward
+    }
+    fn bottom(&self) -> Option<usize> {
+        None
+    }
+    fn join(&self, a: &Option<usize>, b: &Option<usize>) -> Option<usize> {
+        match (a, b) {
+            (Some(x), Some(y)) => Some(*x.min(y)),
+            (Some(x), None) | (None, Some(x)) => Some(*x),
+            (None, None) => None,
+        }
+    }
+    fn transfer(&self, n: usize, input: &Option<usize>) -> Option<usize> {
+        let node = self.cfg.nodes[n];
+        let mut st = *input;
+        for i in (node.lo..node.hi.min(self.toks.len())).rev() {
+            err_event(self.toks, i, &mut st);
+        }
+        st
+    }
+}
+
+/// `flush-on-error`: at every `step_cycle` call site, some error path
+/// must not be able to propagate out before `flush_sinks`/`flush` runs —
+/// otherwise the metrics rows buffered by the interrupted cycle are lost
+/// (the PR 7 data-loss bug as a lint).
+pub fn flush_on_error(f: &FnInfo, toks: &[Tok], cfg: &Cfg) -> Vec<Violation> {
+    let has_site = f.calls.iter().any(|c| c.name == "step_cycle");
+    if !has_site {
+        return Vec::new();
+    }
+    let sol = solve(cfg, &BareErrAhead { toks, cfg });
+    let mut out = Vec::new();
+    for (n, node) in cfg.nodes.iter().enumerate() {
+        let mut st = sol.input[n];
+        for i in (node.lo..node.hi.min(toks.len())).rev() {
+            if ident_at(toks, i) == Some("step_cycle")
+                && tok_is(toks, i + 1, "(")
+                && !(i > 0 && ident_at(toks, i - 1) == Some("fn"))
+            {
+                if let Some(err_line) = st {
+                    out.push(Violation {
+                        file: f.file.clone(),
+                        line: toks[i].line,
+                        rule: Rule::FlushOnError,
+                        message: format!(
+                            "error exit at line {err_line} of {} can propagate before \
+                             `flush_sinks`/`flush` runs — metrics rows buffered by this \
+                             `step_cycle` cycle are lost on that path",
+                            f.qual_name()
+                        ),
+                    });
+                }
+            }
+            err_event(toks, i, &mut st);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cfg;
+    use super::super::lexer::lex;
+    use super::super::parser::parse_file;
+    use super::*;
+
+    /// Parse `src` (one fn), returning what the flow pass consumes.
+    fn front(src: &str) -> (FnInfo, Vec<Tok>, Cfg, usize, usize) {
+        let lexed = lex(src);
+        let parsed = parse_file("rollout/mod.rs", &lexed);
+        assert_eq!(parsed.fns.len(), 1, "fixture must hold exactly one fn");
+        let (open, close) = parsed.bodies[0];
+        let c = cfg::build(&lexed.toks, open, close);
+        (parsed.fns[0].clone(), lexed.toks, c, open, close)
+    }
+
+    #[test]
+    fn may_held_sees_the_branchy_drop() {
+        // The guard is dropped on only one arm, so the call after the
+        // `if` may still hold it — invisible to the linear scan.
+        let src = "impl P {\n  fn f(&self, c: bool) {\n    let g = self.inner.lock().unwrap();\n    if c { drop(g); }\n    self.forward_direct();\n  }\n}\n";
+        let lexed = lex(src);
+        let parsed = parse_file("rollout/mod.rs", &lexed);
+        let (open, close) = parsed.bodies[0];
+        let c = cfg::build(&lexed.toks, open, close);
+        let gs = guards(&parsed.fns[0], &lexed.toks, open, close);
+        assert_eq!(gs.len(), 1);
+        let held = held_may_calls(&lexed.toks, &c, &gs);
+        assert!(
+            held.iter().any(|h| h.name == "forward_direct"),
+            "guard may be live across forward_direct: {held:?}"
+        );
+        // …and the linear scan (drop on the taken path) agrees the
+        // *unconditional* drop case is clean:
+        let clean = "impl P {\n  fn f(&self) {\n    let g = self.inner.lock().unwrap();\n    drop(g);\n    self.forward_direct();\n  }\n}\n";
+        let lexed2 = lex(clean);
+        let parsed2 = parse_file("rollout/mod.rs", &lexed2);
+        let (o2, c2) = parsed2.bodies[0];
+        let cfg2 = cfg::build(&lexed2.toks, o2, c2);
+        let gs2 = guards(&parsed2.fns[0], &lexed2.toks, o2, c2);
+        let held2 = held_may_calls(&lexed2.toks, &cfg2, &gs2);
+        assert!(held2.iter().all(|h| h.name != "forward_direct"), "{held2:?}");
+    }
+
+    #[test]
+    fn scope_end_bounds_the_guard() {
+        // Guard lives in an inner block; the call after the block is
+        // outside its lexical scope even though the may-state leaks.
+        let src = "impl P {\n  fn f(&self) {\n    {\n      let g = self.inner.lock().unwrap();\n      self.bump();\n    }\n    self.forward_direct();\n  }\n}\n";
+        let lexed = lex(src);
+        let parsed = parse_file("rollout/mod.rs", &lexed);
+        let (open, close) = parsed.bodies[0];
+        let c = cfg::build(&lexed.toks, open, close);
+        let gs = guards(&parsed.fns[0], &lexed.toks, open, close);
+        let held = held_may_calls(&lexed.toks, &c, &gs);
+        assert!(held.iter().any(|h| h.name == "bump"));
+        assert!(held.iter().all(|h| h.name != "forward_direct"), "{held:?}");
+    }
+
+    #[test]
+    fn rng_lineage_flags_sequential_but_not_branch_exclusive() {
+        let seq = "fn f(seed: u64) {\n  let a = Pcg64::new(seed, 1);\n  let b = Pcg64::new(seed, 1);\n  use_both(a, b);\n}\n";
+        let (f, toks, c, o, cl) = front(seq);
+        let v = rng_lineage(&f, &toks, &c, o, cl);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+
+        let branchy = "fn f(seed: u64, fast: bool) {\n  let r = if fast {\n    Pcg64::new(seed, 1)\n  } else {\n    Pcg64::new(seed, 1)\n  };\n  consume(r);\n}\n";
+        let (f, toks, c, o, cl) = front(branchy);
+        let v = rng_lineage(&f, &toks, &c, o, cl);
+        assert!(v.is_empty(), "branch-exclusive duplicates are clean: {v:?}");
+
+        let distinct = "fn f(seed: u64) {\n  let a = Pcg64::new(seed, 1);\n  let b = Pcg64::new(seed, 2);\n  use_both(a, b);\n}\n";
+        let (f, toks, c, o, cl) = front(distinct);
+        assert!(rng_lineage(&f, &toks, &c, o, cl).is_empty());
+    }
+
+    #[test]
+    fn rng_clone_fork_is_flagged() {
+        let src = "fn f(seed: u64) {\n  let rng = Pcg64::new(seed, 0);\n  let twin = rng.clone();\n  use_both(rng, twin);\n}\n";
+        let (f, toks, c, o, cl) = front(src);
+        let v = rng_lineage(&f, &toks, &c, o, cl);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn flush_on_error_catches_the_bare_question_mark() {
+        // PR 7's shape: the `?` propagates mid-pack, the flush after the
+        // loop never runs.
+        let src = "fn run(units: &mut [U]) -> Result<(), E> {\n  for u in units {\n    u.step_cycle()?;\n  }\n  flush_sinks();\n  Ok(())\n}\n";
+        let (f, toks, c, _, _) = front(src);
+        let v = flush_on_error(&f, &toks, &c);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].line, 3);
+        assert!(v[0].message.contains("line 3"));
+    }
+
+    #[test]
+    fn flush_on_error_accepts_the_catch_flush_rethrow_shape() {
+        let src = "fn run(units: &mut [U]) -> Result<(), E> {\n  for u in units {\n    match u.step_cycle() {\n      Ok(done) => { if done { break; } }\n      Err(e) => {\n        flush_sinks();\n        return Err(e);\n      }\n    }\n  }\n  flush_sinks();\n  Ok(())\n}\n";
+        let (f, toks, c, _, _) = front(src);
+        let v = flush_on_error(&f, &toks, &c);
+        assert!(v.is_empty(), "flush-before-rethrow is the sanctioned shape: {v:?}");
+    }
+
+    #[test]
+    fn flush_on_error_ignores_unwrap_drivers() {
+        // `.unwrap()` panics instead of propagating — benches drive
+        // cycles that way and must stay clean.
+        let src = "fn bench(u: &mut U) {\n  for _ in 0..8 {\n    u.step_cycle().unwrap();\n  }\n}\n";
+        let (f, toks, c, _, _) = front(src);
+        assert!(flush_on_error(&f, &toks, &c).is_empty());
+    }
+}

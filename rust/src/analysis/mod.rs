@@ -73,9 +73,32 @@
 //!   callee's transitive lockset); any cycle in the resulting order
 //!   graph is a potential deadlock.
 //!
-//! The per-file front-end (lex + parse + scan) is cached keyed by
-//! mtime + content hash ([`cache`]); reports can render as SARIF 2.1.0
-//! ([`sarif`]) for code-scanning upload.
+//! # Flow-sensitive rules
+//!
+//! The v3 engine adds a per-function control-flow graph ([`cfg`]) and a
+//! generic worklist dataflow solver ([`dataflow`]); the analyses on top
+//! live in [`flow`] (plus the interprocedural half of
+//! `lock-across-forward` in [`taint`]). All three are path-insensitive
+//! over-approximations: they may flag a path the program never takes
+//! (silence with a reasoned allow), never the reverse.
+//!
+//! * `rng-lineage` — two RNG streams (`Pcg64`/`ColumnRngs`/
+//!   `adhoc_episode_rng`) constructed from the same (seed, index) key on
+//!   one path, or a stream forked with `.clone()`: aliased streams
+//!   replay the same sequence. Branch-exclusive duplicates are clean —
+//!   that is the flow-sensitivity payoff.
+//! * `flush-on-error` — a backward analysis at every `step_cycle` call
+//!   site proving no error path propagates out before
+//!   `flush_sinks`/`flush` runs (PR 7's mid-pack data-loss bug as a
+//!   lint).
+//! * `lock-across-forward` — a guard that *may* still be held (per the
+//!   CFG may-held analysis) across a blocking device call
+//!   (`forward_direct`/`forward_into`) or serve-side socket write,
+//!   directly or through the call graph.
+//!
+//! The per-file front-end (lex + parse + scan + per-function flow) is
+//! cached keyed by mtime + content hash ([`cache`]); reports can render
+//! as SARIF 2.1.0 ([`sarif`]) for code-scanning upload.
 //!
 //! # Escape hatch
 //!
@@ -89,6 +112,9 @@
 
 pub mod callgraph;
 pub mod cache;
+pub mod cfg;
+pub mod dataflow;
+pub mod flow;
 pub mod lexer;
 pub mod parser;
 pub mod sarif;
@@ -127,6 +153,12 @@ pub enum Rule {
     ServePanic,
     /// Semantic: inconsistent lock acquisition order through the graph.
     LockOrder,
+    /// Flow: two RNG streams from one (seed, index) key on one path.
+    RngLineage,
+    /// Flow: an error path can propagate before sinks are flushed.
+    FlushOnError,
+    /// Flow: a guard may be held across a blocking device/socket call.
+    LockAcrossForward,
     /// A malformed `ued-lint: allow(...)` directive (not allowable).
     BadAllow,
 }
@@ -143,6 +175,9 @@ impl Rule {
             Rule::DetTaint => "det-taint",
             Rule::ServePanic => "serve-panic",
             Rule::LockOrder => "lock-order",
+            Rule::RngLineage => "rng-lineage",
+            Rule::FlushOnError => "flush-on-error",
+            Rule::LockAcrossForward => "lock-across-forward",
             Rule::BadAllow => "bad-allow",
         }
     }
@@ -158,6 +193,9 @@ impl Rule {
             "det-taint" => Some(Rule::DetTaint),
             "serve-panic" => Some(Rule::ServePanic),
             "lock-order" => Some(Rule::LockOrder),
+            "rng-lineage" => Some(Rule::RngLineage),
+            "flush-on-error" => Some(Rule::FlushOnError),
+            "lock-across-forward" => Some(Rule::LockAcrossForward),
             _ => None,
         }
     }
@@ -185,7 +223,89 @@ impl Rule {
             Rule::DetTaint,
             Rule::ServePanic,
             Rule::LockOrder,
+            Rule::RngLineage,
+            Rule::FlushOnError,
+            Rule::LockAcrossForward,
         ]
+    }
+
+    /// One-paragraph rationale + over-approximation note, for the
+    /// binary's `--explain <rule>` flag.
+    pub fn explain(self) -> &'static str {
+        match self {
+            Rule::HashCollections => {
+                "hash-collections: HashMap/HashSet iteration order is seeded per process, \
+                 so iterating one leaks schedule-dependent order into results. Banned in \
+                 deterministic and order-sensitive modules; allow with a lookup-only \
+                 justification."
+            }
+            Rule::ThreadRng => {
+                "thread-rng: ambient RNGs (thread_rng, OsRng, from_entropy, rand::random) \
+                 draw from process-global state. All randomness in deterministic modules \
+                 must flow from the seeded per-column Pcg64 streams."
+            }
+            Rule::Wallclock => {
+                "wallclock: Instant::now/SystemTime::now must never feed results; the one \
+                 sanctioned reader is the metrics stopwatch. Service modules and benches \
+                 are exempt by profile."
+            }
+            Rule::AddrHash => {
+                "addr-hash: a pointer address cast to an integer varies per run, so \
+                 address-derived values (hashes, keys, seeds) are nondeterministic."
+            }
+            Rule::SafetyComment => {
+                "safety-comment: every `unsafe` token needs a SAFETY comment documenting \
+                 the proof obligation — same line, the comment block above, or the first \
+                 line inside the block."
+            }
+            Rule::UnsafeOpLint => {
+                "unsafe-op-lint: the crate root must deny unsafe_op_in_unsafe_fn so every \
+                 unsafe operation sits in an explicit, SAFETY-commented block."
+            }
+            Rule::DetTaint => {
+                "det-taint: a nondeterminism source in any fn transitively reachable from \
+                 the deterministic module trees, found via the call graph. \
+                 Over-approximate: same-name bare method calls conflate, so a witness \
+                 path may not be a real path."
+            }
+            Rule::ServePanic => {
+                "serve-panic: unwrap/expect/panic!/unchecked arithmetic/indexing reachable \
+                 from the serve router or batcher roots — the serving path must not panic \
+                 on untrusted input."
+            }
+            Rule::LockOrder => {
+                "lock-order: per-function lock acquisition orders propagated through the \
+                 call graph; a cycle in the order graph is a potential deadlock. Lock \
+                 classes are receiver-field names, which fragments (never merges) classes."
+            }
+            Rule::RngLineage => {
+                "rng-lineage: two RNG streams (Pcg64/ColumnRngs/adhoc_episode_rng) \
+                 constructed from the same textual (seed, index) key on one CFG path, or \
+                 an RNG binding forked with .clone() — aliased streams replay the same \
+                 sequence. Path-insensitive over-approximation: closures are walked \
+                 inline, so a duplicate key in a never-taken path still reports; \
+                 branch-exclusive duplicates (if/else, match arms) are clean."
+            }
+            Rule::FlushOnError => {
+                "flush-on-error: a backward dataflow proof, at every step_cycle call \
+                 site, that no error path (?, return Err, bail!) can propagate out \
+                 before flush_sinks/flush runs — otherwise metrics rows buffered by the \
+                 interrupted cycle are silently lost. Path-insensitive: an error exit on \
+                 a path the driver never takes still reports."
+            }
+            Rule::LockAcrossForward => {
+                "lock-across-forward: a FifoLock/pool-phase guard that MAY still be held \
+                 (per the CFG may-held analysis) across a blocking device call \
+                 (forward_direct/forward_into) or serve-side socket write, directly or \
+                 through the call graph — one stalled forward under the guard stalls \
+                 every queued waiter. May-analysis: a guard dropped on every real path \
+                 but not provably so still reports."
+            }
+            Rule::BadAllow => {
+                "bad-allow: a malformed ued-lint allow directive (unknown rule or missing \
+                 reason) — reported, never suppressible."
+            }
+        }
     }
 }
 
@@ -222,10 +342,14 @@ pub struct LintConfig {
     /// Require a `deny(unsafe_op_in_unsafe_fn)` attribute in this file
     /// (set for the crate root).
     pub expect_unsafe_op_deny: bool,
+    /// Run the `rng-lineage` flow analysis (deterministic + service +
+    /// eval modules; benches deliberately replay streams, so it is off
+    /// in the bench profile).
+    pub rng_lineage: bool,
 }
 
 /// Result of linting a whole source tree.
-#[derive(Debug)]
+#[derive(Debug, Default)]
 pub struct CrateReport {
     /// Number of `.rs` files visited.
     pub files: usize,
@@ -605,7 +729,7 @@ pub fn analyze_file(file: &str, src: &str, cfg: &LintConfig) -> FileRecord {
         }
     }
 
-    let parsed = parser::parse_file(file, &lexed);
+    let mut parsed = parser::parse_file(file, &lexed);
     // Item extension: an allow ending on the line directly above an
     // item's attribute run covers the whole item.
     for a in &mut allows {
@@ -613,6 +737,22 @@ pub fn analyze_file(file: &str, src: &str, cfg: &LintConfig) -> FileRecord {
             if a.line_end + 1 == it.attr_line {
                 a.line_end = a.line_end.max(it.end_line);
             }
+        }
+    }
+
+    // The flow-sensitive per-function pass: build each fn's CFG, compute
+    // the may-held call summary (consumed interprocedurally by
+    // `lock-across-forward`), and run the per-function analyses. Their
+    // findings join `raw` here so they are cached and allow-filtered
+    // exactly like the lexical rules.
+    for (k, f) in parsed.fns.iter_mut().enumerate() {
+        let (body_open, body_close) = parsed.bodies[k];
+        let g = cfg::build(&lexed.toks, body_open, body_close);
+        let guards = flow::guards(f, &lexed.toks, body_open, body_close);
+        f.held_may_calls = flow::held_may_calls(&lexed.toks, &g, &guards);
+        raw.extend(flow::flush_on_error(f, &lexed.toks, &g));
+        if cfg.rng_lineage {
+            raw.extend(flow::rng_lineage(f, &lexed.toks, &g, body_open, body_close));
         }
     }
 
@@ -678,19 +818,50 @@ pub fn is_service_module(rel: &Path) -> bool {
 /// `unsafe_op_in_unsafe_fn`.
 pub fn config_for(rel: &Path) -> LintConfig {
     let service = is_service_module(rel);
+    let det = is_deterministic_module(rel);
     LintConfig {
-        deterministic: is_deterministic_module(rel),
+        deterministic: det,
         ordered_collections: service,
         wallclock_exempt: service,
         expect_unsafe_op_deny: rel.as_os_str() == "lib.rs",
+        // Stream-lineage hygiene applies wherever streams are minted:
+        // the deterministic trees, the serve path (its eval replays),
+        // and the content-keyed episode RNG in `eval/`.
+        rng_lineage: det || service || first_component(rel).as_deref() == Some("eval"),
     }
 }
 
-/// Options for [`lint_crate_with`].
+/// Which source tree is being linted — selects the per-file profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TreeKind {
+    /// The crate's `src/`: full module-scoped profiles.
+    Src,
+    /// `benches/`: wallclock reads are the whole point of a benchmark
+    /// and deliberate stream replay is a bench technique, so the
+    /// `wallclock` and `rng-lineage` rules are off; everything else
+    /// (including `flush-on-error` and `lock-across-forward`) applies.
+    Bench,
+    /// `examples/`: the plain crate-wide profile.
+    Example,
+}
+
+/// The lint profile for a file at `rel` within a tree of `kind`.
+pub fn config_for_tree(kind: TreeKind, rel: &Path) -> LintConfig {
+    match kind {
+        TreeKind::Src => config_for(rel),
+        TreeKind::Bench => LintConfig { wallclock_exempt: true, ..LintConfig::default() },
+        TreeKind::Example => LintConfig::default(),
+    }
+}
+
+/// Options for [`lint_tree_with`] / [`lint_crate_with`].
 #[derive(Clone, Debug)]
 pub struct LintOptions {
-    /// Run the interprocedural analyses (`det-taint`, `serve-panic`,
-    /// `lock-order`) on top of the per-file rules.
+    /// Run the cross-file interprocedural analyses (`det-taint`,
+    /// `serve-panic`, `lock-order`, `lock-across-forward`) on top of
+    /// the per-file rules. The per-function flow rules (`rng-lineage`,
+    /// `flush-on-error`) are part of the per-file front-end and run
+    /// regardless.
     pub semantic: bool,
     /// Persist/reuse the per-file front-end via this cache file.
     pub cache_path: Option<PathBuf>,
@@ -702,12 +873,14 @@ impl Default for LintOptions {
     }
 }
 
-/// Lint every `.rs` file under `src_root` (normally the crate's `src/`).
-/// Files are visited in sorted order and the final report is re-sorted
-/// by (file, line, rule), so the report itself is deterministic.
-pub fn lint_crate_with(src_root: &Path, opts: &LintOptions) -> io::Result<CrateReport> {
+/// Lint every `.rs` file under `root` with the profile family of
+/// `kind`. Files are visited in sorted order and the final report is
+/// re-sorted by (file, line, rule), so the report itself is
+/// deterministic. Each tree is linted independently — its own call
+/// graph and its own cache file.
+pub fn lint_tree_with(root: &Path, kind: TreeKind, opts: &LintOptions) -> io::Result<CrateReport> {
     let mut files: Vec<PathBuf> = Vec::new();
-    collect_rs_files(src_root, src_root, &mut files)?;
+    collect_rs_files(root, root, &mut files)?;
     files.sort();
 
     let mut store = match &opts.cache_path {
@@ -720,7 +893,7 @@ pub fn lint_crate_with(src_root: &Path, opts: &LintOptions) -> io::Result<CrateR
     let mut all_fns: Vec<FnInfo> = Vec::new();
     let mut allows_by_file: BTreeMap<String, Vec<Allow>> = BTreeMap::new();
     for rel in &files {
-        let path = src_root.join(rel);
+        let path = root.join(rel);
         let src = fs::read_to_string(&path)?;
         // `/`-separated even on Windows so reports and caches are portable.
         let rel_str = rel
@@ -739,7 +912,7 @@ pub fn lint_crate_with(src_root: &Path, opts: &LintOptions) -> io::Result<CrateR
                 rec
             }
             None => {
-                let rec = analyze_file(&rel_str, &src, &config_for(rel));
+                let rec = analyze_file(&rel_str, &src, &config_for_tree(kind, rel));
                 store.put(&rel_str, &mtime, &hash, &rec);
                 rec
             }
@@ -759,6 +932,12 @@ pub fn lint_crate_with(src_root: &Path, opts: &LintOptions) -> io::Result<CrateR
         store.save(p);
     }
     Ok(CrateReport { files: files.len(), cache_hits, violations })
+}
+
+/// [`lint_tree_with`] over a `src/` tree — the historical entry point;
+/// fixture corpora and the self-lint go through here.
+pub fn lint_crate_with(src_root: &Path, opts: &LintOptions) -> io::Result<CrateReport> {
+    lint_tree_with(src_root, TreeKind::Src, opts)
 }
 
 /// [`lint_crate_with`] with the default options: semantic analyses on,

@@ -10,16 +10,20 @@
 //!
 //! Known limits (also documented in the README rule catalog):
 //!
-//! * Trait *default method* bodies are not parsed — the item scanner
-//!   skips a `trait { … }` block as one span. Default bodies in this
-//!   crate are trivial accessors, so nothing is lost today.
-//! * `Drop::drop` is not modeled: a guard is considered released when
-//!   the enclosing brace depth unwinds or an explicit `drop(guard)`
-//!   names its binding.
+//! * Guard release is modeled lexically: a guard dies when the brace
+//!   scope it was bound in closes (`Drop`-at-scope-end), or earlier at
+//!   an explicit `drop(guard)` / `mem::drop(guard)` naming its binding.
+//!   Guards moved out of their binding (returned, stored in a struct)
+//!   are treated as released at scope end — an under-approximation the
+//!   flow pass inherits.
 //! * Lock classes are named `{impl type or file stem}::{receiver field}`,
 //!   so the same mutex reached through two wrapper types forms two
 //!   classes. This fragments (never merges) classes — it can miss an
 //!   order cycle, not invent one.
+//!
+//! Trait *default method* bodies are parsed like inherent methods
+//! (`impl_type` = the trait name) so they enter the call graph; bodiless
+//! trait-method declarations are still skipped.
 
 use super::lexer::{Lexed, Tok, TokKind};
 
@@ -92,6 +96,19 @@ pub struct Call {
     pub line: usize,
 }
 
+/// One call made while lock guards *may* be held, per the flow pass's
+/// branch-sensitive may-held analysis (computed in [`super::flow`], not
+/// by the linear body scan — see [`FnInfo::held_may_calls`]).
+#[derive(Clone, Debug)]
+pub struct HeldCall {
+    /// Lock classes possibly held at the call.
+    pub classes: Vec<String>,
+    pub name: String,
+    pub qual: Option<String>,
+    pub is_method: bool,
+    pub line: usize,
+}
+
 /// One `.lock()` acquisition.
 #[derive(Clone, Debug)]
 pub struct LockSite {
@@ -136,6 +153,13 @@ pub struct FnInfo {
     pub lock_edges: Vec<LockEdge>,
     /// Calls made while guards are held: (held classes, index into `calls`).
     pub held_calls: Vec<(Vec<String>, usize)>,
+    /// Calls where the CFG may-held analysis proves a guard *can* be
+    /// live — a superset of `held_calls` on branchy code (e.g. a guard
+    /// dropped on only one arm of an `if`). Filled by
+    /// [`super::flow::held_may_calls`] after parsing; persisted through
+    /// the cache so the interprocedural `lock-across-forward` check can
+    /// run on cache hits.
+    pub held_may_calls: Vec<HeldCall>,
 }
 
 impl FnInfo {
@@ -167,6 +191,11 @@ pub struct ItemSpan {
 pub struct ParsedFile {
     pub fns: Vec<FnInfo>,
     pub items: Vec<ItemSpan>,
+    /// `(body_open, body_close)` token indexes, aligned with `fns` —
+    /// consumed by the flow pass to build per-function CFGs. Token
+    /// indexes are only meaningful against the same `Lexed`, so this is
+    /// never cached.
+    pub bodies: Vec<(usize, usize)>,
 }
 
 /// Index of the token matching the `open` bracket at `i` (falls back to
@@ -186,6 +215,48 @@ pub fn match_close(toks: &[Tok], mut i: usize, open: &str, close: &str) -> usize
         i += 1;
     }
     toks.len().saturating_sub(1)
+}
+
+/// Receiver tail of a method call whose name token sits at `i`: the
+/// field/binding closest to the `.name()`, walking back over
+/// `.`/ident/`[..]` chains; `self.name()` (or an unrecognized receiver)
+/// yields `None`. Shared between the body scanner here and the flow
+/// pass's guard prescan ([`super::flow`]).
+pub(crate) fn receiver_tail(toks: &[Tok], i: usize) -> Option<String> {
+    let mut j = i as isize - 2;
+    let mut tail: Option<String> = None;
+    while j >= 0 {
+        let tj = &toks[j as usize];
+        if tj.kind == TokKind::Punct && tj.text == "]" {
+            let mut d = 0isize;
+            while j >= 0 {
+                let b = &toks[j as usize];
+                if b.text == "]" {
+                    d += 1;
+                } else if b.text == "[" {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                j -= 1;
+            }
+            j -= 1;
+            continue;
+        }
+        if tj.kind == TokKind::Ident {
+            if tj.text != "self" {
+                tail = Some(tj.text.clone());
+            }
+            break;
+        }
+        if tj.kind == TokKind::Punct && tj.text == "." {
+            j -= 1;
+            continue;
+        }
+        break;
+    }
+    tail
 }
 
 fn tok_is(toks: &[Tok], i: usize, text: &str) -> bool {
@@ -411,15 +482,57 @@ pub fn parse_file(file: &str, lexed: &Lexed) -> ParsedFile {
                     locks: Vec::new(),
                     lock_edges: Vec::new(),
                     held_calls: Vec::new(),
+                    held_may_calls: Vec::new(),
                 };
                 scan_body(&mut f, toks, body_open, close);
                 out.items.push(ItemSpan { attr_line: f.attr_line, end_line });
+                out.bodies.push((body_open, close));
                 out.fns.push(f);
                 attr_line = None;
                 attr_is_cfg_test = false;
                 i = close + 1;
             }
-            "struct" | "enum" | "trait" | "union" | "type" | "static" | "const" | "use" => {
+            "trait" => {
+                // `trait Name[<…>][: Bounds] { … }` — descend so *default
+                // method bodies* are parsed like inherent methods
+                // (`impl_type` = the trait name) and enter the call
+                // graph; bodiless declarations are skipped by the `fn`
+                // arm as before.
+                let name = ident_at(toks, i + 1).unwrap_or("?").to_string();
+                let a_line = attr_line.unwrap_or(ln);
+                let mut j = i + 2;
+                let mut open: Option<usize> = None;
+                while j < n {
+                    if tok_is(toks, j, ";") {
+                        j += 1;
+                        break;
+                    }
+                    if tok_is(toks, j, "{") {
+                        open = Some(j);
+                        break;
+                    }
+                    if tok_is(toks, j, "<") {
+                        j = match_close(toks, j, "<", ">") + 1;
+                        continue;
+                    }
+                    j += 1;
+                }
+                if let Some(open) = open {
+                    let close = match_close(toks, open, "{", "}");
+                    out.items.push(ItemSpan { attr_line: a_line, end_line: toks[close].line });
+                    if attr_is_cfg_test {
+                        i = close + 1;
+                    } else {
+                        ctx.push(Ctx::Impl(name, close));
+                        i = open + 1;
+                    }
+                } else {
+                    i = j; // `trait Alias = …;` or malformed
+                }
+                attr_line = None;
+                attr_is_cfg_test = false;
+            }
+            "struct" | "enum" | "union" | "type" | "static" | "const" | "use" => {
                 let is_use = t.text == "use";
                 let a_line = attr_line.unwrap_or(ln);
                 let mut j = i + 1;
@@ -597,42 +710,7 @@ fn scan_body(f: &mut FnInfo, toks: &[Tok], open_i: usize, close_i: usize) {
 
         // Lock acquisition: `recv.lock(`.
         if is_method && s == "lock" && nxt_is("(") {
-            // Receiver tail: the field/binding closest to `.lock()`,
-            // walking back over `.`/ident/`[..]` chains; `self.lock()`
-            // (or an unrecognized receiver) gets no tail.
-            let mut j = i as isize - 2;
-            let mut tail: Option<String> = None;
-            while j >= 0 {
-                let tj = &toks[j as usize];
-                if tj.kind == TokKind::Punct && tj.text == "]" {
-                    let mut d = 0isize;
-                    while j >= 0 {
-                        let b = &toks[j as usize];
-                        if b.text == "]" {
-                            d += 1;
-                        } else if b.text == "[" {
-                            d -= 1;
-                            if d == 0 {
-                                break;
-                            }
-                        }
-                        j -= 1;
-                    }
-                    j -= 1;
-                    continue;
-                }
-                if tj.kind == TokKind::Ident {
-                    if tj.text != "self" {
-                        tail = Some(tj.text.clone());
-                    }
-                    break;
-                }
-                if tj.kind == TokKind::Punct && tj.text == "." {
-                    j -= 1;
-                    continue;
-                }
-                break;
-            }
+            let tail = receiver_tail(toks, i);
             let owner = f.impl_type.clone().unwrap_or_else(|| stem.clone());
             let class = format!("{owner}::{}", tail.as_deref().unwrap_or("?"));
             let is_held = stmt_has_let;
@@ -649,9 +727,11 @@ fn scan_body(f: &mut FnInfo, toks: &[Tok], open_i: usize, close_i: usize) {
             continue;
         }
 
-        // Explicit early release: `drop(guard)` is `std::mem::drop` —
-        // never a crate call (`Drop::drop` cannot be invoked explicitly).
-        if s == "drop" && !is_method && !qualified && nxt_is("(") {
+        // Explicit early release: `drop(guard)` / `mem::drop(guard)` /
+        // `std::mem::drop(guard)` — never a crate call (`Drop::drop`
+        // cannot be invoked explicitly).
+        let qual_is_mem = qualified && i >= 3 && ident_at(toks, i - 3) == Some("mem");
+        if s == "drop" && !is_method && (!qualified || qual_is_mem) && nxt_is("(") {
             if let Some(var) = ident_at(toks, i + 2) {
                 held.retain(|(v, _, _)| v.as_deref() != Some(var));
             }
@@ -761,6 +841,58 @@ mod tests {
         assert!(edges.contains(&("P::alpha".into(), "P::beta".into())));
         assert!(edges.contains(&("P::beta".into(), "P::gamma".into())));
         assert!(!edges.contains(&("P::alpha".into(), "P::gamma".into())));
+    }
+
+    #[test]
+    fn trait_default_bodies_are_parsed() {
+        let src = "trait Ticker {\n  fn id(&self) -> u32;\n  fn tick(&self) -> u64 {\n    let t = Instant::now();\n    self.sample(t)\n  }\n}\n";
+        let p = parse(src);
+        // The bodiless `id` is skipped; the default body of `tick` is a
+        // full FnInfo with the trait as its impl context.
+        assert_eq!(p.fns.len(), 1);
+        let f = &p.fns[0];
+        assert_eq!(f.name, "tick");
+        assert_eq!(f.impl_type.as_deref(), Some("Ticker"));
+        assert_eq!(f.sources.len(), 1, "wallclock source inside the default body");
+        assert!(f.calls.iter().any(|c| c.name == "sample"));
+    }
+
+    #[test]
+    fn mem_drop_releases_the_guard() {
+        let src = "impl P {\n  fn f(&self) {\n    let a = self.alpha.lock().unwrap();\n    mem::drop(a);\n    let b = self.beta.lock().unwrap();\n  }\n}\n";
+        let p = parse(src);
+        let f = &p.fns[0];
+        assert!(
+            f.lock_edges.is_empty(),
+            "mem::drop(a) released alpha before beta was acquired: {:?}",
+            f.lock_edges
+        );
+    }
+
+    #[test]
+    fn guards_release_at_scope_exit() {
+        // Drop-at-scope-end: the inner-block guard is dead once its
+        // brace closes, so no alpha→beta ordering edge exists.
+        let src = "impl P {\n  fn f(&self) {\n    {\n      let a = self.alpha.lock().unwrap();\n      self.bump();\n    }\n    let b = self.beta.lock().unwrap();\n  }\n}\n";
+        let p = parse(src);
+        let f = &p.fns[0];
+        assert!(f.lock_edges.is_empty(), "scope exit released alpha: {:?}", f.lock_edges);
+        // …but the call made *inside* the scope saw the guard held.
+        assert_eq!(f.held_calls.len(), 1);
+        let (classes, idx) = &f.held_calls[0];
+        assert_eq!(classes, &vec![String::from("P::alpha")]);
+        assert_eq!(f.calls[*idx].name, "bump");
+    }
+
+    #[test]
+    fn bodies_align_with_fns() {
+        let src = "fn a() { one(); }\nfn b() { two(); }\n";
+        let p = parse(src);
+        assert_eq!(p.bodies.len(), p.fns.len());
+        for (f, (open, close)) in p.fns.iter().zip(&p.bodies) {
+            assert!(open < close);
+            let _ = f;
+        }
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::util::json::Json;
 
 use super::{CrateReport, Rule};
 
-const ALL_RULES: [Rule; 10] = [
+const ALL_RULES: [Rule; 13] = [
     Rule::HashCollections,
     Rule::ThreadRng,
     Rule::Wallclock,
@@ -22,6 +22,9 @@ const ALL_RULES: [Rule; 10] = [
     Rule::DetTaint,
     Rule::ServePanic,
     Rule::LockOrder,
+    Rule::RngLineage,
+    Rule::FlushOnError,
+    Rule::LockAcrossForward,
     Rule::BadAllow,
 ];
 
@@ -36,6 +39,9 @@ fn short_desc(rule: Rule) -> &'static str {
         Rule::DetTaint => "nondeterminism source reachable from deterministic code",
         Rule::ServePanic => "panic site reachable on the serving path",
         Rule::LockOrder => "inconsistent lock acquisition order (potential deadlock)",
+        Rule::RngLineage => "two RNG streams constructed from the same (seed, index) key",
+        Rule::FlushOnError => "error path can propagate before metrics sinks are flushed",
+        Rule::LockAcrossForward => "guard may be held across a blocking forward/socket call",
         Rule::BadAllow => "malformed ued-lint allow directive",
     }
 }

@@ -1,16 +1,17 @@
-//! The three interprocedural analyses over the call graph:
-//! determinism taint (`det-taint`), serve-path panic freedom
-//! (`serve-panic`), and lock-order consistency (`lock-order`).
+//! The interprocedural analyses over the call graph: determinism taint
+//! (`det-taint`), serve-path panic freedom (`serve-panic`), lock-order
+//! consistency (`lock-order`), and held-guard blocking-call paths
+//! (`lock-across-forward`).
 //!
-//! All three consume the same inputs — parsed [`FnInfo`]s, the
-//! [`CallGraph`], and the per-file allow tables — and report through the
-//! ordinary [`Violation`] channel, so the binary, SARIF writer, and
-//! `lint_self` test treat semantic findings exactly like lexical ones.
+//! All consume the same inputs — parsed [`FnInfo`]s, the [`CallGraph`],
+//! and the per-file allow tables — and report through the ordinary
+//! [`Violation`] channel, so the binary, SARIF writer, and `lint_self`
+//! test treat semantic findings exactly like lexical ones.
 
 use std::collections::{BTreeMap, BTreeSet};
 
 use super::callgraph::{module_head, path_string, CallGraph};
-use super::parser::FnInfo;
+use super::parser::{Call, FnInfo};
 use super::{Allow, Rule, Violation, DETERMINISTIC_MODULES};
 
 /// Files whose top-level fns are serve-path roots: every request either
@@ -32,14 +33,94 @@ fn push(out: &mut Vec<Violation>, file: &str, line: usize, rule: Rule, message: 
     out.push(Violation { file: file.to_string(), line, rule, message });
 }
 
-/// Run all three semantic analyses. Returns unsorted violations; the
-/// caller merges them with the per-file findings and sorts globally.
+/// Run the semantic analyses. Returns unsorted violations; the caller
+/// merges them with the per-file findings and sorts globally.
 pub fn analyze(fns: &[FnInfo], graph: &CallGraph, allows: &Allows) -> Vec<Violation> {
     let mut out = Vec::new();
     det_taint(fns, graph, allows, &mut out);
     serve_panic(fns, graph, allows, &mut out);
     lock_order(fns, graph, allows, &mut out);
+    lock_across_forward(fns, graph, allows, &mut out);
     out
+}
+
+/// Call names that block on the device or the wire: the PJRT forward
+/// entry points and the serve-side socket writer. Matched by name —
+/// these are crate-specific enough that name matching is exact, and an
+/// *unresolved* method call with one of these names is still a direct
+/// finding (the receiver is a device/stream handle, not a crate type).
+const BLOCKING_LEAVES: [&str; 3] = ["forward_direct", "forward_into", "write_response"];
+
+/// `lock-across-forward`: a guard that may still be held (per the flow
+/// pass's CFG may-held analysis, [`FnInfo::held_may_calls`]) across a
+/// blocking call — directly, or through a callee that transitively
+/// reaches one of the blocking leaves.
+fn lock_across_forward(fns: &[FnInfo], graph: &CallGraph, allows: &Allows, out: &mut Vec<Violation>) {
+    let direct: Vec<usize> = (0..fns.len())
+        .filter(|&i| fns[i].calls.iter().any(|c| BLOCKING_LEAVES.contains(&c.name.as_str())))
+        .collect();
+    let next = graph.reach_rev(&direct);
+    for f in fns {
+        for h in &f.held_may_calls {
+            if is_allowed(allows, &f.file, Rule::LockAcrossForward, h.line) {
+                continue;
+            }
+            let classes = h.classes.join(", ");
+            if BLOCKING_LEAVES.contains(&h.name.as_str()) {
+                push(
+                    out,
+                    &f.file,
+                    h.line,
+                    Rule::LockAcrossForward,
+                    format!(
+                        "guard `{classes}` may be held across blocking call `{}` in {} — \
+                         a stalled forward/socket write under the lock stalls every \
+                         queued waiter",
+                        h.name,
+                        f.qual_name()
+                    ),
+                );
+                continue;
+            }
+            let call = Call {
+                name: h.name.clone(),
+                qual: h.qual.clone(),
+                is_method: h.is_method,
+                line: h.line,
+            };
+            let Some(target) =
+                graph.resolve(fns, &call, f).into_iter().find(|c| next.contains_key(c))
+            else {
+                continue;
+            };
+            // Walk the chain down to the fn holding the blocking leaf.
+            let mut chain = vec![fns[target].qual_name()];
+            let mut cur = target;
+            while let Some(n) = next.get(&cur).copied().flatten() {
+                chain.push(fns[n].qual_name());
+                cur = n;
+            }
+            let leaf = fns[cur]
+                .calls
+                .iter()
+                .find(|c| BLOCKING_LEAVES.contains(&c.name.as_str()))
+                .map(|c| c.name.clone())
+                .unwrap_or_default();
+            push(
+                out,
+                &f.file,
+                h.line,
+                Rule::LockAcrossForward,
+                format!(
+                    "guard `{classes}` may be held across `{}` in {}, which reaches \
+                     blocking `{leaf}` via {}",
+                    h.name,
+                    f.qual_name(),
+                    chain.join(" -> ")
+                ),
+            );
+        }
+    }
 }
 
 /// `det-taint`: any fn transitively reachable from the deterministic

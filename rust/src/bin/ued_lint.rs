@@ -6,35 +6,83 @@
 //! Options:
 //! * `--format human|sarif` — report format (default `human`; `sarif`
 //!   emits a SARIF 2.1.0 log on stdout for code-scanning upload).
+//! * `--only <rule>` — report only violations of the named rule (the
+//!   full pass still runs; other findings are filtered from the report
+//!   and the exit code).
+//! * `--explain <rule>` — print the rule's rationale, what it
+//!   over-approximates, and how to allow sanctioned cases; then exit.
 //! * `--no-semantic` — per-file rules only, skip the call-graph
-//!   analyses (`det-taint`, `serve-panic`, `lock-order`).
+//!   analyses (`det-taint`, `serve-panic`, `lock-order`,
+//!   `lock-across-forward`).
 //! * `--no-cache` — ignore and don't write the incremental cache.
-//! * `--cache-path <file>` — cache location (default
-//!   `target/ued-lint-cache.json` next to the linted `src/`).
+//! * `--cache-path <file>` — cache location (default: per-tree files
+//!   `target/ued-lint-cache-<tree>.json` next to the crate's `src/`;
+//!   with an explicit directory argument, a single
+//!   `target/ued-lint-cache.json`). In the default multi-tree mode an
+//!   explicit path names the `src/` cache and sibling trees append
+//!   `.benches` / `.examples` to it.
 //!
-//! With no directory argument it lints `src/` relative to the working
-//! directory (falling back to the crate's own `src/` when invoked from
-//! elsewhere, e.g. the repository root). See `jaxued::analysis` for the
-//! rule set, the deterministic-module list, and the allow-comment
-//! escape hatch; the README's "Determinism invariants" section is the
-//! human-facing summary. CI runs this as a required job and uploads the
-//! SARIF to code scanning.
+//! With no directory argument it lints the crate's `src/` (relative to
+//! the working directory, falling back to the crate's own `src/` when
+//! invoked from elsewhere) **plus** the sibling `benches/` tree and the
+//! repository-level `examples/` tree, each under its own profile:
+//! benches are wallclock-exempt (timing is their job) and skip the
+//! deterministic-module RNG-lineage gating, examples get the plain
+//! default profile. Paths in the merged report are repo-relative
+//! (`rust/src/…`, `rust/benches/…`, `examples/…`). An explicit
+//! directory argument lints just that tree under the `src/` profile,
+//! as before.
+//!
+//! See `jaxued::analysis` for the rule set, the deterministic-module
+//! list, and the allow-comment escape hatch; the README's "Determinism
+//! invariants" section is the human-facing summary. CI runs this as a
+//! required job and uploads the SARIF to code scanning.
 //!
 //! Timing and cache statistics go to stderr so they never corrupt the
 //! SARIF stream on stdout.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use jaxued::analysis::{lint_crate_with, sarif, LintOptions, DETERMINISTIC_MODULES};
+use jaxued::analysis::{
+    lint_tree_with, sarif, CrateReport, LintOptions, Rule, TreeKind, DETERMINISTIC_MODULES,
+};
 use jaxued::metrics::Stopwatch;
 
 fn usage() {
     eprintln!(
-        "usage: ued_lint [<src-dir>] [--format human|sarif] [--no-semantic] \
-         [--no-cache] [--cache-path <file>]"
+        "usage: ued_lint [<src-dir>] [--format human|sarif] [--only <rule>] \
+         [--explain <rule>] [--no-semantic] [--no-cache] [--cache-path <file>]"
     );
-    eprintln!("lints every .rs file under <src-dir> (default: src/)");
+    eprintln!(
+        "lints every .rs file under <src-dir>; with no argument, the crate's \
+         src/, benches/, and the repo's examples/"
+    );
+}
+
+/// One tree of the default multi-tree run.
+struct Tree {
+    root: PathBuf,
+    kind: TreeKind,
+    /// Repo-relative prefix for every reported path in this tree.
+    prefix: &'static str,
+    /// Suffix distinguishing this tree's cache file.
+    cache_tag: &'static str,
+}
+
+fn tree_cache_path(explicit: &Option<PathBuf>, src_root: &Path, tag: &str) -> Option<PathBuf> {
+    match explicit {
+        Some(p) if tag == "src" => Some(p.clone()),
+        Some(p) => {
+            let mut s = p.as_os_str().to_owned();
+            s.push(".");
+            s.push(tag);
+            Some(PathBuf::from(s))
+        }
+        None => src_root
+            .parent()
+            .map(|p| p.join("target").join(format!("ued-lint-cache-{tag}.json"))),
+    }
 }
 
 fn main() -> ExitCode {
@@ -43,6 +91,7 @@ fn main() -> ExitCode {
     let mut semantic = true;
     let mut use_cache = true;
     let mut cache_path: Option<PathBuf> = None;
+    let mut only: Option<Rule> = None;
 
     let mut args = std::env::args().skip(1);
     while let Some(arg) = args.next() {
@@ -56,6 +105,29 @@ fn main() -> ExitCode {
                 Some("sarif") => format_sarif = true,
                 other => {
                     eprintln!("ued-lint: --format takes `human` or `sarif`, got {other:?}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--only" => match args.next().as_deref().and_then(Rule::from_name) {
+                Some(r) => only = Some(r),
+                None => {
+                    eprintln!("ued-lint: --only needs a known rule name (see --explain)");
+                    return ExitCode::from(2);
+                }
+            },
+            "--explain" => match args.next() {
+                Some(name) => match Rule::from_name(&name) {
+                    Some(r) => {
+                        println!("{}", r.explain());
+                        return ExitCode::SUCCESS;
+                    }
+                    None => {
+                        eprintln!("ued-lint: unknown rule `{name}`");
+                        return ExitCode::from(2);
+                    }
+                },
+                None => {
+                    eprintln!("ued-lint: --explain needs a rule name");
                     return ExitCode::from(2);
                 }
             },
@@ -79,82 +151,134 @@ fn main() -> ExitCode {
         }
     }
 
-    let root = root.unwrap_or_else(|| {
-        let cwd_src = PathBuf::from("src");
-        if cwd_src.is_dir() {
-            cwd_src
-        } else {
-            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
-        }
-    });
-    if !root.is_dir() {
-        eprintln!("ued-lint: source directory `{}` not found", root.display());
-        return ExitCode::from(2);
-    }
-
-    let cache_path = if use_cache {
-        cache_path.or_else(|| {
-            // Default next to the linted tree, inside target/ (ignored by
-            // git); a missing target/ just means a cold run every time.
-            root.parent().map(|p| p.join("target").join("ued-lint-cache.json"))
-        })
-    } else {
-        None
-    };
-    let opts = LintOptions { semantic, cache_path };
-
-    // SARIF URIs should be repository-relative. When the linted tree is
-    // the crate's own src/, that prefix is `rust/src/`; otherwise fall
-    // back to the path as given.
-    let uri_prefix = {
-        let canon = root.canonicalize().unwrap_or_else(|_| root.clone());
-        if canon.ends_with("rust/src") {
-            String::from("rust/src/")
-        } else {
-            format!("{}/", root.display())
-        }
-    };
-
-    let watch = Stopwatch::new();
-    match lint_crate_with(&root, &opts) {
-        Err(e) => {
-            eprintln!("ued-lint: i/o error walking `{}`: {e}", root.display());
-            ExitCode::from(2)
-        }
-        Ok(report) => {
-            let ok = report.violations.is_empty();
-            if format_sarif {
-                println!("{}", sarif::to_sarif(&report, &uri_prefix));
-            } else if ok {
-                println!(
-                    "ued-lint: clean — {} files under `{}` ({} deterministic modules: {})",
-                    report.files,
-                    root.display(),
-                    DETERMINISTIC_MODULES.len(),
-                    DETERMINISTIC_MODULES.join(", ")
-                );
-            } else {
-                for v in &report.violations {
-                    println!("{v}");
+    // Resolve the trees to lint. An explicit directory keeps the legacy
+    // single-tree behavior (src profile, src-relative paths); the
+    // default lints src/ + benches/ + examples/ with repo-relative
+    // reported paths.
+    let (trees, uri_prefix, label) = match root {
+        Some(r) => {
+            if !r.is_dir() {
+                eprintln!("ued-lint: source directory `{}` not found", r.display());
+                return ExitCode::from(2);
+            }
+            let uri_prefix = {
+                let canon = r.canonicalize().unwrap_or_else(|_| r.clone());
+                if canon.ends_with("rust/src") {
+                    String::from("rust/src/")
+                } else {
+                    format!("{}/", r.display())
                 }
-                println!(
-                    "ued-lint: {} violation(s) in {} files",
-                    report.violations.len(),
-                    report.files
-                );
+            };
+            let label = r.display().to_string();
+            (
+                vec![Tree { root: r, kind: TreeKind::Src, prefix: "", cache_tag: "src" }],
+                uri_prefix,
+                label,
+            )
+        }
+        None => {
+            let src = {
+                let cwd_src = PathBuf::from("src");
+                if cwd_src.is_dir() {
+                    cwd_src
+                } else {
+                    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+                }
+            };
+            if !src.is_dir() {
+                eprintln!("ued-lint: source directory `{}` not found", src.display());
+                return ExitCode::from(2);
             }
-            eprintln!(
-                "ued-lint: {} files in {:.3}s ({} cache hit(s), semantic {})",
-                report.files,
-                watch.elapsed_secs(),
-                report.cache_hits,
-                if semantic { "on" } else { "off" },
-            );
-            if ok {
-                ExitCode::SUCCESS
+            let crate_root = src.parent().map(Path::to_path_buf).unwrap_or_default();
+            let mut trees = vec![Tree {
+                root: src,
+                kind: TreeKind::Src,
+                prefix: "rust/src/",
+                cache_tag: "src",
+            }];
+            let benches = crate_root.join("benches");
+            if benches.is_dir() {
+                trees.push(Tree {
+                    root: benches,
+                    kind: TreeKind::Bench,
+                    prefix: "rust/benches/",
+                    cache_tag: "benches",
+                });
+            }
+            let examples = crate_root.parent().map(|p| p.join("examples"));
+            if let Some(examples) = examples.filter(|p| p.is_dir()) {
+                trees.push(Tree {
+                    root: examples,
+                    kind: TreeKind::Example,
+                    prefix: "examples/",
+                    cache_tag: "examples",
+                });
+            }
+            // Paths are already repo-relative; nothing to prepend.
+            (trees, String::new(), String::from("src+benches+examples"))
+        }
+    };
+
+    let src_root = trees[0].root.clone();
+    let watch = Stopwatch::new();
+    let mut merged = CrateReport::default();
+    for t in &trees {
+        let opts = LintOptions {
+            semantic,
+            cache_path: if use_cache {
+                tree_cache_path(&cache_path, &src_root, t.cache_tag)
             } else {
-                ExitCode::FAILURE
+                None
+            },
+        };
+        match lint_tree_with(&t.root, t.kind, &opts) {
+            Err(e) => {
+                eprintln!("ued-lint: i/o error walking `{}`: {e}", t.root.display());
+                return ExitCode::from(2);
+            }
+            Ok(mut report) => {
+                for v in &mut report.violations {
+                    v.file = format!("{}{}", t.prefix, v.file);
+                }
+                merged.files += report.files;
+                merged.cache_hits += report.cache_hits;
+                merged.violations.extend(report.violations);
             }
         }
+    }
+    if let Some(rule) = only {
+        merged.violations.retain(|v| v.rule == rule);
+    }
+    merged.violations.sort_by(|a, b| {
+        (&a.file, a.line, a.rule.name()).cmp(&(&b.file, b.line, b.rule.name()))
+    });
+
+    let ok = merged.violations.is_empty();
+    if format_sarif {
+        println!("{}", sarif::to_sarif(&merged, &uri_prefix));
+    } else if ok {
+        println!(
+            "ued-lint: clean — {} files under `{label}` ({} deterministic modules: {})",
+            merged.files,
+            DETERMINISTIC_MODULES.len(),
+            DETERMINISTIC_MODULES.join(", ")
+        );
+    } else {
+        for v in &merged.violations {
+            println!("{v}");
+        }
+        println!("ued-lint: {} violation(s) in {} files", merged.violations.len(), merged.files);
+    }
+    eprintln!(
+        "ued-lint: {} files in {:.3}s ({} cache hit(s), semantic {})",
+        merged.files,
+        watch.elapsed_secs(),
+        merged.cache_hits,
+        if semantic { "on" } else { "off" },
+    );
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
     }
 }

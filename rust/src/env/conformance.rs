@@ -27,6 +27,7 @@ const SENTINEL: f32 = -7_777.25;
 
 /// Run the full conformance suite against `family` with `cases` sampled
 /// levels. Panics (with a labelled message) on the first violation.
+// ued-lint: allow(rng-lineage) — the harness constructs identical seeded streams on purpose: resetting/stepping twice from the same key is how it proves the family deterministic
 pub fn check_family_conformance<F: EnvFamily>(family: F, params: &EnvParams, cases: usize) {
     let id = family.id();
     let env = family.make_env(params);

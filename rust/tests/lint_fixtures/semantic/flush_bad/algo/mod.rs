@@ -1,0 +1,23 @@
+//! PR 7's data-loss bug as a fixture: a cycle error propagates with
+//! `?` while the per-unit sinks only flush after the loop, so every
+//! buffered row from the aborted run is lost on the error path.
+
+pub struct Unit;
+
+impl Unit {
+    pub fn step_cycle(&mut self) -> Result<(), String> {
+        Ok(())
+    }
+
+    pub fn flush_sinks(&mut self) {}
+}
+
+pub fn drive(units: &mut [Unit]) -> Result<(), String> {
+    for u in units.iter_mut() {
+        u.step_cycle()?;
+    }
+    for u in units.iter_mut() {
+        u.flush_sinks();
+    }
+    Ok(())
+}

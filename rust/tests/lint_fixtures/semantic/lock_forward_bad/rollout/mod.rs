@@ -1,0 +1,31 @@
+//! Seeded lock-across-forward bugs: one guard held directly across a
+//! blocking `forward_direct`, and one held across a helper that reaches
+//! the same blocking leaf through the call graph.
+
+use std::sync::Mutex;
+
+pub struct Engine {
+    slots: Mutex<Vec<f32>>,
+}
+
+impl Engine {
+    pub fn forward_direct(&self, buf: &mut [f32]) {
+        let _ = buf;
+    }
+
+    pub fn infer_locked(&self, buf: &mut [f32]) {
+        let guard = self.slots.lock().unwrap();
+        self.forward_direct(buf);
+        drop(guard);
+    }
+
+    pub fn helper(&self, buf: &mut [f32]) {
+        self.forward_direct(buf);
+    }
+
+    pub fn infer_via_helper(&self, buf: &mut [f32]) {
+        let guard = self.slots.lock().unwrap();
+        self.helper(buf);
+        drop(guard);
+    }
+}

@@ -1,0 +1,29 @@
+//! Clean lock-across-forward shapes: the guard is dropped before the
+//! blocking call, or confined to an inner scope that closes first.
+
+use std::sync::Mutex;
+
+pub struct Engine {
+    slots: Mutex<Vec<f32>>,
+}
+
+impl Engine {
+    pub fn forward_direct(&self, buf: &mut [f32]) {
+        let _ = buf;
+    }
+
+    pub fn infer(&self, buf: &mut [f32]) {
+        let guard = self.slots.lock().unwrap();
+        let n = guard.len();
+        drop(guard);
+        self.forward_direct(&mut buf[..n]);
+    }
+
+    pub fn scoped(&self, buf: &mut [f32]) {
+        {
+            let guard = self.slots.lock().unwrap();
+            let _ = guard.len();
+        }
+        self.forward_direct(buf);
+    }
+}

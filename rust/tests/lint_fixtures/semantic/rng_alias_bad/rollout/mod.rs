@@ -1,0 +1,25 @@
+//! Seeded rng-lineage bugs: two streams minted from one (seed, stream)
+//! key on the same path, and a generator forked with `.clone()`. Both
+//! replay identical sequences into consumers that believe they are
+//! independent.
+
+pub struct Pcg64;
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let _ = (seed, stream);
+        Pcg64
+    }
+}
+
+pub fn collect_rollout(seed: u64) {
+    let actor = Pcg64::new(seed, 3);
+    let critic = Pcg64::new(seed, 3);
+    let _ = (actor, critic);
+}
+
+pub fn fork_stream(seed: u64) {
+    let base = Pcg64::new(seed, 0);
+    let forked = base.clone();
+    let _ = (base, forked);
+}

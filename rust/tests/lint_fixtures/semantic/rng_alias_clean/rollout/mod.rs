@@ -1,0 +1,22 @@
+//! Clean rng-lineage shapes: the same key on *disjoint* branches is
+//! fine (only one stream exists per execution), and sequential
+//! construction is fine when every key is distinct.
+
+pub struct Pcg64;
+
+impl Pcg64 {
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let _ = (seed, stream);
+        Pcg64
+    }
+}
+
+pub fn branch_stream(seed: u64, resume: bool) {
+    let s = if resume {
+        Pcg64::new(seed, 1)
+    } else {
+        Pcg64::new(seed, 1)
+    };
+    let t = Pcg64::new(seed, 2);
+    let _ = (s, t);
+}

@@ -1,0 +1,10 @@
+//! Deterministic root calling the trait's default method — the only
+//! path to the wallclock read in util/.
+
+pub struct Step;
+
+impl Stamped for Step {}
+
+pub fn rollout_step(s: &Step) -> u64 {
+    s.coarse_stamp()
+}

@@ -1,0 +1,12 @@
+//! A trait whose *default* method body reads the wallclock. The source
+//! is invisible to the taint pass unless trait default bodies are
+//! parsed like any other fn.
+
+pub trait Stamped {
+    fn coarse_stamp(&self) -> u64 {
+        // ued-lint: allow(wallclock) — fixture: catching the seeded source is the taint pass's job
+        let t = std::time::Instant::now();
+        let _ = t;
+        0
+    }
+}

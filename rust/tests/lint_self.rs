@@ -13,8 +13,8 @@ use std::fs;
 use std::path::{Path, PathBuf};
 
 use jaxued::analysis::{
-    lint_crate, lint_crate_with, lint_source, CrateReport, LintConfig, LintOptions, Rule,
-    Violation,
+    lint_crate, lint_crate_with, lint_source, lint_tree_with, CrateReport, LintConfig,
+    LintOptions, Rule, TreeKind, Violation,
 };
 
 fn fixture(name: &str) -> String {
@@ -284,6 +284,160 @@ fn consistent_lock_order_is_clean() {
 }
 
 #[test]
+fn rng_lineage_flags_aliased_keys_and_clone_forks() {
+    let report = lint_tree("rng_alias_bad");
+    assert_eq!(
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect::<Vec<_>>(),
+        [
+            (Rule::RngLineage, "rollout/mod.rs", 17), // second stream from the same key
+            (Rule::RngLineage, "rollout/mod.rs", 23), // `.clone()` fork
+        ],
+        "expected the aliased key and the clone fork:\n{}",
+        render(&report.violations)
+    );
+    let dup = &report.violations[0].message;
+    assert!(dup.contains("line 16"), "the duplicate cites the earlier site: {dup}");
+    assert!(report.violations[1].message.contains("clone"), "{}", report.violations[1].message);
+}
+
+#[test]
+fn branch_exclusive_streams_and_distinct_keys_are_clean() {
+    // The same key on disjoint if/else branches never coexists on one
+    // path — flow-sensitivity is what keeps this from flagging.
+    let report = lint_tree("rng_alias_clean");
+    assert!(
+        report.violations.is_empty(),
+        "branch-exclusive reuse and distinct keys must be clean:\n{}",
+        render(&report.violations)
+    );
+}
+
+#[test]
+fn flush_on_error_catches_the_pack_loss_bug() {
+    // The PR 7 shape: `step_cycle()?` inside the drive loop propagates
+    // before the post-loop flush — rows from the aborted run are lost.
+    let report = lint_tree("flush_bad");
+    assert_eq!(
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect::<Vec<_>>(),
+        [(Rule::FlushOnError, "algo/mod.rs", 17)],
+        "expected exactly the unflushed `?` exit:\n{}",
+        render(&report.violations)
+    );
+    let msg = &report.violations[0].message;
+    assert!(msg.contains("line 17") && msg.contains("flush_sinks"), "{msg}");
+}
+
+#[test]
+fn flush_before_propagating_is_clean() {
+    // Same loop, but the error arm flushes before returning: the
+    // backward pass sees a flush on every path to the error exit.
+    let report = lint_tree("flush_clean");
+    assert!(
+        report.violations.is_empty(),
+        "flushing on the error path must satisfy flush-on-error:\n{}",
+        render(&report.violations)
+    );
+}
+
+#[test]
+fn lock_across_forward_flags_direct_and_transitive_holds() {
+    let report = lint_tree("lock_forward_bad");
+    assert_eq!(
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect::<Vec<_>>(),
+        [
+            (Rule::LockAcrossForward, "rollout/mod.rs", 18), // guard across forward_direct
+            (Rule::LockAcrossForward, "rollout/mod.rs", 28), // …across helper -> forward_direct
+        ],
+        "expected the direct and the call-graph-transitive hold:\n{}",
+        render(&report.violations)
+    );
+    let transitive = &report.violations[1].message;
+    assert!(
+        transitive.contains("via Engine::helper"),
+        "the transitive finding shows its witness chain: {transitive}"
+    );
+}
+
+#[test]
+fn dropped_or_scoped_guards_are_clean() {
+    // `drop(guard)` before the blocking call, or a guard confined to an
+    // inner scope, must both satisfy lock-across-forward.
+    let report = lint_tree("lock_forward_clean");
+    assert!(
+        report.violations.is_empty(),
+        "released guards must not flag:\n{}",
+        render(&report.violations)
+    );
+}
+
+#[test]
+fn trait_default_bodies_carry_taint() {
+    // The wallclock read lives only in a trait *default* method body;
+    // skipping default bodies would lose the whole finding.
+    let report = lint_tree("trait_default_taint_bad");
+    assert_eq!(
+        report.violations.iter().map(|v| (v.rule, v.file.as_str(), v.line)).collect::<Vec<_>>(),
+        [(Rule::DetTaint, "util/mod.rs", 8)],
+        "expected the default-body wallclock taint:\n{}",
+        render(&report.violations)
+    );
+    let msg = &report.violations[0].message;
+    assert!(msg.contains("Stamped::coarse_stamp"), "names the default method: {msg}");
+    assert!(msg.contains("rollout_step"), "shows the deterministic root: {msg}");
+}
+
+#[test]
+fn cache_roundtrip_preserves_flow_summaries() {
+    // The lock-across-forward findings are recomputed from cached
+    // per-fn summaries (`held_may_calls`), so a warm all-hits run over
+    // the flow fixture must reproduce the cold report exactly.
+    let cache =
+        std::env::temp_dir().join(format!("ued-lint-flow-cache-{}.json", std::process::id()));
+    let _ = fs::remove_file(&cache);
+    let opts = LintOptions { semantic: true, cache_path: Some(cache.clone()) };
+    let cold = lint_crate_with(&semantic_dir("lock_forward_bad"), &opts).expect("cold run");
+    assert_eq!(cold.cache_hits, 0, "first run must be cold");
+    let warm = lint_crate_with(&semantic_dir("lock_forward_bad"), &opts).expect("warm run");
+    assert_eq!(warm.cache_hits, warm.files, "second run must be all cache hits");
+    assert_eq!(
+        render(&warm.violations),
+        render(&cold.violations),
+        "flow summaries must survive the cache roundtrip"
+    );
+    assert!(
+        warm.violations.iter().any(|v| v.rule == Rule::LockAcrossForward),
+        "the warm report still carries the flow findings:\n{}",
+        render(&warm.violations)
+    );
+    let _ = fs::remove_file(&cache);
+}
+
+#[test]
+fn benches_and_examples_trees_are_lint_clean() {
+    // The default binary run also lints benches/ (wallclock-exempt — a
+    // bench's whole job is timing) and the repo-level examples/.
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let opts = LintOptions { semantic: true, cache_path: None };
+    let benches = lint_tree_with(&crate_root.join("benches"), TreeKind::Bench, &opts)
+        .expect("walking benches/");
+    assert!(benches.files > 0, "expected bench sources");
+    assert!(
+        benches.violations.is_empty(),
+        "benches/ must be clean under the bench profile:\n{}",
+        render(&benches.violations)
+    );
+    let examples =
+        lint_tree_with(&crate_root.join("../examples"), TreeKind::Example, &opts)
+            .expect("walking examples/");
+    assert!(examples.files > 0, "expected example sources");
+    assert!(
+        examples.violations.is_empty(),
+        "examples/ must be clean under the default profile:\n{}",
+        render(&examples.violations)
+    );
+}
+
+#[test]
 fn cache_roundtrip_preserves_the_report() {
     // Two runs over the same tree through one cache file: the second is
     // all hits and reports the identical violations (including the
@@ -306,8 +460,10 @@ fn cache_roundtrip_preserves_the_report() {
 
 #[test]
 fn real_crate_is_lint_clean() {
-    // The full pass — per-file rules AND the three semantic analyses
-    // (det-taint, serve-panic, lock-order) — over the crate's own src/.
+    // The full pass — per-file rules, the flow analyses (rng-lineage,
+    // flush-on-error), AND the call-graph analyses (det-taint,
+    // serve-panic, lock-order, lock-across-forward) — over the crate's
+    // own src/.
     let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
     let report = lint_crate(&src).expect("walking src/");
     assert!(report.files > 10, "expected to visit the whole crate, saw {} files", report.files);
